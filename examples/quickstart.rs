@@ -1,0 +1,52 @@
+//! Quickstart: sort a vector with the public API, verify, report rate.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use neonms::bench::Workload;
+use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use std::time::Instant;
+
+fn main() {
+    // 4M uniform random u32 — the paper's §3 workload at a midsize point.
+    let n = 4 << 20;
+    let data = Workload::Uniform.generate(n, 1);
+
+    // Single-thread NEON-MS with the paper's configuration:
+    // R = 16 registers, best-16 column network, hybrid 2×16 merges.
+    let sorter = NeonMergeSort::paper_default();
+    let mut v = data.clone();
+    let t0 = Instant::now();
+    sorter.sort(&mut v);
+    let dt = t0.elapsed();
+    assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    println!(
+        "single-thread: {n} u32 in {:.3}s → {:.1} ME/s",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // Multi-thread (merge-path cooperative merge).
+    let mut v = data.clone();
+    let par = ParallelNeonMergeSort::with_threads(4);
+    let t0 = Instant::now();
+    par.sort(&mut v);
+    let dt = t0.elapsed();
+    assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    println!(
+        "T=4 parallel:  {n} u32 in {:.3}s → {:.1} ME/s",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // Comparison against the paper's single-thread baseline.
+    let mut v = data.clone();
+    let t0 = Instant::now();
+    neonms::baselines::introsort::sort(&mut v);
+    println!(
+        "std::sort (introsort) reference: {:.3}s",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("quickstart OK");
+}

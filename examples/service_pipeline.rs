@@ -1,0 +1,107 @@
+//! **End-to-end driver** (DESIGN.md §4 E2E): the full three-layer
+//! stack serving a realistic request stream.
+//!
+//! Layers exercised per request routed to XLA:
+//!   L3 rust coordinator (queue → router → batcher → worker)
+//!   → XLA executor thread (PJRT, AOT artifact from `make artifacts`)
+//!   → L2 block-sort graph (= L1 Pallas tile sort + merge passes)
+//!   → rust cross-block hybrid merge → response.
+//!
+//! The workload mimics an analytics frontend: bursts of small sorts
+//! (facet counts), a steady stream of medium sorts (result pages) and
+//! occasional large jobs (report builds), sizes Zipf-flavored.
+//! Reports per-class latency and total throughput; the run is recorded
+//! in EXPERIMENTS.md §E2E.
+
+use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::testutil::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists()
+        || std::fs::read_dir(&artifacts).map(|mut d| d.next().is_some()).unwrap_or(false);
+    if !have_artifacts {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; continuing without XLA");
+    }
+
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_capacity: 512,
+        batch_max: 32,
+        tiny_cutoff: 64,
+        parallel_cutoff: 1 << 21,
+        threads_per_parallel_sort: 4,
+        xla_cutoff: Some(4096),
+    };
+    let svc = SortService::start(cfg, have_artifacts.then_some(artifacts)).expect("start service");
+    println!(
+        "service up: 2 workers, XLA offload {}",
+        if svc.xla_enabled() { "ENABLED (≥4096-element requests)" } else { "disabled" }
+    );
+
+    // Zipf-flavored request mix.
+    let mut rng = Rng::new(2024);
+    let classes: [(&str, usize, usize); 4] = [
+        ("facet (tiny)", 16, 600),     // 600 requests of ~16
+        ("page (small)", 2_000, 250),  // 250 of ~2K
+        ("shard (xla)", 16_384, 120),  // 120 of ~16K → XLA route
+        ("report (large)", 3 << 20, 4), // 4 of ~3M → parallel route
+    ];
+
+    let t0 = Instant::now();
+    let mut pending: Vec<(&str, usize, neonms::coordinator::SortHandle)> = Vec::new();
+    let mut shed = 0usize;
+    for &(name, base, count) in &classes {
+        for _ in 0..count {
+            let len = base + rng.below(base / 2 + 1);
+            let data = rng.vec_u32(len);
+            match svc.try_submit(data) {
+                Ok(h) => pending.push((name, len, h)),
+                Err(data) => {
+                    // Backpressure: block on the slow path instead.
+                    shed += 1;
+                    pending.push((name, len, svc.submit(data)));
+                }
+            }
+        }
+    }
+    let mut per_class: std::collections::BTreeMap<&str, (usize, usize)> = Default::default();
+    for (name, len, h) in pending {
+        let sorted = h.wait().expect("response");
+        assert_eq!(sorted.len(), len);
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted response!");
+        let e = per_class.entry(name).or_default();
+        e.0 += 1;
+        e.1 += len;
+    }
+    let dt = t0.elapsed();
+
+    let m = svc.metrics();
+    println!("\n== E2E summary ==");
+    for (name, (cnt, elems)) in &per_class {
+        println!("  {name:15} {cnt:4} requests, {elems:>9} elements");
+    }
+    println!(
+        "total: {} requests / {} elements in {:.3}s → {:.2} ME/s end-to-end",
+        m.completed,
+        m.elements,
+        dt.as_secs_f64(),
+        m.elements as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "routes: tiny={} single={} parallel={} xla={} | batches={} shed-then-blocked={shed}",
+        m.route_tiny, m.route_single, m.route_parallel, m.route_xla, m.batches
+    );
+    println!(
+        "latency: mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+        m.mean_latency_us, m.p50_us, m.p99_us
+    );
+    assert_eq!(m.completed as usize, classes.iter().map(|c| c.2).sum::<usize>());
+    if svc.xla_enabled() {
+        assert!(m.route_xla > 0, "XLA route must be exercised when enabled");
+    }
+    svc.shutdown();
+    println!("service_pipeline OK");
+}

@@ -1,0 +1,135 @@
+"""AOT compile path: lower the L2 block-sort to HLO **text** artifacts
+the rust runtime loads via `HloModuleProto::from_text_file`.
+
+Text, not `.serialize()`: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the published `xla` crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids,
+so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts``). Python runs exactly once per source change; the
+rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block_sort(n: int, dtype=jnp.int32) -> str:
+    fn, args = model.sort_fn_for_export(n, dtype)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_batched_block_sort(batch: int, n: int, dtype=jnp.int32) -> str:
+    fn, args = model.batched_sort_fn_for_export(batch, n, dtype)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def hlo_stats(hlo: str) -> dict:
+    """Crude cost stats for DESIGN.md §Perf: op-class counts."""
+    counts: dict = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith(("HloModule", "ENTRY", "}")):
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        if " " in rhs:
+            op = rhs.split(" ", 1)[1].split("(", 1)[0].strip()
+            for key in ("minimum", "maximum", "reverse", "concatenate",
+                        "reshape", "fusion", "copy", "slice"):
+                if op.startswith(key):
+                    counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--blocks", type=int, nargs="*", default=list(model.BLOCK_VARIANTS)
+    )
+    p.add_argument(
+        "--dtype", default="both", choices=["int32", "float32", "both"]
+    )
+    p.add_argument("--stats", action="store_true", help="print HLO op stats")
+    p.add_argument(
+        "--batch", type=int, default=8,
+        help="also emit a batched int32 variant (batch × smallest block); 0 disables",
+    )
+    args = p.parse_args()
+
+    dtypes = (
+        [("int32", jnp.int32), ("float32", jnp.float32)]
+        if args.dtype == "both"
+        else [(args.dtype, jnp.int32 if args.dtype == "int32" else jnp.float32)]
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for dname, dtype in dtypes:
+      for n in args.blocks:
+        t0 = time.time()
+        hlo = lower_block_sort(n, dtype)
+        name = f"block_sort_{dname}_{n}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        digest = hashlib.sha256(hlo.encode()).hexdigest()[:16]
+        manifest[name] = {
+            "path": os.path.basename(path),
+            "block": n,
+            "dtype": dname,
+            "sha256_16": digest,
+            "bytes": len(hlo),
+        }
+        msg = f"lowered {name}: {len(hlo)} chars in {time.time()-t0:.1f}s"
+        print(msg, file=sys.stderr)
+        if args.stats:
+            print(json.dumps({name: hlo_stats(hlo)}, indent=2))
+    if args.batch and any(d == "int32" for d, _ in dtypes):
+        n = min(args.blocks)
+        t0 = time.time()
+        hlo = lower_batched_block_sort(args.batch, n)
+        name = f"block_sort_batch{args.batch}_int32_{n}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest[name] = {
+            "path": os.path.basename(path),
+            "block": n,
+            "batch": args.batch,
+            "dtype": "int32",
+            "sha256_16": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+            "bytes": len(hlo),
+        }
+        print(
+            f"lowered {name}: {len(hlo)} chars in {time.time()-t0:.1f}s",
+            file=sys.stderr,
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

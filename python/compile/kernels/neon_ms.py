@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernels: the in-register sort and bitonic merge pass.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's NEON
+register file becomes a VMEM tile. One grid program owns one 64-element
+tile — the paper's R=16 × W=4 register block — and performs column
+sort / transpose / row merge entirely on values resident in the tile,
+exactly as the NEON version keeps them in registers. The HBM↔VMEM
+schedule that NEON expressed with `vld1q` bursts is expressed here with
+a `BlockSpec`; comparators become lane-wise `jnp.minimum/maximum` pairs
+(pure VPU work, no MXU involvement).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (not wallclock) is
+what the interpret path validates. TPU performance is *estimated* in
+DESIGN.md §Perf from VMEM footprint and op counts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import networks
+
+# The paper's geometry: R = 16 vector registers × W = 4 lanes.
+R = 16
+W = 4
+TILE = R * W  # 64 — sorted-run length produced by the tile sort
+
+
+def _column_sort(x, comps):
+    """Apply a sorting network across rows of an (R, W) tile.
+
+    Comparator (i, j) performs a lane-wise min/max of rows i and j —
+    one vmin + one vmax, all W columns at once (paper §2.3).
+    """
+    rows = [x[i] for i in range(x.shape[0])]
+    for i, j in comps:
+        lo = jnp.minimum(rows[i], rows[j])
+        hi = jnp.maximum(rows[i], rows[j])
+        rows[i], rows[j] = lo, hi
+    return jnp.stack(rows)
+
+
+def _bitonic_merge_flat(v):
+    """Sort a bitonic vector (length power of two) ascending.
+
+    The half-cleaner cascade, fully vectorized: at distance d the
+    vector reshapes to (n/2d, 2, d) and one min/max pair handles the
+    whole stage — the Pallas analogue of the register-level cmpswap
+    stages plus the intra-register shuffles.
+    """
+    n = v.shape[0]
+    d = n // 2
+    while d >= 1:
+        y = v.reshape(n // (2 * d), 2, d)
+        lo = jnp.minimum(y[:, 0, :], y[:, 1, :])
+        hi = jnp.maximum(y[:, 0, :], y[:, 1, :])
+        v = jnp.stack([lo, hi], axis=1).reshape(n)
+        d //= 2
+    return v
+
+
+def _merge_sorted_halves(v):
+    """Merge a vector whose two halves are each sorted ascending."""
+    n = v.shape[0]
+    half = n // 2
+    bitonic = jnp.concatenate([v[:half], v[half:][::-1]])
+    return _bitonic_merge_flat(bitonic)
+
+
+def _tile_sort_kernel(x_ref, o_ref, *, comps):
+    """Sort one 64-element tile: the paper's in-register sort."""
+    flat = x_ref[...]
+    # 1. "load": view as the R×W register block.
+    tile = flat.reshape(R, W)
+    # 2. column sort (best-16 network, 60 comparators).
+    tile = _column_sort(tile, comps)
+    # 3. transpose → 4 sorted runs of 16, contiguous.
+    runs = tile.T.reshape(TILE)
+    # 4. row merge: 16 → 32 → 64, all in-tile.
+    lo = _merge_sorted_halves(runs[: TILE // 2])
+    hi = _merge_sorted_halves(runs[TILE // 2 :])
+    o_ref[...] = _merge_sorted_halves(jnp.concatenate([lo, hi]))
+
+
+@functools.partial(jax.jit, static_argnames=("network",))
+def tile_sort(x, network: str = "best"):
+    """Pallas tile sort: every aligned 64-element chunk of ``x`` comes
+    back sorted. ``x.shape[0]`` must be a multiple of 64.
+    """
+    n = x.shape[0]
+    assert n % TILE == 0, f"length {n} not a multiple of {TILE}"
+    comps = networks.best(R) if network == "best" else networks.odd_even_sort(R)
+    kernel = functools.partial(_tile_sort_kernel, comps=tuple(comps))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _merge_pass_kernel(x_ref, o_ref):
+    """Merge one adjacent pair of sorted runs (the tile's block is the
+    pair; each half is sorted on entry)."""
+    o_ref[...] = _merge_sorted_halves(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("run",))
+def merge_pass(x, run: int):
+    """One vectorized merge pass: adjacent sorted runs of length
+    ``run`` merge into runs of ``2·run``. ``x.shape[0]`` must be a
+    multiple of ``2·run``.
+    """
+    n = x.shape[0]
+    assert n % (2 * run) == 0, f"length {n} not a multiple of {2 * run}"
+    return pl.pallas_call(
+        _merge_pass_kernel,
+        grid=(n // (2 * run),),
+        in_specs=[pl.BlockSpec((2 * run,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2 * run,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,146 @@
+"""Sorting-network comparator tables (paper §2.3, Table 1).
+
+Python twin of ``rust/src/sortnet`` — the same three families the paper
+compares, used by the Pallas kernel (column sort) and cross-checked by
+the zero-one principle in ``python/tests/test_networks.py``. Keeping an
+independent copy (rather than generating one from the other) lets each
+side's test suite validate the other's tables.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import List, Tuple
+
+Comparator = Tuple[int, int]
+
+# Green's 60-comparator, depth-10 best-known network for 16 inputs —
+# the paper's "best 16-element sorting network" (the 16* rows).
+BEST_16: List[Comparator] = [
+    # layer 1
+    (0, 1), (2, 3), (4, 5), (6, 7), (8, 9), (10, 11), (12, 13), (14, 15),
+    # layer 2
+    (0, 2), (4, 6), (8, 10), (12, 14), (1, 3), (5, 7), (9, 11), (13, 15),
+    # layer 3
+    (0, 4), (8, 12), (1, 5), (9, 13), (2, 6), (10, 14), (3, 7), (11, 15),
+    # layer 4
+    (0, 8), (1, 9), (2, 10), (3, 11), (4, 12), (5, 13), (6, 14), (7, 15),
+    # layer 5
+    (5, 10), (6, 9), (3, 12), (13, 14), (7, 11), (1, 2), (4, 8),
+    # layer 6
+    (1, 4), (7, 13), (2, 8), (11, 14), (5, 6), (9, 10),
+    # layer 7
+    (2, 4), (11, 13), (3, 8), (7, 12),
+    # layer 8
+    (6, 8), (10, 12), (3, 5), (7, 9),
+    # layer 9
+    (3, 4), (5, 6), (7, 8), (9, 10), (11, 12),
+    # layer 10
+    (6, 7), (8, 9),
+]
+
+# Optimal small networks (Knuth TAOCP §5.3.4).
+BEST_4: List[Comparator] = [(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)]
+BEST_8: List[Comparator] = [
+    (0, 1), (2, 3), (4, 5), (6, 7),
+    (0, 2), (1, 3), (4, 6), (5, 7),
+    (1, 2), (5, 6), (0, 4), (3, 7),
+    (1, 5), (2, 6), (1, 4), (3, 6),
+    (2, 4), (3, 5), (3, 4),
+]
+
+
+@lru_cache(maxsize=None)
+def bitonic_sort(n: int) -> Tuple[Comparator, ...]:
+    """Full bitonic sorter (directional comparators), n a power of two."""
+    assert n & (n - 1) == 0 and n > 0
+    comps: List[Comparator] = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j > 0:
+            for i in range(n):
+                l = i ^ j
+                if l > i:
+                    comps.append((i, l) if i & k == 0 else (l, i))
+            j //= 2
+        k *= 2
+    return tuple(comps)
+
+
+@lru_cache(maxsize=None)
+def odd_even_sort(n: int) -> Tuple[Comparator, ...]:
+    """Batcher odd-even mergesort network, n a power of two."""
+    assert n & (n - 1) == 0 and n > 0
+    comps: List[Comparator] = []
+
+    def merge(lo: int, length: int, r: int) -> None:
+        m = r * 2
+        if m < length:
+            merge(lo, length, m)
+            merge(lo + r, length, m)
+            for i in range(lo + r, lo + length - r, m):
+                comps.append((i, i + r))
+        else:
+            comps.append((lo, lo + r))
+
+    def sort(lo: int, length: int) -> None:
+        if length > 1:
+            m = length // 2
+            sort(lo, m)
+            sort(lo + m, m)
+            merge(lo, length, 1)
+
+    sort(0, n)
+    return tuple(comps)
+
+
+@lru_cache(maxsize=None)
+def bitonic_merge(n: int) -> Tuple[Comparator, ...]:
+    """Half-cleaner cascade sorting any bitonic input of length n."""
+    assert n & (n - 1) == 0 and n > 0
+    comps: List[Comparator] = []
+    j = n // 2
+    while j > 0:
+        for i in range(n):
+            if i % (2 * j) < j:
+                comps.append((i, i + j))
+        j //= 2
+    return tuple(comps)
+
+
+def best(n: int) -> Tuple[Comparator, ...]:
+    """Best-known network for the sizes the kernel uses."""
+    if n == 4:
+        return tuple(BEST_4)
+    if n == 8:
+        return tuple(BEST_8)
+    if n == 16:
+        return tuple(BEST_16)
+    return odd_even_sort(n)
+
+
+def verify_zero_one(comps, n: int) -> bool:
+    """Exhaustive zero-one-principle check (n ≤ 24)."""
+    assert n <= 24
+    for pattern in range(1 << n):
+        v = [(pattern >> b) & 1 for b in range(n)]
+        for i, j in comps:
+            if v[i] > v[j]:
+                v[i], v[j] = v[j], v[i]
+        if any(v[k] > v[k + 1] for k in range(n - 1)):
+            return False
+    return True
+
+
+def verify_bitonic_merge(comps, n: int) -> bool:
+    """Check the network sorts every asc⌢desc zero-one input."""
+    for start in range(n + 1):
+        for end in range(start, n + 1):
+            v = [1 if start <= b < end else 0 for b in range(n)]
+            for i, j in comps:
+                if v[i] > v[j]:
+                    v[i], v[j] = v[j], v[i]
+            if any(v[k] > v[k + 1] for k in range(n - 1)):
+                return False
+    return True

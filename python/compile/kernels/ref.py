@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These never go through Pallas — they are the reference the kernel is
+``assert_allclose``'d against in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sort_ref(x):
+    """Full ascending sort."""
+    return jnp.sort(x)
+
+
+def tile_sort_ref(x, tile: int = 64):
+    """Sort each aligned ``tile``-element chunk independently."""
+    n = x.shape[0]
+    assert n % tile == 0
+    return jnp.sort(x.reshape(n // tile, tile), axis=1).reshape(n)
+
+
+def merge_pass_ref(x, run: int):
+    """Merge adjacent sorted runs of length ``run`` (oracle: just sort
+    each 2·run window — inputs are pre-sorted halves so this equals the
+    true merge)."""
+    n = x.shape[0]
+    assert n % (2 * run) == 0
+    return jnp.sort(x.reshape(n // (2 * run), 2 * run), axis=1).reshape(n)
+
+
+def np_block_sort_ref(x: np.ndarray) -> np.ndarray:
+    """NumPy block-sort oracle for the AOT artifact tests."""
+    return np.sort(x)

@@ -1,0 +1,68 @@
+"""Layer-2 JAX model: the full NEON-MS block sort as one jittable
+compute graph — Pallas tile sort (L1) followed by log2(B/64) Pallas
+merge passes, mirroring the rust sort's structure exactly.
+
+This is the computation that `aot.py` lowers to HLO text; the rust
+coordinator executes the compiled artifact on fixed-size blocks and
+merges across blocks with its own (hybrid-merger) passes. Python is
+never on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import neon_ms
+
+#: Block sizes we AOT-compile artifacts for (coordinator picks by size).
+BLOCK_VARIANTS = (1024, 4096, 16384)
+
+
+@functools.partial(jax.jit, static_argnames=("network",))
+def block_sort(x, network: str = "best"):
+    """Fully sort a 1-D block whose length is a power-of-two multiple
+    of 64. Structure = paper Fig. 1: in-register (tile) sort, then
+    doubling vectorized merge passes.
+    """
+    n = x.shape[0]
+    assert n % neon_ms.TILE == 0 and (n & (n - 1)) == 0, (
+        f"block length {n} must be a power of two ≥ {neon_ms.TILE}"
+    )
+    x = neon_ms.tile_sort(x, network=network)
+    run = neon_ms.TILE
+    while run < n:
+        x = neon_ms.merge_pass(x, run)
+        run *= 2
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("network",))
+def batched_block_sort(x, network: str = "best"):
+    """Sort each row of a (batch, block) array — the coordinator's
+    batched path amortizes executable dispatch over several requests.
+    """
+    return jax.vmap(lambda row: block_sort(row, network=network))(x)
+
+
+def sort_fn_for_export(n: int, dtype=jnp.int32):
+    """(fn, example_args) pair for `aot.py` — returns a 1-tuple result
+    as the rust loader expects (`to_tuple1`)."""
+
+    def fn(x):
+        return (block_sort(x),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), dtype),)
+
+
+def batched_sort_fn_for_export(batch: int, n: int, dtype=jnp.int32):
+    """Batched variant: `s32[batch, n] -> (s32[batch, n],)` — lets the
+    rust coordinator amortize one PJRT dispatch over several queued
+    requests (dynamic batching through the accelerator)."""
+
+    def fn(x):
+        return (batched_block_sort(x),)
+
+    return fn, (jax.ShapeDtypeStruct((batch, n), dtype),)

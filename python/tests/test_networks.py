@@ -1,0 +1,49 @@
+"""Zero-one-principle validation of the network tables (the Python
+twins of rust/src/sortnet — each side cross-checks the other)."""
+
+import pytest
+
+from compile.kernels import networks
+
+
+def test_best16_is_greens_60():
+    assert len(networks.BEST_16) == 60
+
+
+def test_table1_comparator_counts():
+    # Paper Table 1.
+    assert len(networks.bitonic_sort(4)) == 6
+    assert len(networks.bitonic_sort(8)) == 24
+    assert len(networks.bitonic_sort(16)) == 80
+    assert len(networks.bitonic_sort(32)) == 240
+    assert len(networks.odd_even_sort(4)) == 5
+    assert len(networks.odd_even_sort(8)) == 19
+    assert len(networks.odd_even_sort(16)) == 63
+    assert len(networks.odd_even_sort(32)) == 191
+    assert len(networks.best(4)) == 5
+    assert len(networks.best(8)) == 19
+    assert 55 <= len(networks.best(16)) <= 60
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_sorters_zero_one(n):
+    assert networks.verify_zero_one(networks.bitonic_sort(n), n)
+    assert networks.verify_zero_one(networks.odd_even_sort(n), n)
+    assert networks.verify_zero_one(networks.best(n), n)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64])
+def test_bitonic_merge_networks(n):
+    comps = networks.bitonic_merge(n)
+    lg = n.bit_length() - 1
+    assert len(comps) == lg * n // 2
+    assert networks.verify_bitonic_merge(comps, n)
+
+
+def test_comparators_in_range():
+    for comps, n in [
+        (networks.BEST_16, 16),
+        (networks.BEST_8, 8),
+        (networks.BEST_4, 4),
+    ]:
+        assert all(0 <= i < n and 0 <= j < n and i != j for i, j in comps)

@@ -1,0 +1,21 @@
+//! Bench: ablations of the design choices DESIGN.md §5 calls out —
+//! column-network family, merge-kernel width, input distribution, and
+//! the cooperative merge-path strategy.
+//! Run via `cargo bench --bench ablations`.
+
+fn main() {
+    let reps = std::env::var("NEONMS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let n = 1 << 20;
+    print!("{}", neonms::bench::tables::table1());
+    println!();
+    print!("{}", neonms::bench::tables::ablation_column_network(n, reps));
+    println!();
+    print!("{}", neonms::bench::tables::ablation_merge_width(n, reps));
+    println!();
+    print!("{}", neonms::bench::tables::ablation_workloads(n, reps));
+    println!();
+    print!("{}", neonms::bench::tables::ablation_parallel_merge(4 << 20, 4, reps.min(5)));
+}

@@ -1,0 +1,41 @@
+//! Bench: paper Fig. 5 — end-to-end sorting rate (ME/s) by data size
+//! and method, single-thread and parallel.
+//! Run via `cargo bench --bench fig5_overall`.
+//!
+//! Size range: the paper sweeps 512K–128M on a 64-core FT2000+; this
+//! single-core VM caps at 16M by default (override with
+//! NEONMS_BENCH_MAXN). Speedup *ratios* are the reproduction target.
+
+fn main() {
+    let max_n: usize = std::env::var("NEONMS_BENCH_MAXN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16 << 20);
+    let reps = std::env::var("NEONMS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let mut sizes = Vec::new();
+    let mut n = 512 * 1024;
+    while n <= max_n {
+        sizes.push(n);
+        n *= 2;
+    }
+    let (text, rows) = neonms::bench::tables::fig5(&sizes, &[2, 4], reps);
+    print!("{text}");
+    // Headline ratios (paper: 3.8× vs std::sort, 2.1× vs block_sort).
+    println!("\nspeedup of NEON-MS (single-thread) per size:");
+    for &n in &sizes {
+        let get = |name: &str| {
+            rows.iter()
+                .find(|(m, nn, _)| m == name && *nn == n)
+                .map(|(_, _, v)| *v)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "  n={n:9}: {:.2}x vs std::sort, {:.2}x vs block_sort",
+            get("NEON-MS") / get("std::sort (introsort)"),
+            get("NEON-MS") / get("boost::block_sort"),
+        );
+    }
+}

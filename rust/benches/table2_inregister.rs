@@ -1,0 +1,17 @@
+//! Bench: paper Table 2 — in-register sort timing across register
+//! configurations, plus the regmachine cost model on the NEON
+//! geometry. Run via `cargo bench --bench table2_inregister`.
+//!
+//! Protocol follows §3: 64K random u32 per repetition; we report the
+//! median of 100 repetitions (the paper averages 100 iterations).
+
+fn main() {
+    let reps = std::env::var("NEONMS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    let (text, _rows) = neonms::bench::tables::table2_measured(reps);
+    print!("{text}");
+    println!();
+    print!("{}", neonms::bench::tables::table2_model());
+}

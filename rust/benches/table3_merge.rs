@@ -1,0 +1,20 @@
+//! Bench: paper Table 3 — merging speed (elements/µs) of the
+//! vectorized vs hybrid bitonic mergers at 2×{8,16,32}.
+//! Run via `cargo bench --bench table3_merge`.
+
+fn main() {
+    let reps = std::env::var("NEONMS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let (text, rows) = neonms::bench::tables::table3(reps);
+    print!("{text}");
+    // Paper shape check: report the hybrid/vectorized ratio per width.
+    println!("\nhybrid / vectorized speed ratio (paper: >1 at 8 and 16, <1 at 32):");
+    for k in [8usize, 16, 32] {
+        let get = |name: &str| {
+            rows.iter().find(|(n, kk, _)| n == name && *kk == k).map(|(_, _, v)| *v).unwrap()
+        };
+        println!("  2x{k:2}: {:.3}", get("Hybrid Bitonic") / get("Vectorized Bitonic"));
+    }
+}

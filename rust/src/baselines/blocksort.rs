@@ -1,0 +1,218 @@
+//! `boost::sort::block_indirect_sort`-style baseline (paper §3):
+//! a merge sort whose auxiliary memory is bounded by
+//! `block_size × threads` instead of `n` — the property the paper
+//! credits for boost's strong small-scale parallel performance.
+//!
+//! Simplifications vs boost (documented in DESIGN.md): we keep the
+//! bounded-buffer guarantee with a SymMerge (Kim–Kutzner) rotation
+//! merge for runs larger than the buffer, rather than boost's block
+//! permutation indirection; the asymptotics and memory profile match
+//! (O(block_size) aux per worker, O(n·log²n) worst-case moves).
+
+use super::introsort;
+use crate::kernels::serial::merge_scalar;
+use crate::simd::Lane;
+
+/// Default block size (boost's default is ~1024 elements for 4-byte
+/// keys).
+pub const DEFAULT_BLOCK: usize = 1024;
+
+/// Single-thread block sort with `block_size` elements of auxiliary
+/// memory.
+pub fn sort<T: Lane>(data: &mut [T]) {
+    sort_with_block(data, DEFAULT_BLOCK);
+}
+
+/// Single-thread block sort, explicit block size.
+pub fn sort_with_block<T: Lane>(data: &mut [T], block: usize) {
+    assert!(block >= 2);
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    // Phase 1: introsort each block.
+    for chunk in data.chunks_mut(block) {
+        introsort::sort(chunk);
+    }
+    // Phase 2: bottom-up merge with a bounded buffer.
+    let mut aux: Vec<T> = vec![T::MIN_VALUE; block];
+    let mut run = block;
+    while run < n {
+        let mut base = 0;
+        while base + run < n {
+            let end = (base + 2 * run).min(n);
+            bounded_merge(&mut data[base..end], run, &mut aux);
+            base = end;
+        }
+        run *= 2;
+    }
+}
+
+/// Merge `data[..mid]` with `data[mid..]` in place using at most
+/// `aux.len()` auxiliary elements.
+fn bounded_merge<T: Lane>(data: &mut [T], mid: usize, aux: &mut [T]) {
+    sym_merge(data, 0, mid, data.len(), aux);
+}
+
+/// Kim–Kutzner SymMerge with a buffered base case: when either side
+/// fits in `aux`, finish with a plain buffered merge.
+fn sym_merge<T: Lane>(data: &mut [T], a: usize, m: usize, b: usize, aux: &mut [T]) {
+    if a >= m || m >= b {
+        return;
+    }
+    let (left, right) = (m - a, b - m);
+    if left <= aux.len() {
+        return buffered_merge_left(&mut data[a..b], left, aux);
+    }
+    if right <= aux.len() {
+        return buffered_merge_right(&mut data[a..b], left, aux);
+    }
+    let mid = (a + b) / 2;
+    let n = mid + m;
+    let (mut start, mut r) = if m > mid { (n - b, mid) } else { (a, m) };
+    let p = n - 1;
+    while start < r {
+        let c = (start + r) / 2;
+        if data[p - c] >= data[c] {
+            start = c + 1;
+        } else {
+            r = c;
+        }
+    }
+    let end = n - start;
+    if start < m && m < end {
+        rotate(&mut data[start..end], m - start);
+    }
+    sym_merge(data, a, start, mid, aux);
+    sym_merge(data, mid, end, b, aux);
+}
+
+/// Copy the left run (≤ aux) out, then standard merge forward.
+fn buffered_merge_left<T: Lane>(data: &mut [T], mid: usize, aux: &mut [T]) {
+    let aux = &mut aux[..mid];
+    aux.copy_from_slice(&data[..mid]);
+    let (mut i, mut j, mut k) = (0usize, mid, 0usize);
+    while i < mid && j < data.len() {
+        if aux[i] <= data[j] {
+            data[k] = aux[i];
+            i += 1;
+        } else {
+            data[k] = data[j];
+            j += 1;
+        }
+        k += 1;
+    }
+    while i < mid {
+        data[k] = aux[i];
+        i += 1;
+        k += 1;
+    }
+}
+
+/// Copy the right run (≤ aux) out, then merge backward.
+fn buffered_merge_right<T: Lane>(data: &mut [T], mid: usize, aux: &mut [T]) {
+    let rlen = data.len() - mid;
+    let aux = &mut aux[..rlen];
+    aux.copy_from_slice(&data[mid..]);
+    let (mut i, mut j, mut k) = (mid, rlen, data.len());
+    while i > 0 && j > 0 {
+        k -= 1;
+        if aux[j - 1] >= data[i - 1] {
+            data[k] = aux[j - 1];
+            j -= 1;
+        } else {
+            data[k] = data[i - 1];
+            i -= 1;
+        }
+    }
+    while j > 0 {
+        k -= 1;
+        j -= 1;
+        data[k] = aux[j];
+    }
+}
+
+/// Rotate left by `k` via triple reversal.
+fn rotate<T: Lane>(data: &mut [T], k: usize) {
+    data[..k].reverse();
+    data[k..].reverse();
+    data.reverse();
+}
+
+/// Parallel block sort: phase-1 block sorts and phase-2 pair merges
+/// distributed over `threads` scoped threads, each with its own
+/// `block`-element buffer (total aux = `block × threads`, boost's
+/// memory profile).
+pub fn parallel_sort<T: Lane>(data: &mut [T], threads: usize) {
+    parallel_sort_with_block(data, threads, DEFAULT_BLOCK)
+}
+
+/// Parallel block sort with explicit block size.
+pub fn parallel_sort_with_block<T: Lane>(data: &mut [T], threads: usize, block: usize) {
+    let n = data.len();
+    if threads <= 1 || n <= 2 * block {
+        return sort_with_block(data, block);
+    }
+    // Phase 1: parallel block introsorts (per-thread stripes of
+    // contiguous blocks — no shared state needed).
+    {
+        let nblocks = n.div_ceil(block);
+        let per_stripe = nblocks.div_ceil(threads) * block;
+        let stripes: Vec<&mut [T]> = data.chunks_mut(per_stripe).collect();
+        std::thread::scope(|sc| {
+            for stripe in stripes {
+                sc.spawn(move || {
+                    for b in stripe.chunks_mut(block) {
+                        introsort::sort(b);
+                    }
+                });
+            }
+        });
+    }
+    // Phase 2: merge tree, one thread per pair, bounded aux each.
+    let mut run = block;
+    while run < n {
+        let ranges: Vec<(usize, usize, usize)> = {
+            let mut v = Vec::new();
+            let mut base = 0;
+            while base + run < n {
+                let end = (base + 2 * run).min(n);
+                v.push((base, base + run, end));
+                base = end;
+            }
+            v
+        };
+        // Hand out disjoint slices.
+        let mut rest: &mut [T] = data;
+        let mut offset = 0usize;
+        let mut jobs: Vec<(&mut [T], usize)> = Vec::new();
+        for &(lo, mid, hi) in &ranges {
+            let (skip, tail) = rest.split_at_mut(lo - offset);
+            let _ = skip;
+            let (seg, tail) = tail.split_at_mut(hi - lo);
+            jobs.push((seg, mid - lo));
+            rest = tail;
+            offset = hi;
+        }
+        let per_chunk = jobs.len().div_ceil(threads).max(1);
+        std::thread::scope(|sc| {
+            for chunk in jobs.chunks_mut(per_chunk) {
+                sc.spawn(move || {
+                    let mut aux: Vec<T> = vec![T::MIN_VALUE; block];
+                    for (seg, mid) in chunk.iter_mut() {
+                        bounded_merge(seg, *mid, &mut aux);
+                    }
+                });
+            }
+        });
+        run *= 2;
+    }
+}
+
+/// Reference: unbounded-aux merge used in tests to cross-check the
+/// bounded merges.
+pub fn reference_merge<T: Lane>(a: &[T], b: &[T]) -> Vec<T> {
+    let mut out = vec![T::MIN_VALUE; a.len() + b.len()];
+    merge_scalar(a, b, &mut out);
+    out
+}

@@ -1,0 +1,127 @@
+//! `std::sort` baseline: introsort as shipped in libstdc++ (the
+//! paper's single-thread comparison, compiled with GCC 9.3 -O3).
+//!
+//! Structure mirrors `std::__sort`: quicksort with median-of-3 pivot
+//! and a depth limit of `2·⌊log2(n)⌋`; on limit exhaustion the
+//! partition falls back to heapsort; partitions below
+//! [`INSERTION_THRESHOLD`] are left unsorted and fixed by one final
+//! insertion-sort pass (libstdc++'s `__final_insertion_sort`).
+
+use crate::simd::Lane;
+
+/// libstdc++ `_S_threshold`.
+pub const INSERTION_THRESHOLD: usize = 16;
+
+/// Sort ascending, in place — the `std::sort` stand-in.
+pub fn sort<T: Lane>(data: &mut [T]) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let depth_limit = 2 * (usize::BITS - 1 - n.leading_zeros()) as usize;
+    introsort_loop(data, depth_limit);
+    final_insertion_sort(data);
+}
+
+fn introsort_loop<T: Lane>(data: &mut [T], mut depth: usize) {
+    let mut slice = data;
+    while slice.len() > INSERTION_THRESHOLD {
+        if depth == 0 {
+            heapsort(slice);
+            return;
+        }
+        depth -= 1;
+        let p = partition_median3(slice);
+        // Recurse into the smaller side, loop on the larger (bounded
+        // stack, as libstdc++ does by recursing on [cut, last)).
+        let (lo, hi) = slice.split_at_mut(p);
+        let hi = &mut hi[1..];
+        if lo.len() < hi.len() {
+            introsort_loop(lo, depth);
+            slice = hi;
+        } else {
+            introsort_loop(hi, depth);
+            slice = lo;
+        }
+    }
+}
+
+/// Median-of-3 pivot selection + Hoare-style partition; returns the
+/// pivot's final index.
+fn partition_median3<T: Lane>(data: &mut [T]) -> usize {
+    let n = data.len();
+    let mid = n / 2;
+    // Order first/mid/last, then use mid as pivot (moved to n-2).
+    if data[mid] < data[0] {
+        data.swap(mid, 0);
+    }
+    if data[n - 1] < data[0] {
+        data.swap(n - 1, 0);
+    }
+    if data[n - 1] < data[mid] {
+        data.swap(n - 1, mid);
+    }
+    data.swap(mid, n - 2);
+    let pivot = data[n - 2];
+    let (mut i, mut j) = (0usize, n - 2);
+    loop {
+        i += 1;
+        while data[i] < pivot {
+            i += 1;
+        }
+        j -= 1;
+        while pivot < data[j] {
+            j -= 1;
+        }
+        if i >= j {
+            break;
+        }
+        data.swap(i, j);
+    }
+    data.swap(i, n - 2);
+    i
+}
+
+/// Bottom-up heapsort (libstdc++ `__heap_select` + `__sort_heap`
+/// equivalent).
+pub fn heapsort<T: Lane>(data: &mut [T]) {
+    let n = data.len();
+    for i in (0..n / 2).rev() {
+        sift_down(data, i, n);
+    }
+    for end in (1..n).rev() {
+        data.swap(0, end);
+        sift_down(data, 0, end);
+    }
+}
+
+fn sift_down<T: Lane>(data: &mut [T], mut root: usize, end: usize) {
+    loop {
+        let mut child = 2 * root + 1;
+        if child >= end {
+            return;
+        }
+        if child + 1 < end && data[child] < data[child + 1] {
+            child += 1;
+        }
+        if data[root] >= data[child] {
+            return;
+        }
+        data.swap(root, child);
+        root = child;
+    }
+}
+
+/// One pass of insertion sort over the whole slice — cheap because
+/// every element is within `INSERTION_THRESHOLD` of its final place.
+fn final_insertion_sort<T: Lane>(data: &mut [T]) {
+    for i in 1..data.len() {
+        let v = data[i];
+        let mut j = i;
+        while j > 0 && data[j - 1] > v {
+            data[j] = data[j - 1];
+            j -= 1;
+        }
+        data[j] = v;
+    }
+}

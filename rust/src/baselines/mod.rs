@@ -1,0 +1,30 @@
+//! The comparison systems of the paper's §3 evaluation, built from
+//! scratch (no external crates):
+//!
+//! * [`introsort`] — a faithful reimplementation of libstdc++
+//!   `std::sort`: median-of-3 quicksort with a `2·log2(n)` depth limit
+//!   falling back to heapsort, insertion sort below 16 elements.
+//! * [`blocksort`] — a boost `block_indirect_sort`-style merge sort
+//!   with *bounded auxiliary memory* (`block_size` elements per
+//!   worker) using rotation-based in-place merging when a run exceeds
+//!   the buffer, plus a parallel version (`block_size × threads` aux —
+//!   the paper's §3.2 note on boost's small-footprint advantage).
+//! * [`RustStdSort`] — thin wrappers over `slice::sort_unstable`
+//!   (pdqsort) as a sanity reference for the harness.
+
+pub mod blocksort;
+pub mod introsort;
+
+/// Reference wrapper: rust's own pdqsort, used to sanity-check the
+/// harness numbers (not a paper baseline).
+pub struct RustStdSort;
+
+impl RustStdSort {
+    /// Sort via `slice::sort_unstable`.
+    pub fn sort<T: Ord>(data: &mut [T]) {
+        data.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests;

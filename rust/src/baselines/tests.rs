@@ -1,0 +1,159 @@
+use super::{blocksort, introsort, RustStdSort};
+use crate::testutil::{assert_permutation, assert_sorted, forall, forall_indexed, Rng};
+
+fn oracle(data: &[u32]) -> Vec<u32> {
+    let mut v = data.to_vec();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn introsort_random() {
+    forall_indexed(100, |case, rng| {
+        let len = case * 37 + rng.below(11);
+        let data = rng.vec_u32(len);
+        let mut v = data.clone();
+        introsort::sort(&mut v);
+        assert_eq!(v, oracle(&data), "len {len}");
+    });
+}
+
+#[test]
+fn introsort_adversarial() {
+    let n = 20_000u32;
+    let patterns: Vec<Vec<u32>> = vec![
+        (0..n).collect(),
+        (0..n).rev().collect(),
+        vec![1; n as usize],
+        (0..n).map(|x| x % 2).collect(),
+        (0..n).map(|x| x % 1000).collect(),
+        // Median-of-3 killer-ish: organ pipe.
+        (0..n / 2).chain((0..n / 2).rev()).collect(),
+    ];
+    for data in patterns {
+        let mut v = data.clone();
+        introsort::sort(&mut v);
+        assert_eq!(v, oracle(&data));
+    }
+}
+
+#[test]
+fn introsort_depth_limit_triggers_heapsort() {
+    // A pattern engineered to produce bad pivots repeatedly still
+    // sorts (heapsort fallback): many equal keys with a skew tail.
+    let mut data: Vec<u32> = vec![0; 50_000];
+    for (i, v) in data.iter_mut().enumerate() {
+        *v = (i % 3) as u32;
+    }
+    data.extend(0..50_000u32);
+    let mut v = data.clone();
+    introsort::sort(&mut v);
+    assert_eq!(v, oracle(&data));
+}
+
+#[test]
+fn heapsort_direct() {
+    forall(50, |rng| {
+        let len = rng.below(2000);
+        let data = rng.vec_u32(len);
+        let mut v = data.clone();
+        introsort::heapsort(&mut v);
+        assert_eq!(v, oracle(&data));
+    });
+}
+
+#[test]
+fn introsort_floats() {
+    let mut rng = Rng::new(2);
+    let mut v: Vec<f32> = (0..10_000).map(|_| rng.next_f32() * 1e6 - 5e5).collect();
+    introsort::sort(&mut v);
+    assert_sorted(&v, "introsort f32");
+}
+
+#[test]
+fn blocksort_random_various_blocks() {
+    forall(60, |rng| {
+        let len = rng.below(30_000);
+        let block = [16usize, 64, 256, 1024][rng.below(4)];
+        let data = rng.vec_u32(len);
+        let mut v = data.clone();
+        blocksort::sort_with_block(&mut v, block);
+        assert_eq!(v, oracle(&data), "len {len} block {block}");
+    });
+}
+
+#[test]
+fn blocksort_exercises_symmerge_path() {
+    // Runs much larger than the aux buffer force the rotation merge.
+    let mut rng = Rng::new(77);
+    let data = rng.vec_u32(40_000);
+    let mut v = data.clone();
+    blocksort::sort_with_block(&mut v, 16); // tiny buffer, deep symmerge
+    assert_eq!(v, oracle(&data));
+}
+
+#[test]
+fn blocksort_adversarial() {
+    let n = 30_000u32;
+    for data in [
+        (0..n).rev().collect::<Vec<_>>(),
+        vec![9; n as usize],
+        (0..n).map(|x| x % 7).collect(),
+    ] {
+        let mut v = data.clone();
+        blocksort::sort(&mut v);
+        assert_eq!(v, oracle(&data));
+    }
+}
+
+#[test]
+fn blocksort_parallel_matches_serial() {
+    forall(15, |rng| {
+        let len = 3000 + rng.below(60_000);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        blocksort::sort(&mut expect);
+        for t in [2usize, 4, 7] {
+            let mut v = data.clone();
+            blocksort::parallel_sort(&mut v, t);
+            assert_eq!(v, expect, "T={t} len={len}");
+        }
+    });
+}
+
+#[test]
+fn blocksort_parallel_small_falls_back() {
+    let mut rng = Rng::new(4);
+    let data = rng.vec_u32(500);
+    let mut v = data.clone();
+    blocksort::parallel_sort(&mut v, 8);
+    assert_eq!(v, oracle(&data));
+}
+
+#[test]
+fn rust_std_sort_wrapper() {
+    let mut rng = Rng::new(5);
+    let data = rng.vec_u32(1000);
+    let mut v = data.clone();
+    RustStdSort::sort(&mut v);
+    assert_eq!(v, oracle(&data));
+    assert_permutation(&v, &data, "std");
+}
+
+#[test]
+fn all_baselines_agree_with_neon_ms() {
+    use crate::sort::NeonMergeSort;
+    forall(20, |rng| {
+        let data = rng.vec_u32(10_000);
+        let expect = oracle(&data);
+        let mut a = data.clone();
+        introsort::sort(&mut a);
+        let mut b = data.clone();
+        blocksort::sort(&mut b);
+        let mut c = data.clone();
+        NeonMergeSort::paper_default().sort(&mut c);
+        assert_eq!(a, expect);
+        assert_eq!(b, expect);
+        assert_eq!(c, expect);
+    });
+}

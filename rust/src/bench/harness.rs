@@ -1,0 +1,125 @@
+//! Timing core: warmup, N timed repetitions, robust statistics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repetition times (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub p95: f64,
+    pub reps: usize,
+}
+
+impl Stats {
+    /// Compute from raw per-rep durations.
+    pub fn from_times(mut secs: Vec<f64>) -> Stats {
+        assert!(!secs.is_empty());
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        Stats {
+            mean,
+            median: secs[n / 2],
+            min: secs[0],
+            p95: secs[(n * 95 / 100).min(n - 1)],
+            reps: n,
+        }
+    }
+}
+
+/// One named measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    /// Elements processed per repetition (for rate units).
+    pub elements: usize,
+}
+
+impl BenchResult {
+    /// Million elements per second (Fig. 5's unit), from the median.
+    pub fn me_per_sec(&self) -> f64 {
+        self.elements as f64 / self.stats.median / 1e6
+    }
+
+    /// Elements per microsecond (Table 3's unit), from the median.
+    pub fn elems_per_us(&self) -> f64 {
+        self.elements as f64 / (self.stats.median * 1e6)
+    }
+
+    /// Median microseconds (Table 2's unit).
+    pub fn median_us(&self) -> f64 {
+        self.stats.median * 1e6
+    }
+}
+
+/// Run `f` `reps` times (after `warmup` untimed runs), timing each
+/// repetition. `f` receives the repetition index and must do its own
+/// per-rep setup *outside* the timed region via `setup`.
+pub fn bench<S, F>(
+    name: impl Into<String>,
+    elements: usize,
+    warmup: usize,
+    reps: usize,
+    mut setup: impl FnMut(usize) -> S,
+    mut f: F,
+) -> BenchResult
+where
+    F: FnMut(S),
+{
+    for w in 0..warmup {
+        f(setup(w));
+    }
+    let mut times = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let input = setup(r);
+        let t0 = Instant::now();
+        f(input);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.into(), stats: Stats::from_times(times), elements }
+}
+
+/// Time a single closure once (coarse measurements).
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_times(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min, 1.0);
+        assert!(s.median <= s.p95);
+        assert_eq!(s.reps, 4);
+        assert!((s.mean - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut calls = 0;
+        let r = bench("t", 100, 2, 5, |_| (), |_| calls += 1);
+        assert_eq!(calls, 7, "warmup + reps");
+        assert_eq!(r.stats.reps, 5);
+        assert!(r.me_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn units_consistent() {
+        let r = BenchResult {
+            name: "u".into(),
+            stats: Stats::from_times(vec![0.001]), // 1 ms
+            elements: 1000,
+        };
+        assert!((r.elems_per_us() - 1.0).abs() < 1e-9);
+        assert!((r.me_per_sec() - 1.0).abs() < 1e-9);
+        assert!((r.median_us() - 1000.0).abs() < 1e-9);
+    }
+}

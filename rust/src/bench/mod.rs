@@ -1,0 +1,12 @@
+//! Benchmark harness (criterion is not available offline, so we ship
+//! our own): timing with warmup + repetition statistics, seeded
+//! workload generators matching the paper's §3 protocol, and table
+//! builders that print every table/figure of the evaluation in the
+//! paper's own units — shared by `cargo bench` targets and the CLI.
+
+pub mod harness;
+pub mod tables;
+pub mod workloads;
+
+pub use harness::{bench, BenchResult, Stats};
+pub use workloads::Workload;

@@ -1,0 +1,88 @@
+//! Seeded workload generators (the paper uses uniform random 32-bit
+//! integers; we add the standard adversarial distributions for the
+//! ablation benches).
+
+use crate::testutil::Rng;
+
+/// Named input distribution.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Workload {
+    /// Uniform random u32 — the paper's §3 workload.
+    Uniform,
+    /// Keys drawn from a small alphabet (heavy duplicates).
+    FewDups,
+    /// Already sorted ascending.
+    Presorted,
+    /// Sorted descending.
+    Reverse,
+    /// Piecewise-ascending sawtooth (pre-existing runs).
+    Sawtooth,
+    /// Gaussian-ish (sum of uniforms) — clustered values.
+    Clustered,
+}
+
+impl Workload {
+    /// All distributions, for sweeps.
+    pub fn all() -> [Workload; 6] {
+        [
+            Workload::Uniform,
+            Workload::FewDups,
+            Workload::Presorted,
+            Workload::Reverse,
+            Workload::Sawtooth,
+            Workload::Clustered,
+        ]
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Uniform => "uniform",
+            Workload::FewDups => "few-dups",
+            Workload::Presorted => "presorted",
+            Workload::Reverse => "reverse",
+            Workload::Sawtooth => "sawtooth",
+            Workload::Clustered => "clustered",
+        }
+    }
+
+    /// Generate `n` elements with a fixed `seed`.
+    pub fn generate(self, n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        match self {
+            Workload::Uniform => rng.vec_u32(n),
+            Workload::FewDups => (0..n).map(|_| rng.next_u32() % 100).collect(),
+            Workload::Presorted => (0..n as u32).collect(),
+            Workload::Reverse => (0..n as u32).rev().collect(),
+            Workload::Sawtooth => (0..n).map(|i| (i % 1024) as u32).collect(),
+            Workload::Clustered => (0..n)
+                .map(|_| {
+                    (0..8).map(|_| rng.next_u32() >> 6).fold(0u32, u32::wrapping_add)
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        for w in Workload::all() {
+            assert_eq!(w.generate(100, 7), w.generate(100, 7), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn lengths_and_shapes() {
+        assert_eq!(Workload::Uniform.generate(1000, 1).len(), 1000);
+        let pre = Workload::Presorted.generate(100, 1);
+        assert!(pre.windows(2).all(|w| w[0] <= w[1]));
+        let rev = Workload::Reverse.generate(100, 1);
+        assert!(rev.windows(2).all(|w| w[0] >= w[1]));
+        let dups = Workload::FewDups.generate(1000, 1);
+        assert!(dups.iter().all(|&x| x < 100));
+    }
+}

@@ -1,0 +1,91 @@
+//! Coordinator configuration and routing policy.
+
+/// Where a request executes — chosen by [`CoordinatorConfig::route`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Route {
+    /// `< tiny_cutoff`: branchless insertion sort, cheaper than any
+    /// vector setup (paper Fig. 5's small-scale observation).
+    Tiny,
+    /// Single-thread NEON-MS.
+    SingleThread,
+    /// Merge-path parallel NEON-MS.
+    Parallel,
+    /// XLA block-sort offload + rust cross-block merge.
+    Xla,
+}
+
+/// Tunables for [`super::SortService`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Bounded queue capacity (requests); submits beyond it block —
+    /// backpressure rather than unbounded memory growth.
+    pub queue_capacity: usize,
+    /// Max tiny requests drained by one worker wakeup (dynamic batch).
+    pub batch_max: usize,
+    /// Below this, route Tiny.
+    pub tiny_cutoff: usize,
+    /// Above this, route Parallel.
+    pub parallel_cutoff: usize,
+    /// Threads for one Parallel-routed request.
+    pub threads_per_parallel_sort: usize,
+    /// Offload to XLA when a request's length is ≥ this and an
+    /// artifact set is loaded. `None` disables offload.
+    pub xla_cutoff: Option<usize>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            batch_max: 32,
+            tiny_cutoff: 64,
+            parallel_cutoff: 1 << 20,
+            threads_per_parallel_sort: 4,
+            xla_cutoff: None,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Route a request of `len` elements.
+    pub fn route(&self, len: usize, xla_available: bool) -> Route {
+        if len < self.tiny_cutoff {
+            return Route::Tiny;
+        }
+        if let Some(x) = self.xla_cutoff {
+            if xla_available && len >= x && len < self.parallel_cutoff {
+                return Route::Xla;
+            }
+        }
+        if len >= self.parallel_cutoff {
+            Route::Parallel
+        } else {
+            Route::SingleThread
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_table() {
+        let cfg = CoordinatorConfig { xla_cutoff: Some(4096), ..Default::default() };
+        assert_eq!(cfg.route(10, true), Route::Tiny);
+        assert_eq!(cfg.route(1000, true), Route::SingleThread);
+        assert_eq!(cfg.route(1000, false), Route::SingleThread);
+        assert_eq!(cfg.route(8192, true), Route::Xla);
+        assert_eq!(cfg.route(8192, false), Route::SingleThread);
+        assert_eq!(cfg.route(1 << 21, true), Route::Parallel);
+    }
+
+    #[test]
+    fn xla_disabled_by_default() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.route(1 << 14, true), Route::SingleThread);
+    }
+}

@@ -1,0 +1,144 @@
+//! Lock-free service metrics: request counters per route and a
+//! log-bucketed latency histogram (no external deps — atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two latency buckets from 1 µs to ~67 s.
+const BUCKETS: usize = 27;
+
+/// Log-bucketed latency histogram.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper bucket bound), q in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All coordinator counters (shared via `Arc`).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub elements: AtomicU64,
+    pub route_tiny: AtomicU64,
+    pub route_single: AtomicU64,
+    pub route_parallel: AtomicU64,
+    pub route_xla: AtomicU64,
+    pub batches: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub elements: u64,
+    pub route_tiny: u64,
+    pub route_single: u64,
+    pub route_parallel: u64,
+    pub route_xla: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl Metrics {
+    /// Capture a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            elements: self.elements.load(Ordering::Relaxed),
+            route_tiny: self.route_tiny.load(Ordering::Relaxed),
+            route_single: self.route_single.load(Ordering::Relaxed),
+            route_parallel: self.route_parallel.load(Ordering::Relaxed),
+            route_xla: self.route_xla.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_us: self.latency.quantile_us(0.5),
+            p99_us: self.latency.quantile_us(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.mean_us() > 0.0);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.quantile_us(1.0) >= 10_000);
+    }
+
+    #[test]
+    fn zero_samples() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 sort-service coordinator.
+//!
+//! The paper delivers an algorithm; this module delivers it as a
+//! *service* the way a framework would ship it: a bounded request
+//! queue with backpressure, a router that classifies requests by size
+//! (tiny → branchless scalar, small → in-register path, medium →
+//! single-thread NEON-MS, large → merge-path parallel, optional XLA
+//! offload for power-of-two-friendly blocks), a small dynamic batcher
+//! that drains bursts of tiny requests in one worker wakeup, and
+//! latency/throughput metrics.
+//!
+//! Python never appears here: the XLA path executes AOT artifacts via
+//! [`crate::runtime`].
+
+mod config;
+mod metrics;
+mod service;
+
+pub use config::{CoordinatorConfig, Route};
+pub use metrics::{LatencyHistogram, MetricsSnapshot};
+pub use service::{SortHandle, SortService};
+
+#[cfg(test)]
+mod tests;

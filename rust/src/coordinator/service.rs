@@ -1,0 +1,333 @@
+//! The sort service: bounded queue, router, dynamic batcher, worker
+//! pool, and the confined XLA executor thread.
+//!
+//! Threading model: `N` CPU workers drain a bounded `Mutex<VecDeque>`
+//! + condvar queue (blocking `submit` = backpressure). The PJRT client
+//! is `Rc`-based (!Send), so XLA offload runs on one dedicated
+//! executor thread owning the [`BlockSorter`]; workers forward
+//! Xla-routed jobs over an `mpsc` channel and move on — the executor
+//! answers the requester directly.
+
+use super::config::{CoordinatorConfig, Route};
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::kernels::serial::insertion_sort;
+use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
+use crate::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One queued request.
+struct Job {
+    data: Vec<u32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Vec<u32>>,
+}
+
+/// Handle to a submitted request; [`SortHandle::wait`] blocks for the
+/// sorted result.
+pub struct SortHandle {
+    rx: mpsc::Receiver<Vec<u32>>,
+}
+
+impl SortHandle {
+    /// Block until the sorted vector arrives.
+    pub fn wait(self) -> Result<Vec<u32>> {
+        self.rx.recv().context("sort worker dropped the request")
+    }
+}
+
+struct Shared {
+    cfg: CoordinatorConfig,
+    queue: Mutex<VecDeque<Job>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    shutdown: AtomicBool,
+    metrics: Arc<Metrics>,
+    xla_tx: Option<mpsc::Sender<Job>>,
+}
+
+/// The coordinator service.
+pub struct SortService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    xla_thread: Option<JoinHandle<()>>,
+}
+
+impl SortService {
+    /// Start with `cfg`; if `artifacts_dir` is `Some` and contains
+    /// artifacts, an XLA executor thread is started and Xla routing is
+    /// enabled (subject to `cfg.xla_cutoff`).
+    pub fn start(cfg: CoordinatorConfig, artifacts_dir: Option<PathBuf>) -> Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+        let (xla_tx, xla_thread) = match artifacts_dir {
+            Some(dir) => {
+                let reg = ArtifactRegistry::scan(&dir);
+                if reg.is_empty() {
+                    (None, None)
+                } else {
+                    let (tx, rx) = mpsc::channel::<Job>();
+                    // Handshake so startup failures surface in start().
+                    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+                    let xm = Arc::clone(&metrics);
+                    let handle = std::thread::Builder::new()
+                        .name("xla-executor".into())
+                        .spawn(move || xla_executor(reg, rx, ready_tx, xm))
+                        .context("spawning xla executor")?;
+                    ready_rx.recv().context("xla executor died at startup")??;
+                    (Some(tx), Some(handle))
+                }
+            }
+            None => (None, None),
+        };
+
+        let shared = Arc::new(Shared {
+            cfg: cfg.clone(),
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics,
+            xla_tx,
+        });
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sort-worker-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .context("spawning worker")?,
+            );
+        }
+        Ok(SortService { shared, workers, xla_thread })
+    }
+
+    /// Start with defaults and no XLA offload.
+    pub fn start_default() -> Result<Self> {
+        SortService::start(CoordinatorConfig::default(), None)
+    }
+
+    /// True if the XLA executor is running.
+    pub fn xla_enabled(&self) -> bool {
+        self.shared.xla_tx.is_some()
+    }
+
+    /// Submit a sort request, blocking while the queue is full
+    /// (backpressure).
+    pub fn submit(&self, data: Vec<u32>) -> SortHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = Job { data, enqueued: Instant::now(), reply };
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.len() >= self.shared.cfg.queue_capacity {
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+        q.push_back(job);
+        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.shared.not_empty.notify_one();
+        SortHandle { rx }
+    }
+
+    /// Non-blocking submit; `Err(data)` returns the input when the
+    /// queue is full (caller decides to retry/shed).
+    pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.cfg.queue_capacity {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(data);
+        }
+        let (reply, rx) = mpsc::channel();
+        q.push_back(Job { data, enqueued: Instant::now(), reply });
+        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.shared.not_empty.notify_one();
+        Ok(SortHandle { rx })
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Drain the queue and stop all threads. Consumes the service;
+    /// outstanding handles still receive their results first.
+    pub fn shutdown(self) {
+        let SortService { shared, workers, xla_thread } = self;
+        shared.shutdown.store(true, Ordering::SeqCst);
+        shared.not_empty.notify_all();
+        for w in workers {
+            let _ = w.join();
+        }
+        // Dropping the last Shared Arc drops the xla sender, which
+        // disconnects the executor's channel and ends its loop.
+        drop(shared);
+        if let Some(t) = xla_thread {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // Pop one job (plus a batch of tiny ones) or exit.
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    let mut batch = vec![job];
+                    // Dynamic batching: drain further *tiny* requests
+                    // in the same wakeup to amortize scheduling.
+                    if batch[0].data.len() < shared.cfg.tiny_cutoff {
+                        while batch.len() < shared.cfg.batch_max {
+                            match q.front() {
+                                Some(j) if j.data.len() < shared.cfg.tiny_cutoff => {
+                                    batch.push(q.pop_front().unwrap());
+                                }
+                                _ => break,
+                            }
+                        }
+                        if batch.len() > 1 {
+                            shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    break batch;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap();
+            }
+        };
+        shared.not_full.notify_all();
+        for job in batch {
+            process(shared, job);
+        }
+    }
+}
+
+fn process(shared: &Shared, mut job: Job) {
+    let m = &shared.metrics;
+    let route = shared.cfg.route(job.data.len(), shared.xla_tx.is_some());
+    match route {
+        Route::Tiny => {
+            m.route_tiny.fetch_add(1, Ordering::Relaxed);
+            insertion_sort(&mut job.data);
+        }
+        Route::SingleThread => {
+            m.route_single.fetch_add(1, Ordering::Relaxed);
+            // Thread-local sorter: construction is cheap (network
+            // tables are small) and avoids sharing.
+            thread_local! {
+                static SORTER: NeonMergeSort = NeonMergeSort::paper_default();
+            }
+            SORTER.with(|s| s.sort(&mut job.data));
+        }
+        Route::Parallel => {
+            m.route_parallel.fetch_add(1, Ordering::Relaxed);
+            ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
+                .sort(&mut job.data);
+        }
+        Route::Xla => {
+            m.route_xla.fetch_add(1, Ordering::Relaxed);
+            // Forward; the executor thread completes the reply.
+            if let Some(tx) = &shared.xla_tx {
+                if tx.send(job).is_ok() {
+                    return;
+                }
+            }
+            unreachable!("route() returned Xla without an executor");
+        }
+    }
+    finish(m, job);
+}
+
+fn finish(m: &Metrics, job: Job) {
+    m.elements.fetch_add(job.data.len() as u64, Ordering::Relaxed);
+    m.latency.record(job.enqueued.elapsed());
+    m.completed.fetch_add(1, Ordering::Relaxed);
+    // Receiver may have given up; that's fine.
+    let _ = job.reply.send(job.data);
+}
+
+/// Dedicated thread owning the (!Send) PJRT client + executables.
+fn xla_executor(
+    reg: ArtifactRegistry,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+    metrics: Arc<Metrics>,
+) {
+    let sorter = match PjrtRuntime::cpu()
+        .map(Arc::new)
+        .and_then(|rt| BlockSorter::new(rt, &reg))
+    {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let geometry = sorter.batch_geometry();
+    while let Ok(mut job) = rx.recv() {
+        // Opportunistic dynamic batching through the accelerator: if a
+        // batched artifact is compiled and this job fits one row, pull
+        // whatever fitting jobs are already queued (non-blocking) and
+        // sort them all in a single PJRT dispatch.
+        if let Some((batch, block)) = geometry {
+            if job.data.len() <= block {
+                let mut group = vec![job];
+                let mut oversized = Vec::new();
+                while group.len() < batch {
+                    match rx.try_recv() {
+                        Ok(j) if j.data.len() <= block => group.push(j),
+                        Ok(j) => {
+                            oversized.push(j);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                if group.len() > 1 {
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    let mut rows: Vec<&mut [u32]> =
+                        group.iter_mut().map(|j| j.data.as_mut_slice()).collect();
+                    if sorter.sort_batch_u32(&mut rows).is_err() {
+                        for j in group.iter_mut() {
+                            NeonMergeSort::paper_default().sort(&mut j.data);
+                        }
+                    }
+                    for j in group {
+                        finish(&metrics, j);
+                    }
+                } else {
+                    for mut j in group {
+                        if sorter.sort_u32(&mut j.data).is_err() {
+                            NeonMergeSort::paper_default().sort(&mut j.data);
+                        }
+                        finish(&metrics, j);
+                    }
+                }
+                for mut j in oversized {
+                    if sorter.sort_u32(&mut j.data).is_err() {
+                        NeonMergeSort::paper_default().sort(&mut j.data);
+                    }
+                    finish(&metrics, j);
+                }
+                continue;
+            }
+        }
+        if sorter.sort_u32(&mut job.data).is_err() {
+            // Fall back to the CPU path rather than dropping the job.
+            NeonMergeSort::paper_default().sort(&mut job.data);
+        }
+        finish(&metrics, job);
+    }
+}

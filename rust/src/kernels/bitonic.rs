@@ -1,0 +1,158 @@
+//! Fully vectorized bitonic merging networks over `V128` registers.
+//!
+//! A bitonic merge of `n = 4·R` elements held in `R` registers runs
+//! `log(n)` half-cleaner stages (Fig. 4): stages with element distance
+//! ≥ 4 are *register-level* — one `vmin`+`vmax` pair per register pair,
+//! no shuffles; the last two stages (distance 2 and 1) are
+//! *intra-register* and each cost one shuffle + min + max + blend.
+//! This is the paper's "vectorized bitonic" merger (Table 3 row 1).
+
+use crate::simd::{Lane, V128};
+
+/// Distance-2 half-cleaner within one register: compare lanes (0,2)
+/// and (1,3). One shuffle + min + max + blend.
+#[inline(always)]
+pub fn stage_d2_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
+    let s = r.swap_halves();
+    V128::blend_lo_hi(r.min(s), r.max(s))
+}
+
+/// Distance-1 half-cleaner within one register: compare lanes (0,1)
+/// and (2,3). One shuffle + min + max + blend.
+#[inline(always)]
+pub fn stage_d1_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
+    let s = r.rev64();
+    V128::blend_even_odd(r.min(s), r.max(s))
+}
+
+/// Distance-2 + distance-1 bitonic stages within one register: sorts
+/// any 4-element bitonic sequence ascending. 2 shuffles, 2 blends,
+/// 2 min, 2 max — the NEON `vrev64`/`vext` idiom.
+#[inline(always)]
+pub fn merge4_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
+    stage_d1_in_reg(stage_d2_in_reg(r))
+}
+
+/// Bitonic-merge `regs` in place: the concatenation of all lanes must
+/// form a bitonic sequence (ascending then descending). `regs.len()`
+/// must be a power of two. After return the concatenation is sorted
+/// ascending.
+#[inline(always)]
+pub fn bitonic_merge_regs<T: Lane>(regs: &mut [V128<T>]) {
+    let r = regs.len();
+    debug_assert!(r.is_power_of_two() || r == 1);
+    // Register-level half-cleaner stages: element distance 4·d.
+    let mut d = r / 2;
+    while d >= 1 {
+        let mut base = 0;
+        while base < r {
+            for i in base..base + d {
+                let (lo, hi) = regs[i].cmpswap(regs[i + d]);
+                regs[i] = lo;
+                regs[i + d] = hi;
+            }
+            base += 2 * d;
+        }
+        d /= 2;
+    }
+    // Intra-register stages.
+    for v in regs.iter_mut() {
+        *v = merge4_in_reg(*v);
+    }
+}
+
+/// Reverse a sorted run held in registers (register order + lanes), so
+/// `a ⌢ reverse(b)` forms the bitonic input a merge stage needs.
+#[inline(always)]
+pub fn reverse_regs<T: Lane>(regs: &mut [V128<T>]) {
+    regs.reverse();
+    for v in regs.iter_mut() {
+        *v = v.reverse();
+    }
+}
+
+/// Merge two sorted 4-element registers into a sorted 8-element pair
+/// `(lo, hi)` — the innermost 2×4 kernel.
+#[inline(always)]
+pub fn merge_2x4<T: Lane>(a: V128<T>, b: V128<T>) -> (V128<T>, V128<T>) {
+    let b = b.reverse();
+    let (lo, hi) = a.cmpswap(b);
+    (merge4_in_reg(lo), merge4_in_reg(hi))
+}
+
+/// Merge two sorted register runs of equal length in place:
+/// on entry `regs[..h]` and `regs[h..]` (h = `regs.len()/2`) each hold
+/// a sorted run; on exit the whole of `regs` is sorted. Fully
+/// vectorized (Table 3 "Vectorized Bitonic").
+#[inline(always)]
+pub fn merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
+    let h = regs.len() / 2;
+    debug_assert_eq!(h * 2, regs.len());
+    reverse_regs(&mut regs[h..]);
+    bitonic_merge_regs(regs);
+}
+
+/// Convenience: vectorized merge of two equal-length sorted slices
+/// (lengths equal, multiple of 4, power-of-two total) into `out`.
+/// Used by tests and the regmachine cross-check; the streaming path
+/// for arbitrary lengths is [`super::runmerge`].
+pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
+    assert_eq!(a.len(), b.len());
+    assert!((2 * a.len()).is_power_of_two() && a.len() % 4 == 0);
+    assert!(a.len() <= 32, "register kernel supports up to 2x32");
+    assert_eq!(out.len(), a.len() * 2);
+    // Monomorphize on the register count so the stage loops unroll.
+    match a.len() / 4 {
+        1 => merge_slices_impl::<T, 2>(a, b, out),
+        2 => merge_slices_impl::<T, 4>(a, b, out),
+        4 => merge_slices_impl::<T, 8>(a, b, out),
+        8 => merge_slices_impl::<T, 16>(a, b, out),
+        _ => unreachable!(),
+    }
+}
+
+#[inline(always)]
+fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
+    let mut regs = [V128::splat(T::MIN_VALUE); N];
+    for (v, c) in regs.iter_mut().zip(a.chunks_exact(4).chain(b.chunks_exact(4))) {
+        *v = V128::load(c);
+    }
+    merge_sorted_regs(&mut regs[..]);
+    for (c, v) in out.chunks_exact_mut(4).zip(&regs) {
+        v.store(c);
+    }
+}
+
+/// Fully sort `regs` (arbitrary contents) with an in-register bitonic
+/// *sorter*: sort runs of one register with [`sort4_in_reg`], then
+/// double run length with [`merge_sorted_regs`] on sub-slices. Used as
+/// an oracle and by the R=32 Table 2 variant's row stage.
+pub fn bitonic_sort_regs<T: Lane>(regs: &mut [V128<T>]) {
+    debug_assert!(regs.len().is_power_of_two());
+    for v in regs.iter_mut() {
+        *v = sort4_in_reg(*v);
+    }
+    let mut run = 1;
+    while run < regs.len() {
+        let mut base = 0;
+        while base < regs.len() {
+            merge_sorted_regs(&mut regs[base..base + 2 * run]);
+            base += 2 * run;
+        }
+        run *= 2;
+    }
+}
+
+/// Sort the four lanes of one register ascending (tiny bitonic sorter:
+/// 3 stages, 6 comparator-lanes — the n=4 column of Table 1's bitonic
+/// family, executed horizontally).
+#[inline(always)]
+pub fn sort4_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
+    // Stage 1: (0,1),(2,3) — ascending, descending (build bitonic pairs).
+    let s = r.rev64();
+    let mn = r.min(s);
+    let mx = r.max(s);
+    let r = V128([mn.0[0], mx.0[1], mx.0[2], mn.0[3]]); // asc pair, desc pair
+    // Now [min01, max01, max23, min23] is bitonic; merge it.
+    merge4_in_reg(r)
+}

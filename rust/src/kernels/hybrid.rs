@@ -1,0 +1,124 @@
+//! The **hybrid bitonic merger** (paper §2.4) — the core contribution.
+//!
+//! A bitonic merging network over 2K elements decomposes, after its
+//! first half-cleaner stage, into two *independent* K-element halves
+//! (the black and blue rectangles of Fig. 4). The hybrid merger runs
+//! the lower half fully vectorized (compare + shuffle, as in
+//! [`super::bitonic`]) and the upper half with *serial branchless*
+//! comparators (Fig. 3b `csel`/`cmov`), interleaving the two stage
+//! streams in source order. Because the halves share no data, the two
+//! dependency chains overlap in the out-of-order pipeline: the serial
+//! half's `cmov` latency hides under the vector half's shuffle traffic
+//! and vice versa, and the upper half needs *no* cross-register
+//! shuffles at all.
+//!
+//! The paper's Table 3 finds this wins at K ∈ {8, 16} and loses at
+//! K = 32, where the serial half's 32 temporaries exceed the register
+//! file and spill to the stack — we reproduce exactly that mechanism:
+//! the scalar buffer below *is* a stack spill once K is large.
+
+use super::bitonic::{bitonic_merge_regs, reverse_regs};
+use crate::simd::{Lane, V128, W};
+
+/// Maximum K (elements per side) the hybrid kernel supports: 2×32.
+pub const MAX_K: usize = 32;
+
+/// Hybrid-merge two sorted runs held in `regs` in place: on entry
+/// `regs[..h]` and `regs[h..]` (`h = regs.len()/2`) are each sorted
+/// ascending; on exit all of `regs` is sorted. `regs.len()` must be a
+/// power of two ≥ 2 and ≤ 16 (2×32 elements).
+#[inline(always)]
+pub fn hybrid_merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
+    let r = regs.len();
+    debug_assert!(r.is_power_of_two() && (2..=2 * MAX_K / W).contains(&r));
+    let h = r / 2;
+    let k = h * W; // elements per half after the first stage
+
+    // Form the bitonic sequence and run the first half-cleaner
+    // (element distance K): one register-level cmpswap per pair.
+    reverse_regs(&mut regs[h..]);
+    for i in 0..h {
+        let (lo, hi) = regs[i].cmpswap(regs[i + h]);
+        regs[i] = lo;
+        regs[i + h] = hi;
+    }
+
+    // The two halves are now independent K-element bitonic merges.
+    // LOWER half → scalar stack buffer (the serial side). Choosing
+    // the *lower* half for the serial implementation keeps the serial
+    // store/reload latency off the streaming merge's critical path:
+    // the lower K is emitted to memory immediately, while the upper K
+    // — which the next kernel invocation depends on — stays in the
+    // vector pipeline (§Perf iteration 7).
+    let mut buf = [T::MIN_VALUE; MAX_K];
+    for (i, v) in regs[..h].iter().enumerate() {
+        v.store(&mut buf[i * W..]);
+    }
+
+    // Both halves inline to straight-line code with *no data
+    // dependence* between them, so the out-of-order scheduler
+    // interleaves the vector half's shuffle/min/max stream with the
+    // serial half's cmp/cmov stream — the paper expressed the same
+    // interleaving at the source level for GCC's in-order-friendly
+    // scheduling; on an OoO x86 core the hardware does it (§Perf
+    // iteration 3: the source-level stage state machine blocked loop
+    // unrolling and cost ~2×).
+    serial_bitonic_merge(&mut buf[..k]); // serial half (lower K)
+    bitonic_merge_regs(&mut regs[h..]); // vector half (upper K)
+
+    // Reload the serial half into registers.
+    for (i, v) in regs[..h].iter_mut().enumerate() {
+        *v = V128::load(&buf[i * W..i * W + W]);
+    }
+}
+
+/// Branchless scalar bitonic merge (Fig. 3b comparators): sorts a
+/// bitonic buffer with `cmp`+`cmov` pairs, no shuffles, no branches.
+/// Fully unrolls when the caller's length is a compile-time constant.
+#[inline(always)]
+fn serial_bitonic_merge<T: Lane>(buf: &mut [T]) {
+    let k = buf.len();
+    let mut ds = k / 2;
+    while ds >= 1 {
+        let mut base = 0;
+        while base < k {
+            for i in base..base + ds {
+                let (a, b) = (buf[i], buf[i + ds]);
+                buf[i] = a.lane_min(b);
+                buf[i + ds] = a.lane_max(b);
+            }
+            base += 2 * ds;
+        }
+        ds /= 2;
+    }
+}
+
+/// Convenience: hybrid merge of two equal-length sorted slices into
+/// `out`. Same contract as [`super::bitonic::merge_slices`].
+pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
+    assert_eq!(a.len(), b.len());
+    assert!((2 * a.len()).is_power_of_two() && a.len() % W == 0);
+    assert!(a.len() <= MAX_K, "hybrid kernel supports up to 2x{MAX_K}");
+    assert_eq!(out.len(), a.len() * 2);
+    // Monomorphize on the register count so both the vector stages and
+    // the serial half's comparator loops unroll to straight-line code.
+    match 2 * a.len() / W {
+        2 => merge_slices_impl::<T, 2>(a, b, out),
+        4 => merge_slices_impl::<T, 4>(a, b, out),
+        8 => merge_slices_impl::<T, 8>(a, b, out),
+        16 => merge_slices_impl::<T, 16>(a, b, out),
+        _ => unreachable!(),
+    }
+}
+
+#[inline(always)]
+fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
+    let mut regs = [V128::splat(T::MIN_VALUE); N];
+    for (v, c) in regs.iter_mut().zip(a.chunks_exact(W).chain(b.chunks_exact(W))) {
+        *v = V128::load(c);
+    }
+    hybrid_merge_sorted_regs(&mut regs[..]);
+    for (c, v) in out.chunks_exact_mut(W).zip(&regs) {
+        v.store(c);
+    }
+}

@@ -1,0 +1,301 @@
+//! The in-register sort (paper §2.1–2.3, Fig. 2, Table 2).
+//!
+//! Four steps over a block of `R·W` contiguous elements:
+//!
+//! 1. **load** — `R` vector registers, register `i` ← elements
+//!    `[4i, 4i+4)`;
+//! 2. **column sort** — a sorting network over the `R` registers,
+//!    executed lane-wise: each comparator is one `vmin`+`vmax`, so all
+//!    `W = 4` columns sort simultaneously. The network choice is the
+//!    Table 2 axis: bitonic / odd-even / *best* (asymmetric, `16*`);
+//! 3. **transpose** — `R×4 → 4×R` via `R/4` base 4×4 transposes
+//!    (§2.3), leaving 4 sorted runs of length `R`, each contiguous in
+//!    `R/4` registers;
+//! 4. **row merge** — 0, 1, or 2 rounds of in-register bitonic merges
+//!    growing runs `R → 2R → 4R`; the produced run length is the
+//!    paper's `X`.
+
+use super::bitonic::merge_sorted_regs;
+use super::hybrid::hybrid_merge_sorted_regs;
+use super::serial::insertion_sort;
+use super::MergeImpl;
+use crate::simd::{Lane, V128, W};
+use crate::sortnet::{gen, Network};
+
+/// Which column-sort network an [`InRegisterSorter`] uses — Table 2's
+/// register-count rows, including the starred `16*` best network.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ColumnNetwork {
+    /// Symmetric bitonic sorter.
+    Bitonic,
+    /// Batcher odd-even sorter (the unstarred Table 2 rows).
+    OddEven,
+    /// Best-known asymmetric network (`16*` — Green's 60-comparator
+    /// network at R = 16).
+    Best,
+}
+
+/// Configuration + precomputed network for the in-register sort.
+#[derive(Clone, Debug)]
+pub struct InRegisterSorter {
+    r: usize,
+    net: Network,
+    family: ColumnNetwork,
+    merge_impl: MergeImpl,
+}
+
+impl InRegisterSorter {
+    /// Build a sorter using `r` vector registers (power of two, 4–32)
+    /// and the given column-network family.
+    pub fn new(r: usize, family: ColumnNetwork) -> Self {
+        assert!(r.is_power_of_two() && (4..=32).contains(&r), "R must be 4|8|16|32");
+        let net = match family {
+            ColumnNetwork::Bitonic => gen::bitonic_sort(r),
+            ColumnNetwork::OddEven => gen::odd_even_sort(r),
+            ColumnNetwork::Best => gen::best(r),
+        };
+        InRegisterSorter { r, net, family, merge_impl: MergeImpl::Hybrid }
+    }
+
+    /// The paper's configuration: `R = 16` with the best (`16*`)
+    /// column network and hybrid row merges.
+    pub fn paper_default() -> Self {
+        InRegisterSorter::new(16, ColumnNetwork::Best)
+    }
+
+    /// Select the row-merge implementation (vectorized / hybrid).
+    pub fn with_merge_impl(mut self, mi: MergeImpl) -> Self {
+        assert_ne!(mi, MergeImpl::Serial, "row merge is an in-register kernel");
+        self.merge_impl = mi;
+        self
+    }
+
+    /// Registers used (paper's `R`).
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Elements per block: `R · W`.
+    pub fn block_len(&self) -> usize {
+        self.r * W
+    }
+
+    /// The column-sort network in use.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Sort one `R·W`-element block to sorted runs of length `x`,
+    /// where `x ∈ {R, 2R, 4R}` (Table 2's `X`). `x = 4R` fully sorts
+    /// the block.
+    pub fn sort_block_to_runs<T: Lane>(&self, block: &mut [T], x: usize) {
+        assert_eq!(block.len(), self.block_len());
+        assert!(
+            x == self.r || x == 2 * self.r || x == 4 * self.r,
+            "X must be R, 2R or 4R (got {x} for R={})",
+            self.r
+        );
+        // Monomorphized stack-register paths per R (§Perf iteration 1:
+        // the former Vec-based path allocated twice per 64-element
+        // block and dominated the profile).
+        match self.r {
+            4 => self.sort_block_impl::<T, 4>(block, x),
+            8 => self.sort_block_impl::<T, 8>(block, x),
+            16 => self.sort_block_impl::<T, 16>(block, x),
+            32 => self.sort_block_impl::<T, 32>(block, x),
+            _ => unreachable!("constructor enforces R ∈ {{4,8,16,32}}"),
+        }
+    }
+
+    fn sort_block_impl<T: Lane, const R: usize>(&self, block: &mut [T], x: usize) {
+        // 1. load: R stack registers.
+        let mut regs = [V128::splat(T::MIN_VALUE); R];
+        for (v, c) in regs.iter_mut().zip(block.chunks_exact(W)) {
+            *v = V128::load(c);
+        }
+        // 2. column sort (lane-wise network application). The paper
+        //    configuration (R=16, best network) takes a straight-line
+        //    compiled path: 60 comparators on 16 named locals the
+        //    compiler keeps in architectural registers (§Perf
+        //    iteration 8 — the table-driven loop round-tripped every
+        //    comparator through the stack, ~4 cyc/elem extra).
+        if R == 16 && self.family == ColumnNetwork::Best {
+            column_sort_best16(&mut regs);
+        } else {
+            for c in self.net.comparators() {
+                let (i, j) = (c.i as usize, c.j as usize);
+                let (lo, hi) = regs[i].cmpswap(regs[j]);
+                regs[i] = lo;
+                regs[j] = hi;
+            }
+        }
+        // 3. transpose to 4 contiguous sorted runs of length R
+        //    (R/4 base 4×4 transposes, stack scratch).
+        let mut out = [V128::splat(T::MIN_VALUE); R];
+        let tiles = R / W;
+        for t in 0..tiles {
+            let tile = crate::simd::transpose4([
+                regs[4 * t],
+                regs[4 * t + 1],
+                regs[4 * t + 2],
+                regs[4 * t + 3],
+            ]);
+            for (j, row) in tile.into_iter().enumerate() {
+                out[j * tiles + t] = row;
+            }
+        }
+        let mut regs = out;
+        // 4. row merge rounds: R -> 2R -> 4R.
+        if x >= 2 * self.r {
+            for half in regs.chunks_exact_mut(2 * tiles) {
+                self.reg_merge(half);
+            }
+        }
+        if x == 4 * self.r {
+            self.reg_merge(&mut regs);
+        }
+        // store
+        for (c, v) in block.chunks_exact_mut(W).zip(&regs) {
+            v.store(c);
+        }
+    }
+
+    #[inline(always)]
+    fn reg_merge<T: Lane>(&self, regs: &mut [V128<T>]) {
+        let hybrid_max_regs = 2 * super::hybrid::MAX_K / W;
+        match self.merge_impl {
+            MergeImpl::Vectorized => merge_sorted_regs(regs),
+            // Beyond 2×32 the hybrid kernel's serial half would spill
+            // (the paper's own Table 3 finding) — use the vector path.
+            MergeImpl::Hybrid if regs.len() <= hybrid_max_regs => {
+                hybrid_merge_sorted_regs(regs)
+            }
+            MergeImpl::Hybrid => merge_sorted_regs(regs),
+            MergeImpl::Serial => unreachable!(),
+        }
+    }
+
+    /// Fully sort one block (`x = 4R`).
+    pub fn sort_block<T: Lane>(&self, block: &mut [T]) {
+        self.sort_block_to_runs(block, 4 * self.r);
+    }
+
+    /// First pass of the full sort: partition `data` into blocks and
+    /// sort each one; the tail (< one block) is padded into a stack
+    /// buffer and sorted with the same kernel (falling back to
+    /// insertion sort below one vector). Returns the run length
+    /// (`block_len`) for the merge passes.
+    pub fn sort_runs<T: Lane>(&self, data: &mut [T]) -> usize {
+        let bl = self.block_len();
+        let whole = data.len() / bl * bl;
+        let mut iter = data[..whole].chunks_exact_mut(bl);
+        for block in &mut iter {
+            self.sort_block(block);
+        }
+        let tail = &mut data[whole..];
+        if !tail.is_empty() {
+            if tail.len() >= W {
+                // Pad to a full block with MAX so the padded suffix
+                // stays at the top and is discarded on copy-back.
+                let mut buf = vec![T::MAX_VALUE; bl];
+                buf[..tail.len()].copy_from_slice(tail);
+                self.sort_block(&mut buf);
+                tail.copy_from_slice(&buf[..tail.len()]);
+            } else {
+                insertion_sort(tail);
+            }
+        }
+        bl
+    }
+}
+
+/// Table 2 row labels: the five configurations the paper sweeps.
+pub fn table2_configs() -> Vec<(String, InRegisterSorter)> {
+    vec![
+        ("R=4".into(), InRegisterSorter::new(4, ColumnNetwork::OddEven)),
+        ("R=8".into(), InRegisterSorter::new(8, ColumnNetwork::OddEven)),
+        ("R=16".into(), InRegisterSorter::new(16, ColumnNetwork::OddEven)),
+        ("R=16*".into(), InRegisterSorter::new(16, ColumnNetwork::Best)),
+        ("R=32".into(), InRegisterSorter::new(32, ColumnNetwork::OddEven)),
+    ]
+}
+
+/// Green's best-16 network compiled to straight-line code over 16
+/// named locals — the compiler allocates them to architectural
+/// vector registers, exactly like the paper's hand-scheduled NEON
+/// kernel. Generated from [`crate::sortnet::gen::best`]\(16\)'s table
+/// and cross-checked against it in this module's tests.
+#[inline(always)]
+fn column_sort_best16<T: Lane>(regs: &mut [V128<T>]) {
+    debug_assert_eq!(regs.len(), 16);
+    let [mut v0, mut v1, mut v2, mut v3, mut v4, mut v5, mut v6, mut v7, mut v8, mut v9, mut v10, mut v11, mut v12, mut v13, mut v14, mut v15] =
+        [regs[0], regs[1], regs[2], regs[3], regs[4], regs[5], regs[6], regs[7], regs[8], regs[9], regs[10], regs[11], regs[12], regs[13], regs[14], regs[15]];
+    macro_rules! cs {
+        ($a:ident, $b:ident) => {{
+            let (lo, hi) = $a.cmpswap($b);
+            $a = lo;
+            $b = hi;
+        }};
+    }
+    cs!(v0, v1);
+    cs!(v2, v3);
+    cs!(v4, v5);
+    cs!(v6, v7);
+    cs!(v8, v9);
+    cs!(v10, v11);
+    cs!(v12, v13);
+    cs!(v14, v15);
+    cs!(v0, v2);
+    cs!(v4, v6);
+    cs!(v8, v10);
+    cs!(v12, v14);
+    cs!(v1, v3);
+    cs!(v5, v7);
+    cs!(v9, v11);
+    cs!(v13, v15);
+    cs!(v0, v4);
+    cs!(v8, v12);
+    cs!(v1, v5);
+    cs!(v9, v13);
+    cs!(v2, v6);
+    cs!(v10, v14);
+    cs!(v3, v7);
+    cs!(v11, v15);
+    cs!(v0, v8);
+    cs!(v1, v9);
+    cs!(v2, v10);
+    cs!(v3, v11);
+    cs!(v4, v12);
+    cs!(v5, v13);
+    cs!(v6, v14);
+    cs!(v7, v15);
+    cs!(v5, v10);
+    cs!(v6, v9);
+    cs!(v3, v12);
+    cs!(v13, v14);
+    cs!(v7, v11);
+    cs!(v1, v2);
+    cs!(v4, v8);
+    cs!(v1, v4);
+    cs!(v7, v13);
+    cs!(v2, v8);
+    cs!(v11, v14);
+    cs!(v5, v6);
+    cs!(v9, v10);
+    cs!(v2, v4);
+    cs!(v11, v13);
+    cs!(v3, v8);
+    cs!(v7, v12);
+    cs!(v6, v8);
+    cs!(v10, v12);
+    cs!(v3, v5);
+    cs!(v7, v9);
+    cs!(v3, v4);
+    cs!(v5, v6);
+    cs!(v7, v8);
+    cs!(v9, v10);
+    cs!(v11, v12);
+    cs!(v6, v7);
+    cs!(v8, v9);
+    regs.copy_from_slice(&[v0, v1, v2, v3, v4, v5, v6, v7, v8, v9, v10, v11, v12, v13, v14, v15]);
+}

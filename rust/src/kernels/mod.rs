@@ -1,0 +1,63 @@
+//! The paper's compute kernels (§2.2–§2.4).
+//!
+//! * [`inregister`] — the in-register sort: load R vector registers,
+//!   column-sort them with a sorting network, transpose, and row-merge
+//!   to sorted runs of `X ∈ {R, 2R, 4R}` (Fig. 2, Table 2).
+//! * [`bitonic`] — fully *vectorized* bitonic merging networks over
+//!   registers (the paper's first merger implementation, Fig. 4).
+//! * [`serial`] — branchless scalar (`csel`-style) merge primitives
+//!   (Fig. 3b) and the streaming two-pointer merge.
+//! * [`hybrid`] — the paper's contribution: the **hybrid bitonic
+//!   merger** that runs one symmetric half of the merging network
+//!   vectorized and the other half serial-branchless so the two
+//!   independent instruction streams interleave in the pipeline.
+//! * [`runmerge`] — streaming merge of two arbitrary-length sorted
+//!   runs built on any of the register merge kernels (AA-sort style),
+//!   the workhorse of the full sort's merge passes.
+
+pub mod bitonic;
+pub mod hybrid;
+pub mod inregister;
+pub mod runmerge;
+pub mod serial;
+
+/// Which register-merge kernel a streaming run merge uses — the
+/// Table 3 comparison axis.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MergeImpl {
+    /// Fully vectorized bitonic network (compare + shuffle).
+    Vectorized,
+    /// Hybrid: vector half + serial branchless half, interleaved.
+    Hybrid,
+    /// Pure branchless scalar two-pointer merge (no SIMD) — baseline
+    /// and tail path.
+    Serial,
+}
+
+/// Width (elements per side) of the register merge kernel: 2×K → 2K.
+/// The paper evaluates K ∈ {8, 16, 32} (Table 3).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MergeWidth {
+    K4 = 4,
+    K8 = 8,
+    K16 = 16,
+    K32 = 32,
+}
+
+impl MergeWidth {
+    /// Elements per side.
+    pub fn k(self) -> usize {
+        self as usize
+    }
+    /// Vector registers per side.
+    pub fn regs(self) -> usize {
+        self.k() / crate::simd::W
+    }
+    /// All widths, for sweeps.
+    pub fn all() -> [MergeWidth; 4] {
+        [MergeWidth::K4, MergeWidth::K8, MergeWidth::K16, MergeWidth::K32]
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,192 @@
+//! Streaming vectorized merge of two sorted runs of arbitrary length
+//! (the paper's "vectorized merge", §2.1/§2.4, after AA-sort [6]).
+//!
+//! The kernel keeps a K-element *in-flight block* in registers. Each
+//! iteration merges it against the next K elements of whichever input
+//! run currently has the smaller head (decided by one scalar compare —
+//! the only branch, highly predictable on long runs), emits the lower
+//! K elements to the output, and keeps the upper K in flight. The
+//! 2×K register merge is either the fully vectorized or the hybrid
+//! bitonic network — Table 3's comparison.
+//!
+//! Invariant: everything already emitted ≤ everything in flight and
+//! everything not yet consumed; the in-flight block and both tails are
+//! each sorted. Tails shorter than K drain through the branchless
+//! serial path.
+
+use super::bitonic::merge_sorted_regs;
+use super::hybrid::hybrid_merge_sorted_regs;
+use super::serial::merge_scalar;
+use super::{MergeImpl, MergeWidth};
+use crate::simd::{Lane, V128, W};
+
+/// Alloc-free 3-way merge of sorted `x`, `y`, `z` into `out` — the
+/// streaming merge's drain step (flight block + both input tails).
+/// Branchy, but runs once per pair-merge on the leftovers only.
+fn drain3<T: Lane>(x: &[T], y: &[T], z: &[T], out: &mut [T]) {
+    debug_assert_eq!(out.len(), x.len() + y.len() + z.len());
+    let (mut i, mut j, mut l) = (0usize, 0usize, 0usize);
+    for slot in out.iter_mut() {
+        // Pick the smallest available head; ties x → y → z.
+        let mut src = 3u8;
+        let mut best = T::MIN_VALUE;
+        if i < x.len() {
+            src = 0;
+            best = x[i];
+        }
+        if j < y.len() && (src == 3 || y[j] < best) {
+            src = 1;
+            best = y[j];
+        }
+        if l < z.len() && (src == 3 || z[l] < best) {
+            src = 2;
+            best = z[l];
+        }
+        *slot = best;
+        match src {
+            0 => i += 1,
+            1 => j += 1,
+            _ => l += 1,
+        }
+    }
+}
+
+/// Streaming merge configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RunMerger {
+    /// Elements per side of the register kernel (K).
+    pub width: MergeWidth,
+    /// Register-kernel implementation.
+    pub imp: MergeImpl,
+}
+
+impl RunMerger {
+    /// Default: hybrid 2×4 (the fastest width on this host's sweep).
+    pub fn paper_default() -> Self {
+        RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid }
+    }
+
+    /// Merge sorted `a` and `b` into `out` (`out.len() = a.len() +
+    /// b.len()`). Dispatches to the serial path when either run is
+    /// shorter than one kernel block.
+    pub fn merge<T: Lane>(&self, a: &[T], b: &[T], out: &mut [T]) {
+        assert_eq!(out.len(), a.len() + b.len());
+        if self.imp == MergeImpl::Serial {
+            return merge_scalar(a, b, out);
+        }
+        let k = self.width.k();
+        if a.len() < k || b.len() < k {
+            return merge_scalar(a, b, out);
+        }
+        // Monomorphize on the total register count N = 2K/W so every
+        // kernel loop bound is a compile-time constant and unrolls
+        // (§Perf iteration 2: runtime-length kernel loops left ~3× on
+        // the table vs the Table 3 microbenches).
+        match self.width {
+            MergeWidth::K4 => self.merge_vectorized::<T, 2>(a, b, out, k),
+            MergeWidth::K8 => self.merge_vectorized::<T, 4>(a, b, out, k),
+            MergeWidth::K16 => self.merge_vectorized::<T, 8>(a, b, out, k),
+            MergeWidth::K32 => self.merge_vectorized::<T, 16>(a, b, out, k),
+        }
+    }
+
+    fn merge_vectorized<T: Lane, const N: usize>(&self, a: &[T], b: &[T], out: &mut [T], k: usize) {
+        let kr = N / 2;
+        debug_assert_eq!(kr, self.width.regs());
+        // In-flight block: 2K elements in N registers; lower K is
+        // emitted each round, upper K stays. Stack-resident — the
+        // merge-pass hot loop must not allocate (§Perf iteration 1).
+        let mut regs = [V128::splat(T::MIN_VALUE); N];
+        for (v, c) in regs
+            .iter_mut()
+            .zip(a[..k].chunks_exact(W).chain(b[..k].chunks_exact(W)))
+        {
+            *v = V128::load(c);
+        }
+        let (mut i, mut j) = (k, k); // consumed from a / b
+        let mut o = 0usize; // emitted
+        // Fast loop: while BOTH runs can supply a full block, the
+        // refill source is chosen with a branchless pointer select
+        // (§Perf iteration 5: the data-dependent refill branch
+        // mispredicted once per K outputs on random keys).
+        while i + k <= a.len() && j + k <= b.len() {
+            self.kernel(&mut regs);
+            for (c, v) in out[o..o + k].chunks_exact_mut(W).zip(&regs[..kr]) {
+                v.store(c);
+            }
+            o += k;
+            let take_a = a[i] <= b[j];
+            // SAFETY: both indices verified in the loop condition; the
+            // select compiles to cmov and the loads read k elements
+            // from whichever run was chosen.
+            unsafe {
+                let src = if take_a { a.as_ptr().add(i) } else { b.as_ptr().add(j) };
+                for (t, r) in regs[..kr].iter_mut().enumerate() {
+                    *r = V128::load(std::slice::from_raw_parts(src.add(t * W), W));
+                }
+            }
+            i += k * take_a as usize;
+            j += k * !take_a as usize;
+        }
+        loop {
+            self.kernel(&mut regs);
+            for (c, v) in out[o..o + k].chunks_exact_mut(W).zip(&regs[..kr]) {
+                v.store(c);
+            }
+            o += k;
+            // Refill the lower half from the run with the smaller
+            // head. Correctness requires following the head rule
+            // strictly: if the chosen run cannot supply a full block,
+            // the vector loop must STOP (its small head elements must
+            // not be overtaken by the other run's blocks) and the
+            // serial drain takes over.
+            let a_has = i < a.len();
+            let b_has = j < b.len();
+            let choose_a = a_has && (!b_has || a[i] <= b[j]);
+            if choose_a {
+                if i + k > a.len() {
+                    break;
+                }
+                for (r, c) in regs[..kr].iter_mut().zip(a[i..i + k].chunks_exact(W)) {
+                    *r = V128::load(c);
+                }
+                i += k;
+            } else if b_has {
+                if j + k > b.len() {
+                    break;
+                }
+                for (r, c) in regs[..kr].iter_mut().zip(b[j..j + k].chunks_exact(W)) {
+                    *r = V128::load(c);
+                }
+                j += k;
+            } else {
+                break;
+            }
+        }
+        // Drain: in-flight upper K (sorted) + both tails, all ≥
+        // everything emitted. Alloc-free: flight lives on the stack
+        // and the 3-way merge goes through one stack staging buffer.
+        let mut flight = [T::MIN_VALUE; 32];
+        for (c, v) in flight[..k].chunks_exact_mut(W).zip(&regs[kr..]) {
+            v.store(c);
+        }
+        drain3(&flight[..k], &a[i..], &b[j..], &mut out[o..]);
+    }
+
+    #[inline(always)]
+    fn kernel<T: Lane, const N: usize>(&self, regs: &mut [V128<T>; N]) {
+        // On entry: regs[..kr] sorted (new block), regs[kr..] sorted
+        // (in-flight). Passing the whole fixed-size array keeps every
+        // stage loop fully unrolled after inlining.
+        match self.imp {
+            MergeImpl::Vectorized => merge_sorted_regs(&mut regs[..]),
+            MergeImpl::Hybrid => hybrid_merge_sorted_regs(&mut regs[..]),
+            MergeImpl::Serial => unreachable!("dispatched earlier"),
+        }
+    }
+}
+
+/// Table 3 rows: the two register-kernel implementations.
+pub fn table3_impls() -> [(&'static str, MergeImpl); 2] {
+    [("Vectorized Bitonic", MergeImpl::Vectorized), ("Hybrid Bitonic", MergeImpl::Hybrid)]
+}

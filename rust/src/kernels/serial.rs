@@ -1,0 +1,83 @@
+//! Branchless scalar merge primitives (paper Fig. 3b).
+//!
+//! The paper's serial comparator uses AArch64 `csel` instead of a
+//! branch; on x86-64 the same source shape compiles to `cmov`. These
+//! primitives are the "serial half" of the hybrid merger and the tail
+//! path of the streaming run merge.
+
+use crate::simd::Lane;
+use crate::sortnet::Network;
+
+/// Branchless compare-exchange on a scalar slice: after the call,
+/// `data[i] = min`, `data[j] = max`. This is exactly Fig. 3b.
+#[inline(always)]
+pub fn cmpswap_scalar<T: Lane>(data: &mut [T], i: usize, j: usize) {
+    let (a, b) = (data[i], data[j]);
+    data[i] = a.lane_min(b);
+    data[j] = a.lane_max(b);
+}
+
+/// Run one parallel layer of a merging network serially with
+/// branchless comparators — the unit the hybrid merger interleaves
+/// with vector stages.
+#[inline]
+pub fn apply_layer_scalar<T: Lane>(data: &mut [T], layer: &[crate::sortnet::Comparator]) {
+    for c in layer {
+        cmpswap_scalar(data, c.i as usize, c.j as usize);
+    }
+}
+
+/// Apply a whole network serially (branchless). Equivalent to
+/// [`Network::apply_slice`]; re-exported here so kernel code reads
+/// symmetrically with the vector path.
+#[inline]
+pub fn apply_network_scalar<T: Lane>(data: &mut [T], net: &Network) {
+    net.apply_slice(data);
+}
+
+/// Branchless streaming two-pointer merge of two sorted slices into
+/// `out` (`out.len() == a.len() + b.len()`).
+///
+/// The hot loop advances exactly one input per iteration with
+/// `cmov`-style index updates — no data-dependent branch, so no
+/// misprediction cost on random keys (the paper's motivation for
+/// `csel`). Tails are bulk-copied.
+pub fn merge_scalar<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
+    assert_eq!(out.len(), a.len() + b.len());
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let va = a[i];
+        let vb = b[j];
+        let take_a = va <= vb;
+        // Both arms computed, select with cmov — branchless.
+        out[k] = if take_a { va } else { vb };
+        i += take_a as usize;
+        j += !take_a as usize;
+        k += 1;
+    }
+    if i < a.len() {
+        out[k..].copy_from_slice(&a[i..]);
+    } else {
+        out[k..].copy_from_slice(&b[j..]);
+    }
+}
+
+/// Three-way serial merge — used by the streaming run merge to drain
+/// its in-flight register block together with both input tails.
+pub fn merge3_scalar<T: Lane>(a: &[T], b: &[T], c: &[T], out: &mut [T]) {
+    assert_eq!(out.len(), a.len() + b.len() + c.len());
+    let mut tmp = vec![T::MIN_VALUE; a.len() + b.len()];
+    merge_scalar(a, b, &mut tmp);
+    merge_scalar(&tmp, c, out);
+}
+
+/// Binary-insertion sort for tiny tails (< one vector block). Branchy
+/// but only ever run on < 64 elements.
+pub fn insertion_sort<T: Lane>(data: &mut [T]) {
+    for i in 1..data.len() {
+        let v = data[i];
+        let pos = data[..i].partition_point(|x| *x <= v);
+        data.copy_within(pos..i, pos + 1);
+        data[pos] = v;
+    }
+}

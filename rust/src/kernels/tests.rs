@@ -1,0 +1,302 @@
+use super::bitonic::{self, merge4_in_reg, sort4_in_reg};
+use super::hybrid;
+use super::inregister::{table2_configs, ColumnNetwork, InRegisterSorter};
+use super::runmerge::RunMerger;
+use super::serial;
+use super::{MergeImpl, MergeWidth};
+use crate::simd::V128;
+use crate::testutil::{assert_permutation, assert_sorted, forall, forall_indexed, Rng};
+
+fn sorted_pair(rng: &mut Rng, k: usize, modv: u32) -> (Vec<u32>, Vec<u32>) {
+    let mut a: Vec<u32> = (0..k).map(|_| rng.next_u32() % modv).collect();
+    let mut b: Vec<u32> = (0..k).map(|_| rng.next_u32() % modv).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    (a, b)
+}
+
+#[test]
+fn sort4_in_reg_all_permutations() {
+    // Exhaustive over all 4! orders of distinct values + dup patterns.
+    let vals = [3i32, 1, 4, 1]; // with duplicates
+    // Enumerate all 256 index tuples (covers all perms + dup patterns).
+    for a in 0..4 {
+        for b in 0..4 {
+            for c in 0..4 {
+                for d in 0..4 {
+                    let idx = [a, b, c, d];
+                    let input = V128([vals[idx[0]], vals[idx[1]], vals[idx[2]], vals[idx[3]]]);
+                    let mut expect = input.to_array();
+                    expect.sort_unstable();
+                    assert_eq!(sort4_in_reg(input).to_array(), expect);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn merge4_in_reg_sorts_bitonic() {
+    // All 0/1 bitonic patterns of the asc⌢desc form.
+    for ones_start in 0..=4usize {
+        for ones_end in ones_start..=4 {
+            let mut arr = [0i32; 4];
+            for v in arr.iter_mut().take(ones_end).skip(ones_start) {
+                *v = 1;
+            }
+            let mut expect = arr;
+            expect.sort_unstable();
+            assert_eq!(merge4_in_reg(V128(arr)).to_array(), expect);
+        }
+    }
+}
+
+#[test]
+fn merge_2x4_merges() {
+    forall(200, |rng| {
+        let (a, b) = sorted_pair(rng, 4, 50);
+        let (lo, hi) = bitonic::merge_2x4(V128::load(&a), V128::load(&b));
+        let got: Vec<u32> = lo.to_array().iter().chain(hi.to_array().iter()).copied().collect();
+        let mut expect = [a, b].concat();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+    });
+}
+
+#[test]
+fn vectorized_merge_slices_all_widths() {
+    forall(300, |rng| {
+        for k in [4usize, 8, 16, 32] {
+            let (a, b) = sorted_pair(rng, k, 1000);
+            let mut out = vec![0u32; 2 * k];
+            bitonic::merge_slices(&a, &b, &mut out);
+            let mut expect = [a, b].concat();
+            expect.sort_unstable();
+            assert_eq!(out, expect, "vectorized 2x{k}");
+        }
+    });
+}
+
+#[test]
+fn hybrid_merge_slices_all_widths() {
+    forall(300, |rng| {
+        for k in [4usize, 8, 16, 32] {
+            let (a, b) = sorted_pair(rng, k, 1000);
+            let mut out = vec![0u32; 2 * k];
+            hybrid::merge_slices(&a, &b, &mut out);
+            let mut expect = [a, b].concat();
+            expect.sort_unstable();
+            assert_eq!(out, expect, "hybrid 2x{k}");
+        }
+    });
+}
+
+#[test]
+fn hybrid_equals_vectorized_equals_scalar() {
+    // The paper's three merger implementations are interchangeable —
+    // same output for the same input (DESIGN.md invariant 3).
+    forall(200, |rng| {
+        let k = [4usize, 8, 16, 32][rng.below(4)];
+        let (a, b) = sorted_pair(rng, k, 200);
+        let mut o1 = vec![0u32; 2 * k];
+        let mut o2 = vec![0u32; 2 * k];
+        let mut o3 = vec![0u32; 2 * k];
+        bitonic::merge_slices(&a, &b, &mut o1);
+        hybrid::merge_slices(&a, &b, &mut o2);
+        serial::merge_scalar(&a, &b, &mut o3);
+        assert_eq!(o1, o2);
+        assert_eq!(o2, o3);
+    });
+}
+
+#[test]
+fn bitonic_sort_regs_sorts_anything() {
+    forall(200, |rng| {
+        let r = [1usize, 2, 4, 8, 16][rng.below(5)];
+        let mut regs: Vec<V128<u32>> = (0..r)
+            .map(|_| V128([rng.next_u32(), rng.next_u32(), rng.next_u32(), rng.next_u32()]))
+            .collect();
+        let mut expect: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        expect.sort_unstable();
+        bitonic::bitonic_sort_regs(&mut regs);
+        let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        assert_eq!(got, expect);
+    });
+}
+
+#[test]
+fn serial_merge_arbitrary_lengths() {
+    forall_indexed(300, |case, rng| {
+        let la = case % 17;
+        let lb = rng.below(23);
+        let mut a = rng.vec_u32(la);
+        let mut b = rng.vec_u32(lb);
+        a.sort_unstable();
+        b.sort_unstable();
+        let mut out = vec![0u32; la + lb];
+        serial::merge_scalar(&a, &b, &mut out);
+        let mut expect = [a, b].concat();
+        expect.sort_unstable();
+        assert_eq!(out, expect);
+    });
+}
+
+#[test]
+fn merge3_scalar_correct() {
+    forall(100, |rng| {
+        let (la, lb, lc) = (rng.below(10) + 1, rng.below(10), rng.below(10) + 3);
+        let mut a = rng.vec_u32(la);
+        let mut b = rng.vec_u32(lb);
+        let mut c = rng.vec_u32(lc);
+        a.sort_unstable();
+        b.sort_unstable();
+        c.sort_unstable();
+        let mut out = vec![0u32; a.len() + b.len() + c.len()];
+        serial::merge3_scalar(&a, &b, &c, &mut out);
+        let mut expect = [a, b, c].concat();
+        expect.sort_unstable();
+        assert_eq!(out, expect);
+    });
+}
+
+#[test]
+fn insertion_sort_small() {
+    forall(200, |rng| {
+        let len = rng.below(64);
+        let mut v = rng.vec_i32(len);
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        serial::insertion_sort(&mut v);
+        assert_eq!(v, expect);
+    });
+}
+
+#[test]
+fn inregister_sort_block_full_all_configs() {
+    for (label, sorter) in table2_configs() {
+        forall(50, |rng| {
+            let mut block = rng.vec_u32(sorter.block_len());
+            let orig = block.clone();
+            sorter.sort_block(&mut block);
+            assert_sorted(&block, &label);
+            assert_permutation(&block, &orig, &label);
+        });
+    }
+}
+
+#[test]
+fn inregister_sort_to_runs_x_sweep() {
+    // Table 2 semantics: X ∈ {R, 2R, 4R} produces sorted runs of X.
+    for (label, sorter) in table2_configs() {
+        let r = sorter.r();
+        for x in [r, 2 * r, 4 * r] {
+            forall(30, |rng| {
+                let mut block = rng.vec_u32(sorter.block_len());
+                let orig = block.clone();
+                sorter.sort_block_to_runs(&mut block, x);
+                assert_permutation(&block, &orig, &label);
+                for (ri, run) in block.chunks(x).enumerate() {
+                    assert_sorted(run, &format!("{label} X={x} run {ri}"));
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn inregister_vectorized_vs_hybrid_same_result() {
+    forall(50, |rng| {
+        let block = rng.vec_u32(64);
+        let mut b1 = block.clone();
+        let mut b2 = block;
+        InRegisterSorter::new(16, ColumnNetwork::Best)
+            .with_merge_impl(MergeImpl::Vectorized)
+            .sort_block(&mut b1);
+        InRegisterSorter::new(16, ColumnNetwork::Best)
+            .with_merge_impl(MergeImpl::Hybrid)
+            .sort_block(&mut b2);
+        assert_eq!(b1, b2);
+    });
+}
+
+#[test]
+fn inregister_sort_runs_with_tail() {
+    let sorter = InRegisterSorter::paper_default();
+    forall_indexed(100, |case, rng| {
+        let len = case * 3 + rng.below(7); // exercises 0..306 incl. tails
+        let mut data = rng.vec_u32(len);
+        let orig = data.clone();
+        let run = sorter.sort_runs(&mut data);
+        assert_eq!(run, 64);
+        assert_permutation(&data, &orig, "sort_runs");
+        for (ri, chunk) in data.chunks(run).enumerate() {
+            assert_sorted(chunk, &format!("run {ri} len {len}"));
+        }
+    });
+}
+
+#[test]
+fn inregister_f32_and_i32() {
+    let sorter = InRegisterSorter::paper_default();
+    let mut rng = Rng::new(99);
+    let mut fblock: Vec<f32> = (0..64).map(|_| rng.next_f32() * 100.0 - 50.0).collect();
+    sorter.sort_block(&mut fblock);
+    assert_sorted(&fblock, "f32 block");
+    let mut iblock: Vec<i32> = (0..64).map(|_| rng.next_i32()).collect();
+    sorter.sort_block(&mut iblock);
+    assert_sorted(&iblock, "i32 block");
+}
+
+#[test]
+fn runmerge_all_kernels_and_widths() {
+    for (_, imp) in super::runmerge::table3_impls() {
+        for width in MergeWidth::all() {
+            let m = RunMerger { width, imp };
+            forall(60, |rng| {
+                let la = rng.below(300) + 1;
+                let lb = rng.below(300) + 1;
+                let mut a = rng.vec_u32(la);
+                let mut b = rng.vec_u32(lb);
+                a.sort_unstable();
+                b.sort_unstable();
+                let mut out = vec![0u32; la + lb];
+                m.merge(&a, &b, &mut out);
+                let mut expect = [a, b].concat();
+                expect.sort_unstable();
+                assert_eq!(out, expect, "{imp:?} 2x{}", width.k());
+            });
+        }
+    }
+}
+
+#[test]
+fn runmerge_adversarial_interleavings() {
+    // One run entirely below the other, strict interleave, heavy dups.
+    let m = RunMerger::paper_default();
+    let k = 16;
+    let cases: Vec<(Vec<u32>, Vec<u32>)> = vec![
+        ((0..64).collect(), (64..128).collect()),
+        ((64..128).collect(), (0..64).collect()),
+        ((0..64).map(|x| x * 2).collect(), (0..64).map(|x| x * 2 + 1).collect()),
+        (vec![5; 64], vec![5; 64]),
+        (vec![0; 64], (0..64).collect()),
+        ((0..k as u32).collect(), (0..200).collect()),
+    ];
+    for (a, b) in cases {
+        let mut out = vec![0u32; a.len() + b.len()];
+        m.merge(&a, &b, &mut out);
+        let mut expect = [a.clone(), b.clone()].concat();
+        expect.sort_unstable();
+        assert_eq!(out, expect, "a={a:?} b={b:?}");
+    }
+}
+
+#[test]
+fn runmerge_short_runs_fall_back_to_serial() {
+    let m = RunMerger { width: MergeWidth::K32, imp: MergeImpl::Hybrid };
+    let a = vec![3u32, 9];
+    let b = vec![1u32, 2, 4];
+    let mut out = vec![0u32; 5];
+    m.merge(&a, &b, &mut out);
+    assert_eq!(out, vec![1, 2, 3, 4, 9]);
+}

@@ -1,0 +1,40 @@
+//! # NEON-MS: A Hybrid Vectorized Merge Sort
+//!
+//! Reproduction of *"A Hybrid Vectorized Merge Sort on ARM NEON"*
+//! (Zhou, Zhang, Zhang, Xiao, Ma, Gong — CS.DC 2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the sorting *framework*: the NEON-MS
+//!   algorithm itself (in-register sort, hybrid bitonic mergers,
+//!   merge-path multi-thread parallel merge), the baselines it is
+//!   evaluated against, a sort-service coordinator, and the benchmark
+//!   harness that regenerates every table and figure of the paper.
+//! * **Layer 2 (python/compile/model.py)** — the same block-sort compute
+//!   graph in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the in-register sort +
+//!   bitonic merge as a Pallas kernel (interpret mode), validated
+//!   against a pure-jnp oracle.
+//!
+//! The paper targets ARM NEON on an FT2000+; this testbed is x86-64.
+//! The NEON register model is reproduced by [`simd::V128`] — a portable
+//! 128-bit, 4-lane vector type whose operations map 1:1 onto the NEON
+//! intrinsics the paper uses (`vminq_s32`, `vmaxq_s32`, `vzipq`, ...)
+//! and auto-vectorize to SSE on this host. Register-pressure effects
+//! (the paper's Table 2 R-sweep) are additionally modeled by
+//! [`regmachine`], an abstract register-file simulator with an explicit
+//! spill cost model. See DESIGN.md §Hardware-Adaptation.
+
+pub mod simd;
+pub mod sortnet;
+pub mod kernels;
+pub mod sort;
+pub mod mergepath;
+pub mod baselines;
+pub mod regmachine;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,230 @@
+//! `neonms` CLI — the leader entrypoint.
+//!
+//! Subcommands (no clap offline; hand-rolled parsing):
+//!
+//! ```text
+//! neonms sort [--n N] [--threads T] [--workload W]
+//! neonms bench <table1|table2|table3|fig5|ablations|all> [--reps R] [--max-n N]
+//! neonms verify-networks
+//! neonms regmachine [--phys F]
+//! neonms serve-demo [--requests N] [--xla]
+//! ```
+
+use neonms::bench::tables;
+use neonms::bench::Workload;
+use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::regmachine;
+use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use neonms::sortnet::gen;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(&args[args.len().min(1)..]);
+    match cmd {
+        "sort" => cmd_sort(&flags),
+        "bench" => cmd_bench(args.get(1).map(String::as_str).unwrap_or("all"), &flags),
+        "verify-networks" => cmd_verify(),
+        "regmachine" => cmd_regmachine(&flags),
+        "serve-demo" => cmd_serve(&flags),
+        _ => {
+            eprintln!(
+                "usage: neonms <sort|bench|verify-networks|regmachine|serve-demo> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+        }
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs and boolean `--key`.
+struct Flags(Vec<(String, Option<String>)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Self {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if val.is_some() {
+                    i += 1;
+                }
+                out.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Flags(out)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.0
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_ref())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.0
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.clone())
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.iter().any(|(k, _)| k == key)
+    }
+}
+
+fn cmd_sort(flags: &Flags) {
+    use neonms::kernels::{MergeImpl, MergeWidth};
+    use neonms::sort::SortConfig;
+    let n = flags.get_usize("n", 1 << 20);
+    let threads = flags.get_usize("threads", 1);
+    let wname = flags.get_str("workload", "uniform");
+    let workload = Workload::all()
+        .into_iter()
+        .find(|w| w.name() == wname)
+        .unwrap_or(Workload::Uniform);
+    let imp = match flags.get_str("impl", "hybrid").as_str() {
+        "vectorized" => MergeImpl::Vectorized,
+        "serial" => MergeImpl::Serial,
+        _ => MergeImpl::Hybrid,
+    };
+    let width = match flags.get_usize("width", 8) {
+        4 => MergeWidth::K4,
+        16 => MergeWidth::K16,
+        32 => MergeWidth::K32,
+        _ => MergeWidth::K8,
+    };
+    let cfg = SortConfig { merge_impl: imp, merge_width: width, ..Default::default() };
+    let mut data = workload.generate(n, 42);
+    let t0 = Instant::now();
+    if threads > 1 {
+        ParallelNeonMergeSort::new(NeonMergeSort::new(cfg), threads).sort(&mut data);
+    } else {
+        NeonMergeSort::new(cfg).sort(&mut data);
+    }
+    let dt = t0.elapsed();
+    assert!(data.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
+    println!(
+        "sorted {n} {} u32 in {:.3}s ({:.2} ME/s, T={threads})",
+        workload.name(),
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+}
+
+fn cmd_bench(which: &str, flags: &Flags) {
+    let reps = flags.get_usize("reps", 20);
+    let max_n = flags.get_usize("max-n", 8 << 20);
+    match which {
+        "table1" => print!("{}", tables::table1()),
+        "table2" => {
+            print!("{}", tables::table2_measured(reps).0);
+            print!("{}", tables::table2_model());
+        }
+        "table3" => print!("{}", tables::table3(reps).0),
+        "fig5" => {
+            let sizes = fig5_sizes(max_n);
+            print!("{}", tables::fig5(&sizes, &[2, 4], reps.min(5)).0);
+        }
+        "ablations" => {
+            print!("{}", tables::ablation_column_network(1 << 20, reps.min(10)));
+            print!("{}", tables::ablation_merge_width(1 << 20, reps.min(10)));
+            print!("{}", tables::ablation_workloads(1 << 20, reps.min(10)));
+            print!("{}", tables::ablation_parallel_merge(4 << 20, 4, reps.min(5)));
+        }
+        "all" => {
+            for t in ["table1", "table2", "table3", "fig5", "ablations"] {
+                cmd_bench(t, flags);
+                println!();
+            }
+        }
+        other => eprintln!("unknown bench target {other}"),
+    }
+}
+
+fn fig5_sizes(max_n: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut n = 512 * 1024; // paper starts at 512K
+    while n <= max_n {
+        sizes.push(n);
+        n *= 2;
+    }
+    sizes
+}
+
+fn cmd_verify() {
+    for n in [2usize, 4, 8, 16] {
+        for net in [gen::bitonic_sort(n), gen::odd_even_sort(n), gen::best(n)] {
+            let ok = net.verify_zero_one();
+            println!("{net}: zero-one {}", if ok { "OK" } else { "FAILED" });
+            assert!(ok);
+        }
+    }
+    for n in [4usize, 8, 16, 32, 64] {
+        let m = gen::bitonic_merge(n);
+        println!("{m}: bitonic-merge {}", if m.verify_bitonic_merge() { "OK" } else { "FAILED" });
+    }
+    println!("all networks verified");
+}
+
+fn cmd_regmachine(flags: &Flags) {
+    let f = flags.get_usize("phys", 32);
+    println!("register-file cost model, F={f} physical vector registers");
+    println!("| config | X | cycles | spills | cmpswaps | shuffles |");
+    for (label, x, rep) in regmachine::model_table2(f) {
+        println!(
+            "| {label:5} | {x:3} | {:6} | {:6} | {:8} | {:8} |",
+            rep.cycles, rep.spills, rep.cmpswaps, rep.shuffles
+        );
+    }
+}
+
+fn cmd_serve(flags: &Flags) {
+    let n_requests = flags.get_usize("requests", 200);
+    let artifacts = flags
+        .has("xla")
+        .then(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    let cfg = CoordinatorConfig {
+        xla_cutoff: flags.has("xla").then_some(4096),
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, artifacts).expect("service start");
+    println!("service up (xla={})", svc.xla_enabled());
+    let mut rng = neonms::testutil::Rng::new(7);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let len = [32usize, 1000, 8192, 100_000][i % 4] + rng.below(64);
+            let data = rng.vec_u32(len);
+            svc.submit(data)
+        })
+        .collect();
+    let mut total = 0usize;
+    for h in handles {
+        total += h.wait().expect("response").len();
+    }
+    let dt = t0.elapsed();
+    let m = svc.metrics();
+    println!(
+        "{n_requests} requests, {total} elements in {:.3}s ({:.2} ME/s)\n\
+         routes: tiny={} single={} parallel={} xla={} batches={}\n\
+         latency: mean {:.0}µs p50 {}µs p99 {}µs",
+        dt.as_secs_f64(),
+        total as f64 / dt.as_secs_f64() / 1e6,
+        m.route_tiny,
+        m.route_single,
+        m.route_parallel,
+        m.route_xla,
+        m.batches,
+        m.mean_latency_us,
+        m.p50_us,
+        m.p99_us
+    );
+    svc.shutdown();
+}

@@ -1,0 +1,216 @@
+//! Merge Path partitioning (Odeh, Green, Mwassi et al. [10]) —
+//! the substrate of the paper's multi-thread parallel merge (§2.1).
+//!
+//! Merging sorted `A` (len m) and `B` (len n) traces a monotone path
+//! through an `m×n` grid. Cutting the path where it crosses the
+//! diagonals `i + j = d_k` splits the merge into `p` pieces of *equal
+//! output size*, each an independent sequential merge — perfect load
+//! balance with no inter-thread communication ("each available thread
+//! remains active", §3.2). The crossing point on each diagonal is
+//! found by binary search on the *co-rank* condition, O(log min(m,n))
+//! per cut.
+
+use crate::simd::Lane;
+
+/// One partition piece: merge `a[a_lo..a_hi]` with `b[b_lo..b_hi]`
+/// into `out[out_lo..out_lo + out_len()]`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Segment {
+    pub a_lo: usize,
+    pub a_hi: usize,
+    pub b_lo: usize,
+    pub b_hi: usize,
+    pub out_lo: usize,
+}
+
+impl Segment {
+    /// Output elements this segment produces.
+    pub fn out_len(&self) -> usize {
+        (self.a_hi - self.a_lo) + (self.b_hi - self.b_lo)
+    }
+}
+
+/// Co-rank: the split `(i, j)` with `i + j = d` such that merging
+/// `a[..i]` and `b[..j]` yields exactly the first `d` output elements
+/// of the stable merge (ties go to `A`). Binary search on `i` over the
+/// feasible window.
+pub fn corank<T: Lane>(d: usize, a: &[T], b: &[T]) -> (usize, usize) {
+    debug_assert!(d <= a.len() + b.len());
+    // Smallest i with ¬P(i), P(i) ≡ b[d-i-1] ≥ a[i] ("the stable path
+    // still wants more of A"). P is monotone non-increasing in i, so
+    // the answer is unique — and, being the stable-merge co-rank, it
+    // is monotone in d (each extra output element extends exactly one
+    // side).
+    let mut lo = d.saturating_sub(b.len());
+    let mut hi = d.min(a.len());
+    while lo < hi {
+        let i = lo + (hi - lo) / 2; // i < hi ≤ a.len(), so a[i] is valid
+        let j = d - i;
+        if j > 0 && b[j - 1] >= a[i] {
+            lo = i + 1;
+        } else {
+            hi = i;
+        }
+    }
+    (lo, d - lo)
+}
+
+/// Partition the merge of `a` and `b` into `p` segments of equal (±1)
+/// output length. Returns exactly `p` segments covering the output
+/// contiguously and the inputs disjointly.
+pub fn partition<T: Lane>(a: &[T], b: &[T], p: usize) -> Vec<Segment> {
+    assert!(p >= 1);
+    let total = a.len() + b.len();
+    let mut segs = Vec::with_capacity(p);
+    let mut prev = (0usize, 0usize);
+    let mut prev_d = 0usize;
+    for k in 1..=p {
+        let d = total * k / p;
+        let cut = if k == p { (a.len(), b.len()) } else { corank(d, a, b) };
+        segs.push(Segment {
+            a_lo: prev.0,
+            a_hi: cut.0,
+            b_lo: prev.1,
+            b_hi: cut.1,
+            out_lo: prev_d,
+        });
+        prev = cut;
+        prev_d = d;
+    }
+    segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Rng};
+
+    fn sorted(rng: &mut Rng, len: usize, modv: u32) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..len).map(|_| rng.next_u32() % modv).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn corank_prefix_property() {
+        forall(300, |rng| {
+            let (la, lb) = (rng.below(50), rng.below(50));
+            let a = sorted(rng, la, 40);
+            let b = sorted(rng, lb, 40);
+            let total = a.len() + b.len();
+            if total == 0 {
+                return;
+            }
+            let d = rng.below(total + 1);
+            let (i, j) = corank(d, &a, &b);
+            assert_eq!(i + j, d);
+            // Everything taken must be <= everything left behind.
+            if i > 0 && j < b.len() {
+                assert!(a[i - 1] <= b[j], "a[{}]={} > b[{}]={}", i - 1, a[i - 1], j, b[j]);
+            }
+            if j > 0 && i < a.len() {
+                assert!(b[j - 1] <= a[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn corank_is_monotone_in_d() {
+        forall(100, |rng| {
+            let a = sorted(rng, 30, 20);
+            let b = sorted(rng, 40, 20);
+            let mut last = (0, 0);
+            for d in 0..=70 {
+                let c = corank(d, &a, &b);
+                assert!(c.0 >= last.0 && c.1 >= last.1, "co-rank must be monotone");
+                last = c;
+            }
+        });
+    }
+
+    #[test]
+    fn partition_covers_disjoint_balanced() {
+        forall(200, |rng| {
+            let (la, lb) = (rng.below(200), rng.below(200));
+            let a = sorted(rng, la, 50);
+            let b = sorted(rng, lb, 50);
+            let p = rng.below(8) + 1;
+            let segs = partition(&a, &b, p);
+            assert_eq!(segs.len(), p);
+            let total = a.len() + b.len();
+            let (mut ai, mut bi, mut oi) = (0, 0, 0);
+            for s in &segs {
+                assert_eq!(s.a_lo, ai);
+                assert_eq!(s.b_lo, bi);
+                assert_eq!(s.out_lo, oi);
+                ai = s.a_hi;
+                bi = s.b_hi;
+                oi += s.out_len();
+            }
+            assert_eq!(ai, a.len());
+            assert_eq!(bi, b.len());
+            assert_eq!(oi, total);
+            let (lo, hi) = (total / p, total.div_ceil(p));
+            for s in &segs {
+                assert!(
+                    (lo..=hi).contains(&s.out_len()),
+                    "segment {} unbalanced ({total}/{p})",
+                    s.out_len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn partitioned_merge_equals_full_merge() {
+        use crate::kernels::serial::merge_scalar;
+        forall(200, |rng| {
+            let (la, lb) = (rng.below(300), rng.below(300));
+            let a = sorted(rng, la, 64);
+            let b = sorted(rng, lb, 64);
+            let p = rng.below(6) + 1;
+            let mut expect = vec![0u32; a.len() + b.len()];
+            merge_scalar(&a, &b, &mut expect);
+            let mut got = vec![0u32; a.len() + b.len()];
+            for s in partition(&a, &b, p) {
+                let end = s.out_lo + s.out_len();
+                merge_scalar(&a[s.a_lo..s.a_hi], &b[s.b_lo..s.b_hi], &mut got[s.out_lo..end]);
+            }
+            assert_eq!(got, expect);
+        });
+    }
+
+    #[test]
+    fn partition_empty_inputs() {
+        let a: Vec<u32> = vec![];
+        let b: Vec<u32> = vec![];
+        let segs = partition(&a, &b, 4);
+        assert_eq!(segs.len(), 4);
+        assert!(segs.iter().all(|s| s.out_len() == 0));
+    }
+
+    #[test]
+    fn partition_heavy_duplicates() {
+        let a = vec![7u32; 100];
+        let b = vec![7u32; 100];
+        for p in 1..9 {
+            let segs = partition(&a, &b, p);
+            let covered: usize = segs.iter().map(Segment::out_len).sum();
+            assert_eq!(covered, 200);
+        }
+    }
+
+    #[test]
+    fn partition_extreme_skew() {
+        // A entirely below B and vice versa.
+        let a: Vec<u32> = (0..100).collect();
+        let b: Vec<u32> = (1000..1100).collect();
+        for p in [1usize, 3, 7] {
+            for (x, y) in [(&a, &b), (&b, &a)] {
+                let segs = partition(x, y, p);
+                let covered: usize = segs.iter().map(Segment::out_len).sum();
+                assert_eq!(covered, 200);
+            }
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! The abstract machine: F physical vector registers, LRU spilling,
+//! per-op-class cycle costs.
+
+use super::program::{InRegisterProgram, Op};
+
+/// Cycle costs per op class (latency-weighted throughput model).
+#[derive(Clone, Copy, Debug)]
+pub struct OpCosts {
+    /// One vector comparator = vmin + vmax.
+    pub cmpswap: u64,
+    /// One permute-class op.
+    pub shuffle: u64,
+    /// Architectural load/store (program-mandated).
+    pub mem: u64,
+    /// Spill store + reload pair is `2 × spill` cycles.
+    pub spill: u64,
+}
+
+impl OpCosts {
+    /// FT2000+/NEON-flavored weights: min/max 2-cycle pair, shuffles 1,
+    /// L1 access 4.
+    pub fn neon_like() -> Self {
+        OpCosts { cmpswap: 2, shuffle: 1, mem: 4, spill: 4 }
+    }
+}
+
+/// Result of running a program on the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostReport {
+    /// Architectural (program) loads+stores.
+    pub mem_ops: usize,
+    /// Vector comparators executed.
+    pub cmpswaps: usize,
+    /// Shuffles executed.
+    pub shuffles: usize,
+    /// Spill events (each = one store + one later reload).
+    pub spills: usize,
+    /// Modeled total cycles.
+    pub cycles: u64,
+}
+
+/// LRU register allocator over `f` physical registers.
+pub struct Machine {
+    f: usize,
+    costs: OpCosts,
+}
+
+impl Machine {
+    /// A machine with `f` physical vector registers.
+    pub fn new(f: usize, costs: OpCosts) -> Self {
+        assert!(f >= 4, "need at least 4 physical registers");
+        Machine { f, costs }
+    }
+
+    /// Execute the trace, counting spills an LRU allocator would take.
+    pub fn run(&self, prog: &InRegisterProgram) -> CostReport {
+        let mut report =
+            CostReport { mem_ops: 0, cmpswaps: 0, shuffles: 0, spills: 0, cycles: 0 };
+        // resident[v] = Some(tick of last use); LRU by tick.
+        let mut resident: Vec<Option<u64>> = vec![None; prog.vregs];
+        let mut tick = 0u64;
+        let mut live = 0usize;
+        let mut touch = |v: usize,
+                         resident: &mut Vec<Option<u64>>,
+                         live: &mut usize,
+                         report: &mut CostReport| {
+            tick += 1;
+            if resident[v].is_some() {
+                resident[v] = Some(tick);
+                return;
+            }
+            if *live == self.f {
+                // Evict LRU (spill: store now, the victim reloads later).
+                let victim = resident
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, t)| t.map(|t| (t, i)))
+                    .min()
+                    .map(|(_, i)| i)
+                    .expect("live > 0");
+                resident[victim] = None;
+                *live -= 1;
+                report.spills += 1;
+                report.cycles += 2 * self.costs.spill;
+            }
+            resident[v] = Some(tick);
+            *live += 1;
+        };
+        for op in &prog.ops {
+            match *op {
+                Op::Load(v) => {
+                    touch(v as usize, &mut resident, &mut live, &mut report);
+                    report.mem_ops += 1;
+                    report.cycles += self.costs.mem;
+                }
+                Op::Store(v) => {
+                    touch(v as usize, &mut resident, &mut live, &mut report);
+                    report.mem_ops += 1;
+                    report.cycles += self.costs.mem;
+                }
+                Op::CmpSwap(a, b) => {
+                    touch(a as usize, &mut resident, &mut live, &mut report);
+                    touch(b as usize, &mut resident, &mut live, &mut report);
+                    report.cmpswaps += 1;
+                    report.cycles += self.costs.cmpswap;
+                }
+                Op::Shuffle { dst, a, b } => {
+                    touch(a as usize, &mut resident, &mut live, &mut report);
+                    touch(b as usize, &mut resident, &mut live, &mut report);
+                    touch(dst as usize, &mut resident, &mut live, &mut report);
+                    report.shuffles += 1;
+                    report.cycles += self.costs.shuffle;
+                }
+            }
+        }
+        report
+    }
+}

@@ -1,0 +1,52 @@
+//! Abstract register-file cost model (paper §2.2, Table 2's mechanism).
+//!
+//! The paper's R-sweep argument is about *register pressure*: an
+//! in-register sort over R vector registers plus its shuffle/merge
+//! temporaries must fit the architectural register file (32 on NEON)
+//! or intermediate values spill to memory, and "the register-to-memory
+//! access is always a big computation bottleneck". Our testbed is
+//! x86-64 (16 XMM registers), so absolute spill points differ from
+//! FT2000+; this module reproduces the paper's accounting analytically:
+//! lower the in-register sort to a virtual-register program
+//! ([`program`]), execute it on an abstract machine with `F` physical
+//! registers and an LRU allocator ([`machine`]), and report vector
+//! ops, shuffles, spills, and modeled cycles for any (R, network, X,
+//! F) point — including the NEON F=32 geometry we cannot measure.
+
+mod machine;
+mod program;
+
+pub use machine::{CostReport, Machine, OpCosts};
+pub use program::{InRegisterProgram, Op};
+
+use crate::kernels::inregister::ColumnNetwork;
+
+/// Model one Table 2 cell: in-register sort with `r` registers and
+/// network `family` producing runs of `x`, on a machine with `f`
+/// physical vector registers.
+pub fn model_table2_cell(r: usize, family: ColumnNetwork, x: usize, f: usize) -> CostReport {
+    let prog = InRegisterProgram::build(r, family, x);
+    Machine::new(f, OpCosts::neon_like()).run(&prog)
+}
+
+/// The full Table 2 analog: rows (R, family) × columns X, on the NEON
+/// geometry (F = 32). Returns (label, X, report) triples.
+pub fn model_table2(f: usize) -> Vec<(String, usize, CostReport)> {
+    let rows: [(&str, usize, ColumnNetwork); 5] = [
+        ("R=4", 4, ColumnNetwork::OddEven),
+        ("R=8", 8, ColumnNetwork::OddEven),
+        ("R=16", 16, ColumnNetwork::OddEven),
+        ("R=16*", 16, ColumnNetwork::Best),
+        ("R=32", 32, ColumnNetwork::OddEven),
+    ];
+    let mut out = Vec::new();
+    for (label, r, family) in rows {
+        for x in [r, 2 * r, 4 * r] {
+            out.push((label.to_string(), x, model_table2_cell(r, family, x, f)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests;

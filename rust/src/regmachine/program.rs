@@ -1,0 +1,135 @@
+//! Lowering the in-register sort to a virtual-register op trace.
+
+use crate::kernels::inregister::ColumnNetwork;
+use crate::sortnet::gen;
+
+/// One abstract vector op over virtual register ids.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Op {
+    /// Load a vector from memory into `v`.
+    Load(u16),
+    /// Store `v` back to memory.
+    Store(u16),
+    /// Vector comparator: reads and writes both (one vmin + one vmax).
+    CmpSwap(u16, u16),
+    /// Shuffle reading `a`,`b`, writing `dst` (zip/uzp/trn/rev class).
+    Shuffle { dst: u16, a: u16, b: u16 },
+}
+
+/// A lowered in-register sort: `R` data registers + shuffle temps.
+#[derive(Clone, Debug)]
+pub struct InRegisterProgram {
+    /// Virtual registers used (R data + temps).
+    pub vregs: usize,
+    /// Op trace in execution order.
+    pub ops: Vec<Op>,
+    /// The paper's parameters, for reporting.
+    pub r: usize,
+    pub x: usize,
+}
+
+impl InRegisterProgram {
+    /// Lower the four in-register phases (Fig. 2) for `r` registers,
+    /// column network `family`, target run length `x ∈ {r, 2r, 4r}`.
+    ///
+    /// The op trace mirrors `kernels::inregister` exactly: same
+    /// comparator sequence, same 4×4-tile transpose (8 shuffles + 2
+    /// temps per tile), same bitonic row-merge structure (reversal
+    /// shuffles, register-level cmpswaps, 2 intra-register stages of
+    /// shuffle+cmpswap per register).
+    pub fn build(r: usize, family: ColumnNetwork, x: usize) -> Self {
+        assert!(r % 4 == 0 && (x == r || x == 2 * r || x == 4 * r));
+        let net = match family {
+            ColumnNetwork::Bitonic => gen::bitonic_sort(r),
+            ColumnNetwork::OddEven => gen::odd_even_sort(r),
+            ColumnNetwork::Best => gen::best(r),
+        };
+        let t0 = r as u16; // shuffle temps
+        let t1 = r as u16 + 1;
+        let mut ops = Vec::new();
+        // 1. load
+        for v in 0..r as u16 {
+            ops.push(Op::Load(v));
+        }
+        // 2. column sort: one CmpSwap per comparator.
+        for c in net.comparators() {
+            ops.push(Op::CmpSwap(c.i, c.j));
+        }
+        // 3. transpose: R/4 base 4×4 transposes, 8 shuffles each
+        //    (4 trn-stage + 4 zip-stage), two temps live throughout.
+        for tile in 0..(r / 4) as u16 {
+            let base = tile * 4;
+            for k in 0..4u16 {
+                // trn stage writes through t0/t1 alternately.
+                let dst = if k % 2 == 0 { t0 } else { t1 };
+                ops.push(Op::Shuffle { dst, a: base + (k / 2) * 2, b: base + (k / 2) * 2 + 1 });
+            }
+            for k in 0..4u16 {
+                ops.push(Op::Shuffle { dst: base + k, a: t0, b: t1 });
+            }
+        }
+        // 4. row merges: runs of r double until x.
+        let per_run = r / 4; // registers per length-r run
+        let mut run_regs = per_run;
+        let mut run_len = r;
+        while run_len < x {
+            let mut base = 0u16;
+            while (base as usize) < r {
+                Self::emit_bitonic_merge(&mut ops, base, 2 * run_regs as u16, t0);
+                base += 2 * run_regs as u16;
+            }
+            run_regs *= 2;
+            run_len *= 2;
+        }
+        // 5. store
+        for v in 0..r as u16 {
+            ops.push(Op::Store(v));
+        }
+        InRegisterProgram { vregs: r + 2, ops, r, x }
+    }
+
+    /// Bitonic merge over `n` registers starting at `base` (second
+    /// half pre-sorted ascending → reversal shuffles first), mirroring
+    /// `kernels::bitonic::merge_sorted_regs`.
+    fn emit_bitonic_merge(ops: &mut Vec<Op>, base: u16, n: u16, tmp: u16) {
+        // Reverse second half: one rev-shuffle per register.
+        for v in base + n / 2..base + n {
+            ops.push(Op::Shuffle { dst: v, a: v, b: v });
+        }
+        // Register-level half-cleaner stages.
+        let mut d = n / 2;
+        while d >= 1 {
+            let mut blk = base;
+            while blk < base + n {
+                for i in blk..blk + d {
+                    ops.push(Op::CmpSwap(i, i + d));
+                }
+                blk += 2 * d;
+            }
+            d /= 2;
+        }
+        // Intra-register stages: 2 × (shuffle into tmp + cmpswap +
+        // blend-shuffle) per register.
+        for v in base..base + n {
+            for _ in 0..2 {
+                ops.push(Op::Shuffle { dst: tmp, a: v, b: v });
+                ops.push(Op::CmpSwap(v, tmp));
+                ops.push(Op::Shuffle { dst: v, a: v, b: tmp });
+            }
+        }
+    }
+
+    /// Count ops by class: `(loads, stores, cmpswaps, shuffles)`.
+    pub fn op_counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for op in &self.ops {
+            match op {
+                Op::Load(_) => c.0 += 1,
+                Op::Store(_) => c.1 += 1,
+                Op::CmpSwap(..) => c.2 += 1,
+                Op::Shuffle { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+}

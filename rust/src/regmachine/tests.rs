@@ -1,0 +1,101 @@
+use super::*;
+use crate::kernels::inregister::ColumnNetwork;
+
+#[test]
+fn program_op_counts_match_structure() {
+    // R=16 best, X=16 (column sort only): 16 loads, 16 stores,
+    // 60 comparators, 4 tiles × 8 transpose shuffles.
+    let p = InRegisterProgram::build(16, ColumnNetwork::Best, 16);
+    let (l, s, c, sh) = p.op_counts();
+    assert_eq!((l, s), (16, 16));
+    assert_eq!(c, 60, "best-16 = 60 comparators");
+    assert_eq!(sh, 32, "4 tiles × 8 shuffles");
+    assert_eq!(p.vregs, 18);
+}
+
+#[test]
+fn odd_even_vs_best_comparator_gap() {
+    // The 16 vs 16* Table 2 gap is exactly the 63→60 comparator save.
+    let oe = InRegisterProgram::build(16, ColumnNetwork::OddEven, 16);
+    let best = InRegisterProgram::build(16, ColumnNetwork::Best, 16);
+    assert_eq!(oe.op_counts().2 - best.op_counts().2, 3);
+}
+
+#[test]
+fn row_merges_add_ops_with_x() {
+    let x16 = InRegisterProgram::build(16, ColumnNetwork::Best, 16);
+    let x32 = InRegisterProgram::build(16, ColumnNetwork::Best, 32);
+    let x64 = InRegisterProgram::build(16, ColumnNetwork::Best, 64);
+    assert!(x32.ops.len() > x16.ops.len());
+    assert!(x64.ops.len() > x32.ops.len());
+}
+
+#[test]
+fn no_spills_when_registers_fit() {
+    // R=16 + 2 temps = 18 vregs fits F=32 (NEON) with zero spills.
+    let rep = model_table2_cell(16, ColumnNetwork::Best, 64, 32);
+    assert_eq!(rep.spills, 0, "paper's R=16 claim: no register-to-memory traffic");
+    // R=8 on F=16 also fits.
+    assert_eq!(model_table2_cell(8, ColumnNetwork::OddEven, 32, 16).spills, 0);
+}
+
+#[test]
+fn r32_spills_on_neon_geometry() {
+    // R=32 + temps = 34 vregs > 32 physical: the paper's "complexity"
+    // cliff — spills appear exactly here.
+    let rep = model_table2_cell(32, ColumnNetwork::OddEven, 128, 32);
+    assert!(rep.spills > 0, "R=32 must spill on a 32-register file");
+    // And R=16 on the x86 geometry (F=16) also spills a little,
+    // which is why the measured Table 2 on this host shows the cliff
+    // one row earlier than the paper's.
+    let rep16 = model_table2_cell(16, ColumnNetwork::Best, 64, 16);
+    assert!(rep16.spills > 0);
+}
+
+#[test]
+fn cycles_monotone_in_pressure() {
+    // Fewer physical registers never makes the model faster.
+    let c32 = model_table2_cell(32, ColumnNetwork::OddEven, 128, 32).cycles;
+    let c16 = model_table2_cell(32, ColumnNetwork::OddEven, 128, 16).cycles;
+    let c8 = model_table2_cell(32, ColumnNetwork::OddEven, 128, 8).cycles;
+    assert!(c32 <= c16 && c16 <= c8);
+}
+
+#[test]
+fn table2_model_shape_matches_paper() {
+    // The paper's key qualitative claims on the NEON geometry:
+    let rows = model_table2(32);
+    let get = |label: &str, x: usize| {
+        rows.iter()
+            .find(|(l, xx, _)| l == label && *xx == x)
+            .map(|(_, _, r)| *r)
+            .unwrap()
+    };
+    // (1) 16* beats 16 at every X (fewer comparators, same spills).
+    for x in [16, 32, 64] {
+        assert!(get("R=16*", x).cycles < get("R=16", x).cycles, "16* wins at X={x}");
+    }
+    // (2) bigger R sorts the same X cheaper per element *until* the
+    // spill cliff: R=16 X=32 beats R=8 X=32 per-block… compare via
+    // cycles per element sorted-to-X.
+    let per_elem = |label: &str, r: usize, x: usize| {
+        get(label, x).cycles as f64 / (4 * r) as f64
+    };
+    assert!(per_elem("R=16", 16, 32) < per_elem("R=8", 8, 32));
+    // (3) R=32 pays spills; R=16* has none.
+    assert!(get("R=32", 128).spills > 0);
+    assert_eq!(get("R=16*", 64).spills, 0);
+}
+
+#[test]
+fn machine_lru_is_deterministic() {
+    let p = InRegisterProgram::build(32, ColumnNetwork::OddEven, 128);
+    let m = Machine::new(16, OpCosts::neon_like());
+    assert_eq!(m.run(&p), m.run(&p));
+}
+
+#[test]
+#[should_panic(expected = "at least 4")]
+fn machine_rejects_tiny_register_file() {
+    Machine::new(2, OpCosts::neon_like());
+}

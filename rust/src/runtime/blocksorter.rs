@@ -1,0 +1,239 @@
+//! The XLA-offload sort path: blocks through the compiled L2 graph,
+//! cross-block merging in rust (hybrid kernels).
+
+use super::pjrt::{Executable, PjrtRuntime};
+use super::registry::ArtifactRegistry;
+use crate::kernels::runmerge::RunMerger;
+use crate::simd::Lane;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Sorts arbitrary-length `i32`/`u32` slices by dispatching fixed-size
+/// blocks to the AOT-compiled XLA block-sort and merging the sorted
+/// blocks with the rust hybrid merger — the L3↔L2 composition.
+pub struct BlockSorter {
+    runtime: Arc<PjrtRuntime>,
+    execs: BTreeMap<usize, Executable>,
+    f32_execs: BTreeMap<usize, Executable>,
+    /// Batched dispatch program, if a `block_sort_batchN` artifact
+    /// exists: (batch rows, block length, executable).
+    batched: Option<(usize, usize, Executable)>,
+    merger: RunMerger,
+}
+
+impl BlockSorter {
+    /// Compile every artifact in `registry` (once, eagerly — the
+    /// coordinator constructs this at startup, off the request path).
+    pub fn new(runtime: Arc<PjrtRuntime>, registry: &ArtifactRegistry) -> Result<Self> {
+        let mut execs = BTreeMap::new();
+        let mut f32_execs = BTreeMap::new();
+        let mut batched = None;
+        for v in registry.variants() {
+            let exe = runtime
+                .load_hlo_text(&v.path)
+                .with_context(|| format!("loading {}", v.path.display()))?;
+            if v.batch > 1 {
+                batched = Some((v.batch, v.block, exe));
+            } else if v.dtype == "float32" {
+                f32_execs.insert(v.block, exe);
+            } else {
+                execs.insert(v.block, exe);
+            }
+        }
+        anyhow::ensure!(!execs.is_empty(), "no int32 artifacts to compile");
+        Ok(BlockSorter { runtime, execs, f32_execs, batched, merger: RunMerger::paper_default() })
+    }
+
+    /// Compiled block sizes, ascending.
+    pub fn block_sizes(&self) -> Vec<usize> {
+        self.execs.keys().copied().collect()
+    }
+
+    /// Backend platform (for logs).
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Largest compiled block ≤ `len`, else the smallest compiled.
+    fn pick_block(&self, len: usize) -> usize {
+        *self
+            .execs
+            .range(..=len)
+            .next_back()
+            .map(|(k, _)| k)
+            .unwrap_or_else(|| self.execs.keys().next().expect("non-empty"))
+    }
+
+    /// Sort `data` ascending via XLA block dispatch + rust merge.
+    pub fn sort_i32(&self, data: &mut [i32]) -> Result<()> {
+        let n = data.len();
+        if n <= 1 {
+            return Ok(());
+        }
+        let block = self.pick_block(n);
+        let exe = &self.execs[&block];
+        // Phase 1: sorted runs of `block` via the XLA executable
+        // (tail padded with i32::MAX inside a scratch buffer).
+        let mut base = 0;
+        while base < n {
+            let end = (base + block).min(n);
+            if end - base == block {
+                let sorted = exe.run_i32(&data[base..end])?;
+                data[base..end].copy_from_slice(&sorted);
+            } else {
+                let mut pad = vec![i32::MAX; block];
+                pad[..end - base].copy_from_slice(&data[base..end]);
+                let sorted = exe.run_i32(&pad)?;
+                data[base..end].copy_from_slice(&sorted[..end - base]);
+            }
+            base = end;
+        }
+        // Phase 2: rust merge passes over the sorted runs.
+        merge_runs(data, block, &self.merger);
+        Ok(())
+    }
+
+    /// Batched-dispatch geometry, if a batched artifact was compiled:
+    /// `(batch rows, block length)`.
+    pub fn batch_geometry(&self) -> Option<(usize, usize)> {
+        self.batched.as_ref().map(|(b, n, _)| (*b, *n))
+    }
+
+    /// Sort up to `batch` requests of ≤ `block` elements each in ONE
+    /// PJRT dispatch (the coordinator's dynamic batching). Rows are
+    /// padded with `i32::MAX`; each row comes back fully sorted.
+    /// Returns `Err` if no batched artifact is compiled or any row
+    /// exceeds the block length.
+    pub fn sort_batch_i32(&self, rows: &mut [&mut [i32]]) -> Result<()> {
+        let Some((batch, block, exe)) = self.batched.as_ref() else {
+            anyhow::bail!("no batched artifact compiled");
+        };
+        anyhow::ensure!(rows.len() <= *batch, "too many rows for batch {batch}");
+        for r in rows.iter() {
+            anyhow::ensure!(r.len() <= *block, "row exceeds block {block}");
+        }
+        let mut staging = vec![i32::MAX; batch * block];
+        for (i, r) in rows.iter().enumerate() {
+            staging[i * block..i * block + r.len()].copy_from_slice(r);
+        }
+        let sorted = exe.run_i32_batched(&staging, *batch, *block)?;
+        for (i, r) in rows.iter_mut().enumerate() {
+            let len = r.len();
+            r.copy_from_slice(&sorted[i * block..i * block + len]);
+        }
+        Ok(())
+    }
+
+    /// [`BlockSorter::sort_batch_i32`] for `u32` rows (order-preserving
+    /// XOR mapping, as in [`BlockSorter::sort_u32`]).
+    pub fn sort_batch_u32(&self, rows: &mut [&mut [u32]]) -> Result<()> {
+        for r in rows.iter_mut() {
+            for v in r.iter_mut() {
+                *v ^= 0x8000_0000;
+            }
+        }
+        let res = {
+            // SAFETY: identical layout; XOR maps unsigned order onto
+            // signed order.
+            let mut cast: Vec<&mut [i32]> = rows
+                .iter_mut()
+                .map(|r| unsafe {
+                    std::slice::from_raw_parts_mut(r.as_mut_ptr() as *mut i32, r.len())
+                })
+                .collect();
+            self.sort_batch_i32(&mut cast)
+        };
+        for r in rows.iter_mut() {
+            for v in r.iter_mut() {
+                *v ^= 0x8000_0000;
+            }
+        }
+        res
+    }
+
+    /// Sort `f32` data (no NaNs — same contract as the CPU path) via
+    /// the float32 artifacts; errors if none were compiled.
+    pub fn sort_f32(&self, data: &mut [f32]) -> Result<()> {
+        let n = data.len();
+        if n <= 1 {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            !self.f32_execs.is_empty(),
+            "no float32 artifacts — run `make artifacts` (aot.py emits both dtypes)"
+        );
+        let block = *self
+            .f32_execs
+            .range(..=n)
+            .next_back()
+            .map(|(k, _)| k)
+            .unwrap_or_else(|| self.f32_execs.keys().next().expect("non-empty"));
+        let exe = &self.f32_execs[&block];
+        let mut base = 0;
+        while base < n {
+            let end = (base + block).min(n);
+            if end - base == block {
+                let sorted = exe.run_f32(&data[base..end])?;
+                data[base..end].copy_from_slice(&sorted);
+            } else {
+                let mut pad = vec![f32::INFINITY; block];
+                pad[..end - base].copy_from_slice(&data[base..end]);
+                let sorted = exe.run_f32(&pad)?;
+                data[base..end].copy_from_slice(&sorted[..end - base]);
+            }
+            base = end;
+        }
+        merge_runs(data, block, &self.merger);
+        Ok(())
+    }
+
+    /// Sort `u32` data via the order-preserving i32 mapping
+    /// (`x ^ 0x8000_0000`): the int32 artifact serves both types.
+    pub fn sort_u32(&self, data: &mut [u32]) -> Result<()> {
+        for v in data.iter_mut() {
+            *v ^= 0x8000_0000;
+        }
+        // SAFETY: u32 and i32 have identical layout; the XOR above
+        // makes unsigned order match signed order.
+        let as_i32 =
+            unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut i32, data.len()) };
+        let res = self.sort_i32(as_i32);
+        for v in data.iter_mut() {
+            *v ^= 0x8000_0000;
+        }
+        res
+    }
+}
+
+/// Ping-pong merge passes growing runs of `run` to the full length.
+pub(crate) fn merge_runs<T: Lane>(data: &mut [T], mut run: usize, merger: &RunMerger) {
+    let n = data.len();
+    if run >= n {
+        return;
+    }
+    let mut aux: Vec<T> = vec![T::MIN_VALUE; n];
+    let mut src_is_data = true;
+    while run < n {
+        {
+            let (src, dst): (&[T], &mut [T]) =
+                if src_is_data { (&*data, &mut aux[..]) } else { (&aux[..], data) };
+            let mut base = 0;
+            while base < n {
+                let mid = (base + run).min(n);
+                let end = (base + 2 * run).min(n);
+                if mid < end {
+                    merger.merge(&src[base..mid], &src[mid..end], &mut dst[base..end]);
+                } else {
+                    dst[base..end].copy_from_slice(&src[base..end]);
+                }
+                base = end;
+            }
+        }
+        src_is_data = !src_is_data;
+        run *= 2;
+    }
+    if !src_is_data {
+        data.copy_from_slice(&aux);
+    }
+}

@@ -1,0 +1,30 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! One [`PjrtRuntime`] per process wraps the CPU PJRT client; each HLO
+//! text artifact compiles once into an [`Executable`]. The
+//! [`BlockSorter`] composes them into the L3 sort path: XLA sorts
+//! fixed-size blocks (the L2 graph = Pallas tile sort + merge passes),
+//! rust merges across blocks with the hybrid kernels — mirroring the
+//! paper's split between in-register sort and the outer merge.
+
+mod blocksorter;
+mod pjrt;
+mod registry;
+
+pub use blocksorter::BlockSorter;
+pub use pjrt::{Executable, PjrtRuntime};
+pub use registry::{ArtifactRegistry, ArtifactVariant};
+
+/// Re-export of the run-merging pass for benches (the ablation
+/// harness compares parallel-merge strategies against it).
+pub fn merge_runs_for_bench<T: crate::simd::Lane>(
+    data: &mut [T],
+    run: usize,
+    merger: &crate::kernels::runmerge::RunMerger,
+) {
+    blocksorter::merge_runs(data, run, merger)
+}
+
+#[cfg(test)]
+mod tests;

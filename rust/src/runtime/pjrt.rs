@@ -1,0 +1,103 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client. Construction is expensive (plugin init);
+/// share one per process (the coordinator holds it in an `Arc`).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Backend platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    ///
+    /// Text is the interchange format by design: jax ≥ 0.5 emits
+    /// protos with 64-bit instruction ids that xla_extension 0.5.1
+    /// rejects; the text parser reassigns ids (see aot.py).
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled XLA program (e.g. `block_sort_int32_4096`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Artifact path this executable was compiled from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute on one `i32` vector; the program must map
+    /// `s32[n] -> (s32[n],)` (the aot.py export contract).
+    pub fn run_i32(&self, input: &[i32]) -> Result<Vec<i32>> {
+        self.run_vec(input)
+    }
+
+    /// Execute on one `f32` vector (`f32[n] -> (f32[n],)` programs).
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        self.run_vec(input)
+    }
+
+    /// Execute a batched program (`s32[batch, block] -> (same,)`) on a
+    /// row-major flattened input of `batch · block` elements.
+    pub fn run_i32_batched(&self, input: &[i32], batch: usize, block: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(input.len() == batch * block, "batched input shape mismatch");
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[batch as i64, block as i64])
+            .context("reshaping batched input")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?;
+        let Some(buf) = result.first().and_then(|d| d.first()) else {
+            bail!("{}: empty result", self.name);
+        };
+        let out = buf
+            .to_literal_sync()
+            .context("device->host transfer")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple result")?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    fn run_vec<T: xla::NativeType + xla::ArrayElement>(&self, input: &[T]) -> Result<Vec<T>> {
+        let lit = xla::Literal::vec1(input);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?;
+        let Some(buf) = result.first().and_then(|d| d.first()) else {
+            bail!("{}: empty result", self.name);
+        };
+        let out = buf
+            .to_literal_sync()
+            .context("device->host transfer")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple result")?;
+        Ok(out.to_vec::<T>()?)
+    }
+}

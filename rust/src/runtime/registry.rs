@@ -1,0 +1,122 @@
+//! Artifact discovery: scan `artifacts/` for `block_sort_<dtype>_<n>.hlo.txt`
+//! files (the aot.py naming contract) and select variants by request
+//! size. Filename-based rather than manifest-based so the registry has
+//! no JSON dependency and tolerates partial artifact sets.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One discovered artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactVariant {
+    /// Block length in elements (power of two).
+    pub block: usize,
+    /// Rows per dispatch: 1 for the plain variants, >1 for the
+    /// `block_sort_batchN_*` artifacts (coordinator dynamic batching).
+    pub batch: usize,
+    /// Element dtype as named by aot.py (`int32` / `float32`).
+    pub dtype: String,
+    /// Path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Registry of available block-sort artifacts, keyed by
+/// (dtype, block size).
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    variants: BTreeMap<(String, usize, usize), ArtifactVariant>,
+}
+
+impl ArtifactRegistry {
+    /// Scan a directory. Unrecognized files are ignored; an empty or
+    /// missing directory yields an empty registry (callers decide
+    /// whether XLA offload is mandatory).
+    pub fn scan(dir: impl AsRef<Path>) -> Self {
+        let mut variants = BTreeMap::new();
+        let Ok(entries) = std::fs::read_dir(dir.as_ref()) else {
+            return ArtifactRegistry { variants };
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            if let Some(v) = Self::parse_name(name, &path) {
+                variants.insert((v.dtype.clone(), v.block, v.batch), v);
+            }
+        }
+        ArtifactRegistry { variants }
+    }
+
+    fn parse_name(name: &str, path: &Path) -> Option<ArtifactVariant> {
+        let stem = name.strip_suffix(".hlo.txt")?;
+        let mut rest = stem.strip_prefix("block_sort_")?;
+        let mut batch = 1usize;
+        if let Some(tail) = rest.strip_prefix("batch") {
+            let (b, r) = tail.split_once('_')?;
+            batch = b.parse().ok()?;
+            rest = r;
+        }
+        let (dtype, block) = rest.rsplit_once('_')?;
+        if dtype != "int32" && dtype != "float32" {
+            return None;
+        }
+        let block: usize = block.parse().ok()?;
+        Some(ArtifactVariant {
+            block,
+            batch,
+            dtype: dtype.to_string(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// All variants, ascending by (dtype, block size).
+    pub fn variants(&self) -> impl Iterator<Item = &ArtifactVariant> {
+        self.variants.values()
+    }
+
+    /// Unbatched variants of one dtype, ascending by block size.
+    pub fn variants_of(&self, dtype: &str) -> impl Iterator<Item = &ArtifactVariant> + '_ {
+        let key = dtype.to_string();
+        self.variants
+            .range((key.clone(), 0, 0)..=(key, usize::MAX, usize::MAX))
+            .map(|(_, v)| v)
+            .filter(|v| v.batch == 1)
+    }
+
+    /// Batched variants (batch > 1), any dtype.
+    pub fn batched_variants(&self) -> impl Iterator<Item = &ArtifactVariant> {
+        self.variants.values().filter(|v| v.batch > 1)
+    }
+
+    /// Number of variants.
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// True if no artifacts were found.
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// Pick the best block size for an `int32` request of `len`
+    /// elements: the largest block ≤ `len`, else the smallest
+    /// available (the tail is padded).
+    pub fn pick(&self, len: usize) -> Result<&ArtifactVariant> {
+        self.pick_of("int32", len)
+    }
+
+    /// [`ArtifactRegistry::pick`] for an explicit dtype.
+    pub fn pick_of(&self, dtype: &str, len: usize) -> Result<&ArtifactVariant> {
+        let mut best: Option<&ArtifactVariant> = None;
+        for v in self.variants_of(dtype) {
+            if best.is_none() || v.block <= len {
+                best = Some(v);
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow::anyhow!("no {dtype} block_sort artifacts found — run `make artifacts`")
+        })
+    }
+}

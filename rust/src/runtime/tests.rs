@@ -1,0 +1,177 @@
+//! Runtime tests. Registry tests are hermetic; executable tests need
+//! `artifacts/` (built by `make artifacts`) and are skipped with a
+//! note when absent so `cargo test` works pre-AOT.
+
+use super::*;
+use crate::testutil::{assert_sorted, Rng};
+use std::sync::Arc;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::scan(artifacts_dir())
+}
+
+macro_rules! require_artifacts {
+    ($reg:expr) => {
+        if $reg.is_empty() {
+            eprintln!("SKIP: no artifacts — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn registry_parses_filenames() {
+    let dir = std::env::temp_dir().join(format!("neonms_reg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in [
+        "block_sort_int32_1024.hlo.txt",
+        "block_sort_int32_4096.hlo.txt",
+        "block_sort_float32_1024.hlo.txt",
+        "block_sort_bf16_1024.hlo.txt", // unknown dtype — ignored
+        "manifest.json",                // ignored
+        "junk.txt",                     // ignored
+    ] {
+        std::fs::write(dir.join(name), "x").unwrap();
+    }
+    std::fs::write(dir.join("block_sort_batch8_int32_1024.hlo.txt"), "x").unwrap();
+    let reg = ArtifactRegistry::scan(&dir);
+    assert_eq!(reg.len(), 4);
+    let batched: Vec<_> = reg.batched_variants().collect();
+    assert_eq!(batched.len(), 1);
+    assert_eq!((batched[0].batch, batched[0].block), (8, 1024));
+    // Batched variants never serve the unbatched pick path.
+    assert!(reg.variants_of("int32").all(|v| v.batch == 1));
+    assert_eq!(reg.pick(100).unwrap().block, 1024, "below smallest → smallest");
+    assert_eq!(reg.pick(2000).unwrap().block, 1024);
+    assert_eq!(reg.pick(4096).unwrap().block, 4096);
+    assert_eq!(reg.pick(1 << 20).unwrap().block, 4096);
+    assert_eq!(reg.pick_of("float32", 1 << 20).unwrap().block, 1024);
+    assert!(reg.pick_of("bf16", 10).is_err(), "unknown dtype rejected");
+    assert_eq!(reg.variants_of("int32").count(), 2);
+    assert_eq!(reg.variants_of("float32").count(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_missing_dir_is_empty() {
+    let reg = ArtifactRegistry::scan("/nonexistent/path");
+    assert!(reg.is_empty());
+    assert!(reg.pick(100).is_err());
+}
+
+#[test]
+fn executable_sorts_one_block() {
+    let reg = registry();
+    require_artifacts!(reg);
+    let rt = Arc::new(PjrtRuntime::cpu().unwrap());
+    let v = reg.pick(0).unwrap();
+    let exe = rt.load_hlo_text(&v.path).unwrap();
+    let mut rng = Rng::new(1);
+    let input: Vec<i32> = (0..v.block).map(|_| rng.next_i32()).collect();
+    let out = exe.run_i32(&input).unwrap();
+    let mut expect = input.clone();
+    expect.sort_unstable();
+    assert_eq!(out, expect, "XLA block sort vs oracle");
+}
+
+#[test]
+fn blocksorter_sorts_multi_block_and_tail() {
+    let reg = registry();
+    require_artifacts!(reg);
+    let rt = Arc::new(PjrtRuntime::cpu().unwrap());
+    let bs = BlockSorter::new(rt, &reg).unwrap();
+    let mut rng = Rng::new(2);
+    for len in [1usize, 100, 1024, 5000, 20_000] {
+        let mut data: Vec<i32> = (0..len).map(|_| rng.next_i32()).collect();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        bs.sort_i32(&mut data).unwrap();
+        assert_eq!(data, expect, "len {len}");
+    }
+}
+
+#[test]
+fn blocksorter_batched_dispatch() {
+    let reg = registry();
+    require_artifacts!(reg);
+    let Some(v) = reg.batched_variants().next() else {
+        eprintln!("SKIP: no batched artifact — rerun `make artifacts`");
+        return;
+    };
+    let (batch, block) = (v.batch, v.block);
+    let rt = Arc::new(PjrtRuntime::cpu().unwrap());
+    let bs = BlockSorter::new(rt, &reg).unwrap();
+    assert_eq!(bs.batch_geometry(), Some((batch, block)));
+    let mut rng = Rng::new(21);
+    // Mixed row lengths, including empty and full-block.
+    let mut rows: Vec<Vec<u32>> = (0..batch)
+        .map(|i| rng.vec_u32([0, 7, block / 2, block][i % 4]))
+        .collect();
+    let expect: Vec<Vec<u32>> = rows
+        .iter()
+        .map(|r| {
+            let mut e = r.clone();
+            e.sort_unstable();
+            e
+        })
+        .collect();
+    let mut views: Vec<&mut [u32]> = rows.iter_mut().map(|r| r.as_mut_slice()).collect();
+    bs.sort_batch_u32(&mut views).unwrap();
+    assert_eq!(rows, expect, "all rows sorted in one dispatch");
+    // Oversized row rejected.
+    let mut too_big = vec![0u32; block + 1];
+    let mut views: Vec<&mut [u32]> = vec![too_big.as_mut_slice()];
+    assert!(bs.sort_batch_u32(&mut views).is_err());
+}
+
+#[test]
+fn blocksorter_f32_path() {
+    let reg = registry();
+    require_artifacts!(reg);
+    if reg.variants_of("float32").count() == 0 {
+        eprintln!("SKIP: no float32 artifacts");
+        return;
+    }
+    let rt = Arc::new(PjrtRuntime::cpu().unwrap());
+    let bs = BlockSorter::new(rt, &reg).unwrap();
+    let mut rng = Rng::new(9);
+    let mut data: Vec<f32> = (0..5000).map(|_| rng.next_f32() * 2e6 - 1e6).collect();
+    let mut expect = data.clone();
+    expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bs.sort_f32(&mut data).unwrap();
+    assert_eq!(data, expect);
+}
+
+#[test]
+fn blocksorter_u32_mapping() {
+    let reg = registry();
+    require_artifacts!(reg);
+    let rt = Arc::new(PjrtRuntime::cpu().unwrap());
+    let bs = BlockSorter::new(rt, &reg).unwrap();
+    let mut rng = Rng::new(3);
+    // Values spanning the sign boundary of the i32 mapping.
+    let mut data: Vec<u32> = (0..6000).map(|_| rng.next_u32()).collect();
+    data.extend([0u32, u32::MAX, 0x7FFF_FFFF, 0x8000_0000]);
+    let mut expect = data.clone();
+    expect.sort_unstable();
+    bs.sort_u32(&mut data).unwrap();
+    assert_eq!(data, expect);
+}
+
+#[test]
+fn merge_runs_unit() {
+    use crate::kernels::runmerge::RunMerger;
+    let mut rng = Rng::new(4);
+    for len in [64usize, 100, 257, 4096] {
+        let mut data = rng.vec_u32(len);
+        for chunk in data.chunks_mut(64) {
+            chunk.sort_unstable();
+        }
+        super::blocksorter::merge_runs(&mut data, 64, &RunMerger::paper_default());
+        assert_sorted(&data, &format!("merge_runs len {len}"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Lane-element trait: the 32-bit scalar types the paper sorts.
+
+/// A 32-bit scalar that can live in one lane of a [`super::V128`].
+///
+/// The paper evaluates 32-bit integers; we additionally support `u32`
+/// and `f32` (NEON's `vminq_f32`/`vmaxq_f32` exist and the algorithm is
+/// type-agnostic). All comparator logic is expressed through
+/// [`Lane::lane_min`]/[`Lane::lane_max`] so that kernels stay branchless:
+/// for integers these become `pminsd`/`pmaxsd`-class instructions, for
+/// `f32` `minps`/`maxps`.
+///
+/// `f32` note: like NEON's `vminq_f32`, ordering is IEEE `<`; sorting
+/// slices containing NaN is unsupported (same contract as
+/// `std::sort` with `operator<` on floats in the paper's C++).
+pub trait Lane: Copy + PartialOrd + core::fmt::Debug + Send + Sync + 'static {
+    /// Smallest representable value (identity for `max`, used for padding).
+    const MIN_VALUE: Self;
+    /// Largest representable value (identity for `min`, used for padding).
+    const MAX_VALUE: Self;
+
+    /// Branchless minimum of two lanes.
+    fn lane_min(self, other: Self) -> Self;
+    /// Branchless maximum of two lanes.
+    fn lane_max(self, other: Self) -> Self;
+
+    /// Branchless compare-select: `if self <= other { a } else { b }`.
+    ///
+    /// Mirrors the paper's Fig. 3b `csel` comparator: on x86-64 this
+    /// compiles to `cmp` + `cmov`, on AArch64 to `cmp` + `csel` — no
+    /// branch, so no misprediction penalty in the serial merge path.
+    #[inline(always)]
+    fn select_le<T: Copy>(self, other: Self, a: T, b: T) -> T {
+        // `PartialOrd` on the three concrete Lane types is total for
+        // the values we admit (no NaN), and LLVM turns this into cmov.
+        if self <= other {
+            a
+        } else {
+            b
+        }
+    }
+}
+
+impl Lane for i32 {
+    const MIN_VALUE: Self = i32::MIN;
+    const MAX_VALUE: Self = i32::MAX;
+    #[inline(always)]
+    fn lane_min(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    #[inline(always)]
+    fn lane_max(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+}
+
+impl Lane for u32 {
+    const MIN_VALUE: Self = u32::MIN;
+    const MAX_VALUE: Self = u32::MAX;
+    #[inline(always)]
+    fn lane_min(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    #[inline(always)]
+    fn lane_max(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+}
+
+impl Lane for f32 {
+    const MIN_VALUE: Self = f32::NEG_INFINITY;
+    const MAX_VALUE: Self = f32::INFINITY;
+    #[inline(always)]
+    fn lane_min(self, other: Self) -> Self {
+        // NEON vminq_f32 semantics for non-NaN inputs; branchless minps.
+        if self < other {
+            self
+        } else {
+            other
+        }
+    }
+    #[inline(always)]
+    fn lane_max(self, other: Self) -> Self {
+        if self > other {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+/// Sort key packing for the (key, payload) examples: pack a `u32` key
+/// and a `u32` row id into one `u64` so the SIMD path sorts pairs too
+/// (the paper's database-retrieval motivation, examples/database_keys).
+#[inline(always)]
+pub fn pack_key_rowid(key: u32, rowid: u32) -> u64 {
+    ((key as u64) << 32) | rowid as u64
+}
+
+/// Inverse of [`pack_key_rowid`].
+#[inline(always)]
+pub fn unpack_key_rowid(packed: u64) -> (u32, u32) {
+    ((packed >> 32) as u32, packed as u32)
+}

@@ -1,0 +1,31 @@
+//! NEON-like 128-bit SIMD substrate.
+//!
+//! The paper's kernels are written against ARM NEON's `q` registers:
+//! 128 bits, four 32-bit lanes, with `vminq`/`vmaxq` comparators and
+//! `vzipq`/`vuzpq`/`vrev64q`/`vtrnq` shuffles. This testbed is x86-64,
+//! so we substitute a portable [`V128`] type with exactly NEON's lane
+//! semantics. Every method is a thin, `#[inline(always)]` array
+//! operation that LLVM lowers to the SSE2/SSE4.1 equivalent of the
+//! corresponding NEON instruction (`pminsd`/`pmaxsd`, `punpckl/hdq`,
+//! `pshufd`, ...), preserving the paper's cost structure: one
+//! comparator = one `vmin` + one `vmax`, one shuffle = one port-5 op.
+//!
+//! See DESIGN.md §Hardware-Adaptation.
+
+mod lane;
+mod v128;
+
+pub use lane::{pack_key_rowid, unpack_key_rowid, Lane};
+pub use v128::{transpose4, transpose_rx4, V128};
+
+/// Number of 32-bit lanes per vector register — the paper's `W`.
+pub const W: usize = 4;
+
+/// Number of architectural vector registers on ARM NEON (AArch64):
+/// `v0..v31`. The paper's §2.2 argues the *usable* count for an
+/// in-register sort is 16 once shuffle temporaries and loop-carried
+/// state are excluded.
+pub const NEON_REGISTER_FILE: usize = 32;
+
+#[cfg(test)]
+mod tests;

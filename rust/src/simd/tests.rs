@@ -1,0 +1,133 @@
+use super::*;
+use crate::simd::lane::{pack_key_rowid, unpack_key_rowid};
+
+fn v(a: i32, b: i32, c: i32, d: i32) -> V128<i32> {
+    V128([a, b, c, d])
+}
+
+#[test]
+fn splat_load_store_roundtrip() {
+    let x = V128::<u32>::splat(7);
+    assert_eq!(x.to_array(), [7, 7, 7, 7]);
+    let src = [1u32, 2, 3, 4, 5];
+    let r = V128::load(&src);
+    let mut dst = [0u32; 4];
+    r.store(&mut dst);
+    assert_eq!(dst, [1, 2, 3, 4]);
+    assert_eq!(r.lane(2), 3);
+}
+
+#[test]
+fn min_max_cmpswap_lanewise() {
+    let a = v(1, 9, -3, 4);
+    let b = v(2, 5, -7, 4);
+    assert_eq!(a.min(b).to_array(), [1, 5, -7, 4]);
+    assert_eq!(a.max(b).to_array(), [2, 9, -3, 4]);
+    let (lo, hi) = a.cmpswap(b);
+    assert_eq!(lo, a.min(b));
+    assert_eq!(hi, a.max(b));
+}
+
+#[test]
+fn float_min_max() {
+    let a = V128([1.0f32, -2.5, 0.0, 3.5]);
+    let b = V128([0.5f32, -2.0, 1.0, 3.5]);
+    assert_eq!(a.min(b).to_array(), [0.5, -2.5, 0.0, 3.5]);
+    assert_eq!(a.max(b).to_array(), [1.0, -2.0, 1.0, 3.5]);
+}
+
+#[test]
+fn shuffles_match_neon_semantics() {
+    let a = v(0, 1, 2, 3);
+    let b = v(10, 11, 12, 13);
+    assert_eq!(a.zip1(b).to_array(), [0, 10, 1, 11]);
+    assert_eq!(a.zip2(b).to_array(), [2, 12, 3, 13]);
+    assert_eq!(a.uzp1(b).to_array(), [0, 2, 10, 12]);
+    assert_eq!(a.uzp2(b).to_array(), [1, 3, 11, 13]);
+    assert_eq!(a.trn1(b).to_array(), [0, 10, 2, 12]);
+    assert_eq!(a.trn2(b).to_array(), [1, 11, 3, 13]);
+    assert_eq!(a.rev64().to_array(), [1, 0, 3, 2]);
+    assert_eq!(a.swap_halves().to_array(), [2, 3, 0, 1]);
+    assert_eq!(a.reverse().to_array(), [3, 2, 1, 0]);
+}
+
+#[test]
+fn zip_uzp_inverse() {
+    // uzp(zip(a,b)) == (a,b): the pair round-trips.
+    let a = v(4, 8, 15, 16);
+    let b = v(23, 42, -1, 0);
+    let lo = a.zip1(b);
+    let hi = a.zip2(b);
+    assert_eq!(lo.uzp1(hi), a);
+    assert_eq!(lo.uzp2(hi), b);
+}
+
+#[test]
+fn transpose4_is_matrix_transpose() {
+    let m = [v(0, 1, 2, 3), v(10, 11, 12, 13), v(20, 21, 22, 23), v(30, 31, 32, 33)];
+    let t = transpose4(m);
+    for i in 0..4 {
+        for j in 0..4 {
+            assert_eq!(t[i].lane(j), m[j].lane(i), "t[{i}][{j}]");
+        }
+    }
+    // Involution: transpose twice is identity.
+    assert_eq!(transpose4(t), m);
+}
+
+#[test]
+fn transpose_rx4_produces_contiguous_runs() {
+    // 8x4 matrix whose columns are 0..8, 100..108, 200..208, 300..308.
+    // After transpose, run j (length 8) must be contiguous in output
+    // registers j*2 and j*2+1.
+    let mut regs: Vec<V128<i32>> = (0..8)
+        .map(|i| V128([i, 100 + i, 200 + i, 300 + i]))
+        .collect();
+    transpose_rx4(&mut regs);
+    let flat: Vec<i32> = regs.iter().flat_map(|r| r.to_array()).collect();
+    let expect: Vec<i32> = (0..8).chain(100..108).chain(200..208).chain(300..308).collect();
+    assert_eq!(flat, expect);
+}
+
+#[test]
+fn transpose_16x4_runs() {
+    let mut regs: Vec<V128<i32>> = (0..16)
+        .map(|i| V128([i, 1000 + i, 2000 + i, 3000 + i]))
+        .collect();
+    transpose_rx4(&mut regs);
+    let flat: Vec<i32> = regs.iter().flat_map(|r| r.to_array()).collect();
+    let expect: Vec<i32> = (0..16).chain(1000..1016).chain(2000..2016).chain(3000..3016).collect();
+    assert_eq!(flat, expect);
+}
+
+#[test]
+fn transpose_4x4_via_rx4_matches_transpose4() {
+    let m = [v(0, 1, 2, 3), v(10, 11, 12, 13), v(20, 21, 22, 23), v(30, 31, 32, 33)];
+    let mut regs = m.to_vec();
+    transpose_rx4(&mut regs);
+    assert_eq!(regs.as_slice(), &transpose4(m)[..]);
+}
+
+#[test]
+#[should_panic(expected = "multiple of W")]
+fn transpose_rejects_non_multiple() {
+    let mut regs = vec![V128::<u32>::splat(0); 6];
+    transpose_rx4(&mut regs);
+}
+
+#[test]
+fn key_rowid_pack_roundtrip_preserves_key_order() {
+    let a = pack_key_rowid(5, 999);
+    let b = pack_key_rowid(6, 0);
+    assert!(a < b, "key dominates rowid in packed order");
+    assert_eq!(unpack_key_rowid(a), (5, 999));
+    assert_eq!(unpack_key_rowid(b), (6, 0));
+}
+
+#[test]
+fn lane_select_le_is_branchless_semantics() {
+    use crate::simd::Lane;
+    assert_eq!(3i32.select_le(5, "a", "b"), "a");
+    assert_eq!(5i32.select_le(3, "a", "b"), "b");
+    assert_eq!(4u32.select_le(4, 1, 2), 1);
+}

@@ -1,0 +1,207 @@
+//! The 128-bit, 4-lane vector register type.
+
+use super::lane::Lane;
+use super::W;
+
+/// A NEON `q`-register stand-in: four 32-bit lanes, 16-byte aligned.
+///
+/// Lane 0 is the lowest-addressed element on load (NEON `vld1q`
+/// little-endian convention). All shuffle names follow the AArch64
+/// instruction they model so kernels read like the paper's listings:
+///
+/// | method        | NEON instruction | x86 lowering (LLVM)     |
+/// |---------------|------------------|-------------------------|
+/// | [`V128::min`] | `vminq`          | `pminsd`/`pminud`/`minps` |
+/// | [`V128::max`] | `vmaxq`          | `pmaxsd`/`pmaxud`/`maxps` |
+/// | [`V128::zip1`]| `vzip1q`         | `punpckldq`             |
+/// | [`V128::zip2`]| `vzip2q`         | `punpckhdq`             |
+/// | [`V128::uzp1`]| `vuzp1q`         | `shufps`                |
+/// | [`V128::uzp2`]| `vuzp2q`         | `shufps`                |
+/// | [`V128::trn1`]| `vtrn1q`         | `shufps`                |
+/// | [`V128::trn2`]| `vtrn2q`         | `shufps`                |
+/// | [`V128::rev64`]| `vrev64q`       | `pshufd`                |
+/// | [`V128::reverse`]| `vrev64q`+`vextq` | `pshufd`           |
+#[derive(Clone, Copy, PartialEq, Debug)]
+#[repr(C, align(16))]
+pub struct V128<T: Lane>(pub [T; W]);
+
+impl<T: Lane> V128<T> {
+    /// Broadcast one scalar to all lanes (`vdupq_n`).
+    #[inline(always)]
+    pub fn splat(v: T) -> Self {
+        V128([v; W])
+    }
+
+    /// Load four contiguous lanes from `src` (`vld1q`). Panics if
+    /// `src.len() < 4` — kernels guarantee whole-vector access.
+    #[inline(always)]
+    pub fn load(src: &[T]) -> Self {
+        V128([src[0], src[1], src[2], src[3]])
+    }
+
+    /// Store four lanes to `dst` (`vst1q`).
+    #[inline(always)]
+    pub fn store(self, dst: &mut [T]) {
+        dst[..W].copy_from_slice(&self.0);
+    }
+
+    /// Lane accessor (`vgetq_lane`).
+    #[inline(always)]
+    pub fn lane(self, i: usize) -> T {
+        self.0[i]
+    }
+
+    /// Lane-wise minimum (`vminq`) — one half of a vector comparator.
+    #[inline(always)]
+    pub fn min(self, o: Self) -> Self {
+        V128([
+            self.0[0].lane_min(o.0[0]),
+            self.0[1].lane_min(o.0[1]),
+            self.0[2].lane_min(o.0[2]),
+            self.0[3].lane_min(o.0[3]),
+        ])
+    }
+
+    /// Lane-wise maximum (`vmaxq`) — the other half of a comparator.
+    #[inline(always)]
+    pub fn max(self, o: Self) -> Self {
+        V128([
+            self.0[0].lane_max(o.0[0]),
+            self.0[1].lane_max(o.0[1]),
+            self.0[2].lane_max(o.0[2]),
+            self.0[3].lane_max(o.0[3]),
+        ])
+    }
+
+    /// Vector comparator: returns `(min, max)` lane-wise. This is the
+    /// paper's "Comparator" applied across R registers in column sort —
+    /// exactly two instructions, no branches, no shuffles.
+    #[inline(always)]
+    pub fn cmpswap(self, o: Self) -> (Self, Self) {
+        (self.min(o), self.max(o))
+    }
+
+    /// Interleave low halves (`vzip1q`): `[a0,b0,a1,b1]`.
+    #[inline(always)]
+    pub fn zip1(self, o: Self) -> Self {
+        V128([self.0[0], o.0[0], self.0[1], o.0[1]])
+    }
+
+    /// Interleave high halves (`vzip2q`): `[a2,b2,a3,b3]`.
+    #[inline(always)]
+    pub fn zip2(self, o: Self) -> Self {
+        V128([self.0[2], o.0[2], self.0[3], o.0[3]])
+    }
+
+    /// De-interleave even lanes (`vuzp1q`): `[a0,a2,b0,b2]`.
+    #[inline(always)]
+    pub fn uzp1(self, o: Self) -> Self {
+        V128([self.0[0], self.0[2], o.0[0], o.0[2]])
+    }
+
+    /// De-interleave odd lanes (`vuzp2q`): `[a1,a3,b1,b3]`.
+    #[inline(always)]
+    pub fn uzp2(self, o: Self) -> Self {
+        V128([self.0[1], self.0[3], o.0[1], o.0[3]])
+    }
+
+    /// Transpose even lanes (`vtrn1q`): `[a0,b0,a2,b2]`.
+    #[inline(always)]
+    pub fn trn1(self, o: Self) -> Self {
+        V128([self.0[0], o.0[0], self.0[2], o.0[2]])
+    }
+
+    /// Transpose odd lanes (`vtrn2q`): `[a1,b1,a3,b3]`.
+    #[inline(always)]
+    pub fn trn2(self, o: Self) -> Self {
+        V128([self.0[1], o.0[1], self.0[3], o.0[3]])
+    }
+
+    /// Reverse 32-bit lanes within each 64-bit half (`vrev64q_u32`):
+    /// `[a1,a0,a3,a2]`.
+    #[inline(always)]
+    pub fn rev64(self) -> Self {
+        V128([self.0[1], self.0[0], self.0[3], self.0[2]])
+    }
+
+    /// Swap the two 64-bit halves (`vextq #8`): `[a2,a3,a0,a1]`.
+    #[inline(always)]
+    pub fn swap_halves(self) -> Self {
+        V128([self.0[2], self.0[3], self.0[0], self.0[1]])
+    }
+
+    /// Full lane reversal `[a3,a2,a1,a0]` — `vrev64q` + `vextq`, used to
+    /// form the bitonic sequence before a merge network.
+    #[inline(always)]
+    pub fn reverse(self) -> Self {
+        self.rev64().swap_halves()
+    }
+
+    /// Materialize as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [T; W] {
+        self.0
+    }
+
+    /// Blend low half of `lo` with high half of `hi`:
+    /// `[lo0, lo1, hi2, hi3]` — one `blendps`/`vbslq`, used by the
+    /// distance-2 stage of the in-register bitonic merge.
+    #[inline(always)]
+    pub fn blend_lo_hi(lo: Self, hi: Self) -> Self {
+        V128([lo.0[0], lo.0[1], hi.0[2], hi.0[3]])
+    }
+
+    /// Blend even lanes of `ev` with odd lanes of `od`:
+    /// `[ev0, od1, ev2, od3]` — the distance-1 stage blend.
+    #[inline(always)]
+    pub fn blend_even_odd(ev: Self, od: Self) -> Self {
+        V128([ev.0[0], od.0[1], ev.0[2], od.0[3]])
+    }
+}
+
+/// 4×4 in-register matrix transpose — the paper's *base matrix
+/// transpose* (§2.3): an `R×W` transpose decomposes into `R/W` of
+/// these. Exactly the NEON `vtrnq` + 64-bit `vzip` idiom (8 shuffles,
+/// no memory traffic).
+#[inline(always)]
+pub fn transpose4<T: Lane>(r: [V128<T>; 4]) -> [V128<T>; 4] {
+    // Stage 1: 32-bit transpose pairs (vtrn1/vtrn2).
+    let t0 = r[0].trn1(r[1]); // [a0 b0 a2 b2]
+    let t1 = r[0].trn2(r[1]); // [a1 b1 a3 b3]
+    let t2 = r[2].trn1(r[3]); // [c0 d0 c2 d2]
+    let t3 = r[2].trn2(r[3]); // [c1 d1 c3 d3]
+    // Stage 2: 64-bit element exchange (vzip1q_u64 / vzip2q_u64).
+    let o0 = V128([t0.0[0], t0.0[1], t2.0[0], t2.0[1]]); // [a0 b0 c0 d0]
+    let o1 = V128([t1.0[0], t1.0[1], t3.0[0], t3.0[1]]); // [a1 b1 c1 d1]
+    let o2 = V128([t0.0[2], t0.0[3], t2.0[2], t2.0[3]]); // [a2 b2 c2 d2]
+    let o3 = V128([t1.0[2], t1.0[3], t3.0[2], t3.0[3]]); // [a3 b3 c3 d3]
+    [o0, o1, o2, o3]
+}
+
+/// Transpose an `R×4` register matrix (R a multiple of 4) in place,
+/// viewing it as `R/4` stacked 4×4 tiles: tile (i,j) of the logical
+/// `4×R` result is the transpose of tile (j,i) of the input. The result
+/// is returned in row-major order of the `4×R` matrix flattened back
+/// into `R` registers: output register `k` holds lanes
+/// `[out_row, out_col..]` such that reading output registers
+/// `j*stride..j*stride+stride` concatenates logical row `j`.
+///
+/// Concretely, for the in-register sort we need: after column-sorting
+/// an `R×4` matrix, produce 4 sorted runs of length `R`, each run
+/// contiguous across `R/4` registers. `transpose_rx4` delivers run `j`
+/// in output registers `j*R/4 .. (j+1)*R/4`.
+pub fn transpose_rx4<T: Lane>(regs: &mut [V128<T>]) {
+    let r = regs.len();
+    assert!(r % 4 == 0, "R must be a multiple of W=4");
+    let tiles = r / 4;
+    let mut out = vec![V128::splat(T::MIN_VALUE); r];
+    for t in 0..tiles {
+        let tile = transpose4([regs[4 * t], regs[4 * t + 1], regs[4 * t + 2], regs[4 * t + 3]]);
+        // Row j of this tile is the slice [4t .. 4t+4) of sorted run j;
+        // place it at output register j*tiles + t.
+        for (j, row) in tile.into_iter().enumerate() {
+            out[j * tiles + t] = row;
+        }
+    }
+    regs.copy_from_slice(&out);
+}

@@ -1,0 +1,20 @@
+//! The NEON-MS sort itself (paper §2.1, Fig. 1).
+//!
+//! * [`neon_ms`] — the single-thread sort: one in-register-sort pass
+//!   producing sorted runs of `R·W = 64`, then ping-pong vectorized
+//!   merge passes (hybrid bitonic kernels) doubling the run length
+//!   until the slice is one run.
+//! * [`parallel`] — the multi-thread version: per-thread local sorts,
+//!   then a cooperative merge tree where every pair-merge is
+//!   partitioned across *all* threads by merge path (§2.1's data
+//!   partitioning strategy [10]) so "each available thread remains
+//!   active" (§3.2).
+
+pub mod neon_ms;
+pub mod parallel;
+
+pub use neon_ms::{NeonMergeSort, SortConfig};
+pub use parallel::ParallelNeonMergeSort;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,164 @@
+//! Single-thread NEON-MS (paper §2.1): in-register sort pass +
+//! ping-pong vectorized merge passes.
+
+use crate::kernels::inregister::{ColumnNetwork, InRegisterSorter};
+use crate::kernels::runmerge::RunMerger;
+use crate::kernels::{MergeImpl, MergeWidth};
+use crate::simd::Lane;
+
+/// Tuning knobs for the full sort — every Table 2/3 axis in one place.
+#[derive(Clone, Debug)]
+pub struct SortConfig {
+    /// Registers for the in-register sort (paper: 16).
+    pub r: usize,
+    /// Column-sort network family (paper: best, the `16*` row).
+    pub column_network: ColumnNetwork,
+    /// Register-merge kernel width for the merge passes. The paper's
+    /// Table 3 finds the hybrid merger fastest at 2×{8,16}; on this
+    /// host 2×4 wins (EXPERIMENTS.md §Perf), so that is the default;
+    /// benches still sweep the paper's widths.
+    pub merge_width: MergeWidth,
+    /// Merge kernel implementation (paper: hybrid).
+    pub merge_impl: MergeImpl,
+}
+
+impl Default for SortConfig {
+    fn default() -> Self {
+        SortConfig {
+            r: 16,
+            column_network: ColumnNetwork::Best,
+            merge_width: MergeWidth::K4,
+            merge_impl: MergeImpl::Hybrid,
+        }
+    }
+}
+
+/// The single-thread NEON-MS sorter. Construction precomputes the
+/// column network; [`NeonMergeSort::sort`] is then allocation-free
+/// apart from one ping-pong buffer of the input's size.
+#[derive(Clone, Debug)]
+pub struct NeonMergeSort {
+    inreg: InRegisterSorter,
+    merger: RunMerger,
+}
+
+impl NeonMergeSort {
+    /// Build from a config.
+    pub fn new(cfg: SortConfig) -> Self {
+        let inreg = InRegisterSorter::new(cfg.r, cfg.column_network)
+            .with_merge_impl(match cfg.merge_impl {
+                MergeImpl::Serial => MergeImpl::Hybrid, // row merge stays in-register
+                other => other,
+            });
+        let merger = RunMerger { width: cfg.merge_width, imp: cfg.merge_impl };
+        NeonMergeSort { inreg, merger }
+    }
+
+    /// The paper's configuration: R = 16* with hybrid merges (width
+    /// host-tuned to 2×4; see SortConfig::merge_width).
+    pub fn paper_default() -> Self {
+        NeonMergeSort::new(SortConfig::default())
+    }
+
+    /// Access the in-register stage (benches sweep it directly).
+    pub fn inregister(&self) -> &InRegisterSorter {
+        &self.inreg
+    }
+
+    /// Access the run merger.
+    pub fn merger(&self) -> &RunMerger {
+        &self.merger
+    }
+
+    /// Elements per cache-resident segment: segment + ping-pong aux =
+    /// 2 × 256 KiB, sized to stay L2-resident during the early merge
+    /// passes (§Perf iteration 6 — breadth-first passes streamed the
+    /// whole array through DRAM log2(n/64) times).
+    const SEGMENT: usize = 64 * 1024;
+
+    /// Sort `data` ascending in place. `O(n)` auxiliary memory (one
+    /// ping-pong buffer), `O(n log n)` time. Cache-blocked: segments
+    /// of [`Self::SEGMENT`] elements are fully sorted with in-cache
+    /// merge passes first, then the outer passes merge segments.
+    pub fn sort<T: Lane>(&self, data: &mut [T]) {
+        let n = data.len();
+        if n <= 1 {
+            return;
+        }
+        if n < self.inreg.block_len() {
+            crate::kernels::serial::insertion_sort(data);
+            return;
+        }
+        let mut aux: Vec<T> = vec![T::MIN_VALUE; n];
+        // Phase A: segment-local sort (in-register pass + in-cache
+        // merge passes), each segment independent.
+        for (seg, seg_aux) in data.chunks_mut(Self::SEGMENT).zip(aux.chunks_mut(Self::SEGMENT)) {
+            self.sort_segment(seg, seg_aux);
+        }
+        // Phase B: outer merge passes over whole segments.
+        let mut run = Self::SEGMENT;
+        let mut src_is_data = true;
+        while run < n {
+            {
+                let (src, dst): (&mut [T], &mut [T]) = if src_is_data {
+                    (data, &mut aux[..])
+                } else {
+                    (&mut aux[..], data)
+                };
+                self.merge_pass(src, dst, run);
+            }
+            src_is_data = !src_is_data;
+            run *= 2;
+        }
+        if !src_is_data {
+            data.copy_from_slice(&aux);
+        }
+    }
+
+    /// Fully sort one cache-sized segment using `seg_aux` as the
+    /// ping-pong buffer (result always ends in `seg`).
+    fn sort_segment<T: Lane>(&self, seg: &mut [T], seg_aux: &mut [T]) {
+        let n = seg.len();
+        let mut run = self.inreg.sort_runs(seg);
+        let mut src_is_data = true;
+        while run < n {
+            {
+                let (src, dst): (&mut [T], &mut [T]) = if src_is_data {
+                    (&mut *seg, &mut seg_aux[..n])
+                } else {
+                    (&mut seg_aux[..n], &mut *seg)
+                };
+                self.merge_pass(src, dst, run);
+            }
+            src_is_data = !src_is_data;
+            run *= 2;
+        }
+        if !src_is_data {
+            seg.copy_from_slice(&seg_aux[..n]);
+        }
+    }
+
+    /// One merge pass: merge adjacent run pairs of length `run` from
+    /// `src` into `dst` (the last run may be short / unpaired).
+    fn merge_pass<T: Lane>(&self, src: &[T], dst: &mut [T], run: usize) {
+        let n = src.len();
+        let mut base = 0;
+        while base < n {
+            let mid = (base + run).min(n);
+            let end = (base + 2 * run).min(n);
+            if mid < end {
+                self.merger.merge(&src[base..mid], &src[mid..end], &mut dst[base..end]);
+            } else {
+                dst[base..end].copy_from_slice(&src[base..end]);
+            }
+            base = end;
+        }
+    }
+
+    /// Sort into a fresh vector (convenience for the coordinator).
+    pub fn sorted<T: Lane>(&self, input: &[T]) -> Vec<T> {
+        let mut v = input.to_vec();
+        self.sort(&mut v);
+        v
+    }
+}

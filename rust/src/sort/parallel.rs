@@ -1,0 +1,186 @@
+//! Multi-thread NEON-MS (paper §2.1 third stage + §3.2).
+//!
+//! Phase 1: split the input into `T` contiguous chunks (rounded to the
+//! in-register block so no thread pays a tail penalty except the
+//! last); each thread runs the single-thread NEON-MS on its chunk.
+//!
+//! Phase 2: a merge tree over the `T` sorted runs. At every level,
+//! *every pair-merge is partitioned across all threads* with merge
+//! path ([`crate::mergepath`]): the pair's output is cut into
+//! equal-size segments and all segments of all pairs go into one work
+//! list that threads drain — the paper's load-balancing claim ("each
+//! available thread remains active") rather than one-thread-per-pair.
+//!
+//! Uses `std::thread::scope`; no work-stealing runtime is available
+//! offline, and none is needed — segments are pre-balanced by
+//! construction.
+
+use super::neon_ms::NeonMergeSort;
+use crate::kernels::runmerge::RunMerger;
+use crate::mergepath;
+use crate::simd::Lane;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Parallel NEON-MS sorter.
+#[derive(Clone, Debug)]
+pub struct ParallelNeonMergeSort {
+    single: NeonMergeSort,
+    threads: usize,
+}
+
+/// Sendable raw output window; each segment writes a disjoint range,
+/// so handing threads overlapping `&mut` views is safe by
+/// construction (checked in debug by the mergepath tests).
+struct OutPtr<T>(*mut T);
+unsafe impl<T: Send> Send for OutPtr<T> {}
+unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+impl ParallelNeonMergeSort {
+    /// Build with an explicit thread count (the paper sweeps T; its
+    /// testbed used 64).
+    pub fn new(single: NeonMergeSort, threads: usize) -> Self {
+        assert!(threads >= 1);
+        ParallelNeonMergeSort { single, threads }
+    }
+
+    /// Paper defaults with `threads`.
+    pub fn with_threads(threads: usize) -> Self {
+        ParallelNeonMergeSort::new(NeonMergeSort::paper_default(), threads)
+    }
+
+    /// Thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Sort `data` ascending in place.
+    pub fn sort<T: Lane>(&self, data: &mut [T]) {
+        let n = data.len();
+        let t = self.threads;
+        if t == 1 || n < 4096 {
+            // Parallel overhead dominates below ~4K (the paper sees the
+            // same at small scales in Fig. 5).
+            return self.single.sort(data);
+        }
+        // ---- Phase 1: local sorts on contiguous chunks ----
+        let block = self.single.inregister().block_len();
+        let chunk = (n / t / block).max(1) * block;
+        let mut bounds: Vec<usize> = (0..t).map(|i| (i * chunk).min(n)).collect();
+        bounds.push(n);
+        {
+            let mut rest: &mut [T] = data;
+            let mut slices: Vec<&mut [T]> = Vec::with_capacity(t);
+            let mut prev = 0;
+            for w in bounds.windows(2).skip(0) {
+                let (head, tail) = rest.split_at_mut(w[1] - prev);
+                prev = w[1];
+                rest = tail;
+                slices.push(head);
+            }
+            std::thread::scope(|s| {
+                for sl in slices {
+                    let single = &self.single;
+                    s.spawn(move || single.sort(sl));
+                }
+            });
+        }
+        // ---- Phase 2: cooperative merge tree ----
+        let mut runs: Vec<(usize, usize)> = bounds
+            .windows(2)
+            .map(|w| (w[0], w[1]))
+            .filter(|(a, b)| a < b)
+            .collect();
+        let mut aux: Vec<T> = vec![T::MIN_VALUE; n];
+        let mut src_is_data = true;
+        while runs.len() > 1 {
+            let (src, dst): (&[T], &mut [T]) = if src_is_data {
+                (&*data, &mut aux[..])
+            } else {
+                (&aux[..], data)
+            };
+            runs = self.merge_level(src, dst, &runs);
+            src_is_data = !src_is_data;
+        }
+        if !src_is_data {
+            data.copy_from_slice(&aux);
+        }
+    }
+
+    /// Merge adjacent run pairs from `src` into `dst`, all pairs
+    /// partitioned into one balanced work list drained by all threads.
+    fn merge_level<T: Lane>(
+        &self,
+        src: &[T],
+        dst: &mut [T],
+        runs: &[(usize, usize)],
+    ) -> Vec<(usize, usize)> {
+        let t = self.threads;
+        let total: usize = runs.iter().map(|(a, b)| b - a).sum();
+        // Build the global segment list.
+        struct Task {
+            a_lo: usize,
+            a_hi: usize,
+            b_lo: usize,
+            b_hi: usize,
+            out_lo: usize,
+        }
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut next_runs = Vec::with_capacity(runs.len().div_ceil(2));
+        let mut pair_iter = runs.chunks(2);
+        for pair in &mut pair_iter {
+            match pair {
+                [(a0, a1), (b0, b1)] => {
+                    next_runs.push((*a0, *b1));
+                    let a = &src[*a0..*a1];
+                    let b = &src[*b0..*b1];
+                    // Proportional share of the thread pool, ≥ 1.
+                    let p = ((a.len() + b.len()) * t).div_ceil(total.max(1)).max(1);
+                    for seg in mergepath::partition(a, b, p) {
+                        tasks.push(Task {
+                            a_lo: a0 + seg.a_lo,
+                            a_hi: a0 + seg.a_hi,
+                            b_lo: b0 + seg.b_lo,
+                            b_hi: b0 + seg.b_hi,
+                            out_lo: a0 + seg.out_lo,
+                        });
+                    }
+                }
+                [(a0, a1)] => {
+                    next_runs.push((*a0, *a1));
+                    tasks.push(Task { a_lo: *a0, a_hi: *a1, b_lo: *a1, b_hi: *a1, out_lo: *a0 });
+                }
+                _ => unreachable!(),
+            }
+        }
+        // Drain the work list with an atomic cursor.
+        let cursor = AtomicUsize::new(0);
+        let out = OutPtr(dst.as_mut_ptr());
+        let merger: &RunMerger = self.single.merger();
+        std::thread::scope(|s| {
+            for _ in 0..t.min(tasks.len()) {
+                let cursor = &cursor;
+                let tasks = &tasks;
+                let out = &out;
+                s.spawn(move || loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= tasks.len() {
+                        break;
+                    }
+                    let tk = &tasks[k];
+                    let a = &src[tk.a_lo..tk.a_hi];
+                    let b = &src[tk.b_lo..tk.b_hi];
+                    // SAFETY: segments write disjoint output ranges
+                    // [out_lo, out_lo + a.len() + b.len()).
+                    let dst_seg = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out.0.add(tk.out_lo),
+                            a.len() + b.len(),
+                        )
+                    };
+                    merger.merge(a, b, dst_seg);
+                });
+            }
+        });
+        next_runs
+    }
+}

@@ -1,0 +1,175 @@
+//! Hard-coded best-known sorting networks, n ≤ 16.
+//!
+//! Sources: Knuth TAOCP vol. 3 §5.3.4 and John Gamble's network
+//! generator (paper ref. [5]). Sizes: 0/1/3/5/9/12/16/19 for n = 1..8
+//! (all proven optimal) and 60 for n = 16 (Green's construction, best
+//! known; proven lower bound 55 — hence Table 1's `55~60` range).
+//!
+//! Every table is verified exhaustively by the zero-one principle in
+//! this module's test suite *and* re-verified at construction time in
+//! debug builds; the Python copies in
+//! `python/compile/kernels/networks.py` are cross-checked against the
+//! same principle in `python/tests/test_networks.py`.
+
+use super::network::Comparator;
+
+macro_rules! comps {
+    ($(($i:expr, $j:expr)),* $(,)?) => {
+        vec![$(Comparator::new($i, $j)),*]
+    };
+}
+
+/// Return the best-known comparator list for `n`, if tabulated.
+pub fn table(n: usize) -> Option<Vec<Comparator>> {
+    let comps = match n {
+        1 => vec![],
+        2 => comps![(0, 1)],
+        3 => comps![(1, 2), (0, 2), (0, 1)],
+        4 => comps![(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)],
+        5 => comps![
+            (0, 1),
+            (3, 4),
+            (2, 4),
+            (2, 3),
+            (1, 4),
+            (0, 3),
+            (0, 2),
+            (1, 3),
+            (1, 2)
+        ],
+        6 => comps![
+            (1, 2),
+            (4, 5),
+            (0, 2),
+            (3, 5),
+            (0, 1),
+            (3, 4),
+            (2, 5),
+            (0, 3),
+            (1, 4),
+            (2, 4),
+            (1, 3),
+            (2, 3)
+        ],
+        7 => comps![
+            (1, 2),
+            (3, 4),
+            (5, 6),
+            (0, 2),
+            (3, 5),
+            (4, 6),
+            (0, 1),
+            (4, 5),
+            (2, 6),
+            (0, 4),
+            (1, 5),
+            (0, 3),
+            (2, 5),
+            (1, 3),
+            (2, 4),
+            (2, 3)
+        ],
+        8 => comps![
+            (0, 1),
+            (2, 3),
+            (4, 5),
+            (6, 7),
+            (0, 2),
+            (1, 3),
+            (4, 6),
+            (5, 7),
+            (1, 2),
+            (5, 6),
+            (0, 4),
+            (3, 7),
+            (1, 5),
+            (2, 6),
+            (1, 4),
+            (3, 6),
+            (2, 4),
+            (3, 5),
+            (3, 4)
+        ],
+        // Green's 60-comparator, depth-10 network for 16 inputs —
+        // the paper's "best 16-element sorting network" (16*).
+        16 => comps![
+            // layer 1
+            (0, 1),
+            (2, 3),
+            (4, 5),
+            (6, 7),
+            (8, 9),
+            (10, 11),
+            (12, 13),
+            (14, 15),
+            // layer 2
+            (0, 2),
+            (4, 6),
+            (8, 10),
+            (12, 14),
+            (1, 3),
+            (5, 7),
+            (9, 11),
+            (13, 15),
+            // layer 3
+            (0, 4),
+            (8, 12),
+            (1, 5),
+            (9, 13),
+            (2, 6),
+            (10, 14),
+            (3, 7),
+            (11, 15),
+            // layer 4
+            (0, 8),
+            (1, 9),
+            (2, 10),
+            (3, 11),
+            (4, 12),
+            (5, 13),
+            (6, 14),
+            (7, 15),
+            // layer 5
+            (5, 10),
+            (6, 9),
+            (3, 12),
+            (13, 14),
+            (7, 11),
+            (1, 2),
+            (4, 8),
+            // layer 6
+            (1, 4),
+            (7, 13),
+            (2, 8),
+            (11, 14),
+            (5, 6),
+            (9, 10),
+            // layer 7
+            (2, 4),
+            (11, 13),
+            (3, 8),
+            (7, 12),
+            // layer 8
+            (6, 8),
+            (10, 12),
+            (3, 5),
+            (7, 9),
+            // layer 9
+            (3, 4),
+            (5, 6),
+            (7, 8),
+            (9, 10),
+            (11, 12),
+            // layer 10
+            (6, 7),
+            (8, 9)
+        ],
+        _ => return None,
+    };
+    Some(comps)
+}
+
+/// Sizes with a tabulated best network.
+pub fn tabulated_sizes() -> &'static [usize] {
+    &[1, 2, 3, 4, 5, 6, 7, 8, 16]
+}

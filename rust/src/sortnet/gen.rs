@@ -1,0 +1,180 @@
+//! Network generators: the symmetric families (bitonic, Batcher
+//! odd-even, Bose-Nelson) and the asymmetric `best` family (§2.3).
+
+use super::best_tables;
+use super::network::{Comparator, Network};
+
+fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Full bitonic sorting network (Batcher 1968), `n` a power of two.
+///
+/// Iterative k/j form with *directional* comparators: inside a
+/// descending sub-block the comparator routes min to the higher
+/// address. Comparator count `(n/2)·log(n)·(log(n)+1)/2` — the paper's
+/// Table 1 "Bitonic" column (80 at n=16, 240 at n=32).
+pub fn bitonic_sort(n: usize) -> Network {
+    assert!(is_pow2(n), "bitonic_sort requires power-of-two n, got {n}");
+    let mut comps = Vec::new();
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j > 0 {
+            for i in 0..n {
+                let l = i ^ j;
+                if l > i {
+                    if i & k == 0 {
+                        comps.push(Comparator::new(i, l)); // ascending block
+                    } else {
+                        comps.push(Comparator::new(l, i)); // descending block
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    Network::new(format!("bitonic-{n}"), n, comps)
+}
+
+/// Bitonic *merging* network: sorts any bitonic input of length `n`
+/// (power of two). This is the half-cleaner cascade — `log(n)` layers
+/// of `n/2` comparators each (Fig. 4 of the paper at n=32). Feed it
+/// `ascending ⌢ reverse(ascending)` to merge two sorted runs.
+pub fn bitonic_merge(n: usize) -> Network {
+    assert!(is_pow2(n), "bitonic_merge requires power-of-two n, got {n}");
+    let mut comps = Vec::new();
+    let mut j = n / 2;
+    while j > 0 {
+        for i in 0..n {
+            if i & j == 0 && (i % (2 * j)) < j {
+                comps.push(Comparator::new(i, i + j));
+            }
+        }
+        j /= 2;
+    }
+    Network::new(format!("bitonic-merge-{n}"), n, comps)
+}
+
+/// Batcher odd-even *mergesort* network, `n` a power of two.
+/// Comparator count matches Table 1's "Odd-even" column (63 at n=16,
+/// 191 at n=32).
+pub fn odd_even_sort(n: usize) -> Network {
+    assert!(is_pow2(n), "odd_even_sort requires power-of-two n, got {n}");
+    let mut comps = Vec::new();
+    oe_sort_rec(0, n, &mut comps);
+    Network::new(format!("odd-even-{n}"), n, comps)
+}
+
+fn oe_sort_rec(lo: usize, n: usize, out: &mut Vec<Comparator>) {
+    if n > 1 {
+        let m = n / 2;
+        oe_sort_rec(lo, m, out);
+        oe_sort_rec(lo + m, m, out);
+        oe_merge_rec(lo, n, 1, out);
+    }
+}
+
+fn oe_merge_rec(lo: usize, n: usize, r: usize, out: &mut Vec<Comparator>) {
+    let m = r * 2;
+    if m < n {
+        oe_merge_rec(lo, n, m, out);
+        oe_merge_rec(lo + r, n, m, out);
+        let mut i = lo + r;
+        while i + r < lo + n {
+            out.push(Comparator::new(i, i + r));
+            i += m;
+        }
+    } else {
+        out.push(Comparator::new(lo, lo + r));
+    }
+}
+
+/// Batcher odd-even *merging* network for two sorted halves of an
+/// `n`-channel input (split at `n/2`), `n` a power of two. Used to
+/// build `best(32)` from two `best(16)` sorters (60+60+65 = 185, the
+/// achievable end of Table 1's `135~185` asymmetric range).
+pub fn odd_even_merge(n: usize) -> Network {
+    assert!(is_pow2(n) && n >= 2);
+    let mut comps = Vec::new();
+    oe_merge_rec(0, n, 1, &mut comps);
+    Network::new(format!("odd-even-merge-{n}"), n, comps)
+}
+
+/// Bose-Nelson network (1962), any `n ≥ 1`. Asymmetric, works for odd
+/// sizes; matches the best counts at tiny n (5 at n=4, 19 at n=8) but
+/// falls behind Batcher at n ≥ 16 (65 vs 63). Included as the third
+/// family discussed by ref. [8] ("Engineering faster sorters").
+pub fn bose_nelson(n: usize) -> Network {
+    assert!(n >= 1);
+    let mut comps = Vec::new();
+    bn_split(0, n, &mut comps);
+    Network::new(format!("bose-nelson-{n}"), n, comps)
+}
+
+fn bn_split(lo: usize, n: usize, out: &mut Vec<Comparator>) {
+    if n > 1 {
+        let m = n / 2;
+        bn_split(lo, m, out);
+        bn_split(lo + m, n - m, out);
+        bn_merge(lo, m, lo + m, n - m, out);
+    }
+}
+
+fn bn_merge(lo1: usize, n1: usize, lo2: usize, n2: usize, out: &mut Vec<Comparator>) {
+    if n1 == 1 && n2 == 1 {
+        out.push(Comparator::new(lo1, lo2));
+    } else if n1 == 1 && n2 == 2 {
+        out.push(Comparator::new(lo1, lo2 + 1));
+        out.push(Comparator::new(lo1, lo2));
+    } else if n1 == 2 && n2 == 1 {
+        out.push(Comparator::new(lo1, lo2));
+        out.push(Comparator::new(lo1 + 1, lo2));
+    } else {
+        let m1 = n1 / 2;
+        // Bose-Nelson pairing: split so the odd halves line up.
+        let m2 = if n1 % 2 == 1 { n2 / 2 } else { (n2 + 1) / 2 };
+        bn_merge(lo1, m1, lo2, m2, out);
+        bn_merge(lo1 + m1, n1 - m1, lo2 + m2, n2 - m2, out);
+        bn_merge(lo1 + m1, n1 - m1, lo2, m2, out);
+    }
+}
+
+/// The asymmetric **best-known** sorting network for `n` channels —
+/// the paper's §2.3 choice for column sort:
+///
+/// * `n ≤ 16`: hand-verified optimal/best-known tables
+///   ([Gamble's generator][g], Knuth TAOCP §5.3.4) — 60 comparators at
+///   `n = 16` vs 63 (odd-even) / 80 (bitonic).
+/// * `n = 32`: constructed as two `best(16)` + Batcher 32-merge = 185,
+///   the best-known count when the paper was written (Table 1 upper
+///   bound of the `135~185` range; 135 is the proven lower bound).
+/// * other `n`: falls back to [`bose_nelson`] (still asymmetric and
+///   valid, just not best-known).
+///
+/// [g]: http://pages.ripco.net/~jgamble/nw.html
+pub fn best(n: usize) -> Network {
+    if let Some(comps) = best_tables::table(n) {
+        return Network::new(format!("best-{n}"), n, comps);
+    }
+    if n == 32 {
+        let half = best(16);
+        return half
+            .offset(0, 32)
+            .then(&half.offset(16, 32))
+            .then(&odd_even_merge(32));
+    }
+    bose_nelson(n)
+}
+
+/// Sizes for which [`best`] has a hand-verified table (re-exported
+/// from the table module for sweeps).
+pub fn tabulated_best_sizes() -> &'static [usize] {
+    best_tables::tabulated_sizes()
+}
+
+/// All three Table 1 families for one input size.
+pub fn table1_families(n: usize) -> [Network; 3] {
+    [bitonic_sort(n), odd_even_sort(n), best(n)]
+}

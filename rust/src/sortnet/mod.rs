@@ -1,0 +1,35 @@
+//! Sorting & merging networks (paper §2.3, Table 1).
+//!
+//! A network is a fixed sequence of two-element comparators. NEON-MS
+//! uses networks in two roles:
+//!
+//! * **Column sort** — one comparator per *register pair*, executed
+//!   lane-wise as `vmin`+`vmax` ([`Network::apply_columns`]). Because
+//!   each comparator costs exactly two vector ops regardless of the
+//!   network's structural regularity, the *asymmetric* best-known
+//!   networks (fewest comparators) win here — the paper's key §2.3
+//!   observation. Symmetric bitonic/odd-even structure buys nothing.
+//! * **Merging** — bitonic and odd-even *merging* networks combine two
+//!   sorted runs; these feed the vectorized and hybrid mergers in
+//!   [`crate::kernels`] and the cost model in [`crate::regmachine`].
+//!
+//! Families provided (Table 1 columns):
+//!
+//! | family | generator | n=4 | n=8 | n=16 | n=32 |
+//! |---|---|---|---|---|---|
+//! | bitonic | [`gen::bitonic_sort`] | 6 | 24 | 80 | 240 |
+//! | odd-even (Batcher) | [`gen::odd_even_sort`] | 5 | 19 | 63 | 191 |
+//! | asymmetric best | [`gen::best`] | 5 | 19 | 60 | 185 |
+//!
+//! Every constructor is checked by the zero-one-principle verifier
+//! ([`Network::verify_zero_one`], exhaustive over all `2^n` patterns).
+
+mod network;
+pub mod gen;
+mod best_tables;
+mod verify;
+
+pub use network::{Comparator, Network};
+
+#[cfg(test)]
+mod tests;

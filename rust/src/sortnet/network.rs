@@ -1,0 +1,185 @@
+//! Network representation, application, and structural statistics.
+
+use crate::simd::{Lane, V128};
+
+/// One compare-exchange: after execution, position `i` holds the
+/// minimum and position `j` the maximum of the pair.
+///
+/// `i` and `j` are *positions*, not ordered indices — directional
+/// comparators (min to the higher address) are expressed as `i > j`,
+/// which the bitonic generator uses for its descending half.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Comparator {
+    /// Receives the minimum.
+    pub i: u16,
+    /// Receives the maximum.
+    pub j: u16,
+}
+
+impl Comparator {
+    /// Construct a comparator routing min→`i`, max→`j`.
+    pub fn new(i: usize, j: usize) -> Self {
+        debug_assert_ne!(i, j);
+        Comparator { i: i as u16, j: j as u16 }
+    }
+}
+
+/// A comparator network over `n` channels.
+#[derive(Clone, Debug)]
+pub struct Network {
+    n: usize,
+    comps: Vec<Comparator>,
+    name: String,
+}
+
+impl Network {
+    /// Build from an explicit comparator list.
+    pub fn new(name: impl Into<String>, n: usize, comps: Vec<Comparator>) -> Self {
+        let name = name.into();
+        for c in &comps {
+            assert!(
+                (c.i as usize) < n && (c.j as usize) < n,
+                "{name}: comparator ({}, {}) out of range for n={n}",
+                c.i,
+                c.j
+            );
+        }
+        Network { n, comps, name }
+    }
+
+    /// Number of input channels.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Human-readable family name (e.g. `"best-16"`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The comparator sequence.
+    pub fn comparators(&self) -> &[Comparator] {
+        &self.comps
+    }
+
+    /// Comparator count — the paper's Table 1 efficiency metric.
+    pub fn size(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Critical-path depth: minimum number of parallel layers when
+    /// comparators touching disjoint channels execute together.
+    /// Greedy ASAP layering (optimal for a fixed sequence).
+    pub fn depth(&self) -> usize {
+        let mut ready = vec![0usize; self.n];
+        let mut depth = 0;
+        for c in &self.comps {
+            let at = ready[c.i as usize].max(ready[c.j as usize]) + 1;
+            ready[c.i as usize] = at;
+            ready[c.j as usize] = at;
+            depth = depth.max(at);
+        }
+        depth
+    }
+
+    /// Group comparators into ASAP parallel layers. Within one layer no
+    /// channel is touched twice, so a vector engine (or the regmachine
+    /// cost model) may execute the whole layer concurrently.
+    pub fn layers(&self) -> Vec<Vec<Comparator>> {
+        let mut ready = vec![0usize; self.n];
+        let mut out: Vec<Vec<Comparator>> = Vec::new();
+        for &c in &self.comps {
+            let at = ready[c.i as usize].max(ready[c.j as usize]);
+            ready[c.i as usize] = at + 1;
+            ready[c.j as usize] = at + 1;
+            if out.len() <= at {
+                out.resize_with(at + 1, Vec::new);
+            }
+            out[at].push(c);
+        }
+        out
+    }
+
+    /// Run the network on a scalar slice (`data.len() == n`). This is
+    /// the paper's Fig. 3b comparator: branchless min/max, compiled to
+    /// `cmov`-class code — used by the serial half of the hybrid merger
+    /// and as the oracle for column application.
+    #[inline]
+    pub fn apply_slice<T: Lane>(&self, data: &mut [T]) {
+        assert_eq!(data.len(), self.n, "{}: slice length mismatch", self.name);
+        for c in &self.comps {
+            let (a, b) = (data[c.i as usize], data[c.j as usize]);
+            data[c.i as usize] = a.lane_min(b);
+            data[c.j as usize] = a.lane_max(b);
+        }
+    }
+
+    /// Run the network *column-wise* over a register file: comparator
+    /// `(i, j)` becomes a single vector `cmpswap` between registers `i`
+    /// and `j`, sorting all `W` columns simultaneously (paper §2.3).
+    #[inline]
+    pub fn apply_columns<T: Lane>(&self, regs: &mut [V128<T>]) {
+        assert_eq!(regs.len(), self.n, "{}: register count mismatch", self.name);
+        for c in &self.comps {
+            let (lo, hi) = regs[c.i as usize].cmpswap(regs[c.j as usize]);
+            regs[c.i as usize] = lo;
+            regs[c.j as usize] = hi;
+        }
+    }
+
+    /// Concatenate: run `self`, then `other` (same channel count).
+    pub fn then(mut self, other: &Network) -> Network {
+        assert_eq!(self.n, other.n);
+        self.comps.extend_from_slice(&other.comps);
+        self.name = format!("{}+{}", self.name, other.name);
+        self
+    }
+
+    /// Embed this network at channel offset `off` within a wider
+    /// `n_total`-channel network (used to build sorters from parts,
+    /// e.g. best-32 = two offset best-16 sorters + an odd-even merge).
+    pub fn offset(&self, off: usize, n_total: usize) -> Network {
+        assert!(off + self.n <= n_total);
+        let comps = self
+            .comps
+            .iter()
+            .map(|c| Comparator::new(c.i as usize + off, c.j as usize + off))
+            .collect();
+        Network::new(format!("{}@{}", self.name, off), n_total, comps)
+    }
+
+    /// Verify by the zero-one principle (exhaustive over `2^n` binary
+    /// inputs; `n ≤ 26` guard). Returns `true` iff the network sorts
+    /// every input.
+    pub fn verify_zero_one(&self) -> bool {
+        super::verify::verify_zero_one(self)
+    }
+
+    /// Check this network *merges*: sorts every input consisting of two
+    /// already-sorted halves `[0, split)` and `[split, n)`. Exhaustive
+    /// over zero-one inputs with both halves sorted — `(split+1) *
+    /// (n-split+1)` cases, so cheap even for large n.
+    pub fn verify_merge(&self, split: usize) -> bool {
+        super::verify::verify_merge(self, split)
+    }
+
+    /// Check this network sorts every *bitonic* zero-one input
+    /// (ascending then descending rotations thereof are not required —
+    /// the kernels only feed asc⌢desc concatenations).
+    pub fn verify_bitonic_merge(&self) -> bool {
+        super::verify::verify_bitonic(self)
+    }
+}
+
+impl core::fmt::Display for Network {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(
+            f,
+            "{} (n={}, {} comparators, depth {})",
+            self.name,
+            self.n,
+            self.size(),
+            self.depth()
+        )
+    }
+}

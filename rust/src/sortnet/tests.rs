@@ -1,0 +1,219 @@
+use super::gen;
+use super::network::{Comparator, Network};
+use crate::simd::V128;
+use crate::testutil::{forall, Rng};
+
+#[test]
+fn bitonic_sort_counts_match_table1() {
+    // Paper Table 1, "Bitonic" column.
+    assert_eq!(gen::bitonic_sort(4).size(), 6);
+    assert_eq!(gen::bitonic_sort(8).size(), 24);
+    assert_eq!(gen::bitonic_sort(16).size(), 80);
+    assert_eq!(gen::bitonic_sort(32).size(), 240);
+}
+
+#[test]
+fn odd_even_counts_match_table1() {
+    // Paper Table 1, "Odd-even" column.
+    assert_eq!(gen::odd_even_sort(4).size(), 5);
+    assert_eq!(gen::odd_even_sort(8).size(), 19);
+    assert_eq!(gen::odd_even_sort(16).size(), 63);
+    assert_eq!(gen::odd_even_sort(32).size(), 191);
+}
+
+#[test]
+fn best_counts_match_table1_asymmetric_column() {
+    // Paper Table 1, "Asymmetric Network" column: 5, 19, 55~60, 135~185.
+    assert_eq!(gen::best(4).size(), 5);
+    assert_eq!(gen::best(8).size(), 19);
+    let b16 = gen::best(16).size();
+    assert!((55..=60).contains(&b16), "best-16 = {b16}");
+    let b32 = gen::best(32).size();
+    assert!((135..=185).contains(&b32), "best-32 = {b32}");
+}
+
+#[test]
+fn best_16_is_greens_60() {
+    let n = gen::best(16);
+    assert_eq!(n.size(), 60);
+    assert_eq!(n.depth(), 10, "Green's network has depth 10");
+}
+
+#[test]
+fn tabulated_best_sizes_all_verify() {
+    for &n in crate::sortnet::gen::tabulated_best_sizes() {
+        assert!(gen::best(n).verify_zero_one(), "tabulated best-{n}");
+    }
+}
+
+#[test]
+fn all_sorters_pass_zero_one() {
+    for n in [2usize, 4, 8, 16] {
+        assert!(gen::bitonic_sort(n).verify_zero_one(), "bitonic-{n}");
+        assert!(gen::odd_even_sort(n).verify_zero_one(), "odd-even-{n}");
+    }
+    for n in 1..=16usize {
+        assert!(gen::best(n).verify_zero_one(), "best-{n}");
+        assert!(gen::bose_nelson(n).verify_zero_one(), "bose-nelson-{n}");
+    }
+}
+
+#[test]
+#[ignore = "2^32-free but still ~30s in debug; run with --ignored"]
+fn large_sorters_pass_zero_one() {
+    assert!(gen::bitonic_sort(32).verify_zero_one(), "bitonic-32");
+}
+
+#[test]
+fn best_32_sorts_zero_one_subsampled() {
+    // Full 2^32 enumeration is infeasible; best-32 is built from two
+    // verified best-16 sorters + a verified odd-even merge, so check
+    // the merge property + random inputs instead.
+    let n = gen::best(32);
+    assert_eq!(n.size(), 185);
+    let oe = gen::odd_even_merge(32);
+    assert!(oe.verify_merge(16), "odd-even-merge-32 merges 16+16");
+    forall(200, |rng: &mut Rng| {
+        let mut data: Vec<u32> = (0..32).map(|_| rng.next_u32() % 64).collect();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        n.apply_slice(&mut data);
+        assert_eq!(data, expect);
+    });
+}
+
+#[test]
+fn merging_networks_verify() {
+    for n in [2usize, 4, 8, 16, 32] {
+        assert!(gen::odd_even_merge(n).verify_merge(n / 2), "oe-merge-{n}");
+        assert!(gen::bitonic_merge(n).verify_bitonic_merge(), "bitonic-merge-{n}");
+    }
+}
+
+#[test]
+fn bitonic_merge_structure() {
+    // log(n) layers of n/2 comparators each (Fig. 4 at n=32).
+    for n in [4usize, 8, 16, 32] {
+        let m = gen::bitonic_merge(n);
+        let lg = n.trailing_zeros() as usize;
+        assert_eq!(m.size(), lg * n / 2);
+        assert_eq!(m.depth(), lg);
+        assert_eq!(m.layers().len(), lg);
+        for layer in m.layers() {
+            assert_eq!(layer.len(), n / 2, "each half-cleaner layer is n/2 wide");
+        }
+    }
+}
+
+#[test]
+fn bitonic_merge_merges_reversed_second_run() {
+    forall(300, |rng: &mut Rng| {
+        let k = [2usize, 4, 8, 16][rng.below(4)];
+        let mut a: Vec<i32> = (0..k).map(|_| rng.next_i32() % 1000).collect();
+        let mut b: Vec<i32> = (0..k).map(|_| rng.next_i32() % 1000).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        let mut input = a.clone();
+        input.extend(b.iter().rev()); // asc ⌢ desc = bitonic
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        gen::bitonic_merge(2 * k).apply_slice(&mut input);
+        assert_eq!(input, expect);
+    });
+}
+
+#[test]
+fn apply_columns_sorts_each_lane() {
+    // Column application over V128s sorts all four lanes independently
+    // — property checked against the scalar oracle for every family.
+    forall(200, |rng: &mut Rng| {
+        let r = [4usize, 8, 16][rng.below(3)];
+        let net = gen::best(r);
+        let mut regs: Vec<V128<i32>> = (0..r)
+            .map(|_| {
+                V128([
+                    rng.next_i32() % 100,
+                    rng.next_i32() % 100,
+                    rng.next_i32() % 100,
+                    rng.next_i32() % 100,
+                ])
+            })
+            .collect();
+        let mut lanes: Vec<Vec<i32>> =
+            (0..4).map(|l| regs.iter().map(|v| v.lane(l)).collect()).collect();
+        net.apply_columns(&mut regs);
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            lane.sort_unstable();
+            let got: Vec<i32> = regs.iter().map(|v| v.lane(l)).collect();
+            assert_eq!(&got, lane, "lane {l} sorted");
+        }
+    });
+}
+
+#[test]
+fn depth_and_layers_agree() {
+    for net in [gen::bitonic_sort(16), gen::odd_even_sort(16), gen::best(16)] {
+        assert_eq!(net.depth(), net.layers().len(), "{}", net.name());
+        let total: usize = net.layers().iter().map(|l| l.len()).sum();
+        assert_eq!(total, net.size());
+        // No channel touched twice within a layer.
+        for layer in net.layers() {
+            let mut seen = std::collections::HashSet::new();
+            for c in layer {
+                assert!(seen.insert(c.i), "channel {} reused in layer", c.i);
+                assert!(seen.insert(c.j), "channel {} reused in layer", c.j);
+            }
+        }
+    }
+}
+
+#[test]
+fn offset_and_then_compose() {
+    let b8 = gen::best(8);
+    let two = b8.offset(0, 16).then(&b8.offset(8, 16)).then(&gen::odd_even_merge(16));
+    assert!(two.verify_zero_one(), "composed 8+8 sorter");
+    assert_eq!(two.size(), 19 + 19 + gen::odd_even_merge(16).size());
+}
+
+#[test]
+fn apply_slice_sorts_random_inputs_all_families() {
+    forall(300, |rng: &mut Rng| {
+        let n = [4usize, 8, 16][rng.below(3)];
+        let nets = gen::table1_families(n);
+        let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for net in &nets {
+            let mut d = data.clone();
+            net.apply_slice(&mut d);
+            assert_eq!(d, expect, "{}", net.name());
+        }
+    });
+}
+
+#[test]
+fn apply_slice_f32() {
+    let net = gen::best(8);
+    let mut d = [3.5f32, -1.0, 0.0, 7.25, -6.5, 2.0, 2.0, -0.5];
+    net.apply_slice(&mut d);
+    assert_eq!(d, [-6.5, -1.0, -0.5, 0.0, 2.0, 2.0, 3.5, 7.25]);
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn network_rejects_out_of_range_comparator() {
+    Network::new("bad", 4, vec![Comparator::new(0, 4)]);
+}
+
+#[test]
+#[should_panic(expected = "length mismatch")]
+fn apply_slice_rejects_wrong_length() {
+    gen::best(8).apply_slice(&mut [1u32, 2, 3]);
+}
+
+#[test]
+fn bose_nelson_any_n_sorts() {
+    for n in 1..=12usize {
+        assert!(gen::bose_nelson(n).verify_zero_one(), "bose-nelson-{n}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Zero-one-principle verification.
+//!
+//! Knuth (TAOCP §5.3.4): a comparator network sorts all inputs iff it
+//! sorts all binary inputs. We verify exhaustively over `2^n` bit
+//! patterns, propagating each pattern through the network with bitwise
+//! min/max on 0/1 values packed as `u8`s. This is the ground truth for
+//! every network constructor in this crate (and for the Python side's
+//! copies of the same tables, tested in `python/tests`).
+
+use super::network::Network;
+
+const MAX_EXHAUSTIVE_N: usize = 26;
+
+fn sorts_pattern(net: &Network, pattern: u32) -> bool {
+    let n = net.n();
+    let mut v = [0u8; 64];
+    for (b, slot) in v.iter_mut().enumerate().take(n) {
+        *slot = ((pattern >> b) & 1) as u8;
+    }
+    for c in net.comparators() {
+        let (i, j) = (c.i as usize, c.j as usize);
+        let (a, b) = (v[i], v[j]);
+        v[i] = a.min(b);
+        v[j] = a.max(b);
+    }
+    v[..n].windows(2).all(|w| w[0] <= w[1])
+}
+
+/// Exhaustive zero-one check over all `2^n` binary inputs.
+pub fn verify_zero_one(net: &Network) -> bool {
+    let n = net.n();
+    assert!(n <= MAX_EXHAUSTIVE_N, "n={n} too large for exhaustive zero-one check");
+    (0u32..(1u32 << n)).all(|p| sorts_pattern(net, p))
+}
+
+/// Check the network sorts every binary input whose halves
+/// `[0, split)` and `[split, n)` are individually sorted (i.e. it is a
+/// valid *merging* network for that split). A sorted binary sequence of
+/// length k is `0^(k-z) 1^z`, so there are only `(split+1)·(n-split+1)`
+/// cases.
+pub fn verify_merge(net: &Network, split: usize) -> bool {
+    let n = net.n();
+    assert!(split <= n);
+    let lo_len = split;
+    let hi_len = n - split;
+    for z_lo in 0..=lo_len {
+        for z_hi in 0..=hi_len {
+            // 0^(lo_len-z_lo) 1^z_lo ++ 0^(hi_len-z_hi) 1^z_hi
+            let mut pattern: u32 = 0;
+            for b in (lo_len - z_lo)..lo_len {
+                pattern |= 1 << b;
+            }
+            for b in (lo_len + hi_len - z_hi)..n {
+                pattern |= 1 << b;
+            }
+            if !sorts_pattern(net, pattern) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Check the network sorts every *bitonic* binary input of the
+/// asc⌢desc form `0^a 1^b 0^c` — the shape produced by reversing the
+/// second of two sorted runs (how all our kernels feed bitonic
+/// mergers).
+pub fn verify_bitonic(net: &Network) -> bool {
+    let n = net.n();
+    for ones_start in 0..=n {
+        for ones_end in ones_start..=n {
+            let mut pattern: u32 = 0;
+            for b in ones_start..ones_end {
+                pattern |= 1 << b;
+            }
+            if !sorts_pattern(net, pattern) {
+                return false;
+            }
+        }
+    }
+    true
+}

@@ -1,0 +1,201 @@
+//! Minimal property-testing and deterministic-random substrate.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`/`rand`, so we
+//! provide our own: a fast splitmix/xorshift-style PRNG with fixed
+//! seeding (tests are reproducible by construction) and a [`forall`]
+//! runner that executes a property over many generated cases. Workload
+//! generators for benches live in [`crate::bench::workloads`] and
+//! build on the same [`Rng`].
+
+/// SplitMix64-seeded xorshift128+ PRNG. Deterministic, fast, and good
+/// enough for test-case generation and benchmark workloads (not
+/// cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s0: u64,
+    s1: u64,
+}
+
+impl Rng {
+    /// Create from a seed; equal seeds give equal streams.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to expand the seed into two non-zero words.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s0 = next();
+        let mut s1 = next();
+        if s0 == 0 && s1 == 0 {
+            s1 = 1;
+        }
+        Rng { s0, s1 }
+    }
+
+    /// Next raw 64-bit value (xorshift128+).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    /// Next 32-bit value.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Next signed 32-bit value.
+    #[inline]
+    pub fn next_i32(&mut self) -> i32 {
+        self.next_u32() as i32
+    }
+
+    /// Next `f32` uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform index in `[0, bound)`. `bound` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform value in `[lo, hi)`.
+    #[inline]
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo < hi);
+        lo + (self.next_u64() % (hi - lo) as u64) as u32
+    }
+
+    /// A vector of `len` uniform `u32`s.
+    pub fn vec_u32(&mut self, len: usize) -> Vec<u32> {
+        (0..len).map(|_| self.next_u32()).collect()
+    }
+
+    /// A vector of `len` uniform `i32`s.
+    pub fn vec_i32(&mut self, len: usize) -> Vec<i32> {
+        (0..len).map(|_| self.next_i32()).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, data: &mut [T]) {
+        for i in (1..data.len()).rev() {
+            data.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated cases with a per-case seeded RNG.
+/// Failures are reproducible: case `k` uses `Rng::new(0xC0FFEE ^ k)`.
+pub fn forall(cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for k in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ k as u64);
+        prop(&mut rng);
+    }
+}
+
+/// Like [`forall`] but the property receives the case index too —
+/// handy for size ramps (`len = k`).
+pub fn forall_indexed(cases: usize, mut prop: impl FnMut(usize, &mut Rng)) {
+    for k in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ k as u64);
+        prop(k, &mut rng);
+    }
+}
+
+/// Assert a slice is sorted (non-decreasing), with a useful message.
+pub fn assert_sorted<T: PartialOrd + core::fmt::Debug>(data: &[T], ctx: &str) {
+    for w in 0..data.len().saturating_sub(1) {
+        assert!(
+            data[w] <= data[w + 1],
+            "{ctx}: not sorted at {w}: {:?} > {:?}",
+            data[w],
+            data[w + 1]
+        );
+    }
+}
+
+/// Assert `got` is a permutation of `want` (multiset equality) — the
+/// "no element lost or invented" half of sorting correctness.
+pub fn assert_permutation(got: &[u32], want: &[u32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length changed");
+    let mut a = got.to_vec();
+    let mut b = want.to_vec();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "{ctx}: multiset differs");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_streams_differ_by_seed() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(10) < 10);
+            let v = rng.range_u32(5, 8);
+            assert!((5..8).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_f32_in_unit_interval() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let f = rng.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        assert_permutation(&v, &(0..100).collect::<Vec<_>>(), "shuffle");
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle moved something");
+    }
+
+    #[test]
+    #[should_panic(expected = "not sorted")]
+    fn assert_sorted_catches() {
+        assert_sorted(&[1, 3, 2], "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiset differs")]
+    fn assert_permutation_catches() {
+        assert_permutation(&[1, 2, 2], &[1, 2, 3], "t");
+    }
+}

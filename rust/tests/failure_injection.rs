@@ -1,0 +1,140 @@
+//! Failure-injection and robustness tests: wrong inputs, hostile
+//! configurations, overload, and resource boundaries — the service
+//! must degrade predictably, never corrupt data.
+
+use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::runtime::ArtifactRegistry;
+use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use neonms::testutil::{assert_sorted, Rng};
+
+#[test]
+fn registry_tolerates_garbage_artifacts() {
+    let dir = std::env::temp_dir().join(format!("neonms_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Well-named but corrupt file: scanning succeeds, compiling fails.
+    std::fs::write(dir.join("block_sort_int32_1024.hlo.txt"), "not hlo at all").unwrap();
+    let reg = ArtifactRegistry::scan(&dir);
+    assert_eq!(reg.len(), 1);
+    // Service startup must surface the failure as Err, not panic/hang.
+    let cfg = CoordinatorConfig { xla_cutoff: Some(1024), ..Default::default() };
+    let res = SortService::start(cfg, Some(dir.clone()));
+    assert!(res.is_err(), "corrupt artifact must fail startup explicitly");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn service_without_artifacts_dir_still_serves() {
+    let cfg = CoordinatorConfig { xla_cutoff: Some(1024), ..Default::default() };
+    let svc = SortService::start(cfg, Some("/definitely/not/here".into())).unwrap();
+    assert!(!svc.xla_enabled(), "missing dir disables offload silently");
+    let h = svc.submit(vec![3, 1, 2]);
+    assert_eq!(h.wait().unwrap(), vec![1, 2, 3]);
+    svc.shutdown();
+}
+
+#[test]
+fn overload_queue_never_exceeds_capacity() {
+    let cfg = CoordinatorConfig { workers: 0, queue_capacity: 8, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut accepted = 0;
+    for _ in 0..100 {
+        if svc.try_submit(vec![1, 2]).is_ok() {
+            accepted += 1;
+        }
+    }
+    assert_eq!(accepted, 8, "capacity is a hard bound");
+    assert_eq!(svc.metrics().rejected, 92);
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let svc = std::sync::Arc::new(SortService::start_default().unwrap());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let svc = std::sync::Arc::clone(&svc);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..25 {
+                let len = rng.below(3000);
+                let data = rng.vec_u32(len);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(svc.submit(data).wait().unwrap(), expect);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.submitted, 100);
+    assert_eq!(m.completed, 100);
+    std::sync::Arc::into_inner(svc).unwrap().shutdown();
+}
+
+#[test]
+fn dropped_handle_does_not_wedge_workers() {
+    let svc = SortService::start_default().unwrap();
+    for _ in 0..16 {
+        let _ = svc.submit(vec![5, 4, 3, 2, 1]); // handle dropped immediately
+    }
+    // Service stays healthy for a live request afterwards.
+    let h = svc.submit(vec![9, 8, 7]);
+    assert_eq!(h.wait().unwrap(), vec![7, 8, 9]);
+    svc.shutdown();
+}
+
+#[test]
+fn parallel_sort_with_more_threads_than_data() {
+    let mut rng = Rng::new(3);
+    let data = rng.vec_u32(5000);
+    let mut v = data.clone();
+    ParallelNeonMergeSort::with_threads(64).sort(&mut v);
+    assert_sorted(&v, "T=64 over 5000 elements");
+}
+
+#[test]
+fn extreme_values_and_degenerate_distributions() {
+    let s = NeonMergeSort::paper_default();
+    let cases: Vec<Vec<u32>> = vec![
+        vec![u32::MAX; 1000],
+        vec![0; 1000],
+        (0..1000).map(|i| if i % 2 == 0 { 0 } else { u32::MAX }).collect(),
+        vec![u32::MAX, 0, u32::MAX, 0, 1, u32::MAX - 1],
+    ];
+    for data in cases {
+        let mut v = data.clone();
+        let mut expect = data;
+        expect.sort_unstable();
+        s.sort(&mut v);
+        assert_eq!(v, expect);
+    }
+}
+
+#[test]
+fn f32_infinities_sort_to_the_ends() {
+    let s = NeonMergeSort::paper_default();
+    let mut v = vec![1.0f32, f32::NEG_INFINITY, 0.0, f32::INFINITY, -2.5, 1e38, -1e38];
+    // Pad to a vector-friendly length with finite values.
+    v.extend((0..57).map(|i| i as f32));
+    let mut expect = v.clone();
+    expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort(&mut v);
+    assert_eq!(v, expect);
+}
+
+#[test]
+fn shutdown_under_load_completes_everything_accepted() {
+    let svc = SortService::start(
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let mut rng = Rng::new(4);
+    let handles: Vec<_> = (0..40).map(|_| svc.submit(rng.vec_u32(10_000))).collect();
+    svc.shutdown(); // races the queue drain deliberately
+    for h in handles {
+        assert_sorted(&h.wait().unwrap(), "post-shutdown completion");
+    }
+}

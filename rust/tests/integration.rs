@@ -1,0 +1,187 @@
+//! Cross-module integration tests: the public API exercised the way
+//! the examples and the coordinator use it, including the XLA runtime
+//! path when artifacts are present.
+
+use neonms::baselines::{blocksort, introsort};
+use neonms::bench::Workload;
+use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::kernels::inregister::InRegisterSorter;
+use neonms::kernels::runmerge::RunMerger;
+use neonms::runtime::ArtifactRegistry;
+use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use neonms::sortnet::gen;
+use neonms::testutil::{assert_permutation, assert_sorted, Rng};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn all_sorters_agree_across_workloads_and_sizes() {
+    let neon = NeonMergeSort::paper_default();
+    let par = ParallelNeonMergeSort::with_threads(3);
+    for w in Workload::all() {
+        for n in [0usize, 1, 63, 64, 65, 1000, 65_536, 200_000] {
+            let data = w.generate(n, 1234);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            let mut a = data.clone();
+            neon.sort(&mut a);
+            assert_eq!(a, expect, "neon-ms {} n={n}", w.name());
+            let mut b = data.clone();
+            par.sort(&mut b);
+            assert_eq!(b, expect, "parallel {} n={n}", w.name());
+            let mut c = data.clone();
+            introsort::sort(&mut c);
+            assert_eq!(c, expect, "introsort {} n={n}", w.name());
+            let mut d = data.clone();
+            blocksort::sort(&mut d);
+            assert_eq!(d, expect, "blocksort {} n={n}", w.name());
+        }
+    }
+}
+
+#[test]
+fn sort_pipeline_composes_from_kernels() {
+    // Manually chain the three stages the full sort uses and verify
+    // against the integrated path — catches stage-contract drift.
+    let mut rng = Rng::new(9);
+    let data = rng.vec_u32(64 * 37); // multiple of 64
+    let inreg = InRegisterSorter::paper_default();
+    let merger = RunMerger::paper_default();
+
+    let mut manual = data.clone();
+    let mut run = inreg.sort_runs(&mut manual);
+    let n = manual.len();
+    let mut aux = vec![0u32; n];
+    let mut in_data = true;
+    while run < n {
+        {
+            let (src, dst): (&[u32], &mut [u32]) =
+                if in_data { (&manual, &mut aux) } else { (&aux, &mut manual) };
+            let mut base = 0;
+            while base < n {
+                let mid = (base + run).min(n);
+                let end = (base + 2 * run).min(n);
+                if mid < end {
+                    merger.merge(&src[base..mid], &src[mid..end], &mut dst[base..end]);
+                } else {
+                    dst[base..end].copy_from_slice(&src[base..end]);
+                }
+                base = end;
+            }
+        }
+        in_data = !in_data;
+        run *= 2;
+    }
+    if !in_data {
+        manual.copy_from_slice(&aux);
+    }
+
+    let mut integrated = data.clone();
+    NeonMergeSort::paper_default().sort(&mut integrated);
+    assert_eq!(manual, integrated);
+}
+
+#[test]
+fn network_library_feeds_kernels_consistently() {
+    // The in-register sorter must use exactly the advertised network.
+    let s = InRegisterSorter::paper_default();
+    assert_eq!(s.network().size(), gen::best(16).size());
+    assert_eq!(s.network().size(), 60);
+    // And the network itself is valid.
+    assert!(s.network().verify_zero_one());
+}
+
+#[test]
+fn service_over_every_route_returns_oracle_results() {
+    let reg = ArtifactRegistry::scan(artifacts_dir());
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        tiny_cutoff: 64,
+        parallel_cutoff: 1 << 20,
+        xla_cutoff: (!reg.is_empty()).then_some(4096),
+        ..Default::default()
+    };
+    let svc =
+        SortService::start(cfg, (!reg.is_empty()).then(artifacts_dir)).expect("service");
+    let mut rng = Rng::new(5);
+    let mut cases = Vec::new();
+    for len in [5usize, 100, 5000, 8192, 1 << 20] {
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        cases.push((svc.submit(data), expect));
+    }
+    for (h, expect) in cases {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 5);
+    assert!(m.route_tiny >= 1 && m.route_single >= 1 && m.route_parallel >= 1);
+    if svc.xla_enabled() {
+        assert!(m.route_xla >= 1, "xla route not exercised");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn xla_block_sort_matches_native_sort() {
+    let reg = ArtifactRegistry::scan(artifacts_dir());
+    if reg.is_empty() {
+        eprintln!("SKIP: run `make artifacts` for the XLA integration test");
+        return;
+    }
+    use neonms::runtime::{BlockSorter, PjrtRuntime};
+    let rt = std::sync::Arc::new(PjrtRuntime::cpu().unwrap());
+    let bs = BlockSorter::new(rt, &reg).unwrap();
+    let mut rng = Rng::new(6);
+    let data: Vec<i32> = (0..10_000).map(|_| rng.next_i32()).collect();
+    let mut via_xla = data.clone();
+    bs.sort_i32(&mut via_xla).unwrap();
+    let mut via_native = data
+        .iter()
+        .map(|&x| (x as i64 + i32::MAX as i64 + 1) as u32)
+        .collect::<Vec<u32>>();
+    NeonMergeSort::paper_default().sort(&mut via_native);
+    let via_native: Vec<i32> =
+        via_native.iter().map(|&x| (x as i64 - i32::MAX as i64 - 1) as i32).collect();
+    assert_eq!(via_xla, via_native, "XLA path and native path disagree");
+}
+
+#[test]
+fn mergepath_partition_drives_parallel_merge_correctly() {
+    // The exact composition the parallel sorter performs, done by hand.
+    let mut rng = Rng::new(7);
+    let mut a = rng.vec_u32(10_000);
+    let mut b = rng.vec_u32(14_000);
+    a.sort_unstable();
+    b.sort_unstable();
+    let merger = RunMerger::paper_default();
+    let mut out = vec![0u32; a.len() + b.len()];
+    for seg in neonms::mergepath::partition(&a, &b, 7) {
+        let end = seg.out_lo + seg.out_len();
+        merger.merge(
+            &a[seg.a_lo..seg.a_hi],
+            &b[seg.b_lo..seg.b_hi],
+            &mut out[seg.out_lo..end],
+        );
+    }
+    assert_sorted(&out, "partitioned parallel merge");
+    let all: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    assert_permutation(&out, &all, "partitioned parallel merge");
+}
+
+#[test]
+fn f32_and_i32_end_to_end() {
+    let s = NeonMergeSort::paper_default();
+    let mut rng = Rng::new(8);
+    let mut vi: Vec<i32> = (0..100_000).map(|_| rng.next_i32()).collect();
+    let mut expect = vi.clone();
+    expect.sort_unstable();
+    s.sort(&mut vi);
+    assert_eq!(vi, expect);
+    let mut vf: Vec<f32> = (0..100_000).map(|_| rng.next_f32() * 1e6 - 5e5).collect();
+    s.sort(&mut vf);
+    assert_sorted(&vf, "f32 100K");
+}
