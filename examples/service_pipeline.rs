@@ -28,8 +28,10 @@ fn main() {
 
     let cfg = CoordinatorConfig {
         workers: 2,
+        shards: 2,
         queue_capacity: 512,
         batch_max: 32,
+        fuse_cutoff: 4096,
         tiny_cutoff: 64,
         parallel_cutoff: 1 << 21,
         threads_per_parallel_sort: 4,
@@ -37,7 +39,7 @@ fn main() {
     };
     let svc = SortService::start(cfg, have_artifacts.then_some(artifacts)).expect("start service");
     println!(
-        "service up: 2 workers, XLA offload {}",
+        "service up: 2 workers over 2 shards, XLA offload {}",
         if svc.xla_enabled() { "ENABLED (≥4096-element requests)" } else { "disabled" }
     );
 
@@ -91,8 +93,15 @@ fn main() {
         m.elements as f64 / dt.as_secs_f64() / 1e6
     );
     println!(
-        "routes: tiny={} single={} parallel={} xla={} | batches={} shed-then-blocked={shed}",
-        m.route_tiny, m.route_single, m.route_parallel, m.route_xla, m.batches
+        "routes: tiny={} single={} parallel={} xla={} | batches={} occupancy={:.1} \
+         steals={} shed-then-blocked={shed}",
+        m.route_tiny,
+        m.route_single,
+        m.route_parallel,
+        m.route_xla,
+        m.batches,
+        m.batch_occupancy,
+        m.steals
     );
     println!(
         "latency: mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",

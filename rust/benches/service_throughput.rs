@@ -1,0 +1,71 @@
+//! Bench: sort-service small-job throughput — the PR-1 coordinator
+//! acceptance bench. Compares the dynamic batcher ON vs OFF (fused
+//! sorts amortize queue wakeups + thread-scope setup across many
+//! small requests) and sweeps the shard count at a fixed batching
+//! config. Run via `cargo bench --bench service_throughput`.
+
+use neonms::bench::{bench, BenchResult};
+use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::testutil::Rng;
+
+/// One repetition: submit `jobs` small requests, wait for every reply.
+fn drive(svc: &SortService, jobs: usize, len: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let handles: Vec<_> = (0..jobs).map(|_| svc.submit(rng.vec_u32(len))).collect();
+    for h in handles {
+        h.wait().expect("reply");
+    }
+}
+
+fn run_config(name: &str, cfg: CoordinatorConfig, jobs: usize, len: usize, reps: usize) {
+    let svc = SortService::start(cfg, None).expect("service start");
+    let res: BenchResult = bench(
+        name,
+        jobs, // "elements" = requests per repetition
+        1,
+        reps,
+        |r| r as u64,
+        |seed| drive(&svc, jobs, len, seed),
+    );
+    let m = svc.metrics();
+    println!(
+        "| {name:26} | {:9.0} jobs/s | occupancy {:5.1} | steals {:4} | p99 {:6}µs |",
+        res.per_sec(),
+        m.batch_occupancy,
+        m.steals,
+        m.p99_us
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    let jobs: usize = std::env::var("NEONMS_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4000);
+    let len: usize = std::env::var("NEONMS_BENCH_JOBLEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let reps: usize = std::env::var("NEONMS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+
+    println!("service throughput: {jobs} requests × {len} u32 per repetition, {reps} reps");
+    println!("-- batching ablation (2 workers, 2 shards) --");
+    for (name, batch_max) in [("unbatched (batch_max=1)", 1usize), ("batched (batch_max=32)", 32)] {
+        let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max, ..Default::default() };
+        run_config(name, cfg, jobs, len, reps);
+    }
+    println!("-- shard sweep (batched, workers = shards) --");
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = CoordinatorConfig {
+            workers: shards,
+            shards,
+            batch_max: 32,
+            ..Default::default()
+        };
+        run_config(&format!("shards={shards}"), cfg, jobs, len, reps);
+    }
+}

@@ -53,6 +53,13 @@ impl BenchResult {
     pub fn median_us(&self) -> f64 {
         self.stats.median * 1e6
     }
+
+    /// Items per second from the median — for service benches whose
+    /// unit is a *request* rather than an element (`elements` then
+    /// counts requests per repetition).
+    pub fn per_sec(&self) -> f64 {
+        self.elements as f64 / self.stats.median
+    }
 }
 
 /// Run `f` `reps` times (after `warmup` untimed runs), timing each

@@ -17,18 +17,30 @@ pub enum Route {
 /// Tunables for [`super::SortService`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker threads draining the queue.
+    /// Worker threads draining the shard queues. Worker `w` homes on
+    /// shard `w % shards` and steals from the others when idle.
     pub workers: usize,
-    /// Bounded queue capacity (requests); submits beyond it block —
-    /// backpressure rather than unbounded memory growth.
+    /// Queue shards. Each shard has its own bounded queue and lock;
+    /// submits route by power-of-two-choices over shard depths, so no
+    /// single mutex serializes admission. Must be ≥ 1.
+    pub shards: usize,
+    /// Bounded *total* queue capacity (requests), split evenly across
+    /// shards; submits beyond it block — backpressure rather than
+    /// unbounded memory growth.
     pub queue_capacity: usize,
-    /// Max tiny requests drained by one worker wakeup (dynamic batch).
+    /// Max requests fused into one dynamic batch by a single worker
+    /// wakeup. `1` disables batching.
     pub batch_max: usize,
+    /// Requests at or below this length are eligible for the dynamic
+    /// batcher's fused sort (only Tiny/SingleThread-routed requests
+    /// fuse; Parallel- and Xla-routed ones never do).
+    pub fuse_cutoff: usize,
     /// Below this, route Tiny.
     pub tiny_cutoff: usize,
     /// Above this, route Parallel.
     pub parallel_cutoff: usize,
-    /// Threads for one Parallel-routed request.
+    /// Threads for one Parallel-routed request and for one fused
+    /// batch sort.
     pub threads_per_parallel_sort: usize,
     /// Offload to XLA when a request's length is ≥ this and an
     /// artifact set is loaded. `None` disables offload.
@@ -39,8 +51,10 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             workers: 2,
+            shards: 2,
             queue_capacity: 1024,
             batch_max: 32,
+            fuse_cutoff: 4096,
             tiny_cutoff: 64,
             parallel_cutoff: 1 << 20,
             threads_per_parallel_sort: 4,
@@ -66,6 +80,22 @@ impl CoordinatorConfig {
             Route::SingleThread
         }
     }
+
+    /// True when a request of `len` may join a fused dynamic batch:
+    /// small enough, and routed to a CPU tier the fused sort covers.
+    pub fn fuse_eligible(&self, len: usize, xla_available: bool) -> bool {
+        self.batch_max > 1
+            && len <= self.fuse_cutoff
+            && matches!(self.route(len, xla_available), Route::Tiny | Route::SingleThread)
+    }
+
+    /// Capacity of shard `s`: the total [`Self::queue_capacity`] split
+    /// evenly, remainders to the lowest-indexed shards — the per-shard
+    /// caps always sum to exactly the configured total.
+    pub fn shard_capacity(&self, s: usize) -> usize {
+        let base = self.queue_capacity / self.shards;
+        base + usize::from(s < self.queue_capacity % self.shards)
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +117,32 @@ mod tests {
     fn xla_disabled_by_default() {
         let cfg = CoordinatorConfig::default();
         assert_eq!(cfg.route(1 << 14, true), Route::SingleThread);
+    }
+
+    #[test]
+    fn shard_capacities_sum_to_total() {
+        for (cap, shards) in [(1024usize, 2usize), (4, 2), (7, 3), (3, 8), (0, 4), (5, 1)] {
+            let cfg = CoordinatorConfig { queue_capacity: cap, shards, ..Default::default() };
+            let total: usize = (0..shards).map(|s| cfg.shard_capacity(s)).sum();
+            assert_eq!(total, cap, "cap={cap} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn fuse_eligibility_follows_routing() {
+        let cfg = CoordinatorConfig {
+            tiny_cutoff: 10,
+            fuse_cutoff: 1000,
+            parallel_cutoff: 2000,
+            xla_cutoff: Some(500),
+            ..Default::default()
+        };
+        assert!(cfg.fuse_eligible(5, false), "tiny fuses");
+        assert!(cfg.fuse_eligible(500, false), "small single-thread fuses");
+        assert!(!cfg.fuse_eligible(1500, false), "above fuse_cutoff never fuses");
+        assert!(!cfg.fuse_eligible(500, true), "xla-routed jobs never fuse");
+        assert!(!cfg.fuse_eligible(3000, false), "parallel-routed jobs never fuse");
+        let unbatched = CoordinatorConfig { batch_max: 1, ..Default::default() };
+        assert!(!unbatched.fuse_eligible(5, false), "batch_max=1 disables fusing");
     }
 }

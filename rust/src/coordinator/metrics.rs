@@ -57,7 +57,7 @@ impl LatencyHistogram {
     }
 }
 
-/// All coordinator counters (shared via `Arc`).
+/// All service-wide coordinator counters (shared via `Arc`).
 #[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
@@ -68,8 +68,25 @@ pub struct Metrics {
     pub route_single: AtomicU64,
     pub route_parallel: AtomicU64,
     pub route_xla: AtomicU64,
+    /// Accelerator-side batches (XLA executor coalescing). CPU fused
+    /// batches are counted per shard in [`ShardMetrics::batches`].
     pub batches: AtomicU64,
     pub latency: LatencyHistogram,
+}
+
+/// Per-shard counters, owned by one shard and aggregated into the
+/// service-wide [`MetricsSnapshot`].
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Current queue depth (updated on push/pop; also drives the
+    /// power-of-two-choices submit routing).
+    pub depth: AtomicU64,
+    /// Fused CPU batches formed from this shard's queue.
+    pub batches: AtomicU64,
+    /// Jobs that left this shard's queue inside a multi-job batch.
+    pub batched_jobs: AtomicU64,
+    /// Batches this shard's home worker stole from other shards.
+    pub steals: AtomicU64,
 }
 
 /// Point-in-time copy for reporting.
@@ -83,14 +100,25 @@ pub struct MetricsSnapshot {
     pub route_single: u64,
     pub route_parallel: u64,
     pub route_xla: u64,
+    /// Total batches: CPU fused batches (all shards) + XLA batches.
     pub batches: u64,
+    /// Jobs completed inside fused CPU batches.
+    pub batched_jobs: u64,
+    /// Mean jobs per fused CPU batch (0 when no batch formed) — the
+    /// batch-occupancy gauge.
+    pub batch_occupancy: f64,
+    /// Cross-shard steals, summed over workers.
+    pub steals: u64,
+    /// Queue depth per shard at snapshot time.
+    pub shard_depths: Vec<u64>,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
 }
 
 impl Metrics {
-    /// Capture a snapshot.
+    /// Capture a service-wide snapshot (no shard data; see
+    /// [`Metrics::snapshot_with_shards`]).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -102,10 +130,36 @@ impl Metrics {
             route_parallel: self.route_parallel.load(Ordering::Relaxed),
             route_xla: self.route_xla.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: 0,
+            batch_occupancy: 0.0,
+            steals: 0,
+            shard_depths: Vec::new(),
             mean_latency_us: self.latency.mean_us(),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
         }
+    }
+
+    /// Capture a snapshot with per-shard counters folded in: fused
+    /// batches add to `batches`, and occupancy/steals/depths are
+    /// aggregated across shards.
+    pub fn snapshot_with_shards<'a>(
+        &self,
+        shards: impl Iterator<Item = &'a ShardMetrics>,
+    ) -> MetricsSnapshot {
+        let mut snap = self.snapshot();
+        let mut fused_batches = 0u64;
+        for s in shards {
+            snap.shard_depths.push(s.depth.load(Ordering::Relaxed));
+            fused_batches += s.batches.load(Ordering::Relaxed);
+            snap.batched_jobs += s.batched_jobs.load(Ordering::Relaxed);
+            snap.steals += s.steals.load(Ordering::Relaxed);
+        }
+        snap.batches += fused_batches;
+        if fused_batches > 0 {
+            snap.batch_occupancy = snap.batched_jobs as f64 / fused_batches as f64;
+        }
+        snap
     }
 }
 
@@ -140,5 +194,34 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
+        assert!(s.shard_depths.is_empty());
+    }
+
+    #[test]
+    fn shard_aggregation_and_occupancy() {
+        let m = Metrics::default();
+        m.batches.fetch_add(1, Ordering::Relaxed); // one XLA batch
+        let shards: Vec<ShardMetrics> = (0..3).map(|_| ShardMetrics::default()).collect();
+        shards[0].depth.store(5, Ordering::Relaxed);
+        shards[0].batches.fetch_add(2, Ordering::Relaxed);
+        shards[0].batched_jobs.fetch_add(12, Ordering::Relaxed);
+        shards[1].batches.fetch_add(1, Ordering::Relaxed);
+        shards[1].batched_jobs.fetch_add(3, Ordering::Relaxed);
+        shards[2].steals.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot_with_shards(shards.iter());
+        assert_eq!(s.shard_depths, vec![5, 0, 0]);
+        assert_eq!(s.batches, 1 + 3, "xla + fused");
+        assert_eq!(s.batched_jobs, 15);
+        assert_eq!(s.steals, 4);
+        assert!((s.batch_occupancy - 5.0).abs() < 1e-9, "15 jobs / 3 fused batches");
+    }
+
+    #[test]
+    fn occupancy_zero_without_batches() {
+        let m = Metrics::default();
+        let shards = [ShardMetrics::default()];
+        let s = m.snapshot_with_shards(shards.iter());
+        assert_eq!(s.batch_occupancy, 0.0);
+        assert_eq!(s.shard_depths, vec![0]);
     }
 }

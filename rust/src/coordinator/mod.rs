@@ -1,13 +1,15 @@
 //! L3 sort-service coordinator.
 //!
 //! The paper delivers an algorithm; this module delivers it as a
-//! *service* the way a framework would ship it: a bounded request
-//! queue with backpressure, a router that classifies requests by size
-//! (tiny → branchless scalar, small → in-register path, medium →
+//! *service* the way a framework would ship it: sharded bounded
+//! request queues with backpressure (power-of-two-choices admission +
+//! cross-shard work stealing), a router that classifies requests by
+//! size (tiny → branchless scalar, small → in-register path, medium →
 //! single-thread NEON-MS, large → merge-path parallel, optional XLA
-//! offload for power-of-two-friendly blocks), a small dynamic batcher
-//! that drains bursts of tiny requests in one worker wakeup, and
-//! latency/throughput metrics.
+//! offload for power-of-two-friendly blocks), a dynamic batcher that
+//! fuses bursts of small requests into one buffer sorted by a single
+//! parallel pass, and latency/throughput/occupancy metrics. The
+//! threading model is documented at the top of `service.rs`.
 //!
 //! Python never appears here: the XLA path executes AOT artifacts via
 //! [`crate::runtime`].
@@ -17,7 +19,7 @@ mod metrics;
 mod service;
 
 pub use config::{CoordinatorConfig, Route};
-pub use metrics::{LatencyHistogram, MetricsSnapshot};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics};
 pub use service::{SortHandle, SortService};
 
 #[cfg(test)]

@@ -1,22 +1,72 @@
-//! The sort service: bounded queue, router, dynamic batcher, worker
-//! pool, and the confined XLA executor thread.
+//! The sort service: sharded bounded queues, a dynamic batcher that
+//! fuses bursts of small jobs into one buffer, size-tiered routing,
+//! cross-shard work stealing, and the confined XLA executor thread.
 //!
-//! Threading model: `N` CPU workers drain a bounded `Mutex<VecDeque>`
-//! + condvar queue (blocking `submit` = backpressure). The PJRT client
-//! is `Rc`-based (!Send), so XLA offload runs on one dedicated
-//! executor thread owning the [`BlockSorter`]; workers forward
-//! Xla-routed jobs over an `mpsc` channel and move on — the executor
-//! answers the requester directly.
+//! # Threading model
+//!
+//! Admission and execution are **sharded**: the service owns
+//! `cfg.shards` independent bounded FIFO queues, each behind its own
+//! mutex, so no single lock serializes a heavy submit stream.
+//! [`SortService::submit`] routes by **power-of-two-choices**: it
+//! samples two shards from the submit clock and pushes to the
+//! less-loaded one, falling back to a full scan so the aggregate
+//! `queue_capacity` bound stays exact (a full sample never rejects a
+//! request the service still has room for). Blocking submits sleep on
+//! a shared wakeup hub until any shard pops.
+//!
+//! `cfg.workers` worker threads each *home* on shard `w % shards` but
+//! **steal** from the other shards whenever their own queue is empty —
+//! one hot shard can never idle the rest of the pool, the sharded
+//! analog of the paper's §3.2 merge-path load-balancing claim ("each
+//! available thread remains active").
+//!
+//! A take from a queue is a **dynamic batch**: after popping the head
+//! job, the worker drains up to `batch_max - 1` further consecutive
+//! fuse-eligible jobs (small, CPU-routed; see
+//! [`CoordinatorConfig::fuse_eligible`]) in the same wakeup. A
+//! multi-job batch is **fused**: the payloads are concatenated into
+//! one contiguous buffer with recorded per-request offsets, sorted by
+//! a single [`ParallelNeonMergeSort::sort_segments`] pass (one
+//! thread-scope for the whole batch), and split back per request —
+//! amortizing queue wakeups and thread-scope setup that previously
+//! made tiny requests pay full pool cost. Batch occupancy, steals and
+//! queue depths are tracked per shard ([`super::ShardMetrics`]) and
+//! aggregated into one [`MetricsSnapshot`].
+//!
+//! Single jobs route by size tier ([`CoordinatorConfig::route`]):
+//! insertion sort → single-thread NEON-MS → merge-path parallel →
+//! XLA offload. The PJRT client is `Rc`-based (!Send), so XLA offload
+//! runs on one dedicated executor thread owning the [`BlockSorter`];
+//! workers forward Xla-routed jobs over an `mpsc` channel and move on
+//! — the executor answers the requester directly.
+//!
+//! # Lock order and wakeups
+//!
+//! Only `hub → shard.queue` is ever held nested (submit retry and the
+//! worker idle re-check). Push/pop wakeups lock the hub *after*
+//! releasing the queue, which closes the lost-wakeup race: a sleeper
+//! re-checks all queues while holding the hub, so any pop/push either
+//! happens before that check (and is seen) or after (and its notify
+//! lands on a registered waiter).
+//!
+//! The hub is kept off the hot path by parked-thread counters
+//! (`idle_workers`, `blocked_submitters`): a push/pop only locks the
+//! hub and notifies when someone is actually parked. The SeqCst pair
+//! — sleeper: *increment counter, then re-check queues*; signaler:
+//! *mutate queue, then load counter* — makes the skip safe: if the
+//! signaler's load misses the increment, the sequentially-consistent
+//! order puts the sleeper's re-check after the queue mutation, so the
+//! sleeper sees the state change instead of sleeping through it.
 
 use super::config::{CoordinatorConfig, Route};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::metrics::{Metrics, MetricsSnapshot, ShardMetrics};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -41,14 +91,110 @@ impl SortHandle {
     }
 }
 
+/// One queue shard. The mutex is held only for push/pop; sleeping
+/// happens on the shared hub so cross-shard wakeups work.
+struct Shard {
+    queue: Mutex<VecDeque<Job>>,
+    capacity: usize,
+    metrics: ShardMetrics,
+}
+
 struct Shared {
     cfg: CoordinatorConfig,
-    queue: Mutex<VecDeque<Job>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    shards: Vec<Shard>,
+    /// Wakeup hub: both condvars share this mutex (see module docs,
+    /// "Lock order").
+    hub: Mutex<()>,
+    /// Signaled after any push (wakes idle workers).
+    work_cv: Condvar,
+    /// Signaled after any pop (wakes blocked submitters).
+    space_cv: Condvar,
+    /// Submit clock driving the two-choice shard sampling.
+    clock: AtomicUsize,
+    /// Workers parked on `work_cv` (SeqCst; see module docs).
+    idle_workers: AtomicUsize,
+    /// Submitters parked on `space_cv` (SeqCst; see module docs).
+    blocked_submitters: AtomicUsize,
     shutdown: AtomicBool,
     metrics: Arc<Metrics>,
     xla_tx: Option<mpsc::Sender<Job>>,
+}
+
+impl Shared {
+    fn depth(&self, s: usize) -> u64 {
+        self.shards[s].metrics.depth.load(Ordering::Relaxed)
+    }
+
+    /// Push to shard `s` if it has room. No wakeup here — callers
+    /// signal after placement so the hub lock is never taken while a
+    /// queue lock is held.
+    fn push_to(&self, s: usize, job: Job) -> std::result::Result<(), Job> {
+        let shard = &self.shards[s];
+        let mut q = shard.queue.lock().unwrap();
+        if q.len() >= shard.capacity {
+            return Err(job);
+        }
+        q.push_back(job);
+        shard.metrics.depth.store(q.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Two-choice placement with full-scan fallback: sample two shards
+    /// from the clock, try the less-loaded first, then the other, then
+    /// every remaining shard — so rejection means *every* shard is at
+    /// capacity and the aggregate bound stays exact.
+    fn try_place(&self, job: Job) -> std::result::Result<(), Job> {
+        let n = self.shards.len();
+        let t = self.clock.fetch_add(1, Ordering::Relaxed);
+        let s1 = t % n;
+        let h = (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) as usize % n;
+        let s2 = if h == s1 { (s1 + 1) % n } else { h };
+        let (first, second) =
+            if self.depth(s2) < self.depth(s1) { (s2, s1) } else { (s1, s2) };
+        let job = match self.push_to(first, job) {
+            Ok(()) => return Ok(()),
+            Err(j) => j,
+        };
+        let mut job = if second == first {
+            job
+        } else {
+            match self.push_to(second, job) {
+                Ok(()) => return Ok(()),
+                Err(j) => j,
+            }
+        };
+        for s in 0..n {
+            if s == first || s == second {
+                continue;
+            }
+            job = match self.push_to(s, job) {
+                Ok(()) => return Ok(()),
+                Err(j) => j,
+            };
+        }
+        Err(job)
+    }
+
+    /// Wake one parked worker. Fast path: nobody parked → no hub
+    /// lock, no notify (safe per the SeqCst protocol in the module
+    /// docs). Slow path: lock-then-notify so a sleeper's hub-guarded
+    /// re-check can't miss the event.
+    fn signal_work(&self) {
+        if self.idle_workers.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        drop(self.hub.lock().unwrap());
+        self.work_cv.notify_one();
+    }
+
+    /// Wake all parked submitters; same fast path as [`Self::signal_work`].
+    fn signal_space(&self) {
+        if self.blocked_submitters.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        drop(self.hub.lock().unwrap());
+        self.space_cv.notify_all();
+    }
 }
 
 /// The coordinator service.
@@ -63,6 +209,7 @@ impl SortService {
     /// artifacts, an XLA executor thread is started and Xla routing is
     /// enabled (subject to `cfg.xla_cutoff`).
     pub fn start(cfg: CoordinatorConfig, artifacts_dir: Option<PathBuf>) -> Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "coordinator needs at least one shard");
         let metrics = Arc::new(Metrics::default());
         let (xla_tx, xla_thread) = match artifacts_dir {
             Some(dir) => {
@@ -85,11 +232,22 @@ impl SortService {
             None => (None, None),
         };
 
+        let shards = (0..cfg.shards)
+            .map(|s| Shard {
+                queue: Mutex::new(VecDeque::new()),
+                capacity: cfg.shard_capacity(s),
+                metrics: ShardMetrics::default(),
+            })
+            .collect();
         let shared = Arc::new(Shared {
             cfg: cfg.clone(),
-            queue: Mutex::new(VecDeque::new()),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            shards,
+            hub: Mutex::new(()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            clock: AtomicUsize::new(0),
+            idle_workers: AtomicUsize::new(0),
+            blocked_submitters: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             metrics,
             xla_tx,
@@ -98,10 +256,11 @@ impl SortService {
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let shared = Arc::clone(&shared);
+            let home = w % cfg.shards;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sort-worker-{w}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, home))
                     .context("spawning worker")?,
             );
         }
@@ -118,49 +277,79 @@ impl SortService {
         self.shared.xla_tx.is_some()
     }
 
-    /// Submit a sort request, blocking while the queue is full
+    /// Submit a sort request, blocking while every shard is full
     /// (backpressure).
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
         let (reply, rx) = mpsc::channel();
-        let job = Job { data, enqueued: Instant::now(), reply };
-        let mut q = self.shared.queue.lock().unwrap();
-        while q.len() >= self.shared.cfg.queue_capacity {
-            q = self.shared.not_full.wait(q).unwrap();
-        }
-        q.push_back(job);
+        let mut job = Job { data, enqueued: Instant::now(), reply };
+        // Count before the job becomes poppable so `submitted ≥
+        // completed` holds at every instant (a worker can finish the
+        // job before a post-placement increment would land).
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        drop(q);
-        self.shared.not_empty.notify_one();
+        loop {
+            job = match self.shared.try_place(job) {
+                Ok(()) => break,
+                Err(j) => j,
+            };
+            // All shards full: sleep until a pop frees space. The
+            // counter increment *before* the retry under the hub lock
+            // pairs with signal_space's fast-path load (module docs);
+            // the retry itself closes the race against pops between
+            // the failed scan and the wait.
+            let guard = self.shared.hub.lock().unwrap();
+            self.shared.blocked_submitters.fetch_add(1, Ordering::SeqCst);
+            job = match self.shared.try_place(job) {
+                Ok(()) => {
+                    self.shared.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
+                    drop(guard);
+                    break;
+                }
+                Err(j) => {
+                    let guard = self.shared.space_cv.wait(guard).unwrap();
+                    self.shared.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
+                    drop(guard);
+                    j
+                }
+            };
+        }
+        self.shared.signal_work();
         SortHandle { rx }
     }
 
-    /// Non-blocking submit; `Err(data)` returns the input when the
-    /// queue is full (caller decides to retry/shed).
+    /// Non-blocking submit; `Err(data)` returns the input when every
+    /// shard is full (caller decides to retry/shed).
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
-        let mut q = self.shared.queue.lock().unwrap();
-        if q.len() >= self.shared.cfg.queue_capacity {
-            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(data);
-        }
         let (reply, rx) = mpsc::channel();
-        q.push_back(Job { data, enqueued: Instant::now(), reply });
+        // Pre-count (and roll back on rejection) so `submitted ≥
+        // completed` holds at every instant — see submit().
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        drop(q);
-        self.shared.not_empty.notify_one();
-        Ok(SortHandle { rx })
+        match self.shared.try_place(Job { data, enqueued: Instant::now(), reply }) {
+            Ok(()) => {
+                self.shared.signal_work();
+                Ok(SortHandle { rx })
+            }
+            Err(job) => {
+                self.shared.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(job.data)
+            }
+        }
     }
 
-    /// Current metrics.
+    /// Current metrics, with per-shard counters aggregated in.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared
+            .metrics
+            .snapshot_with_shards(self.shared.shards.iter().map(|s| &s.metrics))
     }
 
-    /// Drain the queue and stop all threads. Consumes the service;
+    /// Drain the queues and stop all threads. Consumes the service;
     /// outstanding handles still receive their results first.
     pub fn shutdown(self) {
         let SortService { shared, workers, xla_thread } = self;
         shared.shutdown.store(true, Ordering::SeqCst);
-        shared.not_empty.notify_all();
+        drop(shared.hub.lock().unwrap());
+        shared.work_cv.notify_all();
         for w in workers {
             let _ = w.join();
         }
@@ -173,41 +362,108 @@ impl SortService {
     }
 }
 
-fn worker_loop(shared: &Shared) {
-    loop {
-        // Pop one job (plus a batch of tiny ones) or exit.
-        let batch = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(job) = q.pop_front() {
-                    let mut batch = vec![job];
-                    // Dynamic batching: drain further *tiny* requests
-                    // in the same wakeup to amortize scheduling.
-                    if batch[0].data.len() < shared.cfg.tiny_cutoff {
-                        while batch.len() < shared.cfg.batch_max {
-                            match q.front() {
-                                Some(j) if j.data.len() < shared.cfg.tiny_cutoff => {
-                                    batch.push(q.pop_front().unwrap());
-                                }
-                                _ => break,
-                            }
-                        }
-                        if batch.len() > 1 {
-                            shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
-                        }
+/// Pop one dynamic batch from shard `s`: the head job, plus up to
+/// `batch_max - 1` consecutive fuse-eligible followers in the same
+/// wakeup. Returns `None` when the queue is empty.
+fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
+    let xla = shared.xla_tx.is_some();
+    let shard = &shared.shards[s];
+    let batch = {
+        let mut q = shard.queue.lock().unwrap();
+        let first = q.pop_front()?;
+        let mut batch = vec![first];
+        if shared.cfg.fuse_eligible(batch[0].data.len(), xla) {
+            while batch.len() < shared.cfg.batch_max {
+                match q.front() {
+                    Some(j) if shared.cfg.fuse_eligible(j.data.len(), xla) => {
+                        batch.push(q.pop_front().unwrap());
                     }
-                    break batch;
+                    _ => break,
                 }
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = shared.not_empty.wait(q).unwrap();
             }
-        };
-        shared.not_full.notify_all();
-        for job in batch {
-            process(shared, job);
         }
+        shard.metrics.depth.store(q.len() as u64, Ordering::Relaxed);
+        batch
+    };
+    shared.signal_space();
+    if batch.len() > 1 {
+        shard.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        shard.metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    }
+    Some(batch)
+}
+
+fn worker_loop(shared: &Shared, home: usize) {
+    let n = shared.shards.len();
+    loop {
+        // Own shard first, then steal round-robin from the others.
+        if let Some(batch) = take_batch(shared, home) {
+            process_batch(shared, batch);
+            continue;
+        }
+        let mut found = None;
+        for off in 1..n {
+            let victim = (home + off) % n;
+            if let Some(batch) = take_batch(shared, victim) {
+                shared.shards[home].metrics.steals.fetch_add(1, Ordering::Relaxed);
+                found = Some(batch);
+                break;
+            }
+        }
+        if let Some(batch) = found {
+            process_batch(shared, batch);
+            continue;
+        }
+        // Nothing anywhere: advertise as idle, re-check under the
+        // hub (the INC-then-re-check side of the SeqCst protocol in
+        // the module docs), then sleep — or exit when shutting down
+        // with all queues drained.
+        let guard = shared.hub.lock().unwrap();
+        shared.idle_workers.fetch_add(1, Ordering::SeqCst);
+        let any_work =
+            shared.shards.iter().any(|s| !s.queue.lock().unwrap().is_empty());
+        if any_work {
+            shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let guard = shared.work_cv.wait(guard).unwrap();
+        shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+    }
+}
+
+/// Execute one dynamic batch: single jobs go through the size-tiered
+/// router; multi-job batches take the fused path — concatenate into
+/// one buffer with recorded offsets, sort all segments in a single
+/// [`ParallelNeonMergeSort::sort_segments`] pass, split back.
+fn process_batch(shared: &Shared, mut batch: Vec<Job>) {
+    if batch.len() == 1 {
+        return process(shared, batch.pop().expect("len checked"));
+    }
+    let m = &shared.metrics;
+    let total: usize = batch.iter().map(|j| j.data.len()).sum();
+    let mut fused = Vec::with_capacity(total);
+    let mut bounds = Vec::with_capacity(batch.len() + 1);
+    bounds.push(0);
+    for job in &batch {
+        fused.extend_from_slice(&job.data);
+        bounds.push(fused.len());
+        // Fused jobs still count under their size tier.
+        if job.data.len() < shared.cfg.tiny_cutoff {
+            m.route_tiny.fetch_add(1, Ordering::Relaxed);
+        } else {
+            m.route_single.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
+        .sort_segments(&mut fused, &bounds);
+    for (i, mut job) in batch.into_iter().enumerate() {
+        job.data.copy_from_slice(&fused[bounds[i]..bounds[i + 1]]);
+        finish(m, job);
     }
 }
 

@@ -105,6 +105,125 @@ fn dynamic_batching_counts_batches() {
 }
 
 #[test]
+fn sharded_concurrent_mixed_sizes_all_match_oracle() {
+    // Acceptance: ≥ 64 mixed-size jobs across ≥ 2 shards, submitted
+    // from several threads at once, every result equal to
+    // sort_unstable.
+    let cfg = CoordinatorConfig { workers: 4, shards: 4, ..Default::default() };
+    let svc = std::sync::Arc::new(SortService::start(cfg, None).unwrap());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let svc = std::sync::Arc::clone(&svc);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for i in 0..24usize {
+                let len = [3usize, 48, 700, 5000, 20_000, 120_000][i % 6] + rng.below(9);
+                let data = rng.vec_u32(len);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(svc.submit(data).wait().unwrap(), expect, "len={len}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.submitted, 96);
+    assert_eq!(m.completed, 96);
+    assert_eq!(m.shard_depths.len(), 4, "per-shard metrics aggregated");
+    std::sync::Arc::into_inner(svc).unwrap().shutdown();
+}
+
+#[test]
+fn batcher_fuses_small_jobs_with_occupancy() {
+    // One worker, two shards: a big job pins the worker while small
+    // jobs pile up, so the drain must fuse ≥ 2 of them into one batch
+    // — observable via the batch-occupancy metric.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 2,
+        batch_max: 16,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(7);
+    let big = svc.submit(rng.vec_u32(2_000_000));
+    let mut small = Vec::new();
+    for _ in 0..48 {
+        let len = 100 + rng.below(400);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        small.push((svc.submit(data), expect));
+    }
+    assert_sorted(&big.wait().unwrap(), "big");
+    for (h, expect) in small {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 49);
+    assert!(m.batches >= 1, "burst should form ≥1 fused batch");
+    assert!(m.batched_jobs >= 2, "≥2 jobs coalesced, got {}", m.batched_jobs);
+    assert!(
+        m.batch_occupancy >= 2.0,
+        "fused batches must average ≥2 jobs, got {}",
+        m.batch_occupancy
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn lone_worker_steals_from_other_shards() {
+    // workers=1 homes on shard 0; two-choice admission spreads the
+    // burst over all 4 shards, so the other shards' jobs can only
+    // complete via stealing.
+    let cfg = CoordinatorConfig { workers: 1, shards: 4, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(8);
+    let big = svc.submit(rng.vec_u32(1_500_000)); // pin the worker
+    let pending: Vec<_> = (0..32)
+        .map(|_| {
+            let data = rng.vec_u32(3000);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            (svc.submit(data), expect)
+        })
+        .collect();
+    assert_sorted(&big.wait().unwrap(), "big");
+    for (h, expect) in pending {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 33);
+    assert!(m.steals >= 1, "single worker must steal cross-shard, got {}", m.steals);
+    svc.shutdown();
+}
+
+#[test]
+fn single_shard_config_still_works() {
+    let cfg = CoordinatorConfig { workers: 2, shards: 1, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(9);
+    let pending: Vec<_> = (0..20)
+        .map(|_| {
+            let data = rng.vec_u32(500);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            (svc.submit(data), expect)
+        })
+        .collect();
+    for (h, expect) in pending {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 20);
+    assert_eq!(m.shard_depths.len(), 1);
+    assert_eq!(m.steals, 0, "nothing to steal with one shard");
+    svc.shutdown();
+}
+
+#[test]
 fn shutdown_drains_queue() {
     let svc = SortService::start(
         CoordinatorConfig { workers: 1, ..Default::default() },

@@ -21,7 +21,24 @@ use super::bitonic::{bitonic_merge_regs, reverse_regs};
 use crate::simd::{Lane, V128, W};
 
 /// Maximum K (elements per side) the hybrid kernel supports: 2×32.
+/// Every fixed-size flight/spill buffer in this module and in
+/// [`super::runmerge`] is sized by this constant.
 pub const MAX_K: usize = 32;
+
+/// Monomorphization-time guard: referencing [`RegsFitMaxK::OK`] in a
+/// kernel monomorphized over `N` registers proves `N` registers
+/// (K = N·W/2 elements per side) fit the `MAX_K`-element stack
+/// buffers — a K sweep beyond `MAX_K` becomes a compile error rather
+/// than a silent buffer overflow.
+pub struct RegsFitMaxK<const N: usize>;
+
+impl<const N: usize> RegsFitMaxK<N> {
+    /// Evaluates (at compile time) the `N·W/2 ≤ MAX_K` bound.
+    pub const OK: () = assert!(
+        N * W / 2 <= MAX_K,
+        "register count implies K > MAX_K: widen MAX_K before sweeping wider kernels"
+    );
+}
 
 /// Hybrid-merge two sorted runs held in `regs` in place: on entry
 /// `regs[..h]` and `regs[h..]` (`h = regs.len()/2`) are each sorted
@@ -43,6 +60,7 @@ pub fn hybrid_merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
         regs[i + h] = hi;
     }
 
+    debug_assert!(k <= MAX_K, "K={k} exceeds the MAX_K={MAX_K} spill buffer");
     // The two halves are now independent K-element bitonic merges.
     // LOWER half → scalar stack buffer (the serial side). Choosing
     // the *lower* half for the serial implementation keeps the serial
@@ -113,6 +131,7 @@ pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
 
 #[inline(always)]
 fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
+    let () = RegsFitMaxK::<N>::OK;
     let mut regs = [V128::splat(T::MIN_VALUE); N];
     for (v, c) in regs.iter_mut().zip(a.chunks_exact(W).chain(b.chunks_exact(W))) {
         *v = V128::load(c);

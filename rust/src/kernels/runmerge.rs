@@ -15,7 +15,7 @@
 //! serial path.
 
 use super::bitonic::merge_sorted_regs;
-use super::hybrid::hybrid_merge_sorted_regs;
+use super::hybrid::{hybrid_merge_sorted_regs, RegsFitMaxK, MAX_K};
 use super::serial::merge_scalar;
 use super::{MergeImpl, MergeWidth};
 use crate::simd::{Lane, V128, W};
@@ -91,8 +91,14 @@ impl RunMerger {
     }
 
     fn merge_vectorized<T: Lane, const N: usize>(&self, a: &[T], b: &[T], out: &mut [T], k: usize) {
+        // Monomorphization-time proof that K = N·W/2 fits the MAX_K
+        // flight buffer below — a future K sweep that widens
+        // MergeWidth without growing MAX_K fails to compile instead of
+        // silently overflowing.
+        let () = RegsFitMaxK::<N>::OK;
         let kr = N / 2;
         debug_assert_eq!(kr, self.width.regs());
+        debug_assert!(k <= MAX_K, "K={k} exceeds MAX_K={MAX_K}");
         // In-flight block: 2K elements in N registers; lower K is
         // emitted each round, upper K stays. Stack-resident — the
         // merge-pass hot loop must not allocate (§Perf iteration 1).
@@ -165,8 +171,9 @@ impl RunMerger {
         }
         // Drain: in-flight upper K (sorted) + both tails, all ≥
         // everything emitted. Alloc-free: flight lives on the stack
-        // and the 3-way merge goes through one stack staging buffer.
-        let mut flight = [T::MIN_VALUE; 32];
+        // and the 3-way merge goes through one stack staging buffer
+        // sized by the kernel family's MAX_K (guarded above).
+        let mut flight = [T::MIN_VALUE; MAX_K];
         for (c, v) in flight[..k].chunks_exact_mut(W).zip(&regs[kr..]) {
             v.store(c);
         }

@@ -292,6 +292,57 @@ fn runmerge_adversarial_interleavings() {
 }
 
 #[test]
+fn runmerge_property_all_combos_match_scalar_oracle() {
+    // Edge-shape property sweep over every MergeWidth × MergeImpl,
+    // each case checked against merge_scalar: lengths that are not a
+    // multiple of W, one run shorter than K (serial dispatch), exact-K
+    // runs, and dup-heavy alphabets driving the drain3 tie-breaks.
+    use crate::simd::W;
+    for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
+        for width in MergeWidth::all() {
+            let m = RunMerger { width, imp };
+            let k = width.k();
+            forall_indexed(150, |case, rng| {
+                let (la, lb) = match case % 6 {
+                    // One run shorter than K → serial fallback path.
+                    0 => (rng.below(k), k + rng.below(3 * k)),
+                    1 => (k + rng.below(3 * k), rng.below(k)),
+                    // Lengths deliberately not a multiple of W.
+                    2 => (
+                        k * (1 + rng.below(4)) + 1 + rng.below(W - 1),
+                        k * (1 + rng.below(4)) + 1 + rng.below(W - 1),
+                    ),
+                    // Exactly one kernel block each (flight drains
+                    // everything after a single round).
+                    3 => (k, k),
+                    // Tails shorter than one block on both sides.
+                    4 => (k + rng.below(W), k + rng.below(W)),
+                    // Long runs, vector fast loop dominant.
+                    _ => (4 * k + rng.below(k), 4 * k + rng.below(k)),
+                };
+                // Dup-heavy alphabet half the time to force ties.
+                let modv = if case % 2 == 0 { 4 } else { 100_000 };
+                let mut a: Vec<u32> = (0..la).map(|_| rng.next_u32() % modv).collect();
+                let mut b: Vec<u32> = (0..lb).map(|_| rng.next_u32() % modv).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                let mut got = vec![0u32; la + lb];
+                m.merge(&a, &b, &mut got);
+                let mut expect = vec![0u32; la + lb];
+                serial::merge_scalar(&a, &b, &mut expect);
+                assert_eq!(got, expect, "{imp:?} 2x{k} la={la} lb={lb} mod={modv}");
+            });
+            // All-duplicates, asymmetric lengths.
+            let a = vec![7u32; 2 * k + 3];
+            let b = vec![7u32; 5 * k + 1];
+            let mut got = vec![0u32; a.len() + b.len()];
+            m.merge(&a, &b, &mut got);
+            assert_eq!(got, vec![7u32; a.len() + b.len()], "{imp:?} 2x{k} all-dups");
+        }
+    }
+}
+
+#[test]
 fn runmerge_short_runs_fall_back_to_serial() {
     let m = RunMerger { width: MergeWidth::K32, imp: MergeImpl::Hybrid };
     let a = vec![3u32, 9];

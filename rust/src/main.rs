@@ -7,7 +7,8 @@
 //! neonms bench <table1|table2|table3|fig5|ablations|all> [--reps R] [--max-n N]
 //! neonms verify-networks
 //! neonms regmachine [--phys F]
-//! neonms serve-demo [--requests N] [--xla]
+//! neonms serve-demo [--requests N] [--workers W] [--shards S]
+//!                   [--batch-max B] [--fuse-cutoff F] [--xla]
 //! ```
 
 use neonms::bench::tables;
@@ -190,12 +191,23 @@ fn cmd_serve(flags: &Flags) {
     let artifacts = flags
         .has("xla")
         .then(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    let defaults = CoordinatorConfig::default();
     let cfg = CoordinatorConfig {
+        workers: flags.get_usize("workers", defaults.workers),
+        shards: flags.get_usize("shards", defaults.shards),
+        batch_max: flags.get_usize("batch-max", defaults.batch_max),
+        fuse_cutoff: flags.get_usize("fuse-cutoff", defaults.fuse_cutoff),
         xla_cutoff: flags.has("xla").then_some(4096),
-        ..Default::default()
+        ..defaults
     };
-    let svc = SortService::start(cfg, artifacts).expect("service start");
-    println!("service up (xla={})", svc.xla_enabled());
+    let svc = SortService::start(cfg.clone(), artifacts).expect("service start");
+    println!(
+        "service up ({} workers, {} shards, batch_max={}, xla={})",
+        cfg.workers,
+        cfg.shards,
+        cfg.batch_max,
+        svc.xla_enabled()
+    );
     let mut rng = neonms::testutil::Rng::new(7);
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_requests)
@@ -213,7 +225,8 @@ fn cmd_serve(flags: &Flags) {
     let m = svc.metrics();
     println!(
         "{n_requests} requests, {total} elements in {:.3}s ({:.2} ME/s)\n\
-         routes: tiny={} single={} parallel={} xla={} batches={}\n\
+         routes: tiny={} single={} parallel={} xla={}\n\
+         batching: batches={} batched_jobs={} occupancy={:.1} | steals={}\n\
          latency: mean {:.0}µs p50 {}µs p99 {}µs",
         dt.as_secs_f64(),
         total as f64 / dt.as_secs_f64() / 1e6,
@@ -222,6 +235,9 @@ fn cmd_serve(flags: &Flags) {
         m.route_parallel,
         m.route_xla,
         m.batches,
+        m.batched_jobs,
+        m.batch_occupancy,
+        m.steals,
         m.mean_latency_us,
         m.p50_us,
         m.p99_us

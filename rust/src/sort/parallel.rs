@@ -21,6 +21,13 @@ use crate::mergepath;
 use crate::simd::Lane;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Below this many elements (total) a parallel dispatch costs more in
+/// thread-scope setup than it saves — fall through to the
+/// single-thread sorter (the paper sees the same at small scales in
+/// Fig. 5). Shared by [`ParallelNeonMergeSort::sort`] and
+/// [`ParallelNeonMergeSort::sort_batch`].
+const PARALLEL_MIN_N: usize = 4096;
+
 /// Parallel NEON-MS sorter.
 #[derive(Clone, Debug)]
 pub struct ParallelNeonMergeSort {
@@ -53,13 +60,75 @@ impl ParallelNeonMergeSort {
         self.threads
     }
 
+    /// Sort each contiguous segment `data[bounds[i]..bounds[i + 1]]`
+    /// independently — the fused-buffer form of [`Self::sort_batch`]:
+    /// the coordinator's dynamic batcher concatenates many small
+    /// requests into one buffer with recorded offsets and relies on
+    /// this to amortize thread-scope setup across the whole batch
+    /// instead of paying it per request.
+    ///
+    /// `bounds` must start at 0, end at `data.len()`, and be
+    /// non-decreasing.
+    pub fn sort_segments<T: Lane>(&self, data: &mut [T], bounds: &[usize]) {
+        assert!(
+            !bounds.is_empty() && bounds[0] == 0 && *bounds.last().unwrap() == data.len(),
+            "bounds must cover data exactly"
+        );
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be non-decreasing");
+        let mut views: Vec<&mut [T]> = Vec::with_capacity(bounds.len() - 1);
+        let mut rest = data;
+        let mut prev = 0;
+        for &b in &bounds[1..] {
+            let (head, tail) = rest.split_at_mut(b - prev);
+            prev = b;
+            rest = tail;
+            views.push(head);
+        }
+        self.sort_batch(&mut views);
+    }
+
+    /// Multi-slice batch entry point: sort many independent slices in
+    /// one cooperative pass, all slices drained from one shared work
+    /// list by a single `thread::scope`. Batches whose total is below
+    /// the parallel threshold are sorted inline without spawning.
+    pub fn sort_batch<T: Lane>(&self, slices: &mut [&mut [T]]) {
+        let n = slices.len();
+        let total: usize = slices.iter().map(|s| s.len()).sum();
+        let t = self.threads.min(n);
+        if t <= 1 || total < PARALLEL_MIN_N {
+            for sl in slices.iter_mut() {
+                self.single.sort(sl);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let ptr = OutPtr(slices.as_mut_ptr());
+        let single = &self.single;
+        std::thread::scope(|s| {
+            for _ in 0..t {
+                let cursor = &cursor;
+                let ptr = &ptr;
+                s.spawn(move || loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
+                        break;
+                    }
+                    // SAFETY: each index is claimed by exactly one
+                    // thread and the `&mut [T]` entries are disjoint by
+                    // construction.
+                    let sl: &mut &mut [T] = unsafe { &mut *ptr.0.add(k) };
+                    single.sort(sl);
+                });
+            }
+        });
+    }
+
     /// Sort `data` ascending in place.
     pub fn sort<T: Lane>(&self, data: &mut [T]) {
         let n = data.len();
         let t = self.threads;
-        if t == 1 || n < 4096 {
-            // Parallel overhead dominates below ~4K (the paper sees the
-            // same at small scales in Fig. 5).
+        if t == 1 || n < PARALLEL_MIN_N {
+            // Parallel overhead dominates below the threshold.
             return self.single.sort(data);
         }
         // ---- Phase 1: local sorts on contiguous chunks ----

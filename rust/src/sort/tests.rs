@@ -154,6 +154,85 @@ fn parallel_odd_thread_counts() {
 }
 
 #[test]
+fn parallel_chunk_boundary_sizes_match_oracle() {
+    // n straddling the 4096 parallel threshold, n not a multiple of
+    // block_len (64), and thread counts exceeding the run count.
+    let sizes = [
+        4095usize, // just below the threshold → single-thread fallback
+        4096,      // exactly at the threshold
+        4097,      // just above, not a block multiple
+        4160,      // above, exact block multiple
+        4161,      // block multiple + 1
+        8191,
+        12_289, // 192 blocks + 1
+    ];
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let data = rng.vec_u32(n);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for t in [2usize, 3, 8, 64, 129] {
+            let mut v = data.clone();
+            ParallelNeonMergeSort::with_threads(t).sort(&mut v);
+            assert_eq!(v, expect, "n={n} T={t}");
+        }
+    }
+}
+
+#[test]
+fn sort_segments_matches_per_segment_oracle() {
+    forall_indexed(40, |case, rng| {
+        let nsegs = 1 + case % 9;
+        let mut data = Vec::new();
+        let mut bounds = vec![0usize];
+        for _ in 0..nsegs {
+            let len = rng.below(3000); // includes empty segments
+            data.extend(rng.vec_u32(len));
+            bounds.push(data.len());
+        }
+        let mut expect = data.clone();
+        for w in bounds.windows(2) {
+            expect[w[0]..w[1]].sort_unstable();
+        }
+        for t in [1usize, 2, 4, 16] {
+            let mut got = data.clone();
+            ParallelNeonMergeSort::with_threads(t).sort_segments(&mut got, &bounds);
+            assert_eq!(got, expect, "T={t} segs={nsegs}");
+        }
+    });
+}
+
+#[test]
+fn sort_batch_matches_oracle_across_slices() {
+    forall(30, |rng| {
+        let mut slices: Vec<Vec<u32>> = (0..12)
+            .map(|_| {
+                let len = rng.below(2000);
+                rng.vec_u32(len)
+            })
+            .collect();
+        let expect: Vec<Vec<u32>> = slices
+            .iter()
+            .map(|s| {
+                let mut e = s.clone();
+                e.sort_unstable();
+                e
+            })
+            .collect();
+        let mut views: Vec<&mut [u32]> = slices.iter_mut().map(|s| s.as_mut_slice()).collect();
+        ParallelNeonMergeSort::with_threads(4).sort_batch(&mut views);
+        assert_eq!(slices, expect);
+    });
+}
+
+#[test]
+#[should_panic(expected = "bounds must cover data exactly")]
+fn sort_segments_rejects_partial_bounds() {
+    let mut data = vec![3u32, 1, 2];
+    ParallelNeonMergeSort::with_threads(2).sort_segments(&mut data, &[0, 2]);
+}
+
+#[test]
 fn stability_is_not_claimed_but_order_is_total() {
     // NEON-MS is unstable (like std::sort); verify output equals
     // sort_unstable exactly on u32 (total order ⇒ unique answer).

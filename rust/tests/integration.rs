@@ -126,6 +126,54 @@ fn service_over_every_route_returns_oracle_results() {
 }
 
 #[test]
+fn sharded_batched_service_end_to_end() {
+    // The PR-1 coordinator shape end to end: 4 shards, stealing, and
+    // the fused dynamic batcher, under a mixed burst from two
+    // submitter threads. Every reply must equal sort_unstable and the
+    // occupancy metric must show real coalescing.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 4,
+        batch_max: 16,
+        ..Default::default()
+    };
+    let svc = std::sync::Arc::new(SortService::start(cfg, None).expect("service"));
+    // A large job first pins the lone worker so the burst of small
+    // jobs queues up across all shards behind it.
+    let mut rng = Rng::new(77);
+    let big = svc.submit(rng.vec_u32(2 << 20));
+    let mut joins = Vec::new();
+    for t in 0..2u64 {
+        let svc = std::sync::Arc::clone(&svc);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(200 + t);
+            (0..40usize)
+                .map(|i| {
+                    let len = [5usize, 80, 900, 3000][i % 4] + rng.below(11);
+                    let data = rng.vec_u32(len);
+                    let mut expect = data.clone();
+                    expect.sort_unstable();
+                    (svc.submit(data), expect)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    for j in joins {
+        for (h, expect) in j.join().unwrap() {
+            assert_eq!(h.wait().unwrap(), expect);
+        }
+    }
+    assert_sorted(&big.wait().unwrap(), "big");
+    let m = svc.metrics();
+    assert_eq!(m.completed, 81);
+    assert_eq!(m.shard_depths.len(), 4);
+    assert!(m.batches >= 1, "mixed burst should fuse ≥1 batch");
+    assert!(m.batch_occupancy >= 2.0, "occupancy {} < 2", m.batch_occupancy);
+    assert!(m.steals >= 1, "lone worker must have stolen from sibling shards");
+    std::sync::Arc::into_inner(svc).unwrap().shutdown();
+}
+
+#[test]
 fn xla_block_sort_matches_native_sort() {
     let reg = ArtifactRegistry::scan(artifacts_dir());
     if reg.is_empty() {

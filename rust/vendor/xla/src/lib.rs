@@ -1,0 +1,148 @@
+//! Offline stub of the `xla` (xla-rs) PJRT surface used by neonms.
+//!
+//! The build environment has no native XLA/PJRT plugin, so this
+//! vendored crate provides the exact type/method surface
+//! `neonms::runtime` compiles against while reporting "runtime
+//! unavailable" at the single entry point ([`PjRtClient::cpu`] /
+//! [`HloModuleProto::from_text_file`]). The neonms coordinator and
+//! runtime already treat PJRT startup failure as a first-class
+//! degraded mode (CPU-only sorting, XLA tests skip), so swapping this
+//! stub for the real crate is a Cargo.toml-only change.
+//!
+//! Types that can only be obtained from a successful client
+//! construction hold an uninhabited `Void`, making their methods
+//! statically unreachable rather than `unimplemented!()`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; implements `std::error::Error` so callers'
+/// `anyhow` contexts and `?` conversions work unchanged.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias, as in xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT native runtime is not available in this offline build \
+         (vendored stub); point Cargo.toml at the real `xla` crate to enable offload"
+    ))
+}
+
+/// Uninhabited marker: values of types wrapping this can never exist.
+enum Void {}
+
+/// Marker for element types PJRT literals can hold.
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+impl NativeType for i64 {}
+impl NativeType for u64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// Marker for element types arrays can be read back as.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for i32 {}
+impl ArrayElement for u32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u64 {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// PJRT client handle. Unconstructible in the stub: [`PjRtClient::cpu`]
+/// always reports the runtime as unavailable.
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    /// Create the CPU PJRT client — always `Err` in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+/// Parsed HLO module. Unconstructible in the stub.
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always `Err` in the stub.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    /// Wrap a parsed module (statically unreachable in the stub).
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        match proto.0 {}
+    }
+}
+
+/// A compiled, device-loaded executable. Unconstructible in the stub.
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    /// Execute on device buffers/literals.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// A device buffer. Unconstructible in the stub.
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    /// Copy device data back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+/// A host literal. Constructible (inputs are staged host-side before
+/// any client exists), but device-derived reads always error.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    /// Read the literal back as a typed vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
