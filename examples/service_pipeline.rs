@@ -1,22 +1,97 @@
 //! **End-to-end driver** (DESIGN.md §4 E2E): the full three-layer
-//! stack serving a realistic request stream.
+//! stack serving a realistic **multi-tenant** request stream.
 //!
 //! Layers exercised per request routed to XLA:
-//!   L3 rust coordinator (queue → router → batcher → worker)
+//!   L3 rust coordinator (client → queue → router → batcher → worker)
 //!   → XLA executor thread (PJRT, AOT artifact from `make artifacts`)
 //!   → L2 block-sort graph (= L1 Pallas tile sort + merge passes)
 //!   → rust cross-block hybrid merge → response.
 //!
-//! The workload mimics an analytics frontend: bursts of small sorts
-//! (facet counts), a steady stream of medium sorts (result pages) and
-//! occasional large jobs (report builds), sizes Zipf-flavored.
-//! Reports per-class latency and total throughput; the run is recorded
-//! in EXPERIMENTS.md §E2E.
+//! The workload mimics an analytics platform with four in-process
+//! tenants sharing one service instance, each driving its own class
+//! of traffic from its own thread through a cloned [`SortClient`]:
+//! bursts of small sorts (facet counts), a steady stream of medium
+//! sorts (result pages), XLA-sized shard merges, and occasional large
+//! report builds. Every submit is **non-blocking**: `try_submit`
+//! either returns a pollable [`SortHandle`] or sheds with `Busy`, in
+//! which case the tenant drains whatever handles already resolved and
+//! retries — zero blocking submits anywhere. Per-tenant accepted /
+//! shed / completed counts and latency quantiles come straight from
+//! `MetricsSnapshot::tenants`.
+//!
+//! [`SortClient`]: neonms::coordinator::SortClient
+//! [`SortHandle`]: neonms::coordinator::SortHandle
 
-use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::coordinator::{BusyReason, CoordinatorConfig, SortClient, SortHandle, SortService};
 use neonms::testutil::Rng;
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// One tenant's traffic class.
+struct TenantPlan {
+    name: &'static str,
+    base: usize,
+    count: usize,
+}
+
+/// Take every handle that already resolved; verify its response.
+fn drain_ready(pending: &mut Vec<SortHandle>) -> usize {
+    let mut done = 0;
+    pending.retain_mut(|h| match h.try_take() {
+        Some(r) => {
+            let sorted = r.expect("response");
+            assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted response!");
+            done += 1;
+            false
+        }
+        None => true,
+    });
+    done
+}
+
+/// Drive one tenant: submit `plan.count` requests through a *cloned*
+/// client with `try_submit` only, polling completed handles while
+/// shed. Returns (completed, sheds).
+fn run_tenant(client: &SortClient, plan: &TenantPlan, seed: u64) -> (usize, usize) {
+    let client = client.clone(); // cheap: two Arc bumps, same tenant
+    let mut rng = Rng::new(seed);
+    let mut pending: Vec<SortHandle> = Vec::new();
+    let mut done = 0usize;
+    let mut sheds = 0usize;
+    for _ in 0..plan.count {
+        let len = plan.base + rng.below(plan.base / 2 + 1);
+        let mut data = rng.vec_u32(len);
+        loop {
+            match client.try_submit(data) {
+                Ok(h) => {
+                    pending.push(h);
+                    break;
+                }
+                Err(busy) => {
+                    // Shed under backpressure: reclaim the input,
+                    // drain what's ready, back off, retry — never a
+                    // blocking submit. A Shutdown reason would mean
+                    // retrying can never succeed; stop instead.
+                    assert_eq!(busy.reason, BusyReason::QueueFull, "service shut down mid-run");
+                    sheds += 1;
+                    data = busy.data;
+                    done += drain_ready(&mut pending);
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        if pending.len() >= 64 {
+            done += drain_ready(&mut pending);
+        }
+    }
+    // Final drain may park — on *completions*, not submits.
+    for h in pending {
+        let sorted = h.wait().expect("response");
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted response!");
+        done += 1;
+    }
+    (done, sheds)
+}
 
 fn main() {
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -43,50 +118,43 @@ fn main() {
         if svc.xla_enabled() { "ENABLED (≥4096-element requests)" } else { "disabled" }
     );
 
-    // Zipf-flavored request mix.
-    let mut rng = Rng::new(2024);
-    let classes: [(&str, usize, usize); 4] = [
-        ("facet (tiny)", 16, 600),     // 600 requests of ~16
-        ("page (small)", 2_000, 250),  // 250 of ~2K
-        ("shard (xla)", 16_384, 120),  // 120 of ~16K → XLA route
-        ("report (large)", 3 << 20, 4), // 4 of ~3M → parallel route
+    // Four concurrent tenants, Zipf-flavored class mix.
+    let plans: [TenantPlan; 4] = [
+        TenantPlan { name: "facet-frontend", base: 16, count: 600 },
+        TenantPlan { name: "page-backend", base: 2_000, count: 250 },
+        TenantPlan { name: "shard-analytics", base: 16_384, count: 120 },
+        TenantPlan { name: "report-builder", base: 3 << 20, count: 4 },
     ];
+    println!("{} tenants submitting concurrently, zero blocking submits", plans.len());
 
     let t0 = Instant::now();
-    let mut pending: Vec<(&str, usize, neonms::coordinator::SortHandle)> = Vec::new();
-    let mut shed = 0usize;
-    for &(name, base, count) in &classes {
-        for _ in 0..count {
-            let len = base + rng.below(base / 2 + 1);
-            let data = rng.vec_u32(len);
-            match svc.try_submit(data) {
-                Ok(h) => pending.push((name, len, h)),
-                Err(data) => {
-                    // Backpressure: block on the slow path instead.
-                    shed += 1;
-                    pending.push((name, len, svc.submit(data)));
-                }
-            }
-        }
-    }
-    let mut per_class: std::collections::BTreeMap<&str, (usize, usize)> = Default::default();
-    for (name, len, h) in pending {
-        let sorted = h.wait().expect("response");
-        assert_eq!(sorted.len(), len);
-        assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted response!");
-        let e = per_class.entry(name).or_default();
-        e.0 += 1;
-        e.1 += len;
-    }
+    let results: Vec<(usize, usize)> = std::thread::scope(|s| {
+        let joins: Vec<_> = plans
+            .iter()
+            .enumerate()
+            .map(|(i, plan)| {
+                let client = svc.client(plan.name);
+                s.spawn(move || run_tenant(&client, plan, 2024 + i as u64))
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("tenant thread")).collect()
+    });
     let dt = t0.elapsed();
 
     let m = svc.metrics();
-    println!("\n== E2E summary ==");
-    for (name, (cnt, elems)) in &per_class {
-        println!("  {name:15} {cnt:4} requests, {elems:>9} elements");
+    println!("\n== per-tenant ==");
+    println!(
+        "  {:16} {:>8} {:>6} {:>9} {:>8} {:>8}",
+        "tenant", "accepted", "shed", "completed", "p50(µs)", "p99(µs)"
+    );
+    for t in &m.tenants {
+        println!(
+            "  {:16} {:>8} {:>6} {:>9} {:>8} {:>8}",
+            t.name, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
+        );
     }
     println!(
-        "total: {} requests / {} elements in {:.3}s → {:.2} ME/s end-to-end",
+        "\ntotal: {} requests / {} elements in {:.3}s → {:.2} ME/s end-to-end",
         m.completed,
         m.elements,
         dt.as_secs_f64(),
@@ -94,7 +162,7 @@ fn main() {
     );
     println!(
         "routes: tiny={} single={} parallel={} xla={} | batches={} occupancy={:.1} \
-         steals={} shed-then-blocked={shed}",
+         steals={}",
         m.route_tiny,
         m.route_single,
         m.route_parallel,
@@ -107,7 +175,22 @@ fn main() {
         "latency: mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",
         m.mean_latency_us, m.p50_us, m.p99_us
     );
-    assert_eq!(m.completed as usize, classes.iter().map(|c| c.2).sum::<usize>());
+
+    // Acceptance: every tenant's traffic fully served, attribution
+    // exact, and the shed counter equals the retries we performed.
+    let total: usize = plans.iter().map(|p| p.count).sum();
+    assert_eq!(m.completed as usize, total);
+    for (plan, (done, sheds)) in plans.iter().zip(&results) {
+        let t = m
+            .tenants
+            .iter()
+            .find(|t| t.name == plan.name)
+            .expect("tenant reported in MetricsSnapshot");
+        assert_eq!(*done, plan.count, "{}: all requests completed", plan.name);
+        assert_eq!(t.accepted as usize, plan.count, "{}: accepted count", plan.name);
+        assert_eq!(t.completed as usize, plan.count, "{}: completed count", plan.name);
+        assert_eq!(t.shed as usize, *sheds, "{}: shed counter matches retries", plan.name);
+    }
     if svc.xla_enabled() {
         assert!(m.route_xla > 0, "XLA route must be exercised when enabled");
     }

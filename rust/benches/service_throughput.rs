@@ -1,23 +1,46 @@
-//! Bench: sort-service small-job throughput — the PR-1 coordinator
-//! acceptance bench. Compares the dynamic batcher ON vs OFF (fused
-//! sorts amortize queue wakeups + thread-scope setup across many
-//! small requests) and sweeps the shard count at a fixed batching
-//! config. Run via `cargo bench --bench service_throughput`.
+//! Bench: sort-service small-job throughput under multi-tenant load.
+//! Each repetition drives the service through `tenants` concurrent
+//! [`SortClient`]s (one thread per tenant, handles drained per
+//! tenant), so the numbers include client-layer admission and
+//! completion signaling. Compares the dynamic batcher ON vs OFF
+//! (fused sorts amortize queue wakeups + thread-scope setup across
+//! many small requests), sweeps the shard count at a fixed batching
+//! config, and sweeps the tenant count at a fixed service config.
+//! Run via `cargo bench --bench service_throughput`.
+//!
+//! [`SortClient`]: neonms::coordinator::SortClient
 
 use neonms::bench::{bench, BenchResult};
 use neonms::coordinator::{CoordinatorConfig, SortService};
 use neonms::testutil::Rng;
 
-/// One repetition: submit `jobs` small requests, wait for every reply.
-fn drive(svc: &SortService, jobs: usize, len: usize, seed: u64) {
-    let mut rng = Rng::new(seed);
-    let handles: Vec<_> = (0..jobs).map(|_| svc.submit(rng.vec_u32(len))).collect();
-    for h in handles {
-        h.wait().expect("reply");
-    }
+/// One repetition: `tenants` clients submit `jobs` small requests in
+/// total (split evenly), each tenant waiting its own replies.
+fn drive(svc: &SortService, tenants: usize, jobs: usize, len: usize, seed: u64) {
+    std::thread::scope(|s| {
+        for t in 0..tenants {
+            let client = svc.client(&format!("bench-{t}"));
+            let share = jobs / tenants + usize::from(t < jobs % tenants);
+            s.spawn(move || {
+                let mut rng = Rng::new(seed.wrapping_mul(1000) + t as u64);
+                let handles: Vec<_> =
+                    (0..share).map(|_| client.submit(rng.vec_u32(len))).collect();
+                for h in handles {
+                    h.wait().expect("reply");
+                }
+            });
+        }
+    });
 }
 
-fn run_config(name: &str, cfg: CoordinatorConfig, jobs: usize, len: usize, reps: usize) {
+fn run_config(
+    name: &str,
+    cfg: CoordinatorConfig,
+    tenants: usize,
+    jobs: usize,
+    len: usize,
+    reps: usize,
+) {
     let svc = SortService::start(cfg, None).expect("service start");
     let res: BenchResult = bench(
         name,
@@ -25,7 +48,7 @@ fn run_config(name: &str, cfg: CoordinatorConfig, jobs: usize, len: usize, reps:
         1,
         reps,
         |r| r as u64,
-        |seed| drive(&svc, jobs, len, seed),
+        |seed| drive(&svc, tenants, jobs, len, seed),
     );
     let m = svc.metrics();
     println!(
@@ -51,14 +74,21 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(5);
+    let tenants: usize = std::env::var("NEONMS_BENCH_TENANTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
 
-    println!("service throughput: {jobs} requests × {len} u32 per repetition, {reps} reps");
-    println!("-- batching ablation (2 workers, 2 shards) --");
+    println!(
+        "service throughput: {jobs} requests × {len} u32 per repetition, \
+         {tenants} tenants, {reps} reps"
+    );
+    println!("-- batching ablation (2 workers, 2 shards, {tenants} tenants) --");
     for (name, batch_max) in [("unbatched (batch_max=1)", 1usize), ("batched (batch_max=32)", 32)] {
         let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max, ..Default::default() };
-        run_config(name, cfg, jobs, len, reps);
+        run_config(name, cfg, tenants, jobs, len, reps);
     }
-    println!("-- shard sweep (batched, workers = shards) --");
+    println!("-- shard sweep (batched, workers = shards, {tenants} tenants) --");
     for shards in [1usize, 2, 4, 8] {
         let cfg = CoordinatorConfig {
             workers: shards,
@@ -66,6 +96,11 @@ fn main() {
             batch_max: 32,
             ..Default::default()
         };
-        run_config(&format!("shards={shards}"), cfg, jobs, len, reps);
+        run_config(&format!("shards={shards}"), cfg, tenants, jobs, len, reps);
+    }
+    println!("-- tenant sweep (2 workers, 2 shards, batched) --");
+    for t in [1usize, 2, 4, 8] {
+        let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max: 32, ..Default::default() };
+        run_config(&format!("tenants={t}"), cfg, t, jobs, len, reps);
     }
 }

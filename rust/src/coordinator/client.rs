@@ -1,0 +1,258 @@
+//! Client-side completion primitives: the per-request [`Slot`] that
+//! shard workers signal through, and the non-blocking [`SortHandle`]
+//! callers hold.
+//!
+//! A submitted request no longer owns a channel endpoint; submitter
+//! and worker share one heap slot. The worker stores the sorted
+//! vector and *signals* — waking a parked [`SortHandle::wait`] caller
+//! through the slot's condvar and any registered async task through
+//! its [`Waker`] — so completion costs one mutex hand-off, no channel
+//! allocation per request, and the handle can be polled without ever
+//! blocking. Dropping an unresolved handle flips the slot's
+//! cancellation flag; workers check it before sorting and skip the
+//! work, so an abandoned request can never wedge a shard worker (it
+//! is counted under `cancelled` in the metrics instead).
+
+use anyhow::Result;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
+
+/// What a slot currently holds.
+enum State {
+    /// No result yet; a worker still owns the request.
+    Pending,
+    /// Sorted result parked by a worker, not yet taken by the handle.
+    Done(Vec<u32>),
+    /// The service dropped the request without completing it
+    /// (shutdown raced the submit); the handle resolves to an error.
+    Closed,
+    /// The handle already took the result.
+    Taken,
+}
+
+struct SlotInner {
+    state: State,
+    /// Async task to wake on completion (registered by `Future::poll`).
+    waker: Option<Waker>,
+}
+
+/// One request's completion slot, shared between the queued job and
+/// the caller's [`SortHandle`].
+pub(super) struct Slot {
+    /// Set when the handle is dropped unresolved. Kept outside the
+    /// mutex so workers can check it with a single atomic load before
+    /// paying for a sort.
+    cancelled: AtomicBool,
+    inner: Mutex<SlotInner>,
+    /// Parks blocking [`SortHandle::wait`] callers.
+    cv: Condvar,
+}
+
+impl Slot {
+    pub(super) fn new() -> Arc<Slot> {
+        Arc::new(Slot {
+            cancelled: AtomicBool::new(false),
+            inner: Mutex::new(SlotInner { state: State::Pending, waker: None }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Worker side: deposit the sorted result and wake the owner.
+    /// No-op if the slot already resolved (idempotent, so the job's
+    /// drop guard can unconditionally [`Slot::close`]).
+    pub(super) fn complete(&self, data: Vec<u32>) {
+        let waker = {
+            let mut inner = self.inner.lock().unwrap();
+            if !matches!(inner.state, State::Pending) {
+                return;
+            }
+            inner.state = State::Done(data);
+            inner.waker.take()
+        };
+        self.cv.notify_all();
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// Worker side: resolve the slot *without* a result — the request
+    /// was dropped un-sorted (service shut down, or the job was
+    /// abandoned after its handle was cancelled). Idempotent.
+    pub(super) fn close(&self) {
+        let waker = {
+            let mut inner = self.inner.lock().unwrap();
+            if !matches!(inner.state, State::Pending) {
+                return;
+            }
+            inner.state = State::Closed;
+            inner.waker.take()
+        };
+        self.cv.notify_all();
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// True once the owning handle was dropped unresolved. Workers
+    /// check this before sorting and skip cancelled jobs.
+    pub(super) fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Non-blocking take. `None` while pending; registers `waker` (if
+    /// given) to be woken exactly when the state next changes.
+    fn poll_take(&self, waker: Option<&Waker>) -> Option<Result<Vec<u32>>> {
+        let mut inner = self.inner.lock().unwrap();
+        match std::mem::replace(&mut inner.state, State::Taken) {
+            State::Done(data) => Some(Ok(data)),
+            State::Closed => Some(Err(closed_error())),
+            // `replace` already left `Taken` in place.
+            State::Taken => {
+                Some(Err(anyhow::anyhow!("sort handle polled after completion")))
+            }
+            State::Pending => {
+                inner.state = State::Pending;
+                if let Some(w) = waker {
+                    // Replace rather than accumulate: only the latest
+                    // task polling the handle needs the wakeup.
+                    inner.waker = Some(w.clone());
+                }
+                None
+            }
+        }
+    }
+
+    /// Blocking take: park on the condvar until the slot resolves.
+    fn wait_take(&self) -> Result<Vec<u32>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut inner.state, State::Taken) {
+                State::Done(data) => return Ok(data),
+                State::Closed => return Err(closed_error()),
+                State::Taken => {
+                    return Err(anyhow::anyhow!("sort handle waited after completion"))
+                }
+                State::Pending => {
+                    inner.state = State::Pending;
+                    inner = self.cv.wait(inner).unwrap();
+                }
+            }
+        }
+    }
+}
+
+fn closed_error() -> anyhow::Error {
+    anyhow::anyhow!("sort service dropped the request before completing it")
+}
+
+/// Why a [`super::SortClient::try_submit`] was shed.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BusyReason {
+    /// Every shard was at capacity — transient backpressure; a retry
+    /// after draining some handles can succeed.
+    QueueFull,
+    /// The service has shut down — permanent; stop retrying.
+    Shutdown,
+}
+
+/// The input handed back by [`super::SortClient::try_submit`] when
+/// the request was shed: nothing was enqueued or copied, and the
+/// caller decides whether to retry ([`BusyReason::QueueFull`]),
+/// degrade, or stop ([`BusyReason::Shutdown`]).
+#[derive(Debug)]
+pub struct Busy {
+    /// The original, untouched input.
+    pub data: Vec<u32>,
+    /// Transient overload or permanent shutdown.
+    pub reason: BusyReason,
+}
+
+/// Non-blocking handle to a submitted sort request.
+///
+/// Three ways to consume it, all signalled by the shard worker
+/// through the request's completion slot (no blocking join anywhere
+/// in the service):
+///
+/// * **poll** — [`SortHandle::try_take`] / [`SortHandle::is_ready`]
+///   never block; ideal for tenants multiplexing many requests.
+/// * **await** — the handle implements [`Future`], resolving to the
+///   sorted vector; any executor (or a hand-rolled `block_on`) works.
+/// * **block** — [`SortHandle::wait`] parks the calling thread on the
+///   slot's condvar, the migration path from the old blocking API.
+///
+/// Dropping a handle before taking its result **cancels** the
+/// request: workers that haven't started it yet skip the sort
+/// entirely (counted as `cancelled` in the metrics), and a result
+/// that was already computed is discarded. Cancellation never blocks
+/// and never wedges a worker.
+pub struct SortHandle {
+    slot: Arc<Slot>,
+    /// Set once the result (or error) has been taken; suppresses the
+    /// drop-cancellation.
+    resolved: bool,
+}
+
+impl SortHandle {
+    pub(super) fn new(slot: Arc<Slot>) -> SortHandle {
+        SortHandle { slot, resolved: false }
+    }
+
+    /// True once a result (or a shutdown error) is waiting; never
+    /// blocks. Before the result is taken, a `true` here makes the
+    /// next [`SortHandle::try_take`] return `Some`; after the take it
+    /// stays `true` (the handle is resolved, not pending again).
+    pub fn is_ready(&self) -> bool {
+        !matches!(self.slot.inner.lock().unwrap().state, State::Pending)
+    }
+
+    /// Non-blocking take: `None` while the request is still in
+    /// flight, `Some(result)` exactly once when it resolves, and
+    /// `None` again on any call after the result was taken.
+    pub fn try_take(&mut self) -> Option<Result<Vec<u32>>> {
+        if self.resolved {
+            return None;
+        }
+        let out = self.slot.poll_take(None);
+        if out.is_some() {
+            self.resolved = true;
+        }
+        out
+    }
+
+    /// Block the calling thread until the result arrives (parked on
+    /// the slot's condvar; woken directly by the completing worker).
+    pub fn wait(mut self) -> Result<Vec<u32>> {
+        self.resolved = true;
+        self.slot.wait_take()
+    }
+}
+
+impl Future for SortHandle {
+    type Output = Result<Vec<u32>>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        match this.slot.poll_take(Some(cx.waker())) {
+            Some(out) => {
+                this.resolved = true;
+                Poll::Ready(out)
+            }
+            None => Poll::Pending,
+        }
+    }
+}
+
+impl Drop for SortHandle {
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.slot.cancel();
+        }
+    }
+}

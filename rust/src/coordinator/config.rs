@@ -25,8 +25,10 @@ pub struct CoordinatorConfig {
     /// single mutex serializes admission. Must be ≥ 1.
     pub shards: usize,
     /// Bounded *total* queue capacity (requests), split evenly across
-    /// shards; submits beyond it block — backpressure rather than
-    /// unbounded memory growth.
+    /// shards. Beyond it, backpressuring submits
+    /// ([`super::SortClient::submit`]) park until a shard pops, and
+    /// shedding submits ([`super::SortClient::try_submit`]) hand the
+    /// input straight back — bounded memory either way.
     pub queue_capacity: usize,
     /// Max requests fused into one dynamic batch by a single worker
     /// wakeup. `1` disables batching.

@@ -1,5 +1,6 @@
-//! Lock-free service metrics: request counters per route and a
-//! log-bucketed latency histogram (no external deps — atomics only).
+//! Lock-free service metrics: request counters per route, per-tenant
+//! accepted/shed/completed accounting, and log-bucketed latency
+//! histograms (no external deps — atomics only).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -57,12 +58,84 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-tenant counters, owned by one registered tenant (shared
+/// between every [`super::SortClient`] clone for that tenant and the
+/// service) and snapshotted into [`TenantSnapshot`].
+pub struct TenantMetrics {
+    name: String,
+    /// Requests admitted into a shard queue for this tenant.
+    pub accepted: AtomicU64,
+    /// Requests shed at admission without being enqueued:
+    /// `try_submit` while every queue was full, or any submit
+    /// (including blocking `submit`) after shutdown.
+    pub shed: AtomicU64,
+    /// Requests completed with a result delivered to the slot.
+    pub completed: AtomicU64,
+    /// Requests that were admitted but never sorted: the handle was
+    /// dropped before a worker started them, or they were still
+    /// queued when the service shut down. Always
+    /// `accepted == completed + cancelled` once the service is quiet.
+    pub cancelled: AtomicU64,
+    /// Queue-to-completion latency, this tenant's requests only.
+    pub latency: LatencyHistogram,
+}
+
+impl TenantMetrics {
+    pub(super) fn new(name: &str) -> Self {
+        TenantMetrics {
+            name: name.to_string(),
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            latency: LatencyHistogram::default(),
+        }
+    }
+
+    /// The tenant's registered name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Point-in-time copy of this tenant's counters.
+    pub fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            name: self.name.clone(),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_us: self.latency.quantile_us(0.5),
+            p99_us: self.latency.quantile_us(0.99),
+        }
+    }
+}
+
+/// Point-in-time copy of one tenant's counters, reported inside
+/// [`MetricsSnapshot::tenants`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSnapshot {
+    pub name: String,
+    pub accepted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub mean_latency_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
 /// All service-wide coordinator counters (shared via `Arc`).
 #[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests admitted but never sorted: their [`super::SortHandle`]
+    /// was dropped before a worker reached them, or they were still
+    /// queued at shutdown.
+    pub cancelled: AtomicU64,
     pub elements: AtomicU64,
     pub route_tiny: AtomicU64,
     pub route_single: AtomicU64,
@@ -95,6 +168,9 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Requests admitted but never sorted (handle dropped, or still
+    /// queued at shutdown).
+    pub cancelled: u64,
     pub elements: u64,
     pub route_tiny: u64,
     pub route_single: u64,
@@ -114,6 +190,10 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Per-tenant accepted/shed/completed counters and latency
+    /// quantiles, sorted by tenant name. Empty when no tenant client
+    /// was ever created.
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl Metrics {
@@ -124,6 +204,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             route_tiny: self.route_tiny.load(Ordering::Relaxed),
             route_single: self.route_single.load(Ordering::Relaxed),
@@ -137,6 +218,7 @@ impl Metrics {
             mean_latency_us: self.latency.mean_us(),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
+            tenants: Vec::new(),
         }
     }
 
@@ -214,6 +296,20 @@ mod tests {
         assert_eq!(s.batched_jobs, 15);
         assert_eq!(s.steals, 4);
         assert!((s.batch_occupancy - 5.0).abs() < 1e-9, "15 jobs / 3 fused batches");
+    }
+
+    #[test]
+    fn tenant_snapshot_roundtrip() {
+        let t = TenantMetrics::new("acme");
+        t.accepted.fetch_add(3, Ordering::Relaxed);
+        t.shed.fetch_add(1, Ordering::Relaxed);
+        t.completed.fetch_add(2, Ordering::Relaxed);
+        t.latency.record(Duration::from_micros(10));
+        let s = t.snapshot();
+        assert_eq!(s.name, "acme");
+        assert_eq!((s.accepted, s.shed, s.completed, s.cancelled), (3, 1, 2, 0));
+        assert!(s.mean_latency_us > 0.0);
+        assert_eq!(t.name(), "acme");
     }
 
     #[test]

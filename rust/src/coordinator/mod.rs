@@ -11,16 +11,28 @@
 //! parallel pass, and latency/throughput/occupancy metrics. The
 //! threading model is documented at the top of `service.rs`.
 //!
+//! Work enters through a **multi-tenant client layer**: each
+//! in-process tenant holds a cheaply clonable [`SortClient`] bound to
+//! one shared [`SortService`], and every submit returns a
+//! non-blocking [`SortHandle`] that can be polled, `.await`ed, or
+//! parked on — completion is signaled by the shard workers through a
+//! per-request waker/parker slot, never a blocking join.
+//! [`SortClient::try_submit`] sheds with [`Busy`] instead of parking,
+//! and [`MetricsSnapshot::tenants`] reports accepted/shed/completed/
+//! cancelled counts and latency quantiles per tenant.
+//!
 //! Python never appears here: the XLA path executes AOT artifacts via
 //! [`crate::runtime`].
 
+mod client;
 mod config;
 mod metrics;
 mod service;
 
+pub use client::{Busy, BusyReason, SortHandle};
 pub use config::{CoordinatorConfig, Route};
-pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics};
-pub use service::{SortHandle, SortService};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics, TenantSnapshot};
+pub use service::{SortClient, SortService};
 
 #[cfg(test)]
 mod tests;

@@ -1,18 +1,46 @@
 //! The sort service: sharded bounded queues, a dynamic batcher that
 //! fuses bursts of small jobs into one buffer, size-tiered routing,
-//! cross-shard work stealing, and the confined XLA executor thread.
+//! cross-shard work stealing, a multi-tenant client layer, and the
+//! confined XLA executor thread.
+//!
+//! # Request lifecycle (handle-based, non-blocking)
+//!
+//! Every request is a [`Job`] carrying a shared completion [`Slot`]
+//! and (for client submits) its tenant's counters. Admission returns
+//! a [`SortHandle`] immediately; nothing in the service ever blocks
+//! on a per-request channel join. When a shard worker finishes the
+//! sort it deposits the result in the slot and *signals* — waking a
+//! parked `wait()` caller through the slot's condvar and any polling
+//! async task through its registered waker. Callers choose their
+//! style per request: poll ([`SortHandle::try_take`]), await (the
+//! handle is a `Future`), or park ([`SortHandle::wait`]).
+//!
+//! Tenants enter through [`SortService::client`]: a [`SortClient`] is
+//! a cheaply clonable handle binding one tenant identity to the
+//! service. [`SortClient::submit`] applies backpressure (parks only
+//! while *every* shard is at capacity); [`SortClient::try_submit`]
+//! never parks — it sheds with [`Busy`], handing the input back and
+//! bumping the tenant's `shed` counter. Accepted/shed/completed/
+//! cancelled counts and a latency histogram are kept per tenant and
+//! reported in [`MetricsSnapshot::tenants`].
+//!
+//! Dropping an unresolved [`SortHandle`] cancels the request: workers
+//! check the slot's cancellation flag before sorting and skip the
+//! job (counted under `cancelled`), so abandoned requests cost one
+//! atomic load instead of a sort — and can never wedge a worker.
 //!
 //! # Threading model
 //!
 //! Admission and execution are **sharded**: the service owns
 //! `cfg.shards` independent bounded FIFO queues, each behind its own
 //! mutex, so no single lock serializes a heavy submit stream.
-//! [`SortService::submit`] routes by **power-of-two-choices**: it
-//! samples two shards from the submit clock and pushes to the
-//! less-loaded one, falling back to a full scan so the aggregate
-//! `queue_capacity` bound stays exact (a full sample never rejects a
-//! request the service still has room for). Blocking submits sleep on
-//! a shared wakeup hub until any shard pops.
+//! Placement routes by **power-of-two-choices**: it samples two
+//! shards from the submit clock and pushes to the less-loaded one,
+//! falling back to a full scan so the aggregate `queue_capacity`
+//! bound stays exact (a full sample never rejects a request the
+//! service still has room for). Backpressured submits sleep on a
+//! shared wakeup hub until any shard pops; shedding submits never
+//! touch the hub at all.
 //!
 //! `cfg.workers` worker threads each *home* on shard `w % shards` but
 //! **steal** from the other shards whenever their own queue is empty —
@@ -26,19 +54,21 @@
 //! [`CoordinatorConfig::fuse_eligible`]) in the same wakeup. A
 //! multi-job batch is **fused**: the payloads are concatenated into
 //! one contiguous buffer with recorded per-request offsets, sorted by
-//! a single [`ParallelNeonMergeSort::sort_segments`] pass (one
-//! thread-scope for the whole batch), and split back per request —
-//! amortizing queue wakeups and thread-scope setup that previously
-//! made tiny requests pay full pool cost. Batch occupancy, steals and
-//! queue depths are tracked per shard ([`super::ShardMetrics`]) and
-//! aggregated into one [`MetricsSnapshot`].
+//! a single [`ParallelNeonMergeSort::sort_segments_with`] pass (one
+//! thread-scope for the whole batch), and each request's slot is
+//! completed *as soon as its own segment is sorted* rather than when
+//! the whole batch finishes — amortizing queue wakeups and
+//! thread-scope setup without adding tail latency for the batch's
+//! early finishers. Batch occupancy, steals and queue depths are
+//! tracked per shard ([`ShardMetrics`]) and aggregated into one
+//! [`MetricsSnapshot`].
 //!
 //! Single jobs route by size tier ([`CoordinatorConfig::route`]):
 //! insertion sort → single-thread NEON-MS → merge-path parallel →
 //! XLA offload. The PJRT client is `Rc`-based (!Send), so XLA offload
 //! runs on one dedicated executor thread owning the [`BlockSorter`];
 //! workers forward Xla-routed jobs over an `mpsc` channel and move on
-//! — the executor answers the requester directly.
+//! — the executor completes the requester's slot directly.
 //!
 //! # Lock order and wakeups
 //!
@@ -57,9 +87,22 @@
 //! signaler's load misses the increment, the sequentially-consistent
 //! order puts the sleeper's re-check after the queue mutation, so the
 //! sleeper sees the state change instead of sleeping through it.
+//!
+//! # Shutdown
+//!
+//! [`SortService::shutdown`] sets the shutdown flag, wakes every
+//! parked worker and submitter, and joins the workers — which drain
+//! their queues first, so already-admitted requests still complete.
+//! Clients can outlive the service object: submits that observe the
+//! flag are shed (blocking submits resolve their handle to an error,
+//! `try_submit` returns [`Busy`]), and [`Shared::push_to`] re-checks
+//! the flag under the queue lock so a submit racing the drain either
+//! lands before it (and is dropped with its slot closed) or is
+//! refused — never parked forever.
 
+use super::client::{Busy, BusyReason, Slot, SortHandle};
 use super::config::{CoordinatorConfig, Route};
-use super::metrics::{Metrics, MetricsSnapshot, ShardMetrics};
+use super::metrics::{Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort};
@@ -71,23 +114,23 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// One queued request.
+/// One queued request. The drop guard closes the completion slot, so
+/// a job discarded anywhere (queue cleared at shutdown, channel to a
+/// dead executor) resolves its handle to an error instead of leaving
+/// a waiter parked forever.
 struct Job {
     data: Vec<u32>,
     enqueued: Instant,
-    reply: mpsc::Sender<Vec<u32>>,
+    slot: Arc<Slot>,
+    /// Tenant attribution for completion/cancellation accounting;
+    /// `None` for the service-level [`SortService::submit`] path.
+    tenant: Option<Arc<TenantMetrics>>,
 }
 
-/// Handle to a submitted request; [`SortHandle::wait`] blocks for the
-/// sorted result.
-pub struct SortHandle {
-    rx: mpsc::Receiver<Vec<u32>>,
-}
-
-impl SortHandle {
-    /// Block until the sorted vector arrives.
-    pub fn wait(self) -> Result<Vec<u32>> {
-        self.rx.recv().context("sort worker dropped the request")
+impl Drop for Job {
+    fn drop(&mut self) {
+        // Idempotent: a no-op when `finish` already completed the slot.
+        self.slot.close();
     }
 }
 
@@ -117,7 +160,17 @@ struct Shared {
     blocked_submitters: AtomicUsize,
     shutdown: AtomicBool,
     metrics: Arc<Metrics>,
-    xla_tx: Option<mpsc::Sender<Job>>,
+    /// Registered tenants, looked up by name in [`SortService::client`].
+    tenants: Mutex<Vec<Arc<TenantMetrics>>>,
+    /// Channel to the XLA executor. Behind a mutex so
+    /// [`SortService::shutdown`] can revoke it explicitly — clients
+    /// may hold `Shared` alive past shutdown, so the executor's
+    /// disconnect must not depend on the last `Arc` dropping.
+    xla_tx: Mutex<Option<mpsc::Sender<Job>>>,
+    /// Lock-free mirror of `xla_tx.is_some()` for the worker hot path
+    /// (routing + batch eligibility check once per pop); cleared when
+    /// shutdown revokes the sender.
+    xla_on: AtomicBool,
 }
 
 impl Shared {
@@ -125,13 +178,31 @@ impl Shared {
         self.shards[s].metrics.depth.load(Ordering::Relaxed)
     }
 
-    /// Push to shard `s` if it has room. No wakeup here — callers
-    /// signal after placement so the hub lock is never taken while a
-    /// queue lock is held.
+    /// True while the XLA executor is reachable.
+    fn xla_enabled(&self) -> bool {
+        self.xla_on.load(Ordering::Relaxed)
+    }
+
+    /// Forward a job to the XLA executor; hands it back if the
+    /// executor is unreachable (revoked at shutdown, or died).
+    fn xla_send(&self, job: Job) -> std::result::Result<(), Job> {
+        match &*self.xla_tx.lock().unwrap() {
+            Some(tx) => tx.send(job).map_err(|e| e.0),
+            None => Err(job),
+        }
+    }
+
+    /// Push to shard `s` if it has room and the service is still
+    /// accepting. The shutdown re-check under the queue lock pairs
+    /// with the post-join queue drain in [`SortService::shutdown`]: a
+    /// push that acquires the lock after the drain released it also
+    /// sees the flag, so no job can slip into an abandoned queue. No
+    /// wakeup here — callers signal after placement so the hub lock
+    /// is never taken while a queue lock is held.
     fn push_to(&self, s: usize, job: Job) -> std::result::Result<(), Job> {
         let shard = &self.shards[s];
         let mut q = shard.queue.lock().unwrap();
-        if q.len() >= shard.capacity {
+        if q.len() >= shard.capacity || self.shutdown.load(Ordering::SeqCst) {
             return Err(job);
         }
         q.push_back(job);
@@ -142,7 +213,8 @@ impl Shared {
     /// Two-choice placement with full-scan fallback: sample two shards
     /// from the clock, try the less-loaded first, then the other, then
     /// every remaining shard — so rejection means *every* shard is at
-    /// capacity and the aggregate bound stays exact.
+    /// capacity (or the service is shutting down) and the aggregate
+    /// bound stays exact.
     fn try_place(&self, job: Job) -> std::result::Result<(), Job> {
         let n = self.shards.len();
         let t = self.clock.fetch_add(1, Ordering::Relaxed);
@@ -195,6 +267,120 @@ impl Shared {
         drop(self.hub.lock().unwrap());
         self.space_cv.notify_all();
     }
+
+    /// Take the optimistic admission counts. Pre-counting *before*
+    /// the job becomes poppable keeps `submitted ≥ completed` (and
+    /// `accepted ≥ completed` per tenant) true at every instant — a
+    /// worker can finish a job before any post-placement increment
+    /// would land.
+    fn count_admit(&self, tenant: Option<&Arc<TenantMetrics>>) {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tenant {
+            t.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a shed at admission: roll back the optimistic counts if
+    /// they were taken, bump the reject + tenant shed counters.
+    fn count_shed(&self, tenant: Option<&Arc<TenantMetrics>>, counted: bool) {
+        if counted {
+            self.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
+            if let Some(t) = tenant {
+                t.accepted.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tenant {
+            t.shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Backpressuring admission: park while every shard is full,
+    /// shed (resolving the handle to an error) if the service shuts
+    /// down first. Returns the handle in all cases — `submit` never
+    /// fails, it just may resolve unsuccessfully.
+    fn admit_blocking(&self, tenant: Option<&Arc<TenantMetrics>>, data: Vec<u32>) -> SortHandle {
+        let slot = Slot::new();
+        let handle = SortHandle::new(Arc::clone(&slot));
+        let mut job = Job { data, enqueued: Instant::now(), slot, tenant: tenant.cloned() };
+        self.count_admit(tenant);
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.count_shed(tenant, true);
+                drop(job); // drop guard closes the slot → handle errors
+                return handle;
+            }
+            job = match self.try_place(job) {
+                Ok(()) => break,
+                Err(j) => j,
+            };
+            // All shards full: sleep until a pop frees space. The
+            // counter increment *before* the retry under the hub lock
+            // pairs with signal_space's fast-path load (module docs);
+            // the retry itself closes the race against pops between
+            // the failed scan and the wait.
+            let guard = self.hub.lock().unwrap();
+            self.blocked_submitters.fetch_add(1, Ordering::SeqCst);
+            job = match self.try_place(job) {
+                Ok(()) => {
+                    self.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
+                    drop(guard);
+                    break;
+                }
+                Err(j) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        self.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
+                        drop(guard);
+                        self.count_shed(tenant, true);
+                        drop(j);
+                        return handle;
+                    }
+                    let guard = self.space_cv.wait(guard).unwrap();
+                    self.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
+                    drop(guard);
+                    j
+                }
+            };
+        }
+        self.signal_work();
+        handle
+    }
+
+    /// Shedding admission: place or hand the input straight back,
+    /// tagged with why ([`BusyReason`]) so callers know whether a
+    /// retry can ever succeed.
+    fn admit_try(
+        &self,
+        tenant: Option<&Arc<TenantMetrics>>,
+        data: Vec<u32>,
+    ) -> std::result::Result<SortHandle, Busy> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            self.count_shed(tenant, false);
+            return Err(Busy { data, reason: BusyReason::Shutdown });
+        }
+        let slot = Slot::new();
+        let handle = SortHandle::new(Arc::clone(&slot));
+        // Pre-count, roll back on rejection (see count_admit).
+        self.count_admit(tenant);
+        let job = Job { data, enqueued: Instant::now(), slot, tenant: tenant.cloned() };
+        match self.try_place(job) {
+            Ok(()) => {
+                self.signal_work();
+                Ok(handle)
+            }
+            Err(mut job) => {
+                self.count_shed(tenant, true);
+                // push_to also refuses once the shutdown flag is up;
+                // report that precisely so retry loops terminate.
+                let reason = if self.shutdown.load(Ordering::SeqCst) {
+                    BusyReason::Shutdown
+                } else {
+                    BusyReason::QueueFull
+                };
+                Err(Busy { data: std::mem::take(&mut job.data), reason })
+            }
+        }
+    }
 }
 
 /// The coordinator service.
@@ -202,6 +388,71 @@ pub struct SortService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     xla_thread: Option<JoinHandle<()>>,
+}
+
+/// A cheaply clonable, tenant-scoped handle to one [`SortService`] —
+/// the intended entry point for every in-process tenant sharing a
+/// service instance. Cloning copies two `Arc`s; clones (and clones of
+/// clones) all account to the same tenant, so a tenant can fan its
+/// submit side out across threads freely.
+///
+/// # Examples
+///
+/// ```
+/// use neonms::coordinator::SortService;
+///
+/// let svc = SortService::start_default().unwrap();
+/// let client = svc.client("tenant-a");
+///
+/// // Non-blocking submit: the handle resolves once a shard worker
+/// // completes the slot — poll it, await it, or park on it.
+/// let handle = match client.try_submit(vec![3, 1, 2]) {
+///     Ok(h) => h,
+///     Err(busy) => panic!("fresh service shed {} elements", busy.data.len()),
+/// };
+/// assert_eq!(handle.wait().unwrap(), vec![1, 2, 3]);
+///
+/// let snap = svc.metrics();
+/// assert_eq!(snap.tenants.len(), 1);
+/// assert_eq!(snap.tenants[0].name, "tenant-a");
+/// assert_eq!(snap.tenants[0].accepted, 1);
+/// assert_eq!(snap.tenants[0].completed, 1);
+/// svc.shutdown();
+/// ```
+#[derive(Clone)]
+pub struct SortClient {
+    shared: Arc<Shared>,
+    tenant: Arc<TenantMetrics>,
+}
+
+impl SortClient {
+    /// The tenant name this client accounts to.
+    pub fn tenant(&self) -> &str {
+        self.tenant.name()
+    }
+
+    /// Submit with backpressure: parks only while *every* shard is at
+    /// capacity, then returns a [`SortHandle`] that resolves when a
+    /// shard worker completes the request. If the service shuts down
+    /// first, the handle resolves to an error (and the request counts
+    /// as shed).
+    pub fn submit(&self, data: Vec<u32>) -> SortHandle {
+        self.shared.admit_blocking(Some(&self.tenant), data)
+    }
+
+    /// Non-blocking submit: returns [`Busy`] — handing the input
+    /// back untouched and bumping this tenant's `shed` counter — when
+    /// every shard is at capacity ([`BusyReason::QueueFull`], retry
+    /// later) or the service has shut down ([`BusyReason::Shutdown`],
+    /// stop retrying). Never parks, never spins.
+    pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Busy> {
+        self.shared.admit_try(Some(&self.tenant), data)
+    }
+
+    /// Point-in-time copy of this tenant's counters.
+    pub fn tenant_metrics(&self) -> TenantSnapshot {
+        self.tenant.snapshot()
+    }
 }
 
 impl SortService {
@@ -250,7 +501,9 @@ impl SortService {
             blocked_submitters: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             metrics,
-            xla_tx,
+            tenants: Mutex::new(Vec::new()),
+            xla_on: AtomicBool::new(xla_tx.is_some()),
+            xla_tx: Mutex::new(xla_tx),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -274,91 +527,90 @@ impl SortService {
 
     /// True if the XLA executor is running.
     pub fn xla_enabled(&self) -> bool {
-        self.shared.xla_tx.is_some()
+        self.shared.xla_enabled()
     }
 
-    /// Submit a sort request, blocking while every shard is full
-    /// (backpressure).
+    /// Register (or look up) the named tenant and return a client
+    /// bound to it. Calling twice with the same name returns clients
+    /// sharing one set of counters — a tenant is an identity, not a
+    /// connection.
+    pub fn client(&self, tenant: &str) -> SortClient {
+        let mut reg = self.shared.tenants.lock().unwrap();
+        let tenant = match reg.iter().find(|t| t.name() == tenant) {
+            Some(t) => Arc::clone(t),
+            None => {
+                let t = Arc::new(TenantMetrics::new(tenant));
+                reg.push(Arc::clone(&t));
+                t
+            }
+        };
+        SortClient { shared: Arc::clone(&self.shared), tenant }
+    }
+
+    /// Submit a sort request without tenant attribution, blocking
+    /// while every shard is full (backpressure). Prefer
+    /// [`SortService::client`] + [`SortClient::submit`] for anything
+    /// multi-tenant.
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
-        let (reply, rx) = mpsc::channel();
-        let mut job = Job { data, enqueued: Instant::now(), reply };
-        // Count before the job becomes poppable so `submitted ≥
-        // completed` holds at every instant (a worker can finish the
-        // job before a post-placement increment would land).
-        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        loop {
-            job = match self.shared.try_place(job) {
-                Ok(()) => break,
-                Err(j) => j,
-            };
-            // All shards full: sleep until a pop frees space. The
-            // counter increment *before* the retry under the hub lock
-            // pairs with signal_space's fast-path load (module docs);
-            // the retry itself closes the race against pops between
-            // the failed scan and the wait.
-            let guard = self.shared.hub.lock().unwrap();
-            self.shared.blocked_submitters.fetch_add(1, Ordering::SeqCst);
-            job = match self.shared.try_place(job) {
-                Ok(()) => {
-                    self.shared.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
-                    drop(guard);
-                    break;
-                }
-                Err(j) => {
-                    let guard = self.shared.space_cv.wait(guard).unwrap();
-                    self.shared.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
-                    drop(guard);
-                    j
-                }
-            };
-        }
-        self.shared.signal_work();
-        SortHandle { rx }
+        self.shared.admit_blocking(None, data)
     }
 
-    /// Non-blocking submit; `Err(data)` returns the input when every
-    /// shard is full (caller decides to retry/shed).
+    /// Non-blocking submit without tenant attribution; `Err(data)`
+    /// returns the input when every shard is full (caller decides to
+    /// retry/shed). The tenant-aware [`SortClient::try_submit`]
+    /// additionally reports *why* via [`Busy`].
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
-        let (reply, rx) = mpsc::channel();
-        // Pre-count (and roll back on rejection) so `submitted ≥
-        // completed` holds at every instant — see submit().
-        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        match self.shared.try_place(Job { data, enqueued: Instant::now(), reply }) {
-            Ok(()) => {
-                self.shared.signal_work();
-                Ok(SortHandle { rx })
-            }
-            Err(job) => {
-                self.shared.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
-                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(job.data)
-            }
-        }
+        self.shared.admit_try(None, data).map_err(|b| b.data)
     }
 
-    /// Current metrics, with per-shard counters aggregated in.
+    /// Current metrics, with per-shard counters aggregated in and
+    /// per-tenant snapshots (sorted by name) attached.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared
+        let mut snap = self
+            .shared
             .metrics
-            .snapshot_with_shards(self.shared.shards.iter().map(|s| &s.metrics))
+            .snapshot_with_shards(self.shared.shards.iter().map(|s| &s.metrics));
+        let mut tenants: Vec<TenantSnapshot> =
+            self.shared.tenants.lock().unwrap().iter().map(|t| t.snapshot()).collect();
+        tenants.sort_by(|a, b| a.name.cmp(&b.name));
+        snap.tenants = tenants;
+        snap
     }
 
     /// Drain the queues and stop all threads. Consumes the service;
     /// outstanding handles still receive their results first.
+    /// [`SortClient`]s may outlive the call: their submits are shed
+    /// from then on (see the module docs, "Shutdown").
     pub fn shutdown(self) {
         let SortService { shared, workers, xla_thread } = self;
         shared.shutdown.store(true, Ordering::SeqCst);
         drop(shared.hub.lock().unwrap());
         shared.work_cv.notify_all();
+        shared.space_cv.notify_all();
         for w in workers {
             let _ = w.join();
         }
-        // Dropping the last Shared Arc drops the xla sender, which
-        // disconnects the executor's channel and ends its loop.
-        drop(shared);
+        // Stragglers that raced the flag into a queue after the
+        // workers drained it: abandon them now — counted like any
+        // other never-started job, slots closed — so their waiters
+        // error out instead of parking forever and the accounting
+        // identity `accepted = completed + cancelled` still holds.
+        for shard in &shared.shards {
+            let drained: Vec<Job> = shard.queue.lock().unwrap().drain(..).collect();
+            for job in drained {
+                abandon(&shared.metrics, job);
+            }
+        }
+        // Revoke the xla sender explicitly: clients may keep `Shared`
+        // alive past this call, so the executor's disconnect must not
+        // wait for the last Arc. The executor drains already-forwarded
+        // jobs, then its recv fails and the loop ends.
+        shared.xla_on.store(false, Ordering::Relaxed);
+        drop(shared.xla_tx.lock().unwrap().take());
         if let Some(t) = xla_thread {
             let _ = t.join();
         }
+        drop(shared);
     }
 }
 
@@ -366,7 +618,7 @@ impl SortService {
 /// `batch_max - 1` consecutive fuse-eligible followers in the same
 /// wakeup. Returns `None` when the queue is empty.
 fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
-    let xla = shared.xla_tx.is_some();
+    let xla = shared.xla_enabled();
     let shard = &shared.shards[s];
     let batch = {
         let mut q = shard.queue.lock().unwrap();
@@ -386,10 +638,6 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
         batch
     };
     shared.signal_space();
-    if batch.len() > 1 {
-        shard.metrics.batches.fetch_add(1, Ordering::Relaxed);
-        shard.metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
-    }
     Some(batch)
 }
 
@@ -398,7 +646,7 @@ fn worker_loop(shared: &Shared, home: usize) {
     loop {
         // Own shard first, then steal round-robin from the others.
         if let Some(batch) = take_batch(shared, home) {
-            process_batch(shared, batch);
+            process_batch(shared, home, batch);
             continue;
         }
         let mut found = None;
@@ -406,12 +654,12 @@ fn worker_loop(shared: &Shared, home: usize) {
             let victim = (home + off) % n;
             if let Some(batch) = take_batch(shared, victim) {
                 shared.shards[home].metrics.steals.fetch_add(1, Ordering::Relaxed);
-                found = Some(batch);
+                found = Some((victim, batch));
                 break;
             }
         }
-        if let Some(batch) = found {
-            process_batch(shared, batch);
+        if let Some((victim, batch)) = found {
+            process_batch(shared, victim, batch);
             continue;
         }
         // Nothing anywhere: advertise as idle, re-check under the
@@ -436,20 +684,51 @@ fn worker_loop(shared: &Shared, home: usize) {
     }
 }
 
-/// Execute one dynamic batch: single jobs go through the size-tiered
-/// router; multi-job batches take the fused path — concatenate into
-/// one buffer with recorded offsets, sort all segments in a single
-/// [`ParallelNeonMergeSort::sort_segments`] pass, split back.
-fn process_batch(shared: &Shared, mut batch: Vec<Job>) {
-    if batch.len() == 1 {
-        return process(shared, batch.pop().expect("len checked"));
+/// Discard a job that will never be sorted — its handle was dropped
+/// before a worker reached it, or it was still queued when the
+/// service shut down: count the skip, then let the job's drop guard
+/// close the slot.
+fn abandon(m: &Metrics, job: Job) {
+    m.cancelled.fetch_add(1, Ordering::Relaxed);
+    if let Some(t) = &job.tenant {
+        t.cancelled.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Execute one dynamic batch taken from shard `src`: single jobs go
+/// through the size-tiered router; multi-job batches take the fused
+/// path — concatenate into one buffer with recorded offsets, sort all
+/// segments in a single [`ParallelNeonMergeSort::sort_segments_with`]
+/// pass, and complete each request's slot the moment its own segment
+/// is sorted.
+fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>) {
     let m = &shared.metrics;
-    let total: usize = batch.iter().map(|j| j.data.len()).sum();
+    // Shed cancelled jobs before paying for any sorting.
+    let mut live: Vec<Job> = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.slot.is_cancelled() {
+            abandon(m, job);
+        } else {
+            live.push(job);
+        }
+    }
+    if live.len() <= 1 {
+        if let Some(job) = live.pop() {
+            process(shared, job);
+        }
+        return;
+    }
+    // Count the fused batch only now — after the cancellation filter —
+    // so occupancy reflects jobs that actually went through a fused
+    // sort, attributed to the shard the batch was taken from.
+    let sm = &shared.shards[src].metrics;
+    sm.batches.fetch_add(1, Ordering::Relaxed);
+    sm.batched_jobs.fetch_add(live.len() as u64, Ordering::Relaxed);
+    let total: usize = live.iter().map(|j| j.data.len()).sum();
     let mut fused = Vec::with_capacity(total);
-    let mut bounds = Vec::with_capacity(batch.len() + 1);
+    let mut bounds = Vec::with_capacity(live.len() + 1);
     bounds.push(0);
-    for job in &batch {
+    for job in &live {
         fused.extend_from_slice(&job.data);
         bounds.push(fused.len());
         // Fused jobs still count under their size tier.
@@ -459,17 +738,39 @@ fn process_batch(shared: &Shared, mut batch: Vec<Job>) {
             m.route_single.fetch_add(1, Ordering::Relaxed);
         }
     }
+    // One cell per request; each is taken exactly once, by whichever
+    // batch-sort thread finishes that segment (uncontended in
+    // practice — the per-segment lock is the completion hand-off).
+    let cells: Vec<Mutex<Option<Job>>> = live.into_iter().map(|j| Mutex::new(Some(j))).collect();
     ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
-        .sort_segments(&mut fused, &bounds);
-    for (i, mut job) in batch.into_iter().enumerate() {
-        job.data.copy_from_slice(&fused[bounds[i]..bounds[i + 1]]);
-        finish(m, job);
-    }
+        .sort_segments_with(&mut fused, &bounds, |k, seg: &[u32]| {
+            if let Some(mut job) = cells[k].lock().unwrap().take() {
+                job.data.copy_from_slice(seg);
+                finish(m, job);
+            }
+        });
 }
 
 fn process(shared: &Shared, mut job: Job) {
     let m = &shared.metrics;
-    let route = shared.cfg.route(job.data.len(), shared.xla_tx.is_some());
+    if job.slot.is_cancelled() {
+        return abandon(m, job);
+    }
+    let mut route = shared.cfg.route(job.data.len(), shared.xla_enabled());
+    if route == Route::Xla {
+        // Forward; the executor thread counts route_xla (after its
+        // own cancellation check) and completes the slot. If it
+        // became unreachable since routing (revoked or died), fall
+        // back to the CPU route for this size — the arms below, so
+        // the fallback can never drift from the normal tiers.
+        match shared.xla_send(job) {
+            Ok(()) => return,
+            Err(j) => {
+                job = j;
+                route = shared.cfg.route(job.data.len(), false);
+            }
+        }
+    }
     match route {
         Route::Tiny => {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
@@ -489,26 +790,27 @@ fn process(shared: &Shared, mut job: Job) {
             ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
                 .sort(&mut job.data);
         }
-        Route::Xla => {
-            m.route_xla.fetch_add(1, Ordering::Relaxed);
-            // Forward; the executor thread completes the reply.
-            if let Some(tx) = &shared.xla_tx {
-                if tx.send(job).is_ok() {
-                    return;
-                }
-            }
-            unreachable!("route() returned Xla without an executor");
-        }
+        Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
     }
     finish(m, job);
 }
 
-fn finish(m: &Metrics, job: Job) {
-    m.elements.fetch_add(job.data.len() as u64, Ordering::Relaxed);
-    m.latency.record(job.enqueued.elapsed());
+/// Complete one job: record the metrics, then deposit the sorted data
+/// in the slot — which wakes the parked waiter and/or registered
+/// async waker. Counters land before the completion signal so a
+/// caller that observes the result also observes its own counts.
+fn finish(m: &Metrics, mut job: Job) {
+    let data = std::mem::take(&mut job.data);
+    let latency = job.enqueued.elapsed();
+    m.elements.fetch_add(data.len() as u64, Ordering::Relaxed);
+    m.latency.record(latency);
     m.completed.fetch_add(1, Ordering::Relaxed);
-    // Receiver may have given up; that's fine.
-    let _ = job.reply.send(job.data);
+    if let Some(t) = &job.tenant {
+        t.completed.fetch_add(1, Ordering::Relaxed);
+        t.latency.record(latency);
+    }
+    // Receiver may have given up; complete() discards in that case.
+    job.slot.complete(data);
 }
 
 /// Dedicated thread owning the (!Send) PJRT client + executables.
@@ -533,6 +835,14 @@ fn xla_executor(
     };
     let geometry = sorter.batch_geometry();
     while let Ok(mut job) = rx.recv() {
+        if job.slot.is_cancelled() {
+            abandon(&metrics, job);
+            continue;
+        }
+        // Count the route here, after the cancellation check, so
+        // route_xla only covers jobs the executor actually sorts —
+        // mirroring how the CPU paths count after their filters.
+        metrics.route_xla.fetch_add(1, Ordering::Relaxed);
         // Opportunistic dynamic batching through the accelerator: if a
         // batched artifact is compiled and this job fits one row, pull
         // whatever fitting jobs are already queued (non-blocking) and
@@ -543,8 +853,13 @@ fn xla_executor(
                 let mut oversized = Vec::new();
                 while group.len() < batch {
                     match rx.try_recv() {
-                        Ok(j) if j.data.len() <= block => group.push(j),
+                        Ok(j) if j.slot.is_cancelled() => abandon(&metrics, j),
+                        Ok(j) if j.data.len() <= block => {
+                            metrics.route_xla.fetch_add(1, Ordering::Relaxed);
+                            group.push(j);
+                        }
                         Ok(j) => {
+                            metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                             oversized.push(j);
                             break;
                         }

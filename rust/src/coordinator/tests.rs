@@ -1,5 +1,7 @@
 //! Service-level tests: every request completes exactly once with the
-//! oracle result; queue bounds hold under overload; shutdown drains.
+//! oracle result; queue bounds hold under overload; shutdown drains;
+//! tenant clients account their accepted/shed/completed/cancelled
+//! requests; dropped handles cancel without wedging workers.
 
 use super::*;
 use crate::testutil::{assert_sorted, Rng};
@@ -301,4 +303,219 @@ fn xla_route_end_to_end() {
     assert_eq!(m.route_xla, 1, "should have routed via XLA");
     assert_eq!(m.completed, 1);
     svc.shutdown();
+}
+
+#[test]
+fn concurrent_tenants_through_cloned_clients() {
+    // Four tenants, each submitting from its own thread through a
+    // cloned SortClient; per-tenant counters must attribute exactly.
+    let cfg = CoordinatorConfig { workers: 4, shards: 4, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let client = svc.client(&format!("tenant-{t}"));
+        joins.push(std::thread::spawn(move || {
+            let clone = client.clone(); // same tenant, shared counters
+            let mut rng = Rng::new(500 + t);
+            let mut pending = Vec::new();
+            for i in 0..20usize {
+                let len = [5usize, 80, 900, 6000][i % 4] + rng.below(7);
+                let data = rng.vec_u32(len);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                let c = if i % 2 == 0 { &client } else { &clone };
+                pending.push((c.submit(data), expect));
+            }
+            for (h, expect) in pending {
+                assert_eq!(h.wait().unwrap(), expect);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 80);
+    assert_eq!(m.tenants.len(), 4, "one snapshot per registered tenant");
+    for (i, t) in m.tenants.iter().enumerate() {
+        assert_eq!(t.name, format!("tenant-{i}"), "tenants sorted by name");
+        assert_eq!(t.accepted, 20);
+        assert_eq!(t.completed, 20);
+        assert_eq!(t.shed, 0);
+        assert_eq!(t.cancelled, 0);
+        assert!(t.p99_us >= t.p50_us);
+        assert!(t.mean_latency_us > 0.0);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn try_submit_sheds_per_tenant() {
+    // 0 workers → nothing drains → queue fills to capacity exactly,
+    // and every further try_submit is shed against its tenant.
+    let cfg = CoordinatorConfig { workers: 0, queue_capacity: 4, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let greedy = svc.client("greedy");
+    let idle = svc.client("idle");
+    let mut handles = Vec::new();
+    let mut shed = 0;
+    for _ in 0..10 {
+        match greedy.try_submit(vec![3, 1, 2]) {
+            Ok(h) => handles.push(h),
+            Err(busy) => {
+                assert_eq!(busy.data, vec![3, 1, 2], "shed hands the input back");
+                assert_eq!(busy.reason, BusyReason::QueueFull, "overload, not shutdown");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(handles.len(), 4);
+    assert_eq!(shed, 6);
+    let m = svc.metrics();
+    assert_eq!(m.rejected, 6);
+    assert_eq!(m.tenants.len(), 2);
+    assert_eq!(m.tenants[0].name, "greedy");
+    assert_eq!(m.tenants[0].accepted, 4);
+    assert_eq!(m.tenants[0].shed, 6);
+    assert_eq!(m.tenants[0].completed, 0);
+    assert_eq!(m.tenants[1].name, "idle");
+    assert_eq!(m.tenants[1].accepted, 0);
+    assert_eq!(m.tenants[1].shed, 0);
+    assert_eq!(greedy.tenant_metrics().shed, 6, "client-side snapshot agrees");
+    drop(idle);
+    drop(handles);
+    svc.shutdown();
+}
+
+#[test]
+fn dropped_handle_cancellation_does_not_wedge_worker() {
+    // One worker, one shard → strict FIFO: a big job pins the worker
+    // while doomed jobs queue behind it; their handles are dropped
+    // before the worker reaches them, so it must skip those sorts and
+    // still serve the final probe.
+    let cfg =
+        CoordinatorConfig { workers: 1, shards: 1, batch_max: 1, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("dropper");
+    let mut rng = Rng::new(11);
+    let big = svc.submit(rng.vec_u32(2_000_000));
+    for _ in 0..16 {
+        let h = client.submit(rng.vec_u32(50_000));
+        drop(h); // cancel before the worker can start it
+    }
+    let probe = client.submit(rng.vec_u32(1000));
+    assert_sorted(&big.wait().unwrap(), "big");
+    assert_sorted(&probe.wait().unwrap(), "probe");
+    let m = svc.metrics();
+    assert_eq!(m.submitted, 18);
+    assert_eq!(m.completed + m.cancelled, 18, "every job resolved exactly once");
+    assert!(m.cancelled >= 1, "worker must skip dropped-handle jobs");
+    let t = &m.tenants[0];
+    assert_eq!(t.cancelled + t.completed, 17);
+    svc.shutdown();
+}
+
+#[test]
+fn cancelled_jobs_filtered_from_fused_batches() {
+    // Same shape but with batching on: cancelled jobs must be shed
+    // before the fused buffer is built, live ones still complete.
+    let cfg =
+        CoordinatorConfig { workers: 1, shards: 1, batch_max: 16, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("mixed");
+    let mut rng = Rng::new(12);
+    let big = svc.submit(rng.vec_u32(2_000_000)); // pin the worker
+    let mut keep = Vec::new();
+    for i in 0..32 {
+        let data = rng.vec_u32(200);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let h = client.submit(data);
+        if i % 2 == 0 {
+            keep.push((h, expect)); // odd-indexed handles drop right here
+        }
+    }
+    // FIFO probe: once it completes, every earlier job has been
+    // counted (abandons happen synchronously at batch pop).
+    let probe = client.submit(rng.vec_u32(100));
+    assert_sorted(&big.wait().unwrap(), "big");
+    for (h, expect) in keep {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    assert_sorted(&probe.wait().unwrap(), "probe");
+    let m = svc.metrics();
+    assert_eq!(m.completed + m.cancelled, 34);
+    assert!(m.completed >= 18, "big + the 16 kept jobs + probe");
+    svc.shutdown();
+}
+
+#[test]
+fn handle_poll_and_is_ready() {
+    let svc = SortService::start_default().unwrap();
+    let mut h = svc.submit(vec![4u32, 2, 3, 1]);
+    // Poll to completion — never blocks.
+    let result = loop {
+        if let Some(r) = h.try_take() {
+            break r.unwrap();
+        }
+        std::thread::yield_now();
+    };
+    assert_eq!(result, vec![1, 2, 3, 4]);
+    let mut ready = svc.submit(vec![2u32, 1]);
+    while !ready.is_ready() {
+        std::thread::yield_now();
+    }
+    assert_eq!(ready.try_take().unwrap().unwrap(), vec![1, 2], "ready ⇒ take succeeds");
+    svc.shutdown();
+}
+
+#[test]
+fn handle_is_a_future() {
+    // Minimal std-only executor: park the thread, wake via unpark.
+    struct ThreadWaker(std::thread::Thread);
+    impl std::task::Wake for ThreadWaker {
+        fn wake(self: std::sync::Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+    fn block_on<F: std::future::Future>(fut: F) -> F::Output {
+        let waker = std::task::Waker::from(std::sync::Arc::new(ThreadWaker(
+            std::thread::current(),
+        )));
+        let mut cx = std::task::Context::from_waker(&waker);
+        let mut fut = std::pin::pin!(fut);
+        loop {
+            match fut.as_mut().poll(&mut cx) {
+                std::task::Poll::Ready(v) => return v,
+                std::task::Poll::Pending => std::thread::park(),
+            }
+        }
+    }
+    let svc = SortService::start_default().unwrap();
+    let client = svc.client("async");
+    let sorted = block_on(client.submit(vec![9u32, 5, 7])).unwrap();
+    assert_eq!(sorted, vec![5, 7, 9]);
+    assert_eq!(client.tenant_metrics().completed, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn submits_after_shutdown_resolve_to_errors() {
+    // Clients may outlive the service: submits are shed, handles
+    // resolve to errors, nothing parks forever.
+    let svc = SortService::start_default().unwrap();
+    let client = svc.client("late");
+    svc.shutdown();
+    match client.try_submit(vec![1, 2]) {
+        Err(busy) => {
+            assert_eq!(busy.reason, BusyReason::Shutdown, "permanent shed, stop retrying");
+            assert_eq!(busy.data, vec![1, 2]);
+        }
+        Ok(_) => panic!("try_submit must shed after shutdown"),
+    }
+    let h = client.submit(vec![2, 1]);
+    assert!(h.wait().is_err(), "blocking submit resolves to an error after shutdown");
+    let snap = client.tenant_metrics();
+    assert_eq!(snap.shed, 2);
+    assert_eq!(snap.accepted, 0);
 }

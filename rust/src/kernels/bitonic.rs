@@ -5,7 +5,25 @@
 //! ≥ 4 are *register-level* — one `vmin`+`vmax` pair per register pair,
 //! no shuffles; the last two stages (distance 2 and 1) are
 //! *intra-register* and each cost one shuffle + min + max + blend.
-//! This is the paper's "vectorized bitonic" merger (Table 3 row 1).
+//! This is the paper's "vectorized bitonic" merger (Table 3 row 1) —
+//! the fully *symmetric* implementation the hybrid merger
+//! ([`super::hybrid`]) is the asymmetric counterpoint to: here the
+//! whole network is vectorized uniformly, which is exactly what makes
+//! its structural regularity pay (every half-cleaner stage is the
+//! same two-op pattern over register pairs).
+//!
+//! # Invariants
+//!
+//! * [`bitonic_merge_regs`] requires the concatenation of all lanes
+//!   (register order, then lane order) to be **bitonic** (ascending
+//!   then descending) and `regs.len()` to be a power of two; it
+//!   leaves the concatenation sorted ascending.
+//! * [`merge_sorted_regs`] requires `regs[..h]` and `regs[h..]`
+//!   (`h = len/2`) each sorted ascending; [`reverse_regs`] on the
+//!   upper half forms the bitonic input. Stages never move data
+//!   between the two halves of a half-cleaner except through
+//!   `min`/`max`, so the merge is oblivious — same instruction stream
+//!   for every input, no branches to mispredict.
 
 use crate::simd::{Lane, V128};
 

@@ -16,6 +16,26 @@
 //! K = 32, where the serial half's 32 temporaries exceed the register
 //! file and spill to the stack — we reproduce exactly that mechanism:
 //! the scalar buffer below *is* a stack spill once K is large.
+//!
+//! # Invariants
+//!
+//! * [`hybrid_merge_sorted_regs`] has the same contract as the
+//!   symmetric merger: both register halves sorted ascending on
+//!   entry, whole array sorted on exit; `regs.len()` a power of two
+//!   in `2..=2·MAX_K/W`.
+//! * After the first half-cleaner the two K-element halves are
+//!   **data-independent** — the property the whole kernel rests on:
+//!   the serial and vector halves may execute in any interleaving,
+//!   and the out-of-order core exploits exactly that.
+//! * Every fixed-size scalar/flight buffer in this module and in
+//!   [`super::runmerge`] holds at most [`MAX_K`] elements. That bound
+//!   is *proved at monomorphization time*: each kernel instantiated
+//!   over `N` registers evaluates [`RegsFitMaxK::OK`]
+//!   (`RegsFitMaxK::<N>::OK`), a const assertion of
+//!   `N·W/2 ≤ MAX_K`. Widening [`super::MergeWidth`]
+//!   past 2×32 without growing `MAX_K` therefore fails to *compile*
+//!   — the register budget can never silently become a buffer
+//!   overflow.
 
 use super::bitonic::{bitonic_merge_regs, reverse_regs};
 use crate::simd::{Lane, V128, W};

@@ -9,10 +9,22 @@
 //! 2×K register merge is either the fully vectorized or the hybrid
 //! bitonic network — Table 3's comparison.
 //!
-//! Invariant: everything already emitted ≤ everything in flight and
-//! everything not yet consumed; the in-flight block and both tails are
-//! each sorted. Tails shorter than K drain through the branchless
-//! serial path.
+//! # Invariants
+//!
+//! * Everything already emitted ≤ everything in flight ≤ nothing —
+//!   i.e. ≤ every element not yet consumed from either run; the
+//!   in-flight block and both input tails are each sorted at every
+//!   iteration.
+//! * The refill always takes from the run with the **smaller head**
+//!   (one scalar compare, the loop's only data-dependent decision);
+//!   when that run cannot supply a full K-block the vectorized loop
+//!   must stop — its short head must not be overtaken — and the
+//!   serial 3-way drain finishes (tails shorter than K never enter
+//!   the register kernel).
+//! * The flight/staging buffers are sized by
+//!   [`super::hybrid::MAX_K`] and guarded by the
+//!   [`RegsFitMaxK`] monomorphization-time assertion, so every
+//!   [`MergeWidth`] this type accepts provably fits them.
 
 use super::bitonic::merge_sorted_regs;
 use super::hybrid::{hybrid_merge_sorted_regs, RegsFitMaxK, MAX_K};

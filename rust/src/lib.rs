@@ -23,6 +23,43 @@
 //! (the paper's Table 2 R-sweep) are additionally modeled by
 //! [`regmachine`], an abstract register-file simulator with an explicit
 //! spill cost model. See DESIGN.md §Hardware-Adaptation.
+//!
+//! # Paper → code map
+//!
+//! The full map, with the figure/table cross-references, lives in
+//! `docs/ARCHITECTURE.md`; the short version:
+//!
+//! | Paper concept | Module |
+//! |---|---|
+//! | §2.3 / Table 1 column-sort networks (incl. the asymmetric `16*`) | [`sortnet`] |
+//! | §2.3 / Fig. 2 in-register sort (load, sort, transpose, merge) | [`kernels::inregister`] |
+//! | §2.4 / Fig. 4 vectorized bitonic merger | [`kernels::bitonic`] |
+//! | §2.4 / Fig. 3b serial branchless (`csel`) merge | [`kernels::serial`] |
+//! | §2.4 hybrid merger + the `MAX_K` register budget | [`kernels::hybrid`] |
+//! | §2.1 streaming merge of sorted runs | [`kernels::runmerge`] |
+//! | §2.1/§3.2 merge-path partitioning | [`mergepath`] |
+//! | §2.1 single-/multi-thread NEON-MS | [`sort`] |
+//! | Tables/figures regeneration | [`bench`], `benches/` |
+//!
+//! # The service layer
+//!
+//! [`coordinator`] serves the sorter to many in-process tenants:
+//! [`coordinator::SortService`] owns sharded bounded queues, workers
+//! and the dynamic batcher; each tenant holds a clonable
+//! [`coordinator::SortClient`] whose submits return non-blocking
+//! [`coordinator::SortHandle`]s (poll, `.await`, or park), with
+//! per-tenant shed/latency accounting in
+//! [`coordinator::MetricsSnapshot`].
+//!
+//! # Quickstart
+//!
+//! ```
+//! use neonms::sort::NeonMergeSort;
+//!
+//! let mut data = vec![170u32, 45, 75, 90, 802, 24, 2, 66];
+//! NeonMergeSort::paper_default().sort(&mut data);
+//! assert_eq!(data, [2, 24, 45, 66, 75, 90, 170, 802]);
+//! ```
 
 pub mod simd;
 pub mod sortnet;

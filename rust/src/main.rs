@@ -7,8 +7,9 @@
 //! neonms bench <table1|table2|table3|fig5|ablations|all> [--reps R] [--max-n N]
 //! neonms verify-networks
 //! neonms regmachine [--phys F]
-//! neonms serve-demo [--requests N] [--workers W] [--shards S]
-//!                   [--batch-max B] [--fuse-cutoff F] [--xla]
+//! neonms serve-demo [--requests N] [--tenants T] [--workers W]
+//!                   [--shards S] [--batch-max B] [--fuse-cutoff F]
+//!                   [--xla]
 //! ```
 
 use neonms::bench::tables;
@@ -188,6 +189,7 @@ fn cmd_regmachine(flags: &Flags) {
 
 fn cmd_serve(flags: &Flags) {
     let n_requests = flags.get_usize("requests", 200);
+    let tenants = flags.get_usize("tenants", 4).max(1);
     let artifacts = flags
         .has("xla")
         .then(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
@@ -202,25 +204,38 @@ fn cmd_serve(flags: &Flags) {
     };
     let svc = SortService::start(cfg.clone(), artifacts).expect("service start");
     println!(
-        "service up ({} workers, {} shards, batch_max={}, xla={})",
+        "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants)",
         cfg.workers,
         cfg.shards,
         cfg.batch_max,
-        svc.xla_enabled()
+        svc.xla_enabled(),
+        tenants
     );
-    let mut rng = neonms::testutil::Rng::new(7);
+    // One client per tenant, each submitting from its own thread
+    // through the non-blocking handle API.
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..n_requests)
-        .map(|i| {
-            let len = [32usize, 1000, 8192, 100_000][i % 4] + rng.below(64);
-            let data = rng.vec_u32(len);
-            svc.submit(data)
-        })
-        .collect();
-    let mut total = 0usize;
-    for h in handles {
-        total += h.wait().expect("response").len();
-    }
+    let total: usize = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..tenants)
+            .map(|t| {
+                let client = svc.client(&format!("tenant-{t}"));
+                let share = n_requests / tenants + usize::from(t < n_requests % tenants);
+                s.spawn(move || {
+                    let mut rng = neonms::testutil::Rng::new(7 + t as u64);
+                    let handles: Vec<_> = (0..share)
+                        .map(|i| {
+                            let len = [32usize, 1000, 8192, 100_000][i % 4] + rng.below(64);
+                            client.submit(rng.vec_u32(len))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.wait().expect("response").len())
+                        .sum::<usize>()
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("tenant thread")).sum()
+    });
     let dt = t0.elapsed();
     let m = svc.metrics();
     println!(
@@ -242,5 +257,12 @@ fn cmd_serve(flags: &Flags) {
         m.p50_us,
         m.p99_us
     );
+    println!("per-tenant:");
+    for t in &m.tenants {
+        println!(
+            "  {:10} accepted={:<5} shed={:<4} completed={:<5} p50 {}µs p99 {}µs",
+            t.name, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
+        );
+    }
     svc.shutdown();
 }

@@ -8,10 +8,11 @@
 //! x86-64 (16 XMM registers), so absolute spill points differ from
 //! FT2000+; this module reproduces the paper's accounting analytically:
 //! lower the in-register sort to a virtual-register program
-//! ([`program`]), execute it on an abstract machine with `F` physical
-//! registers and an LRU allocator ([`machine`]), and report vector
-//! ops, shuffles, spills, and modeled cycles for any (R, network, X,
-//! F) point — including the NEON F=32 geometry we cannot measure.
+//! ([`InRegisterProgram`]), execute it on an abstract machine with
+//! `F` physical registers and an LRU allocator ([`Machine`]), and
+//! report vector ops, shuffles, spills, and modeled cycles for any
+//! (R, network, X, F) point — including the NEON F=32 geometry we
+//! cannot measure.
 
 mod machine;
 mod program;

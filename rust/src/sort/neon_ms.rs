@@ -78,8 +78,23 @@ impl NeonMergeSort {
 
     /// Sort `data` ascending in place. `O(n)` auxiliary memory (one
     /// ping-pong buffer), `O(n log n)` time. Cache-blocked: segments
-    /// of [`Self::SEGMENT`] elements are fully sorted with in-cache
-    /// merge passes first, then the outer passes merge segments.
+    /// of `SEGMENT` elements are fully sorted with in-cache merge
+    /// passes first, then the outer passes merge segments.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use neonms::sort::NeonMergeSort;
+    ///
+    /// let sorter = NeonMergeSort::paper_default();
+    /// let mut data: Vec<u32> = (0..500).rev().collect();
+    /// sorter.sort(&mut data); // 500 > one 64-element block → vector path
+    /// assert_eq!(data, (0..500).collect::<Vec<u32>>());
+    ///
+    /// let mut tiny = vec![9u32, 3, 7];
+    /// sorter.sort(&mut tiny); // below one block → insertion sort
+    /// assert_eq!(tiny, [3, 7, 9]);
+    /// ```
     pub fn sort<T: Lane>(&self, data: &mut [T]) {
         let n = data.len();
         if n <= 1 {

@@ -69,7 +69,35 @@ impl ParallelNeonMergeSort {
     ///
     /// `bounds` must start at 0, end at `data.len()`, and be
     /// non-decreasing.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use neonms::sort::ParallelNeonMergeSort;
+    ///
+    /// let mut fused = vec![3u32, 1, 2, 9, 7, 8];
+    /// ParallelNeonMergeSort::with_threads(2).sort_segments(&mut fused, &[0, 3, 6]);
+    /// assert_eq!(fused, [1, 2, 3, 7, 8, 9]); // each segment sorted on its own
+    /// ```
     pub fn sort_segments<T: Lane>(&self, data: &mut [T], bounds: &[usize]) {
+        self.sort_segments_with(data, bounds, |_, _| {});
+    }
+
+    /// [`Self::sort_segments`] with a completion hook: `on_sorted(i,
+    /// segment)` fires on the sorting thread the moment segment `i`
+    /// is fully sorted, while the rest of the batch may still be in
+    /// flight. The service's dynamic batcher uses this to complete
+    /// each fused request's handle as soon as *its* data is ready
+    /// instead of when the whole batch finishes.
+    ///
+    /// The hook is called exactly once per segment, from whichever
+    /// worker sorted it (hence `Sync`); segment indices follow
+    /// `bounds` order but completion order is unspecified.
+    pub fn sort_segments_with<T, F>(&self, data: &mut [T], bounds: &[usize], on_sorted: F)
+    where
+        T: Lane,
+        F: Fn(usize, &[T]) + Sync,
+    {
         assert!(
             !bounds.is_empty() && bounds[0] == 0 && *bounds.last().unwrap() == data.len(),
             "bounds must cover data exactly"
@@ -84,7 +112,7 @@ impl ParallelNeonMergeSort {
             rest = tail;
             views.push(head);
         }
-        self.sort_batch(&mut views);
+        self.sort_batch_with(&mut views, on_sorted);
     }
 
     /// Multi-slice batch entry point: sort many independent slices in
@@ -92,18 +120,32 @@ impl ParallelNeonMergeSort {
     /// list by a single `thread::scope`. Batches whose total is below
     /// the parallel threshold are sorted inline without spawning.
     pub fn sort_batch<T: Lane>(&self, slices: &mut [&mut [T]]) {
+        self.sort_batch_with(slices, |_, _| {});
+    }
+
+    /// [`Self::sort_batch`] with a per-slice completion hook — the
+    /// slice-of-slices twin of [`Self::sort_segments_with`], same
+    /// contract: `on_sorted(k, slice)` fires exactly once per slice,
+    /// on the thread that sorted it, as soon as it is sorted.
+    pub fn sort_batch_with<T, F>(&self, slices: &mut [&mut [T]], on_sorted: F)
+    where
+        T: Lane,
+        F: Fn(usize, &[T]) + Sync,
+    {
         let n = slices.len();
         let total: usize = slices.iter().map(|s| s.len()).sum();
         let t = self.threads.min(n);
         if t <= 1 || total < PARALLEL_MIN_N {
-            for sl in slices.iter_mut() {
+            for (k, sl) in slices.iter_mut().enumerate() {
                 self.single.sort(sl);
+                on_sorted(k, &**sl);
             }
             return;
         }
         let cursor = AtomicUsize::new(0);
         let ptr = OutPtr(slices.as_mut_ptr());
         let single = &self.single;
+        let on_sorted = &on_sorted;
         std::thread::scope(|s| {
             for _ in 0..t {
                 let cursor = &cursor;
@@ -118,12 +160,24 @@ impl ParallelNeonMergeSort {
                     // construction.
                     let sl: &mut &mut [T] = unsafe { &mut *ptr.0.add(k) };
                     single.sort(sl);
+                    on_sorted(k, &**sl);
                 });
             }
         });
     }
 
     /// Sort `data` ascending in place.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use neonms::sort::ParallelNeonMergeSort;
+    ///
+    /// let sorter = ParallelNeonMergeSort::with_threads(2);
+    /// let mut data: Vec<u32> = (0..10_000).rev().collect();
+    /// sorter.sort(&mut data);
+    /// assert!(data.windows(2).all(|w| w[0] <= w[1]));
+    /// ```
     pub fn sort<T: Lane>(&self, data: &mut [T]) {
         let n = data.len();
         let t = self.threads;

@@ -23,6 +23,20 @@
 //!
 //! Every constructor is checked by the zero-one-principle verifier
 //! ([`Network::verify_zero_one`], exhaustive over all `2^n` patterns).
+//!
+//! # Invariants
+//!
+//! * A [`Network`] is a *fixed*, data-oblivious comparator sequence:
+//!   applying it executes every comparator in order regardless of
+//!   input — which is precisely why comparator *count*, not
+//!   structure, is the column-sort cost (the asymmetric-best
+//!   argument above).
+//! * Every comparator `(i, j)` has `i < j` and orders min→`i`,
+//!   max→`j`; sorting networks sort ascending.
+//! * Sorting networks satisfy the zero-one principle (verified
+//!   exhaustively in tests for every generated size); merging
+//!   networks additionally assume each input half is sorted and are
+//!   verified by [`Network::verify_bitonic_merge`].
 
 mod network;
 pub mod gen;
