@@ -1,21 +1,47 @@
 //! Bench: ablations of the design choices DESIGN.md §5 calls out —
 //! column-network family, merge-kernel width, input distribution, and
-//! the cooperative merge-path strategy.
+//! the cooperative merge-path strategy — plus the width × K × impl
+//! sweep, whose results are recorded to `BENCH_width_sweep.json` so
+//! the perf trajectory is comparable across PRs.
 //! Run via `cargo bench --bench ablations`.
+//!
+//! Env knobs:
+//! * `NEONMS_BENCH_REPS` — repetitions per point (default 10).
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode: small n, 2 reps, width
+//!   sweep only (the recorded artifact still has every point).
+//! * `NEONMS_BENCH_OUT` — where to write the sweep JSON (default
+//!   `../BENCH_width_sweep.json`, i.e. the repo root when run via
+//!   `cargo bench` from `rust/`).
 
 fn main() {
+    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     let reps = std::env::var("NEONMS_BENCH_REPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(10);
-    let n = 1 << 20;
-    print!("{}", neonms::bench::tables::table1());
-    println!();
-    print!("{}", neonms::bench::tables::ablation_column_network(n, reps));
-    println!();
-    print!("{}", neonms::bench::tables::ablation_merge_width(n, reps));
-    println!();
-    print!("{}", neonms::bench::tables::ablation_workloads(n, reps));
-    println!();
-    print!("{}", neonms::bench::tables::ablation_parallel_merge(4 << 20, 4, reps.min(5)));
+        .unwrap_or(if smoke { 2 } else { 10 });
+    let n = if smoke { 1 << 16 } else { 1 << 20 };
+
+    if !smoke {
+        print!("{}", neonms::bench::tables::table1());
+        println!();
+        print!("{}", neonms::bench::tables::ablation_column_network(n, reps));
+        println!();
+        print!("{}", neonms::bench::tables::ablation_merge_width(n, reps));
+        println!();
+        print!("{}", neonms::bench::tables::ablation_workloads(n, reps));
+        println!();
+        print!("{}", neonms::bench::tables::ablation_parallel_merge(4 << 20, 4, reps.min(5)));
+        println!();
+    }
+
+    let (table, points) = neonms::bench::tables::width_sweep(n, reps);
+    print!("{table}");
+    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
+    let json = neonms::bench::tables::width_sweep_json(&points, n, reps, source);
+    let out = std::env::var("NEONMS_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_width_sweep.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("width sweep recorded to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

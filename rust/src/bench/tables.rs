@@ -10,6 +10,7 @@ use crate::kernels::inregister::{table2_configs, ColumnNetwork, InRegisterSorter
 use crate::kernels::runmerge::{table3_impls, RunMerger};
 use crate::kernels::{bitonic, hybrid, MergeImpl, MergeWidth};
 use crate::regmachine;
+use crate::simd::VectorWidth;
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortConfig};
 use crate::sortnet::gen;
 
@@ -132,15 +133,24 @@ pub fn table3(reps: usize) -> (String, Vec<(String, usize, f64)>) {
 }
 
 fn bench_merge_streaming(imp: MergeImpl, width: MergeWidth, reps: usize) -> BenchResult {
-    let half = 128 * 1024;
+    bench_merge_streaming_at(VectorWidth::V128, imp, width, 128 * 1024, reps)
+}
+
+fn bench_merge_streaming_at(
+    vector: VectorWidth,
+    imp: MergeImpl,
+    width: MergeWidth,
+    half: usize,
+    reps: usize,
+) -> BenchResult {
     let mut a = Workload::Uniform.generate(half, 11);
     let mut b = Workload::Uniform.generate(half, 12);
     a.sort_unstable();
     b.sort_unstable();
-    let merger = RunMerger { width, imp };
+    let merger = RunMerger { width, imp, vector };
     let mut out_buf = vec![0u32; 2 * half];
     bench(
-        format!("stream {imp:?} 2x{}", width.k()),
+        format!("stream {} {imp:?} 2x{}", vector.name(), width.k()),
         2 * half,
         2,
         reps,
@@ -266,6 +276,105 @@ pub fn ablation_workloads(n: usize, reps: usize) -> String {
         let res = bench("d", n, 1, reps, |_| base.clone(), |mut d| s.sort(&mut d));
         out.push_str(&format!("| {:9} | {:7.2} ME/s |\n", w.name(), res.me_per_sec()));
     }
+    out
+}
+
+/// One measured point of the width × K × impl sweep.
+#[derive(Clone, Debug)]
+pub struct WidthSweepPoint {
+    /// Register width label (`"V128"` / `"V256"`).
+    pub vector: &'static str,
+    /// Elements per kernel side (K).
+    pub k: usize,
+    /// Kernel implementation label (`"Hybrid"` / `"Vectorized"`).
+    pub imp: &'static str,
+    /// Streaming 2-run merge rate, elements/µs (Table 3's unit).
+    pub stream_elems_per_us: f64,
+    /// Full-sort rate, ME/s (Fig. 5's unit).
+    pub fullsort_me_per_s: f64,
+}
+
+/// The width sweep the ROADMAP's "wider lanes" item asked for:
+/// every [`VectorWidth`] × [`MergeWidth`] × register-kernel
+/// [`MergeImpl`], each measured two ways — the streaming 2-run merge
+/// kernel in isolation and the full sort end-to-end. `K4 × V256` is
+/// skipped (one 8-lane register cannot hold two 4-element runs; the
+/// merger folds it to `V128`, which the sweep measures anyway).
+pub fn width_sweep(n: usize, reps: usize) -> (String, Vec<WidthSweepPoint>) {
+    let mut rows = Vec::new();
+    let mut out = String::from(
+        "Width sweep: register width × K × impl — streaming merge (elements/µs) \
+         and full sort (ME/s)\n| vector | 2xK | impl | stream e/µs | sort ME/s |\n",
+    );
+    let base = Workload::Uniform.generate(n, 13);
+    for vector in VectorWidth::all() {
+        for width in MergeWidth::all() {
+            if width.k() < vector.lanes() {
+                continue; // K4 × V256 folds to V128 (measured above)
+            }
+            let impls = [("Hybrid", MergeImpl::Hybrid), ("Vectorized", MergeImpl::Vectorized)];
+            for (label, imp) in impls {
+                let stream = bench_merge_streaming_at(vector, imp, width, n / 2, reps);
+                let s = NeonMergeSort::new(SortConfig {
+                    merge_width: width,
+                    merge_impl: imp,
+                    vector_width: vector,
+                    ..Default::default()
+                });
+                let full = bench("ws", n, 1, reps, |_| base.clone(), |mut d| s.sort(&mut d));
+                out.push_str(&format!(
+                    "| {:6} | {:3} | {label:10} | {:11.1} | {:9.2} |\n",
+                    vector.name(),
+                    width.k(),
+                    stream.elems_per_us(),
+                    full.me_per_sec()
+                ));
+                rows.push(WidthSweepPoint {
+                    vector: vector.name(),
+                    k: width.k(),
+                    imp: label,
+                    stream_elems_per_us: stream.elems_per_us(),
+                    fullsort_me_per_s: full.me_per_sec(),
+                });
+            }
+        }
+    }
+    (out, rows)
+}
+
+/// Serialize a width sweep to the `BENCH_width_sweep.json` schema
+/// (hand-rolled — no serde offline). `source` records how the numbers
+/// were produced so CI artifacts and locally recorded baselines are
+/// distinguishable.
+pub fn width_sweep_json(points: &[WidthSweepPoint], n: usize, reps: usize, source: &str) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"width_sweep\",\n");
+    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
+    out.push_str(&format!("  \"n\": {n},\n  \"reps\": {reps},\n"));
+    out.push_str(&format!("  \"source\": \"{source}\",\n"));
+    let best = points
+        .iter()
+        .max_by(|a, b| a.fullsort_me_per_s.partial_cmp(&b.fullsort_me_per_s).unwrap());
+    if let Some(b) = best {
+        out.push_str(&format!(
+            "  \"best_fullsort\": {{\"vector\": \"{}\", \"k\": {}, \"impl\": \"{}\"}},\n",
+            b.vector, b.k, b.imp
+        ));
+    }
+    out.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"vector\": \"{}\", \"k\": {}, \"impl\": \"{}\", \
+             \"stream_elems_per_us\": {:.2}, \"fullsort_me_per_s\": {:.3}}}{}\n",
+            p.vector,
+            p.k,
+            p.imp,
+            p.stream_elems_per_us,
+            p.fullsort_me_per_s,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
     out
 }
 

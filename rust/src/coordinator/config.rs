@@ -1,5 +1,7 @@
 //! Coordinator configuration and routing policy.
 
+use crate::sort::SortConfig;
+
 /// Where a request executes — chosen by [`CoordinatorConfig::route`].
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Route {
@@ -47,6 +49,12 @@ pub struct CoordinatorConfig {
     /// Offload to XLA when a request's length is ≥ this and an
     /// artifact set is loaded. `None` disables offload.
     pub xla_cutoff: Option<usize>,
+    /// Kernel configuration every CPU tier runs — register width
+    /// ([`crate::simd::VectorWidth`]), merge width/impl, column
+    /// network. Each shard worker builds its sorters from this once
+    /// at startup, so e.g. a `V256` 2×64 service is one config away
+    /// (the width sweep's service-level knob).
+    pub sort: SortConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -61,6 +69,7 @@ impl Default for CoordinatorConfig {
             parallel_cutoff: 1 << 20,
             threads_per_parallel_sort: 4,
             xla_cutoff: None,
+            sort: SortConfig::default(),
         }
     }
 }

@@ -105,7 +105,7 @@ use super::config::{CoordinatorConfig, Route};
 use super::metrics::{Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
-use crate::sort::{NeonMergeSort, ParallelNeonMergeSort};
+use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortScratch};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -461,6 +461,22 @@ impl SortService {
     /// enabled (subject to `cfg.xla_cutoff`).
     pub fn start(cfg: CoordinatorConfig, artifacts_dir: Option<PathBuf>) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "coordinator needs at least one shard");
+        // Validate the kernel config here, mirroring the sorter
+        // constructors' asserts: workers build their sorters from it
+        // on their own threads, where a panic would not surface —
+        // every submit would then park forever on slots no worker
+        // completes. Startup failures must surface in start().
+        anyhow::ensure!(
+            cfg.sort.r.is_power_of_two() && (4..=32).contains(&cfg.sort.r),
+            "sort config: R must be 4|8|16|32 (got {})",
+            cfg.sort.r
+        );
+        anyhow::ensure!(
+            cfg.sort.r % cfg.sort.vector_width.lanes() == 0,
+            "sort config: R={} must be a multiple of the {}-lane vector width",
+            cfg.sort.r,
+            cfg.sort.vector_width.lanes()
+        );
         let metrics = Arc::new(Metrics::default());
         let (xla_tx, xla_thread) = match artifacts_dir {
             Some(dir) => {
@@ -471,10 +487,11 @@ impl SortService {
                     let (tx, rx) = mpsc::channel::<Job>();
                     // Handshake so startup failures surface in start().
                     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+                    let sort_cfg = cfg.sort.clone();
                     let xm = Arc::clone(&metrics);
                     let handle = std::thread::Builder::new()
                         .name("xla-executor".into())
-                        .spawn(move || xla_executor(reg, rx, ready_tx, xm))
+                        .spawn(move || xla_executor(reg, rx, ready_tx, xm, sort_cfg))
                         .context("spawning xla executor")?;
                     ready_rx.recv().context("xla executor died at startup")??;
                     (Some(tx), Some(handle))
@@ -614,6 +631,37 @@ impl SortService {
     }
 }
 
+/// Per-worker execution state, built once at worker startup from
+/// [`CoordinatorConfig::sort`] and owned for the thread's lifetime:
+/// the sorters (construction precomputes network tables) and every
+/// reusable buffer the sort tiers need — the aux scratch, the fused
+/// batch buffer, and its offset table. After warmup the steady-state
+/// CPU paths therefore do **zero** per-job heap allocation: tiny jobs
+/// sort in place, single-thread and fused-batch jobs ping-pong
+/// through `scratch`, and the fused concatenation reuses `fused` /
+/// `bounds` (`Vec::clear` keeps capacity).
+struct WorkerCtx {
+    single: NeonMergeSort,
+    parallel: ParallelNeonMergeSort,
+    scratch: SortScratch<u32>,
+    fused: Vec<u32>,
+    bounds: Vec<usize>,
+}
+
+impl WorkerCtx {
+    fn new(cfg: &CoordinatorConfig) -> Self {
+        let single = NeonMergeSort::new(cfg.sort.clone());
+        let parallel = ParallelNeonMergeSort::new(single.clone(), cfg.threads_per_parallel_sort);
+        WorkerCtx {
+            single,
+            parallel,
+            scratch: SortScratch::new(),
+            fused: Vec::new(),
+            bounds: Vec::new(),
+        }
+    }
+}
+
 /// Pop one dynamic batch from shard `s`: the head job, plus up to
 /// `batch_max - 1` consecutive fuse-eligible followers in the same
 /// wakeup. Returns `None` when the queue is empty.
@@ -643,10 +691,13 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
 
 fn worker_loop(shared: &Shared, home: usize) {
     let n = shared.shards.len();
+    // Sorters + reusable buffers, owned by this worker for its
+    // lifetime (see WorkerCtx).
+    let mut ctx = WorkerCtx::new(&shared.cfg);
     loop {
         // Own shard first, then steal round-robin from the others.
         if let Some(batch) = take_batch(shared, home) {
-            process_batch(shared, home, batch);
+            process_batch(shared, home, batch, &mut ctx);
             continue;
         }
         let mut found = None;
@@ -659,7 +710,7 @@ fn worker_loop(shared: &Shared, home: usize) {
             }
         }
         if let Some((victim, batch)) = found {
-            process_batch(shared, victim, batch);
+            process_batch(shared, victim, batch, &mut ctx);
             continue;
         }
         // Nothing anywhere: advertise as idle, re-check under the
@@ -701,7 +752,7 @@ fn abandon(m: &Metrics, job: Job) {
 /// segments in a single [`ParallelNeonMergeSort::sort_segments_with`]
 /// pass, and complete each request's slot the moment its own segment
 /// is sorted.
-fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>) {
+fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerCtx) {
     let m = &shared.metrics;
     // Shed cancelled jobs before paying for any sorting.
     let mut live: Vec<Job> = Vec::with_capacity(batch.len());
@@ -714,7 +765,7 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>) {
     }
     if live.len() <= 1 {
         if let Some(job) = live.pop() {
-            process(shared, job);
+            process(shared, job, ctx);
         }
         return;
     }
@@ -725,12 +776,15 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>) {
     sm.batches.fetch_add(1, Ordering::Relaxed);
     sm.batched_jobs.fetch_add(live.len() as u64, Ordering::Relaxed);
     let total: usize = live.iter().map(|j| j.data.len()).sum();
-    let mut fused = Vec::with_capacity(total);
-    let mut bounds = Vec::with_capacity(live.len() + 1);
-    bounds.push(0);
+    // Concatenate into the worker's reusable fused buffer (clear
+    // keeps capacity — steady-state batches don't allocate here).
+    ctx.fused.clear();
+    ctx.fused.reserve(total);
+    ctx.bounds.clear();
+    ctx.bounds.push(0);
     for job in &live {
-        fused.extend_from_slice(&job.data);
-        bounds.push(fused.len());
+        ctx.fused.extend_from_slice(&job.data);
+        ctx.bounds.push(ctx.fused.len());
         // Fused jobs still count under their size tier.
         if job.data.len() < shared.cfg.tiny_cutoff {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
@@ -742,16 +796,20 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>) {
     // batch-sort thread finishes that segment (uncontended in
     // practice — the per-segment lock is the completion hand-off).
     let cells: Vec<Mutex<Option<Job>>> = live.into_iter().map(|j| Mutex::new(Some(j))).collect();
-    ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
-        .sort_segments_with(&mut fused, &bounds, |k, seg: &[u32]| {
+    ctx.parallel.sort_segments_with_scratch(
+        &mut ctx.fused,
+        &ctx.bounds,
+        &mut ctx.scratch,
+        |k, seg: &[u32]| {
             if let Some(mut job) = cells[k].lock().unwrap().take() {
                 job.data.copy_from_slice(seg);
                 finish(m, job);
             }
-        });
+        },
+    );
 }
 
-fn process(shared: &Shared, mut job: Job) {
+fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
     let m = &shared.metrics;
     if job.slot.is_cancelled() {
         return abandon(m, job);
@@ -778,17 +836,13 @@ fn process(shared: &Shared, mut job: Job) {
         }
         Route::SingleThread => {
             m.route_single.fetch_add(1, Ordering::Relaxed);
-            // Thread-local sorter: construction is cheap (network
-            // tables are small) and avoids sharing.
-            thread_local! {
-                static SORTER: NeonMergeSort = NeonMergeSort::paper_default();
-            }
-            SORTER.with(|s| s.sort(&mut job.data));
+            // Worker-owned sorter + scratch: zero allocation once the
+            // scratch has grown to the tier's largest request.
+            ctx.single.sort_with_scratch(&mut job.data, &mut ctx.scratch);
         }
         Route::Parallel => {
             m.route_parallel.fetch_add(1, Ordering::Relaxed);
-            ParallelNeonMergeSort::with_threads(shared.cfg.threads_per_parallel_sort)
-                .sort(&mut job.data);
+            ctx.parallel.sort_with_scratch(&mut job.data, &mut ctx.scratch);
         }
         Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
     }
@@ -819,6 +873,7 @@ fn xla_executor(
     rx: mpsc::Receiver<Job>,
     ready: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
+    sort_cfg: crate::sort::SortConfig,
 ) {
     let sorter = match PjrtRuntime::cpu()
         .map(Arc::new)
@@ -834,6 +889,12 @@ fn xla_executor(
         }
     };
     let geometry = sorter.batch_geometry();
+    // CPU fallback sorter + scratch, built once from the service's
+    // configured kernel (CoordinatorConfig::sort governs every CPU
+    // tier, fallbacks included): PJRT failures must not pay a per-job
+    // construction or aux allocation — nor silently switch kernels.
+    let fallback = NeonMergeSort::new(sort_cfg);
+    let mut fb_scratch = SortScratch::new();
     while let Ok(mut job) = rx.recv() {
         if job.slot.is_cancelled() {
             abandon(&metrics, job);
@@ -872,7 +933,7 @@ fn xla_executor(
                         group.iter_mut().map(|j| j.data.as_mut_slice()).collect();
                     if sorter.sort_batch_u32(&mut rows).is_err() {
                         for j in group.iter_mut() {
-                            NeonMergeSort::paper_default().sort(&mut j.data);
+                            fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                         }
                     }
                     for j in group {
@@ -881,14 +942,14 @@ fn xla_executor(
                 } else {
                     for mut j in group {
                         if sorter.sort_u32(&mut j.data).is_err() {
-                            NeonMergeSort::paper_default().sort(&mut j.data);
+                            fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                         }
                         finish(&metrics, j);
                     }
                 }
                 for mut j in oversized {
                     if sorter.sort_u32(&mut j.data).is_err() {
-                        NeonMergeSort::paper_default().sort(&mut j.data);
+                        fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                     }
                     finish(&metrics, j);
                 }
@@ -897,7 +958,7 @@ fn xla_executor(
         }
         if sorter.sort_u32(&mut job.data).is_err() {
             // Fall back to the CPU path rather than dropping the job.
-            NeonMergeSort::paper_default().sort(&mut job.data);
+            fallback.sort_with_scratch(&mut job.data, &mut fb_scratch);
         }
         finish(&metrics, job);
     }

@@ -107,6 +107,65 @@ fn dynamic_batching_counts_batches() {
 }
 
 #[test]
+fn invalid_sort_config_fails_at_start_not_in_workers() {
+    // Workers build their sorters from cfg.sort on their own threads;
+    // a bad config must be an Err from start(), never a worker-thread
+    // panic that leaves every submit parked forever.
+    use crate::simd::VectorWidth;
+    use crate::sort::SortConfig;
+    let bad_r = CoordinatorConfig {
+        sort: SortConfig { r: 12, ..Default::default() },
+        ..Default::default()
+    };
+    assert!(SortService::start(bad_r, None).is_err(), "R=12 must be rejected");
+    let bad_width = CoordinatorConfig {
+        sort: SortConfig { r: 4, vector_width: VectorWidth::V256, ..Default::default() },
+        ..Default::default()
+    };
+    assert!(SortService::start(bad_width, None).is_err(), "R=4 × V256 must be rejected");
+}
+
+#[test]
+fn v256_wide_config_serves_all_tiers_and_fused_batches() {
+    // Acceptance: the V256 / 2×64 configuration runs end-to-end
+    // through the service — tiny, fused-batch, single-thread and
+    // parallel tiers — with every result equal to the oracle.
+    use crate::kernels::MergeWidth;
+    use crate::simd::VectorWidth;
+    use crate::sort::SortConfig;
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        shards: 2,
+        batch_max: 16,
+        parallel_cutoff: 40_000,
+        sort: SortConfig {
+            vector_width: VectorWidth::V256,
+            merge_width: MergeWidth::K64,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(77);
+    let mut pending = Vec::new();
+    // A large job first so the tiny burst behind it fuses.
+    for i in 0..80usize {
+        let len = [60_000usize, 8, 40, 700, 5000][i % 5] + rng.below(17);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        pending.push((svc.submit(data), expect));
+    }
+    for (h, expect) in pending {
+        assert_eq!(h.wait().unwrap(), expect, "V256-configured service");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 80);
+    assert!(m.route_parallel > 0, "parallel tier exercised");
+    svc.shutdown();
+}
+
+#[test]
 fn sharded_concurrent_mixed_sizes_all_match_oracle() {
     // Acceptance: ≥ 64 mixed-size jobs across ≥ 2 shards, submitted
     // from several threads at once, every result equal to

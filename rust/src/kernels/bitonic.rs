@@ -1,16 +1,18 @@
-//! Fully vectorized bitonic merging networks over `V128` registers.
+//! Fully vectorized bitonic merging networks over vector registers,
+//! generic over the register width ([`Vector`]).
 //!
-//! A bitonic merge of `n = 4·R` elements held in `R` registers runs
-//! `log(n)` half-cleaner stages (Fig. 4): stages with element distance
-//! ≥ 4 are *register-level* — one `vmin`+`vmax` pair per register pair,
-//! no shuffles; the last two stages (distance 2 and 1) are
-//! *intra-register* and each cost one shuffle + min + max + blend.
-//! This is the paper's "vectorized bitonic" merger (Table 3 row 1) —
-//! the fully *symmetric* implementation the hybrid merger
-//! ([`super::hybrid`]) is the asymmetric counterpoint to: here the
-//! whole network is vectorized uniformly, which is exactly what makes
-//! its structural regularity pay (every half-cleaner stage is the
-//! same two-op pattern over register pairs).
+//! A bitonic merge of `n = W·R` elements held in `R` registers of `W`
+//! lanes runs `log(n)` half-cleaner stages (Fig. 4): stages with
+//! element distance ≥ W are *register-level* — one `vmin`+`vmax` pair
+//! per register pair, no shuffles; the last `log(W)` stages are
+//! *intra-register* ([`Vector::bitonic_merge_lanes`]) and each cost
+//! one shuffle + min + max + blend. This is the paper's "vectorized
+//! bitonic" merger (Table 3 row 1) — the fully *symmetric*
+//! implementation the hybrid merger ([`super::hybrid`]) is the
+//! asymmetric counterpoint to: here the whole network is vectorized
+//! uniformly, which is exactly what makes its structural regularity
+//! pay (every half-cleaner stage is the same two-op pattern over
+//! register pairs).
 //!
 //! # Invariants
 //!
@@ -24,31 +26,21 @@
 //!   between the two halves of a half-cleaner except through
 //!   `min`/`max`, so the merge is oblivious — same instruction stream
 //!   for every input, no branches to mispredict.
+//! * Every function here is width-generic: the register-level stages
+//!   only use [`Vector::cmpswap`], and the intra-register tail is the
+//!   implementation's own `log(W)`-stage merge, so instantiating at
+//!   [`crate::simd::V256`] yields the same network shape with half
+//!   the register count per K.
 
-use crate::simd::{Lane, V128};
+use crate::simd::{Lane, Vector, V128};
 
-/// Distance-2 half-cleaner within one register: compare lanes (0,2)
-/// and (1,3). One shuffle + min + max + blend.
-#[inline(always)]
-pub fn stage_d2_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
-    let s = r.swap_halves();
-    V128::blend_lo_hi(r.min(s), r.max(s))
-}
-
-/// Distance-1 half-cleaner within one register: compare lanes (0,1)
-/// and (2,3). One shuffle + min + max + blend.
-#[inline(always)]
-pub fn stage_d1_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
-    let s = r.rev64();
-    V128::blend_even_odd(r.min(s), r.max(s))
-}
-
-/// Distance-2 + distance-1 bitonic stages within one register: sorts
+/// Distance-2 + distance-1 bitonic stages within one `V128`: sorts
 /// any 4-element bitonic sequence ascending. 2 shuffles, 2 blends,
-/// 2 min, 2 max — the NEON `vrev64`/`vext` idiom.
+/// 2 min, 2 max — the NEON `vrev64`/`vext` idiom. The width-generic
+/// spelling is [`Vector::bitonic_merge_lanes`].
 #[inline(always)]
 pub fn merge4_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
-    stage_d1_in_reg(stage_d2_in_reg(r))
+    Vector::bitonic_merge_lanes(r)
 }
 
 /// Bitonic-merge `regs` in place: the concatenation of all lanes must
@@ -56,10 +48,10 @@ pub fn merge4_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
 /// must be a power of two. After return the concatenation is sorted
 /// ascending.
 #[inline(always)]
-pub fn bitonic_merge_regs<T: Lane>(regs: &mut [V128<T>]) {
+pub fn bitonic_merge_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
     let r = regs.len();
     debug_assert!(r.is_power_of_two() || r == 1);
-    // Register-level half-cleaner stages: element distance 4·d.
+    // Register-level half-cleaner stages: element distance W·d.
     let mut d = r / 2;
     while d >= 1 {
         let mut base = 0;
@@ -73,16 +65,16 @@ pub fn bitonic_merge_regs<T: Lane>(regs: &mut [V128<T>]) {
         }
         d /= 2;
     }
-    // Intra-register stages.
+    // Intra-register stages (log W of them).
     for v in regs.iter_mut() {
-        *v = merge4_in_reg(*v);
+        *v = v.bitonic_merge_lanes();
     }
 }
 
 /// Reverse a sorted run held in registers (register order + lanes), so
 /// `a ⌢ reverse(b)` forms the bitonic input a merge stage needs.
 #[inline(always)]
-pub fn reverse_regs<T: Lane>(regs: &mut [V128<T>]) {
+pub fn reverse_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
     regs.reverse();
     for v in regs.iter_mut() {
         *v = v.reverse();
@@ -103,7 +95,7 @@ pub fn merge_2x4<T: Lane>(a: V128<T>, b: V128<T>) -> (V128<T>, V128<T>) {
 /// a sorted run; on exit the whole of `regs` is sorted. Fully
 /// vectorized (Table 3 "Vectorized Bitonic").
 #[inline(always)]
-pub fn merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
+pub fn merge_sorted_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
     let h = regs.len() / 2;
     debug_assert_eq!(h * 2, regs.len());
     reverse_regs(&mut regs[h..]);
@@ -111,13 +103,18 @@ pub fn merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
 }
 
 /// Convenience: vectorized merge of two equal-length sorted slices
-/// (lengths equal, multiple of 4, power-of-two total) into `out`.
-/// Used by tests and the regmachine cross-check; the streaming path
-/// for arbitrary lengths is [`super::runmerge`].
+/// (lengths equal, multiple of 4, power-of-two total) into `out`,
+/// through the `V128` register kernel. Used by tests and the
+/// regmachine cross-check; the streaming path for arbitrary lengths
+/// is [`super::runmerge`].
 pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
     assert_eq!(a.len(), b.len());
     assert!((2 * a.len()).is_power_of_two() && a.len() % 4 == 0);
-    assert!(a.len() <= 32, "register kernel supports up to 2x32");
+    assert!(
+        a.len() <= super::hybrid::MAX_K,
+        "register kernel supports up to 2x{}",
+        super::hybrid::MAX_K
+    );
     assert_eq!(out.len(), a.len() * 2);
     // Monomorphize on the register count so the stage loops unroll.
     match a.len() / 4 {
@@ -125,6 +122,7 @@ pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
         2 => merge_slices_impl::<T, 4>(a, b, out),
         4 => merge_slices_impl::<T, 8>(a, b, out),
         8 => merge_slices_impl::<T, 16>(a, b, out),
+        16 => merge_slices_impl::<T, 32>(a, b, out),
         _ => unreachable!(),
     }
 }
@@ -142,13 +140,13 @@ fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
 }
 
 /// Fully sort `regs` (arbitrary contents) with an in-register bitonic
-/// *sorter*: sort runs of one register with [`sort4_in_reg`], then
-/// double run length with [`merge_sorted_regs`] on sub-slices. Used as
-/// an oracle and by the R=32 Table 2 variant's row stage.
-pub fn bitonic_sort_regs<T: Lane>(regs: &mut [V128<T>]) {
+/// *sorter*: sort runs of one register with [`Vector::sort_lanes`],
+/// then double run length with [`merge_sorted_regs`] on sub-slices.
+/// Used as an oracle and by the R=32 Table 2 variant's row stage.
+pub fn bitonic_sort_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
     debug_assert!(regs.len().is_power_of_two());
     for v in regs.iter_mut() {
-        *v = sort4_in_reg(*v);
+        *v = v.sort_lanes();
     }
     let mut run = 1;
     while run < regs.len() {
@@ -161,16 +159,11 @@ pub fn bitonic_sort_regs<T: Lane>(regs: &mut [V128<T>]) {
     }
 }
 
-/// Sort the four lanes of one register ascending (tiny bitonic sorter:
+/// Sort the four lanes of one `V128` ascending (tiny bitonic sorter:
 /// 3 stages, 6 comparator-lanes — the n=4 column of Table 1's bitonic
-/// family, executed horizontally).
+/// family, executed horizontally). Width-generic spelling:
+/// [`Vector::sort_lanes`].
 #[inline(always)]
 pub fn sort4_in_reg<T: Lane>(r: V128<T>) -> V128<T> {
-    // Stage 1: (0,1),(2,3) — ascending, descending (build bitonic pairs).
-    let s = r.rev64();
-    let mn = r.min(s);
-    let mx = r.max(s);
-    let r = V128([mn.0[0], mx.0[1], mx.0[2], mn.0[3]]); // asc pair, desc pair
-    // Now [min01, max01, max23, min23] is bitonic; merge it.
-    merge4_in_reg(r)
+    Vector::sort_lanes(r)
 }

@@ -22,7 +22,7 @@
 //! * [`hybrid_merge_sorted_regs`] has the same contract as the
 //!   symmetric merger: both register halves sorted ascending on
 //!   entry, whole array sorted on exit; `regs.len()` a power of two
-//!   in `2..=2·MAX_K/W`.
+//!   in `2..=2·MAX_K/W` for the instantiated width `W`.
 //! * After the first half-cleaner the two K-element halves are
 //!   **data-independent** — the property the whole kernel rests on:
 //!   the serial and vector halves may execute in any interleaving,
@@ -30,32 +30,65 @@
 //! * Every fixed-size scalar/flight buffer in this module and in
 //!   [`super::runmerge`] holds at most [`MAX_K`] elements. That bound
 //!   is *proved at monomorphization time*: each kernel instantiated
-//!   over `N` registers evaluates [`RegsFitMaxK::OK`]
-//!   (`RegsFitMaxK::<N>::OK`), a const assertion of
-//!   `N·W/2 ≤ MAX_K`. Widening [`super::MergeWidth`]
-//!   past 2×32 without growing `MAX_K` therefore fails to *compile*
-//!   — the register budget can never silently become a buffer
-//!   overflow.
+//!   over `N` registers of width `V` evaluates
+//!   [`RegsFitMaxK::OK`] (`RegsFitMaxK::<V, N>::OK`), a const
+//!   assertion of `N·W/2 ≤ MAX_K`. Widening [`super::MergeWidth`]
+//!   past 2×64 — at any vector width — without growing `MAX_K`
+//!   therefore fails to *compile*: the register budget can never
+//!   silently become a buffer overflow.
 
 use super::bitonic::{bitonic_merge_regs, reverse_regs};
-use crate::simd::{Lane, V128, W};
+use crate::simd::{Lane, Lanes, Vector};
 
-/// Maximum K (elements per side) the hybrid kernel supports: 2×32.
-/// Every fixed-size flight/spill buffer in this module and in
+/// Maximum K (elements per side) the register-merge kernels support:
+/// 2×64, i.e. 32 `V128` or 16 `V256` registers in flight. Every
+/// fixed-size flight/spill buffer in this module and in
 /// [`super::runmerge`] is sized by this constant.
-pub const MAX_K: usize = 32;
+///
+/// PR 3 raised this from 32 to 64 to open the 2×64 row of the width
+/// sweep (see `BENCH_width_sweep.json`); the compile-time
+/// [`RegsFitMaxK`] guard is what makes such a raise a conscious,
+/// single-point change.
+pub const MAX_K: usize = 64;
 
 /// Monomorphization-time guard: referencing [`RegsFitMaxK::OK`] in a
-/// kernel monomorphized over `N` registers proves `N` registers
-/// (K = N·W/2 elements per side) fit the `MAX_K`-element stack
-/// buffers — a K sweep beyond `MAX_K` becomes a compile error rather
-/// than a silent buffer overflow.
-pub struct RegsFitMaxK<const N: usize>;
+/// kernel monomorphized over `N` registers of vector type `V` proves
+/// `N` registers (K = N·W/2 elements per side, `W = V::LANES`) fit
+/// the `MAX_K`-element stack buffers — a K sweep beyond `MAX_K`
+/// becomes a compile error rather than a silent buffer overflow.
+///
+/// A configuration inside the budget compiles and runs:
+///
+/// ```
+/// use neonms::kernels::hybrid::RegsFitMaxK;
+/// use neonms::simd::{V128, V256};
+///
+/// let () = RegsFitMaxK::<V128<u32>, 32>::OK; // K = 64 — at the bound
+/// let () = RegsFitMaxK::<V256<u32>, 16>::OK; // K = 64 via 8 lanes
+/// ```
+///
+/// One register past the budget fails to *compile* (the const
+/// assertion fires during monomorphization):
+///
+/// ```compile_fail
+/// use neonms::kernels::hybrid::RegsFitMaxK;
+/// use neonms::simd::V128;
+///
+/// let () = RegsFitMaxK::<V128<u32>, 64>::OK; // K = 128 > MAX_K = 64
+/// ```
+///
+/// ```compile_fail
+/// use neonms::kernels::hybrid::RegsFitMaxK;
+/// use neonms::simd::V256;
+///
+/// let () = RegsFitMaxK::<V256<u32>, 32>::OK; // K = 128 > MAX_K = 64
+/// ```
+pub struct RegsFitMaxK<V, const N: usize>(core::marker::PhantomData<V>);
 
-impl<const N: usize> RegsFitMaxK<N> {
+impl<V: Lanes, const N: usize> RegsFitMaxK<V, N> {
     /// Evaluates (at compile time) the `N·W/2 ≤ MAX_K` bound.
     pub const OK: () = assert!(
-        N * W / 2 <= MAX_K,
+        N * V::LANES / 2 <= MAX_K,
         "register count implies K > MAX_K: widen MAX_K before sweeping wider kernels"
     );
 }
@@ -63,13 +96,14 @@ impl<const N: usize> RegsFitMaxK<N> {
 /// Hybrid-merge two sorted runs held in `regs` in place: on entry
 /// `regs[..h]` and `regs[h..]` (`h = regs.len()/2`) are each sorted
 /// ascending; on exit all of `regs` is sorted. `regs.len()` must be a
-/// power of two ≥ 2 and ≤ 16 (2×32 elements).
+/// power of two ≥ 2 with at most `MAX_K` elements per side.
 #[inline(always)]
-pub fn hybrid_merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
+pub fn hybrid_merge_sorted_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
+    let w = V::LANES;
     let r = regs.len();
-    debug_assert!(r.is_power_of_two() && (2..=2 * MAX_K / W).contains(&r));
+    debug_assert!(r.is_power_of_two() && (2..=2 * MAX_K / w).contains(&r));
     let h = r / 2;
-    let k = h * W; // elements per half after the first stage
+    let k = h * w; // elements per half after the first stage
 
     // Form the bitonic sequence and run the first half-cleaner
     // (element distance K): one register-level cmpswap per pair.
@@ -90,7 +124,7 @@ pub fn hybrid_merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
     // vector pipeline (§Perf iteration 7).
     let mut buf = [T::MIN_VALUE; MAX_K];
     for (i, v) in regs[..h].iter().enumerate() {
-        v.store(&mut buf[i * W..]);
+        v.store(&mut buf[i * w..]);
     }
 
     // Both halves inline to straight-line code with *no data
@@ -106,7 +140,7 @@ pub fn hybrid_merge_sorted_regs<T: Lane>(regs: &mut [V128<T>]) {
 
     // Reload the serial half into registers.
     for (i, v) in regs[..h].iter_mut().enumerate() {
-        *v = V128::load(&buf[i * W..i * W + W]);
+        *v = V::load(&buf[i * w..i * w + w]);
     }
 }
 
@@ -132,8 +166,10 @@ fn serial_bitonic_merge<T: Lane>(buf: &mut [T]) {
 }
 
 /// Convenience: hybrid merge of two equal-length sorted slices into
-/// `out`. Same contract as [`super::bitonic::merge_slices`].
+/// `out` through the `V128` register kernel. Same contract as
+/// [`super::bitonic::merge_slices`].
 pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
+    use crate::simd::W;
     assert_eq!(a.len(), b.len());
     assert!((2 * a.len()).is_power_of_two() && a.len() % W == 0);
     assert!(a.len() <= MAX_K, "hybrid kernel supports up to 2x{MAX_K}");
@@ -145,13 +181,15 @@ pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
         4 => merge_slices_impl::<T, 4>(a, b, out),
         8 => merge_slices_impl::<T, 8>(a, b, out),
         16 => merge_slices_impl::<T, 16>(a, b, out),
+        32 => merge_slices_impl::<T, 32>(a, b, out),
         _ => unreachable!(),
     }
 }
 
 #[inline(always)]
 fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
-    let () = RegsFitMaxK::<N>::OK;
+    use crate::simd::{V128, W};
+    let () = RegsFitMaxK::<V128<T>, N>::OK;
     let mut regs = [V128::splat(T::MIN_VALUE); N];
     for (v, c) in regs.iter_mut().zip(a.chunks_exact(W).chain(b.chunks_exact(W))) {
         *v = V128::load(c);

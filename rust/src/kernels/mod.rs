@@ -35,13 +35,17 @@ pub enum MergeImpl {
 }
 
 /// Width (elements per side) of the register merge kernel: 2×K → 2K.
-/// The paper evaluates K ∈ {8, 16, 32} (Table 3).
+/// The paper evaluates K ∈ {8, 16, 32} (Table 3); this reproduction
+/// additionally sweeps 2×4 below and 2×64 above (the
+/// [`hybrid::MAX_K`] = 64 budget), at both register widths
+/// ([`crate::simd::VectorWidth`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum MergeWidth {
     K4 = 4,
     K8 = 8,
     K16 = 16,
     K32 = 32,
+    K64 = 64,
 }
 
 impl MergeWidth {
@@ -49,13 +53,14 @@ impl MergeWidth {
     pub fn k(self) -> usize {
         self as usize
     }
-    /// Vector registers per side.
-    pub fn regs(self) -> usize {
-        self.k() / crate::simd::W
+    /// Vector registers per side at width `vector` (K / lanes) — the
+    /// kernel dispatch's N/2.
+    pub fn regs_at(self, vector: crate::simd::VectorWidth) -> usize {
+        self.k() / vector.lanes()
     }
     /// All widths, for sweeps.
-    pub fn all() -> [MergeWidth; 4] {
-        [MergeWidth::K4, MergeWidth::K8, MergeWidth::K16, MergeWidth::K32]
+    pub fn all() -> [MergeWidth; 5] {
+        [MergeWidth::K4, MergeWidth::K8, MergeWidth::K16, MergeWidth::K32, MergeWidth::K64]
     }
 }
 

@@ -7,7 +7,10 @@
 //! the only branch, highly predictable on long runs), emits the lower
 //! K elements to the output, and keeps the upper K in flight. The
 //! 2×K register merge is either the fully vectorized or the hybrid
-//! bitonic network — Table 3's comparison.
+//! bitonic network — Table 3's comparison — instantiated at either
+//! register width ([`VectorWidth`]): the same K uses half the
+//! registers at `V256`, trading shuffle structure for register
+//! pressure exactly along the paper's §2.2 axis.
 //!
 //! # Invariants
 //!
@@ -24,13 +27,14 @@
 //! * The flight/staging buffers are sized by
 //!   [`super::hybrid::MAX_K`] and guarded by the
 //!   [`RegsFitMaxK`] monomorphization-time assertion, so every
-//!   [`MergeWidth`] this type accepts provably fits them.
+//!   [`MergeWidth`] × [`VectorWidth`] this type accepts provably fits
+//!   them.
 
 use super::bitonic::merge_sorted_regs;
 use super::hybrid::{hybrid_merge_sorted_regs, RegsFitMaxK, MAX_K};
 use super::serial::merge_scalar;
 use super::{MergeImpl, MergeWidth};
-use crate::simd::{Lane, V128, W};
+use crate::simd::{Lane, Vector, VectorWidth, V128, V256};
 
 /// Alloc-free 3-way merge of sorted `x`, `y`, `z` into `out` — the
 /// streaming merge's drain step (flight block + both input tails).
@@ -70,12 +74,30 @@ pub struct RunMerger {
     pub width: MergeWidth,
     /// Register-kernel implementation.
     pub imp: MergeImpl,
+    /// Register width the kernel is instantiated at. `K4` always runs
+    /// at `V128` (one `V256` cannot hold two 4-element runs — see
+    /// [`RunMerger::effective_vector`]).
+    pub vector: VectorWidth,
 }
 
 impl RunMerger {
-    /// Default: hybrid 2×4 (the fastest width on this host's sweep).
+    /// Default: hybrid 2×4 on `V128` — the fastest configuration in
+    /// this host's recorded sweep (`BENCH_width_sweep.json`; see
+    /// README §Benchmarks).
     pub fn paper_default() -> Self {
-        RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid }
+        RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid, vector: VectorWidth::V128 }
+    }
+
+    /// The register width this merger actually instantiates kernels
+    /// at: the configured [`RunMerger::vector`], except that `K4`
+    /// needs registers of at most 4 lanes and therefore always runs
+    /// at [`VectorWidth::V128`].
+    pub fn effective_vector(&self) -> VectorWidth {
+        if self.width.k() < self.vector.lanes() {
+            VectorWidth::V128
+        } else {
+            self.vector
+        }
     }
 
     /// Merge sorted `a` and `b` into `out` (`out.len() = a.len() +
@@ -90,36 +112,70 @@ impl RunMerger {
         if a.len() < k || b.len() < k {
             return merge_scalar(a, b, out);
         }
-        // Monomorphize on the total register count N = 2K/W so every
-        // kernel loop bound is a compile-time constant and unrolls
-        // (§Perf iteration 2: runtime-length kernel loops left ~3× on
-        // the table vs the Table 3 microbenches).
-        match self.width {
-            MergeWidth::K4 => self.merge_vectorized::<T, 2>(a, b, out, k),
-            MergeWidth::K8 => self.merge_vectorized::<T, 4>(a, b, out, k),
-            MergeWidth::K16 => self.merge_vectorized::<T, 8>(a, b, out, k),
-            MergeWidth::K32 => self.merge_vectorized::<T, 16>(a, b, out, k),
+        // Monomorphize on (vector type, register count N = 2K/W) so
+        // every kernel loop bound is a compile-time constant and
+        // unrolls (§Perf iteration 2: runtime-length kernel loops
+        // left ~3× on the table vs the Table 3 microbenches).
+        match (self.effective_vector(), self.width) {
+            (VectorWidth::V128, MergeWidth::K4) => {
+                self.merge_vectorized::<T, V128<T>, 2>(a, b, out, k)
+            }
+            (VectorWidth::V128, MergeWidth::K8) => {
+                self.merge_vectorized::<T, V128<T>, 4>(a, b, out, k)
+            }
+            (VectorWidth::V128, MergeWidth::K16) => {
+                self.merge_vectorized::<T, V128<T>, 8>(a, b, out, k)
+            }
+            (VectorWidth::V128, MergeWidth::K32) => {
+                self.merge_vectorized::<T, V128<T>, 16>(a, b, out, k)
+            }
+            (VectorWidth::V128, MergeWidth::K64) => {
+                self.merge_vectorized::<T, V128<T>, 32>(a, b, out, k)
+            }
+            (VectorWidth::V256, MergeWidth::K4) => {
+                unreachable!("effective_vector() folds K4/V256 to V128")
+            }
+            (VectorWidth::V256, MergeWidth::K8) => {
+                self.merge_vectorized::<T, V256<T>, 2>(a, b, out, k)
+            }
+            (VectorWidth::V256, MergeWidth::K16) => {
+                self.merge_vectorized::<T, V256<T>, 4>(a, b, out, k)
+            }
+            (VectorWidth::V256, MergeWidth::K32) => {
+                self.merge_vectorized::<T, V256<T>, 8>(a, b, out, k)
+            }
+            (VectorWidth::V256, MergeWidth::K64) => {
+                self.merge_vectorized::<T, V256<T>, 16>(a, b, out, k)
+            }
         }
     }
 
-    fn merge_vectorized<T: Lane, const N: usize>(&self, a: &[T], b: &[T], out: &mut [T], k: usize) {
+    fn merge_vectorized<T: Lane, V: Vector<T>, const N: usize>(
+        &self,
+        a: &[T],
+        b: &[T],
+        out: &mut [T],
+        k: usize,
+    ) {
         // Monomorphization-time proof that K = N·W/2 fits the MAX_K
         // flight buffer below — a future K sweep that widens
         // MergeWidth without growing MAX_K fails to compile instead of
         // silently overflowing.
-        let () = RegsFitMaxK::<N>::OK;
+        let () = RegsFitMaxK::<V, N>::OK;
+        let w = V::LANES;
         let kr = N / 2;
-        debug_assert_eq!(kr, self.width.regs());
+        debug_assert_eq!(kr * w, k);
+        debug_assert_eq!(kr, self.width.regs_at(self.effective_vector()));
         debug_assert!(k <= MAX_K, "K={k} exceeds MAX_K={MAX_K}");
         // In-flight block: 2K elements in N registers; lower K is
         // emitted each round, upper K stays. Stack-resident — the
         // merge-pass hot loop must not allocate (§Perf iteration 1).
-        let mut regs = [V128::splat(T::MIN_VALUE); N];
+        let mut regs = [V::splat(T::MIN_VALUE); N];
         for (v, c) in regs
             .iter_mut()
-            .zip(a[..k].chunks_exact(W).chain(b[..k].chunks_exact(W)))
+            .zip(a[..k].chunks_exact(w).chain(b[..k].chunks_exact(w)))
         {
-            *v = V128::load(c);
+            *v = V::load(c);
         }
         let (mut i, mut j) = (k, k); // consumed from a / b
         let mut o = 0usize; // emitted
@@ -129,7 +185,7 @@ impl RunMerger {
         // mispredicted once per K outputs on random keys).
         while i + k <= a.len() && j + k <= b.len() {
             self.kernel(&mut regs);
-            for (c, v) in out[o..o + k].chunks_exact_mut(W).zip(&regs[..kr]) {
+            for (c, v) in out[o..o + k].chunks_exact_mut(w).zip(&regs[..kr]) {
                 v.store(c);
             }
             o += k;
@@ -140,7 +196,7 @@ impl RunMerger {
             unsafe {
                 let src = if take_a { a.as_ptr().add(i) } else { b.as_ptr().add(j) };
                 for (t, r) in regs[..kr].iter_mut().enumerate() {
-                    *r = V128::load(std::slice::from_raw_parts(src.add(t * W), W));
+                    *r = V::load(std::slice::from_raw_parts(src.add(t * w), w));
                 }
             }
             i += k * take_a as usize;
@@ -148,7 +204,7 @@ impl RunMerger {
         }
         loop {
             self.kernel(&mut regs);
-            for (c, v) in out[o..o + k].chunks_exact_mut(W).zip(&regs[..kr]) {
+            for (c, v) in out[o..o + k].chunks_exact_mut(w).zip(&regs[..kr]) {
                 v.store(c);
             }
             o += k;
@@ -165,16 +221,16 @@ impl RunMerger {
                 if i + k > a.len() {
                     break;
                 }
-                for (r, c) in regs[..kr].iter_mut().zip(a[i..i + k].chunks_exact(W)) {
-                    *r = V128::load(c);
+                for (r, c) in regs[..kr].iter_mut().zip(a[i..i + k].chunks_exact(w)) {
+                    *r = V::load(c);
                 }
                 i += k;
             } else if b_has {
                 if j + k > b.len() {
                     break;
                 }
-                for (r, c) in regs[..kr].iter_mut().zip(b[j..j + k].chunks_exact(W)) {
-                    *r = V128::load(c);
+                for (r, c) in regs[..kr].iter_mut().zip(b[j..j + k].chunks_exact(w)) {
+                    *r = V::load(c);
                 }
                 j += k;
             } else {
@@ -186,14 +242,14 @@ impl RunMerger {
         // and the 3-way merge goes through one stack staging buffer
         // sized by the kernel family's MAX_K (guarded above).
         let mut flight = [T::MIN_VALUE; MAX_K];
-        for (c, v) in flight[..k].chunks_exact_mut(W).zip(&regs[kr..]) {
+        for (c, v) in flight[..k].chunks_exact_mut(w).zip(&regs[kr..]) {
             v.store(c);
         }
         drain3(&flight[..k], &a[i..], &b[j..], &mut out[o..]);
     }
 
     #[inline(always)]
-    fn kernel<T: Lane, const N: usize>(&self, regs: &mut [V128<T>; N]) {
+    fn kernel<T: Lane, V: Vector<T>, const N: usize>(&self, regs: &mut [V; N]) {
         // On entry: regs[..kr] sorted (new block), regs[kr..] sorted
         // (in-flight). Passing the whole fixed-size array keeps every
         // stage loop fully unrolled after inlining.

@@ -4,7 +4,7 @@ use super::inregister::{table2_configs, ColumnNetwork, InRegisterSorter};
 use super::runmerge::RunMerger;
 use super::serial;
 use super::{MergeImpl, MergeWidth};
-use crate::simd::V128;
+use crate::simd::{VectorWidth, V128, V256};
 use crate::testutil::{assert_permutation, assert_sorted, forall, forall_indexed, Rng};
 
 fn sorted_pair(rng: &mut Rng, k: usize, modv: u32) -> (Vec<u32>, Vec<u32>) {
@@ -66,7 +66,7 @@ fn merge_2x4_merges() {
 #[test]
 fn vectorized_merge_slices_all_widths() {
     forall(300, |rng| {
-        for k in [4usize, 8, 16, 32] {
+        for k in [4usize, 8, 16, 32, 64] {
             let (a, b) = sorted_pair(rng, k, 1000);
             let mut out = vec![0u32; 2 * k];
             bitonic::merge_slices(&a, &b, &mut out);
@@ -80,7 +80,7 @@ fn vectorized_merge_slices_all_widths() {
 #[test]
 fn hybrid_merge_slices_all_widths() {
     forall(300, |rng| {
-        for k in [4usize, 8, 16, 32] {
+        for k in [4usize, 8, 16, 32, 64] {
             let (a, b) = sorted_pair(rng, k, 1000);
             let mut out = vec![0u32; 2 * k];
             hybrid::merge_slices(&a, &b, &mut out);
@@ -96,7 +96,7 @@ fn hybrid_equals_vectorized_equals_scalar() {
     // The paper's three merger implementations are interchangeable —
     // same output for the same input (DESIGN.md invariant 3).
     forall(200, |rng| {
-        let k = [4usize, 8, 16, 32][rng.below(4)];
+        let k = [4usize, 8, 16, 32, 64][rng.below(5)];
         let (a, b) = sorted_pair(rng, k, 200);
         let mut o1 = vec![0u32; 2 * k];
         let mut o2 = vec![0u32; 2 * k];
@@ -120,6 +120,70 @@ fn bitonic_sort_regs_sorts_anything() {
         expect.sort_unstable();
         bitonic::bitonic_sort_regs(&mut regs);
         let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        assert_eq!(got, expect);
+    });
+}
+
+fn v256_from(rng: &mut Rng, modv: u32) -> V256<u32> {
+    let mut vals = [0u32; 8];
+    for v in vals.iter_mut() {
+        *v = rng.next_u32() % modv;
+    }
+    V256::load(&vals)
+}
+
+#[test]
+fn bitonic_sort_regs_sorts_v256() {
+    // The width-generic register sorter at 8 lanes, incl. dup-heavy.
+    forall(200, |rng| {
+        let r = [1usize, 2, 4, 8, 16][rng.below(5)];
+        let modv = if rng.below(2) == 0 { 5 } else { 100_000 };
+        let mut regs: Vec<V256<u32>> = (0..r).map(|_| v256_from(rng, modv)).collect();
+        let mut expect: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        expect.sort_unstable();
+        bitonic::bitonic_sort_regs(&mut regs);
+        let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        assert_eq!(got, expect, "V256 R={r} mod={modv}");
+    });
+}
+
+#[test]
+fn merge_sorted_regs_v256_vectorized_and_hybrid() {
+    // Both register mergers at W=8, every register count up to the
+    // MAX_K=64 budget (16 V256 regs = 2×64), vs the sorted oracle.
+    forall(150, |rng| {
+        for r in [2usize, 4, 8, 16] {
+            let k = r * 8 / 2;
+            let (a, b) = sorted_pair(rng, k, 500);
+            let load = |x: &[u32], y: &[u32]| -> Vec<V256<u32>> {
+                x.chunks_exact(8).chain(y.chunks_exact(8)).map(V256::load).collect()
+            };
+            let mut expect = [a.clone(), b.clone()].concat();
+            expect.sort_unstable();
+            let mut regs = load(&a, &b);
+            bitonic::merge_sorted_regs(&mut regs[..]);
+            let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+            assert_eq!(got, expect, "vectorized V256 2x{k}");
+            let mut regs = load(&a, &b);
+            hybrid::hybrid_merge_sorted_regs(&mut regs[..]);
+            let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+            assert_eq!(got, expect, "hybrid V256 2x{k}");
+        }
+    });
+}
+
+#[test]
+fn hybrid_merge_sorted_regs_v128_full_budget() {
+    // The raised MAX_K=64 budget end-to-end at W=4: 32 V128 registers.
+    forall(150, |rng| {
+        let (a, b) = sorted_pair(rng, 64, 1000);
+        let mut regs: Vec<V128<u32>> =
+            a.chunks_exact(4).chain(b.chunks_exact(4)).map(V128::load).collect();
+        assert_eq!(regs.len(), 32);
+        hybrid::hybrid_merge_sorted_regs(&mut regs[..]);
+        let got: Vec<u32> = regs.iter().flat_map(|v| v.to_array()).collect();
+        let mut expect = [a, b].concat();
+        expect.sort_unstable();
         assert_eq!(got, expect);
     });
 }
@@ -236,6 +300,69 @@ fn inregister_sort_runs_with_tail() {
 }
 
 #[test]
+fn inregister_v256_block_and_x_sweep() {
+    // The width-generic in-register sort at 8 lanes: every supported
+    // R × network family, every run-length target X = R·2^j up to 8R.
+    for r in [8usize, 16, 32] {
+        for fam in [ColumnNetwork::Bitonic, ColumnNetwork::OddEven, ColumnNetwork::Best] {
+            let sorter = InRegisterSorter::new(r, fam).with_vector(VectorWidth::V256);
+            assert_eq!(sorter.block_len(), 8 * r);
+            for x in [r, 2 * r, 4 * r, 8 * r] {
+                forall(20, |rng| {
+                    let mut block = rng.vec_u32(sorter.block_len());
+                    let orig = block.clone();
+                    sorter.sort_block_to_runs(&mut block, x);
+                    assert_permutation(&block, &orig, &format!("V256 R={r} {fam:?} X={x}"));
+                    for (ri, run) in block.chunks(x).enumerate() {
+                        assert_sorted(run, &format!("V256 R={r} {fam:?} X={x} run {ri}"));
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn inregister_v256_merge_impls_agree() {
+    forall(50, |rng| {
+        let block = rng.vec_u32(128);
+        let mut b1 = block.clone();
+        let mut b2 = block;
+        InRegisterSorter::new(16, ColumnNetwork::Best)
+            .with_vector(VectorWidth::V256)
+            .with_merge_impl(MergeImpl::Vectorized)
+            .sort_block(&mut b1);
+        InRegisterSorter::new(16, ColumnNetwork::Best)
+            .with_vector(VectorWidth::V256)
+            .with_merge_impl(MergeImpl::Hybrid)
+            .sort_block(&mut b2);
+        assert_eq!(b1, b2);
+    });
+}
+
+#[test]
+fn inregister_v256_sort_runs_with_tail() {
+    let sorter = InRegisterSorter::paper_default().with_vector(VectorWidth::V256);
+    forall_indexed(60, |case, rng| {
+        let len = case * 7 + rng.below(11); // 0..430 incl. sub-vector tails
+        let mut data = rng.vec_u32(len);
+        let orig = data.clone();
+        let run = sorter.sort_runs(&mut data);
+        assert_eq!(run, 128);
+        assert_permutation(&data, &orig, "V256 sort_runs");
+        for (ri, chunk) in data.chunks(run).enumerate() {
+            assert_sorted(chunk, &format!("V256 run {ri} len {len}"));
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "multiple of the 8-lane width")]
+fn inregister_v256_rejects_r4() {
+    let _ = InRegisterSorter::new(4, ColumnNetwork::OddEven).with_vector(VectorWidth::V256);
+}
+
+#[test]
 fn inregister_f32_and_i32() {
     let sorter = InRegisterSorter::paper_default();
     let mut rng = Rng::new(99);
@@ -249,24 +376,39 @@ fn inregister_f32_and_i32() {
 
 #[test]
 fn runmerge_all_kernels_and_widths() {
-    for (_, imp) in super::runmerge::table3_impls() {
-        for width in MergeWidth::all() {
-            let m = RunMerger { width, imp };
-            forall(60, |rng| {
-                let la = rng.below(300) + 1;
-                let lb = rng.below(300) + 1;
-                let mut a = rng.vec_u32(la);
-                let mut b = rng.vec_u32(lb);
-                a.sort_unstable();
-                b.sort_unstable();
-                let mut out = vec![0u32; la + lb];
-                m.merge(&a, &b, &mut out);
-                let mut expect = [a, b].concat();
-                expect.sort_unstable();
-                assert_eq!(out, expect, "{imp:?} 2x{}", width.k());
-            });
+    for vector in VectorWidth::all() {
+        for (_, imp) in super::runmerge::table3_impls() {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                forall(60, |rng| {
+                    let la = rng.below(300) + 1;
+                    let lb = rng.below(300) + 1;
+                    let mut a = rng.vec_u32(la);
+                    let mut b = rng.vec_u32(lb);
+                    a.sort_unstable();
+                    b.sort_unstable();
+                    let mut out = vec![0u32; la + lb];
+                    m.merge(&a, &b, &mut out);
+                    let mut expect = [a, b].concat();
+                    expect.sort_unstable();
+                    assert_eq!(out, expect, "{} {imp:?} 2x{}", vector.name(), width.k());
+                });
+            }
         }
     }
+}
+
+#[test]
+fn runmerge_k4_v256_folds_to_v128() {
+    let m = RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid, vector: VectorWidth::V256 };
+    assert_eq!(m.effective_vector(), VectorWidth::V128);
+    let a: Vec<u32> = (0..32).collect();
+    let b: Vec<u32> = (16..48).collect();
+    let mut out = vec![0u32; 64];
+    m.merge(&a, &b, &mut out);
+    let mut expect = [a, b].concat();
+    expect.sort_unstable();
+    assert_eq!(out, expect);
 }
 
 #[test]
@@ -274,6 +416,7 @@ fn runmerge_adversarial_interleavings() {
     // One run entirely below the other, strict interleave, heavy dups.
     let m = RunMerger::paper_default();
     let k = 16;
+    assert_eq!(m.effective_vector(), VectorWidth::V128);
     let cases: Vec<(Vec<u32>, Vec<u32>)> = vec![
         ((0..64).collect(), (64..128).collect()),
         ((64..128).collect(), (0..64).collect()),
@@ -293,58 +436,113 @@ fn runmerge_adversarial_interleavings() {
 
 #[test]
 fn runmerge_property_all_combos_match_scalar_oracle() {
-    // Edge-shape property sweep over every MergeWidth × MergeImpl,
-    // each case checked against merge_scalar: lengths that are not a
-    // multiple of W, one run shorter than K (serial dispatch), exact-K
-    // runs, and dup-heavy alphabets driving the drain3 tie-breaks.
-    use crate::simd::W;
-    for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
-        for width in MergeWidth::all() {
-            let m = RunMerger { width, imp };
-            let k = width.k();
-            forall_indexed(150, |case, rng| {
-                let (la, lb) = match case % 6 {
-                    // One run shorter than K → serial fallback path.
-                    0 => (rng.below(k), k + rng.below(3 * k)),
-                    1 => (k + rng.below(3 * k), rng.below(k)),
-                    // Lengths deliberately not a multiple of W.
-                    2 => (
-                        k * (1 + rng.below(4)) + 1 + rng.below(W - 1),
-                        k * (1 + rng.below(4)) + 1 + rng.below(W - 1),
-                    ),
-                    // Exactly one kernel block each (flight drains
-                    // everything after a single round).
-                    3 => (k, k),
-                    // Tails shorter than one block on both sides.
-                    4 => (k + rng.below(W), k + rng.below(W)),
-                    // Long runs, vector fast loop dominant.
-                    _ => (4 * k + rng.below(k), 4 * k + rng.below(k)),
-                };
-                // Dup-heavy alphabet half the time to force ties.
-                let modv = if case % 2 == 0 { 4 } else { 100_000 };
-                let mut a: Vec<u32> = (0..la).map(|_| rng.next_u32() % modv).collect();
-                let mut b: Vec<u32> = (0..lb).map(|_| rng.next_u32() % modv).collect();
-                a.sort_unstable();
-                b.sort_unstable();
-                let mut got = vec![0u32; la + lb];
+    // Edge-shape property sweep over every MergeWidth × MergeImpl ×
+    // VectorWidth, each case checked against merge_scalar: lengths
+    // that are not a multiple of W, one run shorter than K (serial
+    // dispatch), exact-K runs, and dup-heavy alphabets driving the
+    // drain3 tie-breaks.
+    for vector in VectorWidth::all() {
+        let w = vector.lanes();
+        for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                let k = width.k();
+                forall_indexed(150, |case, rng| {
+                    let (la, lb) = match case % 6 {
+                        // One run shorter than K → serial fallback path.
+                        0 => (rng.below(k), k + rng.below(3 * k)),
+                        1 => (k + rng.below(3 * k), rng.below(k)),
+                        // Lengths deliberately not a multiple of W.
+                        2 => (
+                            k * (1 + rng.below(4)) + 1 + rng.below(w - 1),
+                            k * (1 + rng.below(4)) + 1 + rng.below(w - 1),
+                        ),
+                        // Exactly one kernel block each (flight drains
+                        // everything after a single round).
+                        3 => (k, k),
+                        // Tails shorter than one block on both sides.
+                        4 => (k + rng.below(w), k + rng.below(w)),
+                        // Long runs, vector fast loop dominant.
+                        _ => (4 * k + rng.below(k), 4 * k + rng.below(k)),
+                    };
+                    // Dup-heavy alphabet half the time to force ties.
+                    let modv = if case % 2 == 0 { 4 } else { 100_000 };
+                    let mut a: Vec<u32> = (0..la).map(|_| rng.next_u32() % modv).collect();
+                    let mut b: Vec<u32> = (0..lb).map(|_| rng.next_u32() % modv).collect();
+                    a.sort_unstable();
+                    b.sort_unstable();
+                    let mut got = vec![0u32; la + lb];
+                    m.merge(&a, &b, &mut got);
+                    let mut expect = vec![0u32; la + lb];
+                    serial::merge_scalar(&a, &b, &mut expect);
+                    assert_eq!(
+                        got,
+                        expect,
+                        "{} {imp:?} 2x{k} la={la} lb={lb} mod={modv}",
+                        vector.name()
+                    );
+                });
+                // All-duplicates, asymmetric lengths.
+                let a = vec![7u32; 2 * k + 3];
+                let b = vec![7u32; 5 * k + 1];
+                let mut got = vec![0u32; a.len() + b.len()];
                 m.merge(&a, &b, &mut got);
-                let mut expect = vec![0u32; la + lb];
-                serial::merge_scalar(&a, &b, &mut expect);
-                assert_eq!(got, expect, "{imp:?} 2x{k} la={la} lb={lb} mod={modv}");
-            });
-            // All-duplicates, asymmetric lengths.
-            let a = vec![7u32; 2 * k + 3];
-            let b = vec![7u32; 5 * k + 1];
-            let mut got = vec![0u32; a.len() + b.len()];
-            m.merge(&a, &b, &mut got);
-            assert_eq!(got, vec![7u32; a.len() + b.len()], "{imp:?} 2x{k} all-dups");
+                assert_eq!(
+                    got,
+                    vec![7u32; a.len() + b.len()],
+                    "{} {imp:?} 2x{k} all-dups",
+                    vector.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn runmerge_zero_one_principle_all_combos() {
+    // Zero-one principle for merging: a merge network is correct iff
+    // it merges every pair of sorted 0/1 runs. Exhaustive over the
+    // (ones_a, ones_b) grid for two 2K-length runs (two full kernel
+    // blocks per side — flight refills from both runs), for every
+    // vector × width × impl combination.
+    for vector in VectorWidth::all() {
+        for (_, imp) in super::runmerge::table3_impls() {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                let n = 2 * width.k();
+                // Full grid at small K; strided (boundaries kept) at
+                // large K so debug-mode test time stays bounded.
+                let stride = if n > 32 { 5 } else { 1 };
+                let mut marks: Vec<usize> = (0..=n).step_by(stride).collect();
+                if *marks.last().unwrap() != n {
+                    marks.push(n);
+                }
+                for &ones_a in &marks {
+                    for &ones_b in &marks {
+                        let a: Vec<u32> = (0..n).map(|i| u32::from(i >= n - ones_a)).collect();
+                        let b: Vec<u32> = (0..n).map(|i| u32::from(i >= n - ones_b)).collect();
+                        let mut got = vec![9u32; 2 * n];
+                        m.merge(&a, &b, &mut got);
+                        let mut expect = [a, b].concat();
+                        expect.sort_unstable();
+                        assert_eq!(
+                            got,
+                            expect,
+                            "{} {imp:?} 2x{} ones=({ones_a},{ones_b})",
+                            vector.name(),
+                            width.k()
+                        );
+                    }
+                }
+            }
         }
     }
 }
 
 #[test]
 fn runmerge_short_runs_fall_back_to_serial() {
-    let m = RunMerger { width: MergeWidth::K32, imp: MergeImpl::Hybrid };
+    let m =
+        RunMerger { width: MergeWidth::K32, imp: MergeImpl::Hybrid, vector: VectorWidth::V128 };
     let a = vec![3u32, 9];
     let b = vec![1u32, 2, 4];
     let mut out = vec![0u32; 5];

@@ -16,13 +16,19 @@
 //!   against a pure-jnp oracle.
 //!
 //! The paper targets ARM NEON on an FT2000+; this testbed is x86-64.
-//! The NEON register model is reproduced by [`simd::V128`] — a portable
-//! 128-bit, 4-lane vector type whose operations map 1:1 onto the NEON
+//! The NEON register model is reproduced by the width-generic
+//! [`simd::Vector`] layer: [`simd::V128`] — a portable 128-bit,
+//! 4-lane vector type whose operations map 1:1 onto the NEON
 //! intrinsics the paper uses (`vminq_s32`, `vmaxq_s32`, `vzipq`, ...)
-//! and auto-vectorize to SSE on this host. Register-pressure effects
-//! (the paper's Table 2 R-sweep) are additionally modeled by
-//! [`regmachine`], an abstract register-file simulator with an explicit
-//! spill cost model. See DESIGN.md §Hardware-Adaptation.
+//! and auto-vectorize to SSE on this host — and [`simd::V256`], its
+//! 8-lane sibling modeling paired q-registers / SVE-256. The kernels
+//! are generic over the vector type, so the §2.2 width × register
+//! budget sweep is a [`sort::SortConfig`] knob
+//! (`vector_width`/`merge_width`), recorded in
+//! `BENCH_width_sweep.json`. Register-pressure effects (the paper's
+//! Table 2 R-sweep) are additionally modeled by [`regmachine`], an
+//! abstract register-file simulator with an explicit spill cost
+//! model. See DESIGN.md §Hardware-Adaptation.
 //!
 //! # Paper → code map
 //!

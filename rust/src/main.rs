@@ -4,6 +4,8 @@
 //!
 //! ```text
 //! neonms sort [--n N] [--threads T] [--workload W]
+//!             [--impl hybrid|vectorized|serial] [--width 4|8|16|32|64]
+//!             [--vector 128|256]
 //! neonms bench <table1|table2|table3|fig5|ablations|all> [--reps R] [--max-n N]
 //! neonms verify-networks
 //! neonms regmachine [--phys F]
@@ -83,6 +85,7 @@ impl Flags {
 
 fn cmd_sort(flags: &Flags) {
     use neonms::kernels::{MergeImpl, MergeWidth};
+    use neonms::simd::VectorWidth;
     use neonms::sort::SortConfig;
     let n = flags.get_usize("n", 1 << 20);
     let threads = flags.get_usize("threads", 1);
@@ -100,9 +103,19 @@ fn cmd_sort(flags: &Flags) {
         4 => MergeWidth::K4,
         16 => MergeWidth::K16,
         32 => MergeWidth::K32,
+        64 => MergeWidth::K64,
         _ => MergeWidth::K8,
     };
-    let cfg = SortConfig { merge_impl: imp, merge_width: width, ..Default::default() };
+    let vector = match flags.get_usize("vector", 128) {
+        256 => VectorWidth::V256,
+        _ => VectorWidth::V128,
+    };
+    let cfg = SortConfig {
+        merge_impl: imp,
+        merge_width: width,
+        vector_width: vector,
+        ..Default::default()
+    };
     let mut data = workload.generate(n, 42);
     let t0 = Instant::now();
     if threads > 1 {

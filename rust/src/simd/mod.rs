@@ -1,30 +1,51 @@
-//! NEON-like 128-bit SIMD substrate.
+//! NEON-like SIMD substrate, width-generic since PR 3.
 //!
 //! The paper's kernels are written against ARM NEON's `q` registers:
 //! 128 bits, four 32-bit lanes, with `vminq`/`vmaxq` comparators and
 //! `vzipq`/`vuzpq`/`vrev64q`/`vtrnq` shuffles. This testbed is x86-64,
-//! so we substitute a portable [`V128`] type with exactly NEON's lane
+//! so we substitute portable register types with exactly NEON's lane
 //! semantics. Every method is a thin, `#[inline(always)]` array
 //! operation that LLVM lowers to the SSE2/SSE4.1 equivalent of the
 //! corresponding NEON instruction (`pminsd`/`pmaxsd`, `punpckl/hdq`,
 //! `pshufd`, ...), preserving the paper's cost structure: one
 //! comparator = one `vmin` + one `vmax`, one shuffle = one port-5 op.
 //!
+//! Since the width sweep (§2.2's vector width × register budget
+//! tradeoff) needs the same kernels at more than one width, the
+//! kernel-facing surface is the [`Vector`] trait rather than a
+//! concrete type:
+//!
+//! * [`V128`] — `W = 4`, the paper's geometry (and the default);
+//! * [`V256`] — `W = 8`, paired q-registers / SVE-256, each op
+//!   lowering to two `V128` ops on this host (see `v256.rs` for the
+//!   exact cost accounting).
+//!
+//! [`VectorWidth`] is the runtime selector configs carry;
+//! [`Lanes`] is the `Lane`-free width marker const guards use.
+//!
 //! See DESIGN.md §Hardware-Adaptation.
 
 mod lane;
 mod v128;
+mod v256;
+mod vector;
 
 pub use lane::{pack_key_rowid, unpack_key_rowid, Lane};
 pub use v128::{transpose4, transpose_rx4, V128};
+pub use v256::{transpose8, V256};
+pub use vector::{Lanes, Vector, VectorWidth};
 
-/// Number of 32-bit lanes per vector register — the paper's `W`.
+/// Number of 32-bit lanes per 128-bit base register — the paper's `W`
+/// at the paper's width. Width-generic code must use
+/// [`Lanes::LANES`]/[`VectorWidth::lanes`] instead; this constant
+/// remains for the V128-only helpers and the NEON cost discussions.
 pub const W: usize = 4;
 
 /// Number of architectural vector registers on ARM NEON (AArch64):
 /// `v0..v31`. The paper's §2.2 argues the *usable* count for an
 /// in-register sort is 16 once shuffle temporaries and loop-carried
-/// state are excluded.
+/// state are excluded. A `V256` occupies two of these (a q-register
+/// pair), which is why the wider configurations halve the usable `R`.
 pub const NEON_REGISTER_FILE: usize = 32;
 
 #[cfg(test)]

@@ -131,3 +131,130 @@ fn lane_select_le_is_branchless_semantics() {
     assert_eq!(5i32.select_le(3, "a", "b"), "b");
     assert_eq!(4u32.select_le(4, 1, 2), 1);
 }
+
+// ---- V256: the paired-q-register width ----
+
+fn v8(vals: [i32; 8]) -> V256<i32> {
+    V256::load(&vals)
+}
+
+#[test]
+fn v256_splat_load_store_lane_roundtrip() {
+    let x = V256::<u32>::splat(9);
+    assert_eq!(x.to_array(), [9; 8]);
+    let src: Vec<u32> = (1..=10).collect();
+    let r = V256::load(&src);
+    assert_eq!(r.to_array(), [1, 2, 3, 4, 5, 6, 7, 8]);
+    let mut dst = [0u32; 9];
+    Vector::store(r, &mut dst);
+    assert_eq!(&dst[..8], &[1, 2, 3, 4, 5, 6, 7, 8]);
+    assert_eq!(dst[8], 0, "store writes exactly LANES elements");
+    for i in 0..8 {
+        assert_eq!(Vector::lane(r, i), (i + 1) as u32);
+    }
+}
+
+#[test]
+fn v256_min_max_reverse_lower_to_v128_pairs() {
+    let a = v8([1, 9, -3, 4, 7, -8, 0, 2]);
+    let b = v8([2, 5, -7, 4, -1, 6, 0, 3]);
+    // Trait results equal the explicit two-half lowering.
+    assert_eq!(Vector::min(a, b).0[0], a.0[0].min(b.0[0]));
+    assert_eq!(Vector::min(a, b).0[1], a.0[1].min(b.0[1]));
+    assert_eq!(Vector::max(a, b).0[0], a.0[0].max(b.0[0]));
+    assert_eq!(Vector::max(a, b).0[1], a.0[1].max(b.0[1]));
+    assert_eq!(Vector::min(a, b).to_array(), [1, 5, -7, 4, -1, -8, 0, 2]);
+    assert_eq!(Vector::max(a, b).to_array(), [2, 9, -3, 4, 7, 6, 0, 3]);
+    assert_eq!(Vector::reverse(v8([0, 1, 2, 3, 4, 5, 6, 7])).to_array(), [7, 6, 5, 4, 3, 2, 1, 0]);
+}
+
+#[test]
+fn v256_bitonic_merge_lanes_sorts_all_bitonic_01() {
+    // Zero-one principle over every ascending⌢descending 0/1 pattern
+    // of 8 lanes: rise point × fall point exhaustively.
+    for rise in 0..=8usize {
+        for fall in rise..=8 {
+            let mut arr = [0i32; 8];
+            for v in arr.iter_mut().take(fall).skip(rise) {
+                *v = 1;
+            }
+            let mut expect = arr;
+            expect.sort_unstable();
+            let got = Vector::bitonic_merge_lanes(v8(arr)).to_array();
+            assert_eq!(got, expect, "rise={rise} fall={fall}");
+        }
+    }
+}
+
+#[test]
+fn v256_sort_lanes_random_and_dups() {
+    let mut rng = crate::testutil::Rng::new(21);
+    for _ in 0..500 {
+        let mut vals = [0i32; 8];
+        for v in vals.iter_mut() {
+            *v = (rng.next_u32() % 8) as i32 - 4; // heavy duplicates
+        }
+        let mut expect = vals;
+        expect.sort_unstable();
+        assert_eq!(Vector::sort_lanes(v8(vals)).to_array(), expect, "{vals:?}");
+    }
+}
+
+#[test]
+fn transpose8_is_matrix_transpose() {
+    let m: Vec<V256<i32>> =
+        (0..8).map(|i| v8(std::array::from_fn(|j| 10 * i + j as i32))).collect();
+    let t = transpose8([m[0], m[1], m[2], m[3], m[4], m[5], m[6], m[7]]);
+    for i in 0..8 {
+        for j in 0..8 {
+            assert_eq!(Vector::lane(t[i], j), Vector::lane(m[j], i), "t[{i}][{j}]");
+        }
+    }
+    // Involution.
+    let tt = transpose8(t);
+    for (a, b) in tt.iter().zip(&m) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn v256_transpose_tile_matches_transpose8() {
+    let m: Vec<V256<i32>> =
+        (0..8).map(|i| v8(std::array::from_fn(|j| 100 * i + j as i32))).collect();
+    let mut tile = m.clone();
+    V256::transpose_tile(&mut tile);
+    let t = transpose8([m[0], m[1], m[2], m[3], m[4], m[5], m[6], m[7]]);
+    assert_eq!(tile.as_slice(), &t[..]);
+}
+
+#[test]
+fn v128_trait_matches_inherent_ops() {
+    // The Vector impl must agree with the inherent V128 methods the
+    // V128-only helpers still use.
+    let a = v(3, -1, 7, 2);
+    let b = v(0, 5, 7, -9);
+    assert_eq!(Vector::min(a, b), a.min(b));
+    assert_eq!(Vector::max(a, b), a.max(b));
+    assert_eq!(Vector::reverse(a), a.reverse());
+    assert_eq!(<V128<i32> as Lanes>::LANES, 4);
+    assert_eq!(<V256<i32> as Lanes>::LANES, 8);
+}
+
+#[test]
+fn v128_sort_and_merge_lanes_via_trait() {
+    // 4-lane trait paths (shared with the kernels' generic code).
+    let mut rng = crate::testutil::Rng::new(5);
+    for _ in 0..200 {
+        let vals = [rng.next_i32(), rng.next_i32(), rng.next_i32(), rng.next_i32()];
+        let mut expect = vals;
+        expect.sort_unstable();
+        assert_eq!(Vector::sort_lanes(V128(vals)).to_array(), expect);
+    }
+}
+
+#[test]
+fn vector_width_lanes_and_names() {
+    assert_eq!(VectorWidth::V128.lanes(), 4);
+    assert_eq!(VectorWidth::V256.lanes(), 8);
+    assert_eq!(VectorWidth::all().map(|w| w.name()), ["V128", "V256"]);
+}

@@ -1,6 +1,7 @@
 //! The 128-bit, 4-lane vector register type.
 
 use super::lane::Lane;
+use super::vector::{Lanes, Vector};
 use super::W;
 
 /// A NEON `q`-register stand-in: four 32-bit lanes, 16-byte aligned.
@@ -159,6 +160,74 @@ impl<T: Lane> V128<T> {
     }
 }
 
+impl<T: Lane> Lanes for V128<T> {
+    const LANES: usize = W;
+}
+
+impl<T: Lane> Vector<T> for V128<T> {
+    #[inline(always)]
+    fn splat(v: T) -> Self {
+        V128::splat(v)
+    }
+
+    #[inline(always)]
+    fn load(src: &[T]) -> Self {
+        V128::load(src)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [T]) {
+        V128::store(self, dst)
+    }
+
+    #[inline(always)]
+    fn lane(self, i: usize) -> T {
+        V128::lane(self, i)
+    }
+
+    #[inline(always)]
+    fn min(self, o: Self) -> Self {
+        V128::min(self, o)
+    }
+
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        V128::max(self, o)
+    }
+
+    #[inline(always)]
+    fn reverse(self) -> Self {
+        V128::reverse(self)
+    }
+
+    /// Distance-2 + distance-1 half-cleaners: 2 shuffles, 2 blends,
+    /// 2 min, 2 max — the NEON `vrev64`/`vext` idiom.
+    #[inline(always)]
+    fn bitonic_merge_lanes(self) -> Self {
+        let s = self.swap_halves();
+        let r = V128::blend_lo_hi(self.min(s), self.max(s));
+        let s = r.rev64();
+        V128::blend_even_odd(r.min(s), r.max(s))
+    }
+
+    /// Tiny bitonic sorter: 3 stages, 6 comparator-lanes.
+    #[inline(always)]
+    fn sort_lanes(self) -> Self {
+        // Stage 1: (0,1),(2,3) ascending/descending → bitonic pairs.
+        let s = self.rev64();
+        let mn = self.min(s);
+        let mx = self.max(s);
+        Vector::bitonic_merge_lanes(V128([mn.0[0], mx.0[1], mx.0[2], mn.0[3]]))
+    }
+
+    #[inline(always)]
+    fn transpose_tile(tile: &mut [Self]) {
+        assert_eq!(tile.len(), W, "V128 tile is 4x4");
+        let t = transpose4([tile[0], tile[1], tile[2], tile[3]]);
+        tile.copy_from_slice(&t);
+    }
+}
+
 /// 4×4 in-register matrix transpose — the paper's *base matrix
 /// transpose* (§2.3): an `R×W` transpose decomposes into `R/W` of
 /// these. Exactly the NEON `vtrnq` + 64-bit `vzip` idiom (8 shuffles,
@@ -193,8 +262,15 @@ pub fn transpose4<T: Lane>(r: [V128<T>; 4]) -> [V128<T>; 4] {
 pub fn transpose_rx4<T: Lane>(regs: &mut [V128<T>]) {
     let r = regs.len();
     assert!(r % 4 == 0, "R must be a multiple of W=4");
+    assert!(
+        r <= super::NEON_REGISTER_FILE,
+        "R={r} exceeds the architectural register file ({})",
+        super::NEON_REGISTER_FILE
+    );
     let tiles = r / 4;
-    let mut out = vec![V128::splat(T::MIN_VALUE); r];
+    // Stack tile buffer bounded by the register-file size — this runs
+    // inside the in-register pass, which must not touch the heap.
+    let mut out = [V128::splat(T::MIN_VALUE); super::NEON_REGISTER_FILE];
     for t in 0..tiles {
         let tile = transpose4([regs[4 * t], regs[4 * t + 1], regs[4 * t + 2], regs[4 * t + 3]]);
         // Row j of this tile is the slice [4t .. 4t+4) of sorted run j;
@@ -203,5 +279,5 @@ pub fn transpose_rx4<T: Lane>(regs: &mut [V128<T>]) {
             out[j * tiles + t] = row;
         }
     }
-    regs.copy_from_slice(&out);
+    regs.copy_from_slice(&out[..r]);
 }

@@ -1,0 +1,150 @@
+//! The 256-bit, 8-lane vector register type: paired `q`-registers.
+//!
+//! Models the wider geometries the paper's §2.2 width × register
+//! budget tradeoff points at — ARM SVE at a 256-bit vector length, or
+//! NEON `q`-register *pairs* scheduled as one logical register (the
+//! `vld1q_u32_x2` / LD1 multi-register idiom). On this host every op
+//! lowers to exactly two [`V128`] ops, so the cost model stays honest:
+//! a `V256` comparator is two `vmin` + two `vmax`, a `V256` shuffle is
+//! two 128-bit shuffles (plus, for stages that cross the 128-bit
+//! boundary, the pair swap that SVE would express as a single
+//! `tbl`/`ext`). Kernels written against [`Vector`] get this width for
+//! free; nothing in this module is reachable from the `V128` paths.
+
+use super::lane::Lane;
+use super::v128::{transpose4, V128};
+use super::vector::{Lanes, Vector};
+use super::W;
+
+/// Eight 32-bit lanes as a pair of [`V128`] halves: lane `i` lives in
+/// half `i / 4`, lane `i % 4`. Lane 0 is the lowest-addressed element
+/// on load, matching the `V128` convention.
+#[derive(Clone, Copy, PartialEq, Debug)]
+#[repr(C, align(32))]
+pub struct V256<T: Lane>(pub [V128<T>; 2]);
+
+impl<T: Lane> V256<T> {
+    /// Lanes per register.
+    pub const LANES: usize = 2 * W;
+
+    /// Broadcast one scalar to all eight lanes.
+    #[inline(always)]
+    pub fn splat(v: T) -> Self {
+        V256([V128::splat(v), V128::splat(v)])
+    }
+
+    /// Load eight contiguous lanes from `src` (`vld1q_x2` / SVE
+    /// `ld1w`). Panics if `src.len() < 8`.
+    #[inline(always)]
+    pub fn load(src: &[T]) -> Self {
+        V256([V128::load(&src[..W]), V128::load(&src[W..2 * W])])
+    }
+
+    /// Store eight lanes to `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [T]) {
+        self.0[0].store(&mut dst[..W]);
+        self.0[1].store(&mut dst[W..2 * W]);
+    }
+
+    /// Materialize as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [T; 8] {
+        let (a, b) = (self.0[0].to_array(), self.0[1].to_array());
+        [a[0], a[1], a[2], a[3], b[0], b[1], b[2], b[3]]
+    }
+}
+
+impl<T: Lane> Lanes for V256<T> {
+    const LANES: usize = 2 * W;
+}
+
+impl<T: Lane> Vector<T> for V256<T> {
+    #[inline(always)]
+    fn splat(v: T) -> Self {
+        V256::splat(v)
+    }
+
+    #[inline(always)]
+    fn load(src: &[T]) -> Self {
+        V256::load(src)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [T]) {
+        V256::store(self, dst)
+    }
+
+    #[inline(always)]
+    fn lane(self, i: usize) -> T {
+        self.0[i / W].lane(i % W)
+    }
+
+    /// Two `vminq` — the paired-register lowering.
+    #[inline(always)]
+    fn min(self, o: Self) -> Self {
+        V256([self.0[0].min(o.0[0]), self.0[1].min(o.0[1])])
+    }
+
+    /// Two `vmaxq`.
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        V256([self.0[0].max(o.0[0]), self.0[1].max(o.0[1])])
+    }
+
+    /// Reverse all eight lanes: reverse each half and swap the pair.
+    #[inline(always)]
+    fn reverse(self) -> Self {
+        V256([self.0[1].reverse(), self.0[0].reverse()])
+    }
+
+    /// Three half-cleaner stages (distances 4, 2, 1). The distance-4
+    /// stage is the pair boundary: one `cmpswap` *between* the two
+    /// halves (no shuffle at all — the paired-register payoff); the
+    /// remaining stages are each half's own `V128` merge.
+    #[inline(always)]
+    fn bitonic_merge_lanes(self) -> Self {
+        let (lo, hi) = self.0[0].cmpswap(self.0[1]);
+        V256([Vector::bitonic_merge_lanes(lo), Vector::bitonic_merge_lanes(hi)])
+    }
+
+    /// Sort both halves, reverse the upper to form a bitonic
+    /// sequence, then merge — the 8-lane bitonic sorter.
+    #[inline(always)]
+    fn sort_lanes(self) -> Self {
+        let lo = Vector::sort_lanes(self.0[0]);
+        let hi = V128::reverse(Vector::sort_lanes(self.0[1]));
+        Vector::bitonic_merge_lanes(V256([lo, hi]))
+    }
+
+    #[inline(always)]
+    fn transpose_tile(tile: &mut [Self]) {
+        assert_eq!(tile.len(), 2 * W, "V256 tile is 8x8");
+        let t = transpose8([
+            tile[0], tile[1], tile[2], tile[3], tile[4], tile[5], tile[6], tile[7],
+        ]);
+        tile.copy_from_slice(&t);
+    }
+}
+
+/// 8×8 in-register matrix transpose over [`V256`] registers, built
+/// from four 4×4 [`transpose4`] base transposes — the 2×2 block
+/// decomposition: `[[A, B], [C, D]]ᵀ = [[Aᵀ, Cᵀ], [Bᵀ, Dᵀ]]`, where
+/// each letter is the 4×4 tile one `V128` half-column contributes.
+#[inline(always)]
+pub fn transpose8<T: Lane>(r: [V256<T>; 8]) -> [V256<T>; 8] {
+    let a = transpose4([r[0].0[0], r[1].0[0], r[2].0[0], r[3].0[0]]);
+    let b = transpose4([r[0].0[1], r[1].0[1], r[2].0[1], r[3].0[1]]);
+    let c = transpose4([r[4].0[0], r[5].0[0], r[6].0[0], r[7].0[0]]);
+    let d = transpose4([r[4].0[1], r[5].0[1], r[6].0[1], r[7].0[1]]);
+    [
+        V256([a[0], c[0]]),
+        V256([a[1], c[1]]),
+        V256([a[2], c[2]]),
+        V256([a[3], c[3]]),
+        V256([b[0], d[0]]),
+        V256([b[1], d[1]]),
+        V256([b[2], d[2]]),
+        V256([b[3], d[3]]),
+    ]
+}

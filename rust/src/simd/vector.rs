@@ -1,0 +1,130 @@
+//! The width-generic vector abstraction.
+//!
+//! The paper's kernels are written against one concrete register
+//! shape (NEON `q`: 128 bits, `W = 4` lanes). The width sweep the
+//! paper motivates (§2.2: throughput is governed by vector width ×
+//! register budget) needs the *same* kernels at other widths, so the
+//! kernel layer is generic over [`Vector`] instead of hard-wired to
+//! [`super::V128`]. Two implementations exist:
+//!
+//! * [`super::V128`] — `W = 4`, the paper's NEON `q`-register;
+//! * [`super::V256`] — `W = 8`, modeling paired `q`-registers /
+//!   SVE-256, lowering every op to two `V128` ops on this host.
+//!
+//! Only the operations the kernels actually consume are on the trait;
+//! width-specific shuffles (`zip`/`uzp`/`trn`, `rev64`, the blends)
+//! stay inherent to each register type — the trait exposes their
+//! *compositions* ([`Vector::bitonic_merge_lanes`],
+//! [`Vector::sort_lanes`], [`Vector::transpose_tile`]), which is what
+//! keeps a width-generic kernel from paying width-specific shuffle
+//! logic at every call site.
+
+use super::lane::Lane;
+
+/// Lane count of a vector register type, independent of the element
+/// type. Split from [`Vector`] so const guards (e.g.
+/// [`crate::kernels::hybrid::RegsFitMaxK`]) can name a register
+/// type's width in a `const` context without dragging the `Lane`
+/// parameter into const generics.
+pub trait Lanes {
+    /// 32-bit lanes per register — the paper's `W`.
+    const LANES: usize;
+}
+
+/// A SIMD register of [`Lanes::LANES`] 32-bit lanes over element type
+/// `T` — everything the sort kernels need from a vector ISA.
+///
+/// Contract shared by all implementations:
+///
+/// * lane 0 is the lowest-addressed element on [`Vector::load`]
+///   (NEON `vld1q` little-endian convention);
+/// * [`Vector::min`]/[`Vector::max`] are lane-wise, so
+///   [`Vector::cmpswap`] is the paper's two-instruction comparator;
+/// * [`Vector::bitonic_merge_lanes`] sorts any *bitonic* lane
+///   sequence ascending (the `log2(LANES)` intra-register
+///   half-cleaner stages);
+/// * [`Vector::transpose_tile`] transposes a `LANES × LANES` register
+///   tile in place — the base transpose the in-register sort builds
+///   its `R × W` transpose from (§2.3).
+pub trait Vector<T: Lane>:
+    Lanes + Copy + PartialEq + core::fmt::Debug + Send + Sync + 'static
+{
+    /// Broadcast one scalar to all lanes (`vdupq_n`).
+    fn splat(v: T) -> Self;
+
+    /// Load `LANES` contiguous elements from `src` (`vld1q`). Panics
+    /// if `src.len() < LANES` — kernels guarantee whole-vector access.
+    fn load(src: &[T]) -> Self;
+
+    /// Store `LANES` lanes to `dst` (`vst1q`).
+    fn store(self, dst: &mut [T]);
+
+    /// Lane accessor (`vgetq_lane`).
+    fn lane(self, i: usize) -> T;
+
+    /// Lane-wise minimum (`vminq`) — one half of a vector comparator.
+    fn min(self, o: Self) -> Self;
+
+    /// Lane-wise maximum (`vmaxq`) — the other half.
+    fn max(self, o: Self) -> Self;
+
+    /// Vector comparator: `(min, max)` lane-wise — exactly two
+    /// instructions, no branches, no shuffles (the paper's
+    /// "Comparator" applied across registers in column sort).
+    #[inline(always)]
+    fn cmpswap(self, o: Self) -> (Self, Self) {
+        (self.min(o), self.max(o))
+    }
+
+    /// Full lane reversal `[a(W-1), .., a0]` — forms the bitonic
+    /// sequence before a merge network.
+    fn reverse(self) -> Self;
+
+    /// Bitonic merge of the lanes: input bitonic (ascending then
+    /// descending), output sorted ascending. The `log2(LANES)`
+    /// intra-register half-cleaner stages of Fig. 4.
+    fn bitonic_merge_lanes(self) -> Self;
+
+    /// Sort the lanes ascending (tiny bitonic sorter, used for the
+    /// one-register base case of [`crate::kernels::bitonic::bitonic_sort_regs`]).
+    fn sort_lanes(self) -> Self;
+
+    /// Transpose a `LANES × LANES` register tile in place:
+    /// `tile.len()` must equal `LANES`; afterwards output register
+    /// `i` holds lane `i` of every input register, in register order.
+    fn transpose_tile(tile: &mut [Self]);
+}
+
+/// Runtime selector for the register width a sort configuration uses
+/// — the sweep axis the ROADMAP's "wider lanes" item asked for.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VectorWidth {
+    /// 128-bit, 4-lane [`super::V128`] (the paper's NEON geometry).
+    V128,
+    /// 256-bit, 8-lane [`super::V256`] (paired q-registers /
+    /// SVE-256; lowers to two `V128` ops per op on this host).
+    V256,
+}
+
+impl VectorWidth {
+    /// Lanes per register at this width (the paper's `W`).
+    pub fn lanes(self) -> usize {
+        match self {
+            VectorWidth::V128 => 4,
+            VectorWidth::V256 => 8,
+        }
+    }
+
+    /// Both widths, for sweeps.
+    pub fn all() -> [VectorWidth; 2] {
+        [VectorWidth::V128, VectorWidth::V256]
+    }
+
+    /// Display label (matches the type names).
+    pub fn name(self) -> &'static str {
+        match self {
+            VectorWidth::V128 => "V128",
+            VectorWidth::V256 => "V256",
+        }
+    }
+}

@@ -13,7 +13,7 @@
 pub mod neon_ms;
 pub mod parallel;
 
-pub use neon_ms::{NeonMergeSort, SortConfig};
+pub use neon_ms::{NeonMergeSort, SortConfig, SortScratch};
 pub use parallel::ParallelNeonMergeSort;
 
 #[cfg(test)]

@@ -4,22 +4,75 @@
 use crate::kernels::inregister::{ColumnNetwork, InRegisterSorter};
 use crate::kernels::runmerge::RunMerger;
 use crate::kernels::{MergeImpl, MergeWidth};
-use crate::simd::Lane;
+use crate::simd::{Lane, VectorWidth};
 
-/// Tuning knobs for the full sort — every Table 2/3 axis in one place.
+/// Reusable auxiliary memory for [`NeonMergeSort::sort_with_scratch`]
+/// and [`super::ParallelNeonMergeSort::sort_with_scratch`]: the
+/// ping-pong merge buffer, grown on demand and kept across calls so
+/// steady-state callers (the service's shard workers) do zero per-job
+/// heap allocation.
+///
+/// One scratch serves any number of sequential sorts of any sizes;
+/// it is `Send`, so a worker thread can own one for its lifetime.
+#[derive(Debug)]
+pub struct SortScratch<T: Lane> {
+    buf: Vec<T>,
+}
+
+impl<T: Lane> Default for SortScratch<T> {
+    fn default() -> Self {
+        SortScratch::new()
+    }
+}
+
+impl<T: Lane> SortScratch<T> {
+    /// Empty scratch; grows on first use.
+    pub fn new() -> Self {
+        SortScratch { buf: Vec::new() }
+    }
+
+    /// Scratch pre-sized for inputs up to `n` elements (no growth —
+    /// and therefore no allocation — for any sort ≤ `n`).
+    pub fn with_capacity(n: usize) -> Self {
+        SortScratch { buf: vec![T::MIN_VALUE; n] }
+    }
+
+    /// Current capacity in elements (for tests/metrics).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// An `n`-element aux view, growing the buffer only when `n`
+    /// exceeds every earlier request (amortized allocation-free).
+    pub(crate) fn take(&mut self, n: usize) -> &mut [T] {
+        if self.buf.len() < n {
+            self.buf.resize(n, T::MIN_VALUE);
+        }
+        &mut self.buf[..n]
+    }
+}
+
+/// Tuning knobs for the full sort — every Table 2/3 axis in one place,
+/// plus the register-width axis the width sweep added.
 #[derive(Clone, Debug)]
 pub struct SortConfig {
     /// Registers for the in-register sort (paper: 16).
     pub r: usize,
     /// Column-sort network family (paper: best, the `16*` row).
     pub column_network: ColumnNetwork,
-    /// Register-merge kernel width for the merge passes. The paper's
-    /// Table 3 finds the hybrid merger fastest at 2×{8,16}; on this
-    /// host 2×4 wins (EXPERIMENTS.md §Perf), so that is the default;
-    /// benches still sweep the paper's widths.
+    /// Register-merge kernel width for the merge passes, up to the
+    /// `MAX_K = 64` budget (2×64). The paper's Table 3 finds the
+    /// hybrid merger fastest at 2×{8,16}; on this host the recorded
+    /// width sweep (`BENCH_width_sweep.json`, regenerate with `cargo
+    /// bench --bench ablations`) keeps hybrid 2×4 at `V128` as the
+    /// default; benches sweep all widths at both register widths.
     pub merge_width: MergeWidth,
     /// Merge kernel implementation (paper: hybrid).
     pub merge_impl: MergeImpl,
+    /// Register width both stages run at. `V256` models paired
+    /// q-registers / SVE-256 (each op lowers to two `V128` ops on
+    /// this host) and requires `r % 8 == 0`.
+    pub vector_width: VectorWidth,
 }
 
 impl Default for SortConfig {
@@ -29,13 +82,16 @@ impl Default for SortConfig {
             column_network: ColumnNetwork::Best,
             merge_width: MergeWidth::K4,
             merge_impl: MergeImpl::Hybrid,
+            vector_width: VectorWidth::V128,
         }
     }
 }
 
 /// The single-thread NEON-MS sorter. Construction precomputes the
 /// column network; [`NeonMergeSort::sort`] is then allocation-free
-/// apart from one ping-pong buffer of the input's size.
+/// apart from one ping-pong buffer of the input's size — and
+/// [`NeonMergeSort::sort_with_scratch`] reuses even that across
+/// calls.
 #[derive(Clone, Debug)]
 pub struct NeonMergeSort {
     inreg: InRegisterSorter,
@@ -46,16 +102,18 @@ impl NeonMergeSort {
     /// Build from a config.
     pub fn new(cfg: SortConfig) -> Self {
         let inreg = InRegisterSorter::new(cfg.r, cfg.column_network)
+            .with_vector(cfg.vector_width)
             .with_merge_impl(match cfg.merge_impl {
                 MergeImpl::Serial => MergeImpl::Hybrid, // row merge stays in-register
                 other => other,
             });
-        let merger = RunMerger { width: cfg.merge_width, imp: cfg.merge_impl };
+        let merger =
+            RunMerger { width: cfg.merge_width, imp: cfg.merge_impl, vector: cfg.vector_width };
         NeonMergeSort { inreg, merger }
     }
 
     /// The paper's configuration: R = 16* with hybrid merges (width
-    /// host-tuned to 2×4; see SortConfig::merge_width).
+    /// host-tuned to 2×4 at V128; see SortConfig::merge_width).
     pub fn paper_default() -> Self {
         NeonMergeSort::new(SortConfig::default())
     }
@@ -81,6 +139,10 @@ impl NeonMergeSort {
     /// of `SEGMENT` elements are fully sorted with in-cache merge
     /// passes first, then the outer passes merge segments.
     ///
+    /// Allocates the aux buffer per call; steady-state callers should
+    /// hold a [`SortScratch`] and use
+    /// [`NeonMergeSort::sort_with_scratch`].
+    ///
     /// # Examples
     ///
     /// ```
@@ -96,6 +158,28 @@ impl NeonMergeSort {
     /// assert_eq!(tiny, [3, 7, 9]);
     /// ```
     pub fn sort<T: Lane>(&self, data: &mut [T]) {
+        self.sort_with_scratch(data, &mut SortScratch::new());
+    }
+
+    /// [`NeonMergeSort::sort`] against caller-owned auxiliary memory:
+    /// after `scratch` has grown to the largest input seen, further
+    /// sorts perform **zero** heap allocation — the reusable-scratch
+    /// entry point the service's shard workers run on.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use neonms::sort::{NeonMergeSort, SortScratch};
+    ///
+    /// let sorter = NeonMergeSort::paper_default();
+    /// let mut scratch = SortScratch::with_capacity(1024);
+    /// for seed in 0..4u32 {
+    ///     let mut data: Vec<u32> = (0..1024).map(|i| i ^ seed).collect();
+    ///     sorter.sort_with_scratch(&mut data, &mut scratch); // no allocation
+    ///     assert!(data.windows(2).all(|w| w[0] <= w[1]));
+    /// }
+    /// ```
+    pub fn sort_with_scratch<T: Lane>(&self, data: &mut [T], scratch: &mut SortScratch<T>) {
         let n = data.len();
         if n <= 1 {
             return;
@@ -104,7 +188,7 @@ impl NeonMergeSort {
             crate::kernels::serial::insertion_sort(data);
             return;
         }
-        let mut aux: Vec<T> = vec![T::MIN_VALUE; n];
+        let aux = scratch.take(n);
         // Phase A: segment-local sort (in-register pass + in-cache
         // merge passes), each segment independent.
         for (seg, seg_aux) in data.chunks_mut(Self::SEGMENT).zip(aux.chunks_mut(Self::SEGMENT)) {
@@ -115,18 +199,15 @@ impl NeonMergeSort {
         let mut src_is_data = true;
         while run < n {
             {
-                let (src, dst): (&mut [T], &mut [T]) = if src_is_data {
-                    (data, &mut aux[..])
-                } else {
-                    (&mut aux[..], data)
-                };
+                let (src, dst): (&mut [T], &mut [T]) =
+                    if src_is_data { (data, &mut aux[..]) } else { (&mut aux[..], data) };
                 self.merge_pass(src, dst, run);
             }
             src_is_data = !src_is_data;
             run *= 2;
         }
         if !src_is_data {
-            data.copy_from_slice(&aux);
+            data.copy_from_slice(aux);
         }
     }
 

@@ -15,7 +15,7 @@
 //! offline, and none is needed — segments are pre-balanced by
 //! construction.
 
-use super::neon_ms::NeonMergeSort;
+use super::neon_ms::{NeonMergeSort, SortScratch};
 use crate::kernels::runmerge::RunMerger;
 use crate::mergepath;
 use crate::simd::Lane;
@@ -98,6 +98,24 @@ impl ParallelNeonMergeSort {
         T: Lane,
         F: Fn(usize, &[T]) + Sync,
     {
+        self.sort_segments_with_scratch(data, bounds, &mut SortScratch::new(), on_sorted);
+    }
+
+    /// [`Self::sort_segments_with`] against caller-owned scratch —
+    /// the service's shard workers call this: for the common inline
+    /// batch (total below the parallel threshold, sorted on the
+    /// calling thread) **all** auxiliary memory comes from `scratch`,
+    /// so steady-state fused batches allocate nothing.
+    pub fn sort_segments_with_scratch<T, F>(
+        &self,
+        data: &mut [T],
+        bounds: &[usize],
+        scratch: &mut SortScratch<T>,
+        on_sorted: F,
+    ) where
+        T: Lane,
+        F: Fn(usize, &[T]) + Sync,
+    {
         assert!(
             !bounds.is_empty() && bounds[0] == 0 && *bounds.last().unwrap() == data.len(),
             "bounds must cover data exactly"
@@ -112,7 +130,7 @@ impl ParallelNeonMergeSort {
             rest = tail;
             views.push(head);
         }
-        self.sort_batch_with(&mut views, on_sorted);
+        self.sort_batch_with_scratch(&mut views, scratch, on_sorted);
     }
 
     /// Multi-slice batch entry point: sort many independent slices in
@@ -132,12 +150,30 @@ impl ParallelNeonMergeSort {
         T: Lane,
         F: Fn(usize, &[T]) + Sync,
     {
+        self.sort_batch_with_scratch(slices, &mut SortScratch::new(), on_sorted);
+    }
+
+    /// [`Self::sort_batch_with`] against caller-owned scratch. The
+    /// inline path (small batches) sorts every slice on the calling
+    /// thread through `scratch`; the spawning path gives each worker
+    /// thread its own scratch reused across all slices it claims, so
+    /// aux allocation is once per worker per batch instead of once
+    /// per slice.
+    pub fn sort_batch_with_scratch<T, F>(
+        &self,
+        slices: &mut [&mut [T]],
+        scratch: &mut SortScratch<T>,
+        on_sorted: F,
+    ) where
+        T: Lane,
+        F: Fn(usize, &[T]) + Sync,
+    {
         let n = slices.len();
         let total: usize = slices.iter().map(|s| s.len()).sum();
         let t = self.threads.min(n);
         if t <= 1 || total < PARALLEL_MIN_N {
             for (k, sl) in slices.iter_mut().enumerate() {
-                self.single.sort(sl);
+                self.single.sort_with_scratch(sl, scratch);
                 on_sorted(k, &**sl);
             }
             return;
@@ -150,17 +186,20 @@ impl ParallelNeonMergeSort {
             for _ in 0..t {
                 let cursor = &cursor;
                 let ptr = &ptr;
-                s.spawn(move || loop {
-                    let k = cursor.fetch_add(1, Ordering::Relaxed);
-                    if k >= n {
-                        break;
+                s.spawn(move || {
+                    let mut local = SortScratch::new();
+                    loop {
+                        let k = cursor.fetch_add(1, Ordering::Relaxed);
+                        if k >= n {
+                            break;
+                        }
+                        // SAFETY: each index is claimed by exactly one
+                        // thread and the `&mut [T]` entries are
+                        // disjoint by construction.
+                        let sl: &mut &mut [T] = unsafe { &mut *ptr.0.add(k) };
+                        single.sort_with_scratch(sl, &mut local);
+                        on_sorted(k, &**sl);
                     }
-                    // SAFETY: each index is claimed by exactly one
-                    // thread and the `&mut [T]` entries are disjoint by
-                    // construction.
-                    let sl: &mut &mut [T] = unsafe { &mut *ptr.0.add(k) };
-                    single.sort(sl);
-                    on_sorted(k, &**sl);
                 });
             }
         });
@@ -179,11 +218,22 @@ impl ParallelNeonMergeSort {
     /// assert!(data.windows(2).all(|w| w[0] <= w[1]));
     /// ```
     pub fn sort<T: Lane>(&self, data: &mut [T]) {
+        self.sort_with_scratch(data, &mut SortScratch::new());
+    }
+
+    /// [`Self::sort`] against caller-owned scratch: the merge tree's
+    /// ping-pong buffer (and, below the parallel threshold, the
+    /// single-thread sorter's aux) comes from `scratch`, so a worker
+    /// that owns one does zero per-job heap allocation in steady
+    /// state. Phase 1's per-chunk local sorts still allocate their
+    /// thread-local aux inside the spawned scope (scratch is one
+    /// buffer and the chunk sorts run concurrently).
+    pub fn sort_with_scratch<T: Lane>(&self, data: &mut [T], scratch: &mut SortScratch<T>) {
         let n = data.len();
         let t = self.threads;
         if t == 1 || n < PARALLEL_MIN_N {
             // Parallel overhead dominates below the threshold.
-            return self.single.sort(data);
+            return self.single.sort_with_scratch(data, scratch);
         }
         // ---- Phase 1: local sorts on contiguous chunks ----
         let block = self.single.inregister().block_len();
@@ -213,7 +263,7 @@ impl ParallelNeonMergeSort {
             .map(|w| (w[0], w[1]))
             .filter(|(a, b)| a < b)
             .collect();
-        let mut aux: Vec<T> = vec![T::MIN_VALUE; n];
+        let aux = scratch.take(n);
         let mut src_is_data = true;
         while runs.len() > 1 {
             let (src, dst): (&[T], &mut [T]) = if src_is_data {
@@ -225,7 +275,7 @@ impl ParallelNeonMergeSort {
             src_is_data = !src_is_data;
         }
         if !src_is_data {
-            data.copy_from_slice(&aux);
+            data.copy_from_slice(aux);
         }
     }
 

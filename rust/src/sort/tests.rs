@@ -1,7 +1,8 @@
-use super::neon_ms::{NeonMergeSort, SortConfig};
+use super::neon_ms::{NeonMergeSort, SortConfig, SortScratch};
 use super::parallel::ParallelNeonMergeSort;
 use crate::kernels::inregister::ColumnNetwork;
 use crate::kernels::{MergeImpl, MergeWidth};
+use crate::simd::VectorWidth;
 use crate::testutil::{assert_permutation, assert_sorted, forall, forall_indexed, Rng};
 
 fn check_sort(sorter: &NeonMergeSort, data: &[u32], ctx: &str) {
@@ -61,6 +62,7 @@ fn all_configs_sort() {
                         column_network: net,
                         merge_width: width,
                         merge_impl: imp,
+                        vector_width: VectorWidth::V128,
                     });
                     let mut rng = Rng::new((r * width.k()) as u64);
                     let data = rng.vec_u32(2000 + r);
@@ -69,6 +71,150 @@ fn all_configs_sort() {
             }
         }
     }
+}
+
+#[test]
+fn all_v256_configs_sort() {
+    // The full sorter end-to-end at the 8-lane width: every valid
+    // R × merge width × impl, sizes crossing block boundaries.
+    for r in [8usize, 16, 32] {
+        for width in MergeWidth::all() {
+            for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid] {
+                let s = NeonMergeSort::new(SortConfig {
+                    r,
+                    column_network: ColumnNetwork::Best,
+                    merge_width: width,
+                    merge_impl: imp,
+                    vector_width: VectorWidth::V256,
+                });
+                let mut rng = Rng::new((r * width.k() + 1) as u64);
+                for len in [0usize, 1, r * 8 - 1, r * 8, r * 8 + 1, 3000 + r] {
+                    let data = rng.vec_u32(len);
+                    check_sort(
+                        &s,
+                        &data,
+                        &format!("V256 R={r} 2x{} {imp:?} len={len}", width.k()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn v256_matches_v128_output_exactly() {
+    // Same totals, unique answer on u32: the two widths must agree
+    // element-for-element with each other and the std oracle.
+    forall(20, |rng| {
+        let len = 4000 + rng.below(70_000);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for vw in VectorWidth::all() {
+            let s = NeonMergeSort::new(SortConfig {
+                merge_width: MergeWidth::K16,
+                vector_width: vw,
+                ..Default::default()
+            });
+            let mut got = data.clone();
+            s.sort(&mut got);
+            assert_eq!(got, expect, "{} len={len}", vw.name());
+        }
+    });
+}
+
+#[test]
+fn sort_with_scratch_matches_sort_and_reuses_allocation() {
+    let s = NeonMergeSort::paper_default();
+    let mut scratch = SortScratch::with_capacity(20_000);
+    assert_eq!(scratch.capacity(), 20_000);
+    forall_indexed(30, |case, rng| {
+        let len = [0usize, 1, 63, 64, 1000, 4096, 20_000][case % 7];
+        let data = rng.vec_u32(len);
+        let mut a = data.clone();
+        let mut b = data.clone();
+        s.sort(&mut a);
+        s.sort_with_scratch(&mut b, &mut scratch);
+        assert_eq!(a, b, "len={len}");
+        // Capacity never shrinks and never grows past the high-water
+        // mark — the reuse contract the shard workers rely on.
+        assert_eq!(scratch.capacity(), 20_000);
+    });
+    // A larger input grows it once...
+    let mut big = Rng::new(9).vec_u32(30_000);
+    s.sort_with_scratch(&mut big, &mut scratch);
+    assert_sorted(&big, "scratch grow");
+    assert_eq!(scratch.capacity(), 30_000);
+    // ...and V256 configs share the same scratch.
+    let v256 = NeonMergeSort::new(SortConfig {
+        vector_width: VectorWidth::V256,
+        merge_width: MergeWidth::K32,
+        ..Default::default()
+    });
+    let mut data = Rng::new(10).vec_u32(25_000);
+    v256.sort_with_scratch(&mut data, &mut scratch);
+    assert_sorted(&data, "V256 via scratch");
+    assert_eq!(scratch.capacity(), 30_000);
+}
+
+#[test]
+fn parallel_sort_with_scratch_matches_oracle() {
+    let p = ParallelNeonMergeSort::with_threads(4);
+    let mut scratch = SortScratch::new();
+    forall(10, |rng| {
+        let len = 4096 + rng.below(30_000);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let mut got = data;
+        p.sort_with_scratch(&mut got, &mut scratch);
+        assert_eq!(got, expect, "len={len}");
+    });
+}
+
+#[test]
+fn parallel_v256_matches_single_thread() {
+    let cfg = SortConfig {
+        vector_width: VectorWidth::V256,
+        merge_width: MergeWidth::K64,
+        ..Default::default()
+    };
+    forall(10, |rng| {
+        let len = 4096 + rng.below(40_000);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for t in [2usize, 4, 7] {
+            let mut v = data.clone();
+            ParallelNeonMergeSort::new(NeonMergeSort::new(cfg.clone()), t).sort(&mut v);
+            assert_eq!(v, expect, "V256 T={t} len={len}");
+        }
+    });
+}
+
+#[test]
+fn sort_segments_scratch_matches_plain() {
+    forall(15, |rng| {
+        let nsegs = 1 + rng.below(8);
+        let mut data = Vec::new();
+        let mut bounds = vec![0usize];
+        for _ in 0..nsegs {
+            let len = rng.below(2000);
+            data.extend(rng.vec_u32(len));
+            bounds.push(data.len());
+        }
+        let mut plain = data.clone();
+        ParallelNeonMergeSort::with_threads(2).sort_segments(&mut plain, &bounds);
+        let mut scratch = SortScratch::new();
+        let mut via = data;
+        ParallelNeonMergeSort::with_threads(2).sort_segments_with_scratch(
+            &mut via,
+            &bounds,
+            &mut scratch,
+            |_, _| {},
+        );
+        assert_eq!(via, plain);
+    });
 }
 
 #[test]

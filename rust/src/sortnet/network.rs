@@ -1,6 +1,6 @@
 //! Network representation, application, and structural statistics.
 
-use crate::simd::{Lane, V128};
+use crate::simd::{Lane, Vector};
 
 /// One compare-exchange: after execution, position `i` holds the
 /// minimum and position `j` the maximum of the pair.
@@ -117,8 +117,11 @@ impl Network {
     /// Run the network *column-wise* over a register file: comparator
     /// `(i, j)` becomes a single vector `cmpswap` between registers `i`
     /// and `j`, sorting all `W` columns simultaneously (paper §2.3).
+    /// Width-generic: columns never interact, so the same comparator
+    /// stream sorts 4 columns on [`crate::simd::V128`] and 8 on
+    /// [`crate::simd::V256`].
     #[inline]
-    pub fn apply_columns<T: Lane>(&self, regs: &mut [V128<T>]) {
+    pub fn apply_columns<T: Lane, V: Vector<T>>(&self, regs: &mut [V]) {
         assert_eq!(regs.len(), self.n, "{}: register count mismatch", self.name);
         for c in &self.comps {
             let (lo, hi) = regs[c.i as usize].cmpswap(regs[c.j as usize]);

@@ -1,6 +1,6 @@
 use super::gen;
 use super::network::{Comparator, Network};
-use crate::simd::V128;
+use crate::simd::{Vector, V128, V256};
 use crate::testutil::{forall, Rng};
 
 #[test]
@@ -146,6 +146,30 @@ fn apply_columns_sorts_each_lane() {
             lane.sort_unstable();
             let got: Vec<i32> = regs.iter().map(|v| v.lane(l)).collect();
             assert_eq!(&got, lane, "lane {l} sorted");
+        }
+    });
+}
+
+#[test]
+fn apply_columns_sorts_each_lane_v256() {
+    // The width-generic column application: the same comparator
+    // stream sorts all 8 V256 lanes independently.
+    forall(100, |rng: &mut Rng| {
+        let r = [8usize, 16][rng.below(2)];
+        let net = gen::best(r);
+        let mut regs: Vec<V256<i32>> = (0..r)
+            .map(|_| {
+                let vals: [i32; 8] = std::array::from_fn(|_| rng.next_i32() % 100);
+                V256::load(&vals)
+            })
+            .collect();
+        let mut lanes: Vec<Vec<i32>> =
+            (0..8).map(|l| regs.iter().map(|v| Vector::lane(*v, l)).collect()).collect();
+        net.apply_columns(&mut regs);
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            lane.sort_unstable();
+            let got: Vec<i32> = regs.iter().map(|v| Vector::lane(*v, l)).collect();
+            assert_eq!(&got, lane, "V256 lane {l} sorted");
         }
     });
 }
