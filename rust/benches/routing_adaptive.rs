@@ -1,0 +1,280 @@
+//! Bench: adaptive-routing convergence on skewed workloads, versus
+//! the same service with static default cutoffs.
+//!
+//! Three deliberately skewed scenarios stress one learned parameter
+//! each:
+//!
+//! * `burst_tiny` — every request lands within an octave of the tiny
+//!   cutoff, so the insertion-vs-vector boundary is the whole game.
+//! * `heavy_tail` — mostly small requests plus a heavy tail straddling
+//!   the parallel cutoff, exercising the single-vs-parallel boundary.
+//! * `fuse_burst` — a one-worker queue pileup of small requests, where
+//!   fused batching either pays or doesn't; the tuner sizes
+//!   `batch_max`/`fuse_cutoff` from the fused-vs-solo comparison.
+//!
+//! Each scenario runs twice — [`AdaptivePolicy::Off`] then
+//! [`AdaptivePolicy::Adaptive`] — and the run records throughput, the
+//! initial/final cutoffs, and the tuner's decision trace (each entry
+//! carries the per-tier elements/µs that drove it, so "moved toward
+//! the measured-better tier" is checkable from the artifact alone) to
+//! a JSON artifact like the width sweep's.
+//!
+//! Env knobs:
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (fewer, smaller jobs).
+//! * `NEONMS_BENCH_JOBS` — override jobs per scenario run.
+//! * `NEONMS_BENCH_OUT` — artifact path (default
+//!   `../BENCH_routing_adaptive.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::coordinator::{
+    AdaptivePolicy, CoordinatorConfig, Decision, RoutingBounds, RoutingSnapshot, SortService,
+};
+use neonms::testutil::Rng;
+use std::time::Instant;
+
+/// One skewed workload: a config plus a request-length generator.
+struct Scenario {
+    name: &'static str,
+    cfg: CoordinatorConfig,
+    epoch_jobs: u64,
+    bounds: RoutingBounds,
+    jobs: usize,
+    /// Submits outstanding at once (bounds memory; creates the queue
+    /// depth dynamic batching needs).
+    wave: usize,
+    len: fn(&mut Rng) -> usize,
+}
+
+fn scenarios(smoke: bool, jobs_override: Option<usize>) -> Vec<Scenario> {
+    let scale = |full: usize, smoke_n: usize| {
+        jobs_override.unwrap_or(if smoke { smoke_n } else { full })
+    };
+    vec![
+        Scenario {
+            name: "burst_tiny",
+            cfg: CoordinatorConfig {
+                workers: 2,
+                shards: 2,
+                batch_max: 1, // isolate the solo tiny/single boundary
+                ..Default::default()
+            },
+            epoch_jobs: 64,
+            bounds: RoutingBounds::default(),
+            jobs: scale(8000, 1600),
+            wave: 64,
+            len: |rng| 16 + rng.below(176), // within an octave of 64
+        },
+        Scenario {
+            name: "heavy_tail",
+            cfg: CoordinatorConfig {
+                workers: 2,
+                shards: 2,
+                batch_max: 1,
+                parallel_cutoff: 1 << 15,
+                threads_per_parallel_sort: 4,
+                ..Default::default()
+            },
+            epoch_jobs: 48,
+            bounds: RoutingBounds {
+                parallel: (1 << 13, 1 << 18),
+                ..Default::default()
+            },
+            jobs: scale(1200, 300),
+            wave: 32,
+            // 85% small, 15% heavy tail straddling the 32K cutoff.
+            len: |rng| {
+                if rng.below(100) < 85 {
+                    256 + rng.below(1792)
+                } else {
+                    (1 << 13) + rng.below((1 << 17) - (1 << 13))
+                }
+            },
+        },
+        Scenario {
+            name: "fuse_burst",
+            cfg: CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                batch_max: 4,
+                ..Default::default()
+            },
+            epoch_jobs: 64,
+            bounds: RoutingBounds::default(),
+            jobs: scale(8000, 1600),
+            wave: 128, // deep waves → the queue actually piles up
+            len: |rng| 32 + rng.below(480),
+        },
+    ]
+}
+
+/// Drive one service through the scenario's request stream in waves,
+/// returning jobs/second of wall time.
+fn drive(svc: &SortService, sc: &Scenario, seed: u64) -> f64 {
+    let client = svc.client("bench");
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut submitted = 0;
+    while submitted < sc.jobs {
+        let wave = sc.wave.min(sc.jobs - submitted);
+        let handles: Vec<_> =
+            (0..wave).map(|_| client.submit(rng.vec_u32((sc.len)(&mut rng)))).collect();
+        for h in handles {
+            h.wait().expect("reply");
+        }
+        submitted += wave;
+    }
+    sc.jobs as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct ScenarioReport {
+    name: &'static str,
+    jobs: usize,
+    static_jobs_per_s: f64,
+    adaptive_jobs_per_s: f64,
+    initial: RoutingSnapshot,
+    fin: RoutingSnapshot,
+    decisions: Vec<Decision>,
+    routes: Vec<(String, u64, f64)>, // (tier, jobs, elems/µs)
+}
+
+fn run_scenario(sc: &Scenario) -> ScenarioReport {
+    // Static pass: the scenario config as-is, policy off.
+    let svc = SortService::start(sc.cfg.clone(), None).expect("static service");
+    let static_rate = drive(&svc, sc, 42);
+    svc.shutdown();
+
+    // Adaptive pass: same config, learning on.
+    let cfg = CoordinatorConfig {
+        adaptive: AdaptivePolicy::Adaptive {
+            epoch_jobs: sc.epoch_jobs,
+            bounds: sc.bounds.clone(),
+        },
+        ..sc.cfg.clone()
+    };
+    let svc = SortService::start(cfg, None).expect("adaptive service");
+    let initial = svc.routing();
+    let adaptive_rate = drive(&svc, sc, 42);
+    let fin = svc.routing();
+    let decisions = svc.decisions();
+    let routes = svc
+        .metrics()
+        .routes
+        .iter()
+        .map(|r| (r.tier.to_string(), r.jobs, r.elems_per_us))
+        .collect();
+    svc.shutdown();
+
+    ScenarioReport {
+        name: sc.name,
+        jobs: sc.jobs,
+        static_jobs_per_s: static_rate,
+        adaptive_jobs_per_s: adaptive_rate,
+        initial,
+        fin,
+        decisions,
+        routes,
+    }
+}
+
+fn snapshot_json(s: &RoutingSnapshot) -> String {
+    format!(
+        "{{\"tiny_cutoff\": {}, \"fuse_cutoff\": {}, \"parallel_cutoff\": {}, \"batch_max\": {}}}",
+        s.tiny_cutoff, s.fuse_cutoff, s.parallel_cutoff, s.batch_max
+    )
+}
+
+fn report_json(reports: &[ScenarioReport], smoke: bool, source: &str) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"routing_adaptive\",\n");
+    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str(&format!("  \"source\": \"{source}\",\n"));
+    out.push_str("  \"scenarios\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"jobs\": {}, \"static_jobs_per_s\": {:.1}, \
+             \"adaptive_jobs_per_s\": {:.1},\n     \"initial\": {},\n     \"final\": {},\n",
+            r.name,
+            r.jobs,
+            r.static_jobs_per_s,
+            r.adaptive_jobs_per_s,
+            snapshot_json(&r.initial),
+            snapshot_json(&r.fin),
+        ));
+        out.push_str("     \"decisions\": [");
+        for (j, d) in r.decisions.iter().enumerate() {
+            out.push_str(&format!(
+                "{}{{\"epoch\": {}, \"param\": \"{}\", \"from\": {}, \"to\": {}, \
+                 \"lo_elems_per_us\": {:.2}, \"hi_elems_per_us\": {:.2}}}",
+                if j == 0 { "" } else { ", " },
+                d.epoch,
+                d.param,
+                d.from,
+                d.to,
+                d.lo_elems_per_us,
+                d.hi_elems_per_us
+            ));
+        }
+        out.push_str("],\n     \"routes\": [");
+        for (j, (tier, jobs, eu)) in r.routes.iter().enumerate() {
+            out.push_str(&format!(
+                "{}{{\"tier\": \"{tier}\", \"jobs\": {jobs}, \"elems_per_us\": {eu:.2}}}",
+                if j == 0 { "" } else { ", " },
+            ));
+        }
+        out.push_str(&format!("]}}{}\n", if i + 1 < reports.len() { "," } else { "" }));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let jobs_override =
+        std::env::var("NEONMS_BENCH_JOBS").ok().and_then(|v| v.parse().ok());
+
+    println!("adaptive routing: skewed workloads, static vs adaptive (smoke={smoke})");
+    println!(
+        "| scenario   | static jobs/s | adaptive jobs/s | decisions | final cutoffs (t/f/p/b) |"
+    );
+    let mut reports = Vec::new();
+    for sc in scenarios(smoke, jobs_override) {
+        let r = run_scenario(&sc);
+        println!(
+            "| {:10} | {:13.0} | {:15.0} | {:9} | {}/{}/{}/{} |",
+            r.name,
+            r.static_jobs_per_s,
+            r.adaptive_jobs_per_s,
+            r.decisions.len(),
+            r.fin.tiny_cutoff,
+            r.fin.fuse_cutoff,
+            r.fin.parallel_cutoff,
+            r.fin.batch_max
+        );
+        for d in &r.decisions {
+            println!(
+                "|   epoch {:3}: {} {} -> {} (lower {:.1} vs upper {:.1} e/µs)",
+                d.epoch, d.param, d.from, d.to, d.lo_elems_per_us, d.hi_elems_per_us
+            );
+        }
+        reports.push(r);
+    }
+    let moved = reports.iter().any(|r| !r.decisions.is_empty());
+    println!(
+        "convergence: {}",
+        if moved {
+            "the tuner committed cutoff moves (see decision trace for the measured winners)"
+        } else {
+            "no confirmed moves — tiers measured within the hysteresis band on this host"
+        }
+    );
+
+    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
+    let json = report_json(&reports, smoke, source);
+    let out = std::env::var("NEONMS_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_routing_adaptive.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("routing decision trace recorded to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -11,7 +11,7 @@
 //! [`SortClient`]: neonms::coordinator::SortClient
 
 use neonms::bench::{bench, BenchResult};
-use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::coordinator::{AdaptivePolicy, CoordinatorConfig, SortService};
 use neonms::testutil::Rng;
 
 /// One repetition: `tenants` clients submit `jobs` small requests in
@@ -102,5 +102,18 @@ fn main() {
     for t in [1usize, 2, 4, 8] {
         let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max: 32, ..Default::default() };
         run_config(&format!("tenants={t}"), cfg, t, jobs, len, reps);
+    }
+    println!("-- adaptive routing (2 workers, 2 shards, batched, {tenants} tenants) --");
+    for (name, adaptive) in
+        [("routing static", AdaptivePolicy::Off), ("routing adaptive", AdaptivePolicy::adaptive())]
+    {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            shards: 2,
+            batch_max: 32,
+            adaptive,
+            ..Default::default()
+        };
+        run_config(name, cfg, tenants, jobs, len, reps);
     }
 }

@@ -1,5 +1,6 @@
 //! Coordinator configuration and routing policy.
 
+use super::tuner::{AdaptivePolicy, RoutingSnapshot};
 use crate::sort::SortConfig;
 
 /// Where a request executes — chosen by [`CoordinatorConfig::route`].
@@ -55,6 +56,13 @@ pub struct CoordinatorConfig {
     /// at startup, so e.g. a `V256` 2×64 service is one config away
     /// (the width sweep's service-level knob).
     pub sort: SortConfig,
+    /// Online routing policy. With [`AdaptivePolicy::Adaptive`] the
+    /// cutoffs above are only *seeds*: the service re-derives
+    /// `tiny_cutoff` / `fuse_cutoff` / `parallel_cutoff` / `batch_max`
+    /// every epoch from the measured per-tier throughput, within the
+    /// policy's hard bounds. [`AdaptivePolicy::Off`] (the default)
+    /// keeps them static for the service's lifetime.
+    pub adaptive: AdaptivePolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -70,34 +78,40 @@ impl Default for CoordinatorConfig {
             threads_per_parallel_sort: 4,
             xla_cutoff: None,
             sort: SortConfig::default(),
+            adaptive: AdaptivePolicy::Off,
         }
     }
 }
 
 impl CoordinatorConfig {
-    /// Route a request of `len` elements.
-    pub fn route(&self, len: usize, xla_available: bool) -> Route {
-        if len < self.tiny_cutoff {
-            return Route::Tiny;
-        }
-        if let Some(x) = self.xla_cutoff {
-            if xla_available && len >= x && len < self.parallel_cutoff {
-                return Route::Xla;
-            }
-        }
-        if len >= self.parallel_cutoff {
-            Route::Parallel
-        } else {
-            Route::SingleThread
+    /// The configured cutoffs as a [`RoutingSnapshot`] — the adaptive
+    /// policy's seed, and the values [`CoordinatorConfig::route`]
+    /// evaluates.
+    pub fn routing_snapshot(&self) -> RoutingSnapshot {
+        RoutingSnapshot {
+            tiny_cutoff: self.tiny_cutoff,
+            fuse_cutoff: self.fuse_cutoff,
+            parallel_cutoff: self.parallel_cutoff,
+            batch_max: self.batch_max,
         }
     }
 
+    /// Route a request of `len` elements against the *configured*
+    /// cutoffs ([`RoutingSnapshot::route`], the one shared tier
+    /// ladder). When adaptive routing is on, the running service
+    /// consults its live published state instead (same ladder,
+    /// cutoffs re-derived each epoch); this method is the static
+    /// policy and the adaptive seed.
+    pub fn route(&self, len: usize, xla_available: bool) -> Route {
+        self.routing_snapshot().route(len, xla_available, self.xla_cutoff)
+    }
+
     /// True when a request of `len` may join a fused dynamic batch:
-    /// small enough, and routed to a CPU tier the fused sort covers.
+    /// small enough, and routed to a CPU tier the fused sort covers
+    /// ([`RoutingSnapshot::fuse_eligible`] over the configured
+    /// values).
     pub fn fuse_eligible(&self, len: usize, xla_available: bool) -> bool {
-        self.batch_max > 1
-            && len <= self.fuse_cutoff
-            && matches!(self.route(len, xla_available), Route::Tiny | Route::SingleThread)
+        self.routing_snapshot().fuse_eligible(len, xla_available, self.xla_cutoff)
     }
 
     /// Capacity of shard `s`: the total [`Self::queue_capacity`] split

@@ -1,6 +1,7 @@
 //! Lock-free service metrics: request counters per route, per-tenant
-//! accepted/shed/completed accounting, and log-bucketed latency
-//! histograms (no external deps — atomics only).
+//! accepted/shed/completed accounting, log-bucketed latency
+//! histograms, and the per-tier observation grid the adaptive router
+//! learns from (no external deps — atomics only).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -41,6 +42,11 @@ impl LatencyHistogram {
     }
 
     /// Approximate quantile (upper bucket bound), q in [0, 1].
+    ///
+    /// Bucket `b` covers `[2^b, 2^(b+1))` µs; the top bucket collects
+    /// every sample ≥ ~67 s (`2^26` µs) and has no finite upper edge,
+    /// so the returned bound is clamped to that ceiling — this never
+    /// reports more than `1 << 26` µs.
     pub fn quantile_us(&self, q: f64) -> u64 {
         let n = self.count();
         if n == 0 {
@@ -51,11 +57,231 @@ impl LatencyHistogram {
         for (b, c) in self.counts.iter().enumerate() {
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
-                return 1u64 << (b + 1);
+                return 1u64 << (b + 1).min(BUCKETS - 1);
             }
         }
-        1u64 << BUCKETS
+        // Counters may lag `n` under concurrent recording; fall back
+        // to the top bucket's clamped bound rather than overshooting.
+        1u64 << (BUCKETS - 1)
     }
+}
+
+/// Execution tiers the router can place a request on — the adaptive
+/// tuner's observation axes. `Fused` is not a routing decision of its
+/// own: it is where dynamically-batched Tiny/SingleThread jobs land,
+/// observed separately so the tuner can compare fused against solo
+/// execution when deriving `fuse_cutoff`/`batch_max`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    /// Branchless insertion sort (`Route::Tiny`).
+    Tiny,
+    /// Single-thread NEON-MS (`Route::SingleThread`).
+    Single,
+    /// Merge-path parallel NEON-MS (`Route::Parallel`).
+    Parallel,
+    /// XLA offload executor (`Route::Xla`), CPU fallback included.
+    Xla,
+    /// Fused dynamic batch (multiple small jobs, one sort pass).
+    Fused,
+}
+
+/// Number of [`Tier`] variants (array sizing).
+pub const TIER_COUNT: usize = 5;
+
+impl Tier {
+    /// Dense index for per-tier arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase label used in snapshots and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Tiny => "tiny",
+            Tier::Single => "single",
+            Tier::Parallel => "parallel",
+            Tier::Xla => "xla",
+            Tier::Fused => "fused",
+        }
+    }
+
+    /// All tiers in index order.
+    pub fn all() -> [Tier; TIER_COUNT] {
+        [Tier::Tiny, Tier::Single, Tier::Parallel, Tier::Xla, Tier::Fused]
+    }
+}
+
+/// Power-of-two request-size classes the per-tier observations are
+/// bucketed by: class `c` holds lengths in `[2^c, 2^(c+1))`, with the
+/// top class collecting everything ≥ `2^27` (~134M elements).
+pub const SIZE_CLASSES: usize = 28;
+
+/// Size class of a request length (`floor(log2(len))`, clamped).
+pub fn size_class(len: usize) -> usize {
+    (len.max(1).ilog2() as usize).min(SIZE_CLASSES - 1)
+}
+
+/// The throughput gauge formula — elements per microsecond of busy
+/// nanoseconds, `0.0` when nothing was measured. One implementation
+/// for both the reported [`RouteSnapshot::elems_per_us`] and the
+/// tuner's verdicts, so the two can never silently diverge.
+pub fn throughput_elems_per_us(elements: u64, busy_ns: u64) -> f64 {
+    if busy_ns == 0 {
+        0.0
+    } else {
+        elements as f64 * 1e3 / busy_ns as f64
+    }
+}
+
+/// One size class's running totals inside a [`RouteObs`].
+#[derive(Default)]
+struct ClassObs {
+    jobs: AtomicU64,
+    elements: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Per-tier observation: how many jobs/elements this tier executed,
+/// how long it was busy doing so (service time, not queue latency — a
+/// tier's *throughput* is what routing decisions trade on), a latency
+/// histogram of per-sort service times, and the same totals bucketed
+/// by request size class so the tuner can compare tiers *near a
+/// cutoff* instead of on incomparable aggregates.
+#[derive(Default)]
+pub struct RouteObs {
+    jobs: AtomicU64,
+    elements: AtomicU64,
+    busy_ns: AtomicU64,
+    /// Service-time (sort duration) histogram for this tier.
+    pub latency: LatencyHistogram,
+    classes: [ClassObs; SIZE_CLASSES],
+}
+
+impl RouteObs {
+    /// Record one solo sort of `len` elements that took `busy`.
+    /// Durations are accumulated in nanoseconds: tiny-tier sorts run
+    /// well under a microsecond, and the throughput gauge must not
+    /// round them to zero.
+    pub fn record(&self, len: usize, busy: Duration) {
+        let ns = (busy.as_nanos().max(1)).min(u64::MAX as u128) as u64;
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(len as u64, Ordering::Relaxed);
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        self.latency.record(busy);
+        let c = &self.classes[size_class(len)];
+        c.jobs.fetch_add(1, Ordering::Relaxed);
+        c.elements.fetch_add(len as u64, Ordering::Relaxed);
+        c.busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one fused batch sort: `bounds` is the fused buffer's
+    /// offset table (`bounds[i]..bounds[i+1]` = segment `i`), `busy`
+    /// the duration of the whole batched pass. Each segment is charged
+    /// its proportional share of the batch time — in its size class
+    /// *and* as its own latency-histogram sample — so both the
+    /// per-class throughput and the service-time quantiles stay
+    /// comparable with the solo tiers' per-sort observations (one
+    /// batch-level sample against a `jobs += segments` count would
+    /// overstate per-job service time by the batch width).
+    pub fn record_segments(&self, bounds: &[usize], busy: Duration) {
+        let total = *bounds.last().unwrap_or(&0);
+        if bounds.len() < 2 || total == 0 {
+            return;
+        }
+        let ns = (busy.as_nanos().max(1)).min(u64::MAX as u128) as u64;
+        let jobs = (bounds.len() - 1) as u64;
+        self.jobs.fetch_add(jobs, Ordering::Relaxed);
+        self.elements.fetch_add(total as u64, Ordering::Relaxed);
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        for w in bounds.windows(2) {
+            let len = w[1] - w[0];
+            let share = (((ns as u128 * len as u128) / total as u128) as u64).max(1);
+            let c = &self.classes[size_class(len)];
+            c.jobs.fetch_add(1, Ordering::Relaxed);
+            c.elements.fetch_add(len as u64, Ordering::Relaxed);
+            c.busy_ns.fetch_add(share, Ordering::Relaxed);
+            self.latency.record(Duration::from_nanos(share));
+        }
+    }
+
+    /// Jobs observed on this tier.
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Elements sorted on this tier.
+    pub fn elements(&self) -> u64 {
+        self.elements.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative busy time in nanoseconds.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Element-throughput gauge: elements per microsecond of busy
+    /// time, `0.0` before the first observation.
+    pub fn elems_per_us(&self) -> f64 {
+        throughput_elems_per_us(self.elements(), self.busy_ns())
+    }
+
+    /// Cumulative `(jobs, elements, busy_ns)` of one size class — the
+    /// tuner diffs these across epochs.
+    pub fn class_totals(&self, class: usize) -> (u64, u64, u64) {
+        let c = &self.classes[class];
+        (
+            c.jobs.load(Ordering::Relaxed),
+            c.elements.load(Ordering::Relaxed),
+            c.busy_ns.load(Ordering::Relaxed),
+        )
+    }
+
+    fn snapshot(&self, tier: Tier) -> RouteSnapshot {
+        RouteSnapshot {
+            tier: tier.name(),
+            jobs: self.jobs(),
+            elements: self.elements(),
+            busy_us: self.busy_ns() / 1_000,
+            elems_per_us: self.elems_per_us(),
+            p50_us: self.latency.quantile_us(0.5),
+            p99_us: self.latency.quantile_us(0.99),
+        }
+    }
+}
+
+/// All five per-tier observations, indexed by [`Tier`].
+#[derive(Default)]
+pub struct RouteSet {
+    obs: [RouteObs; TIER_COUNT],
+}
+
+impl RouteSet {
+    /// The observation cell for `tier`.
+    pub fn get(&self, tier: Tier) -> &RouteObs {
+        &self.obs[tier.index()]
+    }
+
+    /// Snapshots of every tier, in [`Tier::all`] order.
+    pub fn snapshots(&self) -> Vec<RouteSnapshot> {
+        Tier::all().iter().map(|&t| self.get(t).snapshot(t)).collect()
+    }
+}
+
+/// Point-in-time copy of one tier's observation, reported inside
+/// [`MetricsSnapshot::routes`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteSnapshot {
+    /// [`Tier::name`] label.
+    pub tier: &'static str,
+    pub jobs: u64,
+    pub elements: u64,
+    /// Cumulative busy (service) time, µs.
+    pub busy_us: u64,
+    /// Element-throughput gauge (elements/µs of busy time).
+    pub elems_per_us: f64,
+    /// Service-time (not queue-latency) quantiles.
+    pub p50_us: u64,
+    pub p99_us: u64,
 }
 
 /// Per-tenant counters, owned by one registered tenant (shared
@@ -145,6 +371,10 @@ pub struct Metrics {
     /// batches are counted per shard in [`ShardMetrics::batches`].
     pub batches: AtomicU64,
     pub latency: LatencyHistogram,
+    /// Per-tier service-time observations (jobs, elements, busy time,
+    /// size-class grid) — the adaptive tuner's input signal, recorded
+    /// by the workers / XLA executor as each sort completes.
+    pub routes: RouteSet,
 }
 
 /// Per-shard counters, owned by one shard and aggregated into the
@@ -194,6 +424,9 @@ pub struct MetricsSnapshot {
     /// quantiles, sorted by tenant name. Empty when no tenant client
     /// was ever created.
     pub tenants: Vec<TenantSnapshot>,
+    /// Per-tier observations (throughput gauge + service-time
+    /// quantiles), in [`Tier::all`] order — always `TIER_COUNT` rows.
+    pub routes: Vec<RouteSnapshot>,
 }
 
 impl Metrics {
@@ -219,6 +452,7 @@ impl Metrics {
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
             tenants: Vec::new(),
+            routes: self.routes.snapshots(),
         }
     }
 
@@ -310,6 +544,86 @@ mod tests {
         assert_eq!((s.accepted, s.shed, s.completed, s.cancelled), (3, 1, 2, 0));
         assert!(s.mean_latency_us > 0.0);
         assert_eq!(t.name(), "acme");
+    }
+
+    #[test]
+    fn quantiles_monotone_and_clamped_to_top_bucket() {
+        // Mixed sample set, including one far past the ~67 s bucket
+        // ceiling: quantiles must be nondecreasing in q and never
+        // exceed the clamped top-bucket bound of 2^26 µs.
+        let h = LatencyHistogram::default();
+        let mut us = 1u64;
+        for i in 0..200u64 {
+            h.record(Duration::from_micros(us));
+            us = us.wrapping_mul(3).wrapping_add(i) % 50_000_000 + 1;
+        }
+        h.record(Duration::from_secs(1000)); // 1e9 µs ≫ 2^26
+        let mut prev = 0u64;
+        for step in 0..=20 {
+            let q = step as f64 / 20.0;
+            let v = h.quantile_us(q);
+            assert!(v >= prev, "quantile must be monotone: q={q} gave {v} < {prev}");
+            assert!(v <= 1 << 26, "quantile {v} exceeds the ~67 s bucket ceiling");
+            prev = v;
+        }
+        assert_eq!(h.quantile_us(1.0), 1 << 26, "top sample lands in the clamped bucket");
+    }
+
+    #[test]
+    fn size_classes_cover_and_clamp() {
+        assert_eq!(size_class(0), 0);
+        assert_eq!(size_class(1), 0);
+        assert_eq!(size_class(2), 1);
+        assert_eq!(size_class(1023), 9);
+        assert_eq!(size_class(1024), 10);
+        assert_eq!(size_class(usize::MAX), SIZE_CLASSES - 1);
+    }
+
+    #[test]
+    fn route_obs_gauge_and_classes() {
+        let m = Metrics::default();
+        let tiny = m.routes.get(Tier::Tiny);
+        tiny.record(32, Duration::from_nanos(500));
+        tiny.record(40, Duration::from_nanos(700));
+        assert_eq!(tiny.jobs(), 2);
+        assert_eq!(tiny.elements(), 72);
+        assert!(tiny.elems_per_us() > 0.0);
+        let (jobs, elems, ns) = tiny.class_totals(5); // 32..63
+        assert_eq!((jobs, elems), (2, 72));
+        assert!(ns >= 1200);
+        // Sub-µs observations must not round the gauge to zero.
+        assert!(tiny.elems_per_us() > 1.0, "72 elems in 1.2µs ≈ 60 e/µs");
+        let snap = m.snapshot();
+        assert_eq!(snap.routes.len(), TIER_COUNT);
+        assert_eq!(snap.routes[Tier::Tiny.index()].tier, "tiny");
+        assert_eq!(snap.routes[Tier::Tiny.index()].jobs, 2);
+        assert_eq!(snap.routes[Tier::Fused.index()].jobs, 0);
+    }
+
+    #[test]
+    fn fused_observation_attributes_segments_proportionally() {
+        let obs = RouteObs::default();
+        // Three segments 100/100/200 sorted in one 4 µs batch pass.
+        obs.record_segments(&[0, 100, 200, 400], Duration::from_micros(4));
+        assert_eq!(obs.jobs(), 3);
+        assert_eq!(obs.elements(), 400);
+        let (j_small, e_small, ns_small) = obs.class_totals(size_class(100));
+        assert_eq!((j_small, e_small), (2, 200));
+        let (j_big, e_big, ns_big) = obs.class_totals(size_class(200));
+        assert_eq!((j_big, e_big), (1, 200));
+        // The 200-element segment gets ~half the batch time; the two
+        // 100-element segments split the other half.
+        assert!(ns_big >= ns_small / 2 && ns_big <= 2 * ns_small + 2);
+        assert!(obs.elems_per_us() > 99.0 && obs.elems_per_us() < 101.0);
+        // One latency sample per *segment* (its proportional share),
+        // not one per batch — p50 must read as a per-job service
+        // time comparable with the solo tiers' histograms.
+        assert_eq!(obs.latency.count(), 3);
+        assert!(obs.latency.quantile_us(0.99) <= 4, "2µs share → ≤4µs bucket bound");
+        // Degenerate inputs are ignored, not divided by zero.
+        obs.record_segments(&[0], Duration::from_micros(1));
+        obs.record_segments(&[0, 0], Duration::from_micros(1));
+        assert_eq!(obs.jobs(), 3);
     }
 
     #[test]

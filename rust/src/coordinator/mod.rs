@@ -21,6 +21,13 @@
 //! and [`MetricsSnapshot::tenants`] reports accepted/shed/completed/
 //! cancelled counts and latency quantiles per tenant.
 //!
+//! The routing cutoffs can be **learned online**: with
+//! [`AdaptivePolicy::Adaptive`] the service observes each tier's
+//! throughput per request-size class ([`MetricsSnapshot::routes`])
+//! and re-derives `tiny`/`fuse`/`parallel`/`batch_max` every epoch,
+//! within hard safety bounds — see `tuner.rs` for the
+//! observe → decide → publish loop.
+//!
 //! Python never appears here: the XLA path executes AOT artifacts via
 //! [`crate::runtime`].
 
@@ -28,11 +35,15 @@ mod client;
 mod config;
 mod metrics;
 mod service;
+mod tuner;
 
 pub use client::{Busy, BusyReason, SortHandle};
 pub use config::{CoordinatorConfig, Route};
-pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics, TenantSnapshot};
+pub use metrics::{
+    LatencyHistogram, MetricsSnapshot, RouteSnapshot, ShardMetrics, TenantSnapshot, Tier,
+};
 pub use service::{SortClient, SortService};
+pub use tuner::{AdaptivePolicy, Decision, RoutingBounds, RoutingSnapshot};
 
 #[cfg(test)]
 mod tests;

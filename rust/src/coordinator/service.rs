@@ -63,9 +63,15 @@
 //! tracked per shard ([`ShardMetrics`]) and aggregated into one
 //! [`MetricsSnapshot`].
 //!
-//! Single jobs route by size tier ([`CoordinatorConfig::route`]):
-//! insertion sort → single-thread NEON-MS → merge-path parallel →
-//! XLA offload. The PJRT client is `Rc`-based (!Send), so XLA offload
+//! Single jobs route by size tier: insertion sort → single-thread
+//! NEON-MS → merge-path parallel → XLA offload. The cutoffs live in a
+//! lock-free `RoutingState` seeded from [`CoordinatorConfig`]; with
+//! [`AdaptivePolicy::Adaptive`] the workers also record each sort's
+//! `(size, duration)` into the per-tier observation grid, probe
+//! boundary-window jobs onto the neighbor tier, and tick the epoch
+//! tuner on wakeups — which re-derives the cutoffs from measured
+//! throughput and publishes them through the same atomics (see
+//! `tuner.rs`). The PJRT client is `Rc`-based (!Send), so XLA offload
 //! runs on one dedicated executor thread owning the [`BlockSorter`];
 //! workers forward Xla-routed jobs over an `mpsc` channel and move on
 //! — the executor completes the requester's slot directly.
@@ -102,7 +108,10 @@
 
 use super::client::{Busy, BusyReason, Slot, SortHandle};
 use super::config::{CoordinatorConfig, Route};
-use super::metrics::{Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot};
+use super::metrics::{
+    Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot, Tier,
+};
+use super::tuner::{AdaptivePolicy, Decision, RoutingSnapshot, RoutingState, Tuner};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortScratch};
@@ -160,6 +169,12 @@ struct Shared {
     blocked_submitters: AtomicUsize,
     shutdown: AtomicBool,
     metrics: Arc<Metrics>,
+    /// Live routing parameters the worker hot path reads (plain
+    /// atomics). Seeded from `cfg`; static unless `tuner` is present.
+    routing: RoutingState,
+    /// Epoch controller re-deriving the routing parameters from the
+    /// per-tier observations; `None` when [`AdaptivePolicy::Off`].
+    tuner: Option<Tuner>,
     /// Registered tenants, looked up by name in [`SortService::client`].
     tenants: Mutex<Vec<Arc<TenantMetrics>>>,
     /// Channel to the XLA executor. Behind a mutex so
@@ -477,6 +492,16 @@ impl SortService {
             cfg.sort.r,
             cfg.sort.vector_width.lanes()
         );
+        let adaptive_params = match &cfg.adaptive {
+            AdaptivePolicy::Off => None,
+            AdaptivePolicy::Adaptive { epoch_jobs, bounds } => {
+                anyhow::ensure!(*epoch_jobs >= 1, "adaptive policy: epoch_jobs must be ≥ 1");
+                if let Err(e) = bounds.validate() {
+                    anyhow::bail!("{e}");
+                }
+                Some((*epoch_jobs, bounds.clone()))
+            }
+        };
         let metrics = Arc::new(Metrics::default());
         let (xla_tx, xla_thread) = match artifacts_dir {
             Some(dir) => {
@@ -500,6 +525,11 @@ impl SortService {
             None => (None, None),
         };
 
+        // Built after the XLA setup: with offload active the tuner
+        // freezes the single/parallel boundary (its lower side then
+        // routes to the accelerator; see Tuner::new).
+        let tuner = adaptive_params
+            .map(|(epoch_jobs, bounds)| Tuner::new(epoch_jobs, bounds, xla_tx.is_none()));
         let shards = (0..cfg.shards)
             .map(|s| Shard {
                 queue: Mutex::new(VecDeque::new()),
@@ -508,6 +538,8 @@ impl SortService {
             })
             .collect();
         let shared = Arc::new(Shared {
+            routing: RoutingState::new(&cfg, xla_tx.is_some()),
+            tuner,
             cfg: cfg.clone(),
             shards,
             hub: Mutex::new(()),
@@ -578,6 +610,20 @@ impl SortService {
     /// additionally reports *why* via [`Busy`].
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
         self.shared.admit_try(None, data).map_err(|b| b.data)
+    }
+
+    /// The routing parameters currently in force: the configured
+    /// cutoffs when the policy is [`AdaptivePolicy::Off`], the live
+    /// tuner-published values when adaptive.
+    pub fn routing(&self) -> RoutingSnapshot {
+        self.shared.routing.snapshot()
+    }
+
+    /// The adaptive tuner's committed cutoff changes so far, oldest
+    /// first (empty when the policy is [`AdaptivePolicy::Off`] or no
+    /// epoch has produced a confirmed move yet).
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.shared.tuner.as_ref().map(Tuner::decisions).unwrap_or_default()
     }
 
     /// Current metrics, with per-shard counters aggregated in and
@@ -664,18 +710,22 @@ impl WorkerCtx {
 
 /// Pop one dynamic batch from shard `s`: the head job, plus up to
 /// `batch_max - 1` consecutive fuse-eligible followers in the same
-/// wakeup. Returns `None` when the queue is empty.
+/// wakeup (`batch_max` and the fuse eligibility read the *live*
+/// routing state, so an adaptive service re-shapes its batches as the
+/// tuner publishes). Returns `None` when the queue is empty.
 fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
     let xla = shared.xla_enabled();
+    let xla_cut = shared.cfg.xla_cutoff;
+    let batch_max = shared.routing.batch_max();
     let shard = &shared.shards[s];
     let batch = {
         let mut q = shard.queue.lock().unwrap();
         let first = q.pop_front()?;
         let mut batch = vec![first];
-        if shared.cfg.fuse_eligible(batch[0].data.len(), xla) {
-            while batch.len() < shared.cfg.batch_max {
+        if shared.routing.fuse_eligible(batch[0].data.len(), xla, xla_cut) {
+            while batch.len() < batch_max {
                 match q.front() {
-                    Some(j) if shared.cfg.fuse_eligible(j.data.len(), xla) => {
+                    Some(j) if shared.routing.fuse_eligible(j.data.len(), xla, xla_cut) => {
                         batch.push(q.pop_front().unwrap());
                     }
                     _ => break,
@@ -698,6 +748,7 @@ fn worker_loop(shared: &Shared, home: usize) {
         // Own shard first, then steal round-robin from the others.
         if let Some(batch) = take_batch(shared, home) {
             process_batch(shared, home, batch, &mut ctx);
+            tick_tuner(shared);
             continue;
         }
         let mut found = None;
@@ -711,6 +762,7 @@ fn worker_loop(shared: &Shared, home: usize) {
         }
         if let Some((victim, batch)) = found {
             process_batch(shared, victim, batch, &mut ctx);
+            tick_tuner(shared);
             continue;
         }
         // Nothing anywhere: advertise as idle, re-check under the
@@ -732,6 +784,14 @@ fn worker_loop(shared: &Shared, home: usize) {
         let guard = shared.work_cv.wait(guard).unwrap();
         shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
         drop(guard);
+    }
+}
+
+/// Worker-wakeup tuner hook: a no-op unless adaptive routing is on
+/// and an epoch's worth of jobs has completed since the last tick.
+fn tick_tuner(shared: &Shared) {
+    if let Some(t) = &shared.tuner {
+        t.maybe_tick(&shared.metrics, &shared.routing);
     }
 }
 
@@ -763,6 +823,26 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
             live.push(job);
         }
     }
+    // Solo probes (adaptive only): pull 1 in PROBE_PERIOD jobs out of
+    // a would-be fused batch and run them through the solo router.
+    // Under sustained load everything fuse-eligible fuses, which
+    // would starve the Tiny/Single observation classes the tuner
+    // compares — both at the boundaries and as the solo side of the
+    // fused-vs-solo verdict.
+    if shared.tuner.is_some() && live.len() > 1 {
+        // In-place walk (swap_remove, no allocation): batch order is
+        // irrelevant to correctness — every job completes through its
+        // own slot/segment either way.
+        let mut i = 0;
+        while i < live.len() {
+            if shared.routing.solo_probe() {
+                let job = live.swap_remove(i);
+                process(shared, job, ctx);
+            } else {
+                i += 1;
+            }
+        }
+    }
     if live.len() <= 1 {
         if let Some(job) = live.pop() {
             process(shared, job, ctx);
@@ -782,11 +862,12 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
     ctx.fused.reserve(total);
     ctx.bounds.clear();
     ctx.bounds.push(0);
+    let tiny_cutoff = shared.routing.snapshot().tiny_cutoff;
     for job in &live {
         ctx.fused.extend_from_slice(&job.data);
         ctx.bounds.push(ctx.fused.len());
         // Fused jobs still count under their size tier.
-        if job.data.len() < shared.cfg.tiny_cutoff {
+        if job.data.len() < tiny_cutoff {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
         } else {
             m.route_single.fetch_add(1, Ordering::Relaxed);
@@ -796,6 +877,7 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
     // batch-sort thread finishes that segment (uncontended in
     // practice — the per-segment lock is the completion hand-off).
     let cells: Vec<Mutex<Option<Job>>> = live.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let t0 = Instant::now();
     ctx.parallel.sort_segments_with_scratch(
         &mut ctx.fused,
         &ctx.bounds,
@@ -807,6 +889,10 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
             }
         },
     );
+    // One fused observation for the whole pass; each segment's size
+    // class is charged its proportional share (see RouteObs), so the
+    // tuner can compare fused against solo execution per class.
+    m.routes.get(Tier::Fused).record_segments(&ctx.bounds, t0.elapsed());
 }
 
 fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
@@ -814,7 +900,11 @@ fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
     if job.slot.is_cancelled() {
         return abandon(m, job);
     }
-    let mut route = shared.cfg.route(job.data.len(), shared.xla_enabled());
+    // Live routing state, with boundary probing when adaptive: a
+    // small fraction of jobs near a cutoff run on the neighbor tier
+    // so the tuner observes both sides of the boundary.
+    let mut route =
+        shared.routing.route_probed(job.data.len(), shared.xla_enabled(), shared.cfg.xla_cutoff);
     if route == Route::Xla {
         // Forward; the executor thread counts route_xla (after its
         // own cancellation check) and completes the slot. If it
@@ -825,27 +915,36 @@ fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
             Ok(()) => return,
             Err(j) => {
                 job = j;
-                route = shared.cfg.route(job.data.len(), false);
+                route = shared.routing.route(job.data.len(), false, None);
             }
         }
     }
-    match route {
+    // Each arm times the sort itself (not queueing) and records it
+    // against the tier that actually ran — probes included, which is
+    // the point: the observation grid is the tuner's input signal.
+    let len = job.data.len();
+    let t0 = Instant::now();
+    let tier = match route {
         Route::Tiny => {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
             insertion_sort(&mut job.data);
+            Tier::Tiny
         }
         Route::SingleThread => {
             m.route_single.fetch_add(1, Ordering::Relaxed);
             // Worker-owned sorter + scratch: zero allocation once the
             // scratch has grown to the tier's largest request.
             ctx.single.sort_with_scratch(&mut job.data, &mut ctx.scratch);
+            Tier::Single
         }
         Route::Parallel => {
             m.route_parallel.fetch_add(1, Ordering::Relaxed);
             ctx.parallel.sort_with_scratch(&mut job.data, &mut ctx.scratch);
+            Tier::Parallel
         }
         Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
-    }
+    };
+    m.routes.get(tier).record(len, t0.elapsed());
     finish(m, job);
 }
 
@@ -919,8 +1018,10 @@ fn xla_executor(
                             metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                             group.push(j);
                         }
+                        // Oversized spill: sorted below, after its own
+                        // cancellation re-check (which also counts the
+                        // route then, mirroring the rule above).
                         Ok(j) => {
-                            metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                             oversized.push(j);
                             break;
                         }
@@ -929,6 +1030,16 @@ fn xla_executor(
                 }
                 if group.len() > 1 {
                     metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    // Offset table so the coalesced dispatch records
+                    // like the CPU fused path: per-job size classes
+                    // and proportional per-job latency samples, not
+                    // one batch-total observation.
+                    let mut offsets = Vec::with_capacity(group.len() + 1);
+                    offsets.push(0);
+                    for j in &group {
+                        offsets.push(*offsets.last().unwrap() + j.data.len());
+                    }
+                    let t0 = Instant::now();
                     let mut rows: Vec<&mut [u32]> =
                         group.iter_mut().map(|j| j.data.as_mut_slice()).collect();
                     if sorter.sort_batch_u32(&mut rows).is_err() {
@@ -936,30 +1047,47 @@ fn xla_executor(
                             fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                         }
                     }
+                    metrics.routes.get(Tier::Xla).record_segments(&offsets, t0.elapsed());
                     for j in group {
                         finish(&metrics, j);
                     }
                 } else {
                     for mut j in group {
+                        let t0 = Instant::now();
                         if sorter.sort_u32(&mut j.data).is_err() {
                             fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                         }
+                        metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
                         finish(&metrics, j);
                     }
                 }
                 for mut j in oversized {
+                    // The batching drain above parked this job; its
+                    // handle may have been dropped in the meantime —
+                    // re-check before paying for a full sort, so an
+                    // abandoned oversized spill costs one atomic load
+                    // and is counted `cancelled`, not sorted.
+                    if j.slot.is_cancelled() {
+                        abandon(&metrics, j);
+                        continue;
+                    }
+                    metrics.route_xla.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
                     if sorter.sort_u32(&mut j.data).is_err() {
                         fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
                     }
+                    metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
                     finish(&metrics, j);
                 }
                 continue;
             }
         }
+        let t0 = Instant::now();
         if sorter.sort_u32(&mut job.data).is_err() {
             // Fall back to the CPU path rather than dropping the job.
             fallback.sort_with_scratch(&mut job.data, &mut fb_scratch);
         }
+        metrics.routes.get(Tier::Xla).record(job.data.len(), t0.elapsed());
         finish(&metrics, job);
     }
 }

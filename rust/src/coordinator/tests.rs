@@ -559,6 +559,193 @@ fn handle_is_a_future() {
 }
 
 #[test]
+fn accounting_identity_under_cancellation_storm() {
+    // Property: per tenant, accepted == completed + cancelled once the
+    // service is quiet — under a storm of dropped handles racing the
+    // dynamic batcher (cancellation can land before the pop, between
+    // the pop and the fused filter, or after completion; every path
+    // must count the job exactly once). Several seeds, several tenants
+    // submitting concurrently.
+    for seed in 0..4u64 {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            shards: 2,
+            batch_max: 8,
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let svc = SortService::start(cfg, None).unwrap();
+        let clients: Vec<_> = (0..3).map(|t| svc.client(&format!("storm-{t}"))).collect();
+        std::thread::scope(|s| {
+            for (t, client) in clients.iter().enumerate() {
+                s.spawn(move || {
+                    let mut rng = Rng::new(1000 * seed + t as u64);
+                    let mut kept = Vec::new();
+                    for i in 0..80usize {
+                        let len = 8 + rng.below(600);
+                        match client.try_submit(rng.vec_u32(len)) {
+                            // Keep ~half the handles; drop the rest on
+                            // the floor immediately (the storm).
+                            Ok(h) if i % 2 == 0 => kept.push(h),
+                            Ok(h) => drop(h),
+                            Err(_) => {} // shed at admission: not accepted
+                        }
+                    }
+                    for h in kept {
+                        let _ = h.wait();
+                    }
+                });
+            }
+        });
+        // Quiesce: shutdown drains the queues and resolves (or counts
+        // as cancelled) everything still in flight.
+        svc.shutdown();
+        for client in &clients {
+            let t = client.tenant_metrics();
+            assert_eq!(
+                t.accepted,
+                t.completed + t.cancelled,
+                "seed {seed} tenant {}: accepted ({}) != completed ({}) + cancelled ({})",
+                t.name,
+                t.accepted,
+                t.completed,
+                t.cancelled
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_service_sorts_correctly_and_stays_in_bounds() {
+    // Adaptive routing on, short epochs, a workload spanning the tiny
+    // boundary: every result must still match the oracle (probes are
+    // real requests on a different tier, not a different answer), the
+    // published cutoffs must stay inside the policy bounds, and the
+    // per-route observations must be populated.
+    let bounds = RoutingBounds::default();
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        shards: 2,
+        batch_max: 1,
+        adaptive: AdaptivePolicy::Adaptive { epoch_jobs: 32, bounds: bounds.clone() },
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("adaptive");
+    let mut rng = Rng::new(21);
+    let mut pending = Vec::new();
+    for _ in 0..400usize {
+        let len = 16 + rng.below(200);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        pending.push((client.submit(data), expect));
+    }
+    for (h, expect) in pending {
+        assert_eq!(h.wait().unwrap(), expect, "adaptive routing must not change results");
+    }
+    let r = svc.routing();
+    assert!(r.tiny_cutoff >= bounds.tiny.0 && r.tiny_cutoff <= bounds.tiny.1);
+    assert!(r.fuse_cutoff >= bounds.fuse.0 && r.fuse_cutoff <= bounds.fuse.1);
+    assert!(r.parallel_cutoff >= bounds.parallel.0 && r.parallel_cutoff <= bounds.parallel.1);
+    assert!(r.tiny_cutoff <= r.fuse_cutoff && r.fuse_cutoff <= r.parallel_cutoff);
+    let m = svc.metrics();
+    let observed: u64 = m.routes.iter().map(|r| r.jobs).sum();
+    assert!(observed >= 400, "every sorted job lands in the observation grid");
+    // Both boundary tiers saw work (probing guarantees the vector
+    // tier gets samples even if every job is below the cutoff).
+    let tiny = &m.routes[Tier::Tiny.index()];
+    let single = &m.routes[Tier::Single.index()];
+    assert!(tiny.jobs > 0, "tiny tier observed");
+    assert!(single.jobs > 0, "probing must give the single tier samples too");
+    // Decisions, if any epochs confirmed, must stay inside bounds.
+    for d in svc.decisions() {
+        assert!(d.from != d.to);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn batched_adaptive_service_still_observes_solo_tiers() {
+    // One worker pinned by a big job while fuse-eligible jobs pile
+    // up: under pure fusing the solo tiers would record nothing and
+    // the tuner would be blind under exactly the sustained load it
+    // should learn from. Solo probes must pull ~1/PROBE_PERIOD of the
+    // fused-batch candidates out to the solo router (the first
+    // candidate deterministically, the probe clock starts at 0).
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        batch_max: 64,
+        adaptive: AdaptivePolicy::Adaptive { epoch_jobs: 32, bounds: RoutingBounds::default() },
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(91);
+    let big = svc.submit(rng.vec_u32(2_000_000)); // pin the worker
+    let mut pending = Vec::new();
+    for _ in 0..64 {
+        let len = 100 + rng.below(400);
+        let data = rng.vec_u32(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        pending.push((svc.submit(data), expect));
+    }
+    assert_sorted(&big.wait().unwrap(), "big");
+    for (h, expect) in pending {
+        assert_eq!(h.wait().unwrap(), expect);
+    }
+    let m = svc.metrics();
+    // ≥ 2: the pinning job contributes one solo observation (it sits
+    // in the parallel down-probe window), so at least one more must
+    // come from a solo-probed fused-batch candidate.
+    let solo = m.routes[Tier::Tiny.index()].jobs + m.routes[Tier::Single.index()].jobs
+        + m.routes[Tier::Parallel.index()].jobs;
+    assert!(solo >= 2, "solo probes must keep the solo tiers observed under batching");
+    assert!(m.routes[Tier::Fused.index()].jobs >= 1, "batching itself still fuses");
+    svc.shutdown();
+}
+
+#[test]
+fn static_service_routing_matches_config_and_never_probes() {
+    let cfg = CoordinatorConfig { tiny_cutoff: 100, ..Default::default() };
+    let svc = SortService::start(cfg.clone(), None).unwrap();
+    let r = svc.routing();
+    assert_eq!(r.tiny_cutoff, 100);
+    assert_eq!(r.fuse_cutoff, cfg.fuse_cutoff);
+    assert_eq!(r.parallel_cutoff, cfg.parallel_cutoff);
+    assert_eq!(r.batch_max, cfg.batch_max);
+    assert!(svc.decisions().is_empty());
+    // With the policy off, a below-cutoff job always runs the tiny
+    // tier — no probe can send it elsewhere.
+    let mut rng = Rng::new(33);
+    let pending: Vec<_> = (0..40).map(|_| svc.submit(rng.vec_u32(50))).collect();
+    for h in pending {
+        assert_sorted(&h.wait().unwrap(), "static tiny");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.routes[Tier::Single.index()].jobs, 0, "no probes when adaptive is off");
+    svc.shutdown();
+}
+
+#[test]
+fn invalid_adaptive_policy_fails_at_start() {
+    let bad_epoch = CoordinatorConfig {
+        adaptive: AdaptivePolicy::Adaptive { epoch_jobs: 0, bounds: RoutingBounds::default() },
+        ..Default::default()
+    };
+    assert!(SortService::start(bad_epoch, None).is_err(), "epoch_jobs=0 must be rejected");
+    let bad_bounds = CoordinatorConfig {
+        adaptive: AdaptivePolicy::Adaptive {
+            epoch_jobs: 64,
+            bounds: RoutingBounds { tiny: (512, 8), ..Default::default() },
+        },
+        ..Default::default()
+    };
+    assert!(SortService::start(bad_bounds, None).is_err(), "empty bounds must be rejected");
+}
+
+#[test]
 fn submits_after_shutdown_resolve_to_errors() {
     // Clients may outlive the service: submits are shed, handles
     // resolve to errors, nothing parks forever.

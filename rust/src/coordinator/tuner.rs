@@ -1,0 +1,1158 @@
+//! Online adaptive routing: learn the `tiny`/`fuse`/`parallel`
+//! cutoffs and `batch_max` from live per-tier throughput instead of
+//! freezing them in a constants file.
+//!
+//! The paper's hybrid design wins by picking the right mechanism per
+//! scale (Fig. 5): insertion sort below vector-setup cost, then
+//! single-thread NEON-MS, then merge-path parallel. *Where* those
+//! boundaries sit depends on the host — the width sweep proved the
+//! best kernel config varies per machine, and the same is true of the
+//! routing cutoffs. This module closes the loop at runtime:
+//!
+//! ```text
+//! observe                  decide                    publish
+//! ───────                  ──────                    ───────
+//! workers record per-tier  every `epoch_jobs`        RoutingState
+//! (len, sort-time) into    completions, one worker   (plain atomics)
+//! Metrics::routes — incl.  diffs the observation     read by route()/
+//! cross-boundary *probe*   grid since the last       fuse_eligible()
+//! jobs (1 in 8 near a      epoch and compares the    on the worker
+//! cutoff runs on the       two tiers' elements/µs    hot path — no
+//! neighbor tier)           in the classes around     locks, no deps
+//!                          each cutoff
+//! ```
+//!
+//! # Why probing
+//!
+//! Under a static cutoff every request size is only ever executed by
+//! one tier, so the telemetry alone can never say whether the *other*
+//! tier would have been faster — the counterfactual is unobserved.
+//! The router therefore sends a small deterministic fraction
+//! (1/[`PROBE_PERIOD`]) of jobs whose length falls within one octave
+//! of a cutoff to the neighboring tier. Probes are real requests,
+//! sorted correctly either way; they differ only in which mechanism
+//! runs, and their measurements populate the otherwise-dark side of
+//! the boundary. Probes stay inside the `[cutoff/2, 2·cutoff)`
+//! window, so a down-probe can cost at most one sort of `< 2·cutoff`
+//! elements on the slower tier — bounded by the cutoff's own hard
+//! upper bound below, never a 1M-element insertion sort.
+//!
+//! The comparison is **paired per size class**: only classes where
+//! both tiers were observed this epoch count, because pooling
+//! unpaired classes would reward whichever tier happened to run the
+//! larger jobs (per-sort overhead amortizes with size), not the
+//! faster mechanism at equal size.
+//!
+//! # Safety: hysteresis, min-sample floors, hard bounds
+//!
+//! Three guards keep a noisy epoch from wrecking routing:
+//!
+//! * **Min-sample floor** — a boundary is only judged when *both*
+//!   tiers have ≥ [`MIN_SAMPLES`] jobs observed near it this epoch.
+//! * **Hysteresis** — the faster side must win by ≥ [`HYSTERESIS`]
+//!   (25%), and the same verdict must repeat for [`CONFIRM`]
+//!   consecutive epochs, before a cutoff moves — one step (×2 or ÷2)
+//!   per move, so alternating verdicts produce *no* movement instead
+//!   of flapping.
+//! * **Hard bounds** — every published value is clamped to
+//!   [`RoutingBounds`], and the ordering invariant `tiny_cutoff ≤
+//!   fuse_cutoff ≤ parallel_cutoff` is re-imposed on publish. However
+//!   wrong the observations, a 1M-element job can never route to
+//!   insertion sort because `bounds.tiny.1` caps `tiny_cutoff` (4096
+//!   by default).
+//!
+//! All shared state is plain atomics ([`RoutingState`]) — the hot
+//! path pays a handful of relaxed loads; the epoch tick runs under a
+//! `try_lock` so exactly one worker pays for the decision.
+
+use super::config::{CoordinatorConfig, Route};
+use super::metrics::{
+    size_class, throughput_elems_per_us as elems_per_us, Metrics, Tier, SIZE_CLASSES, TIER_COUNT,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One probe per this many boundary-window jobs (per boundary side).
+pub const PROBE_PERIOD: usize = 8;
+
+/// Relative throughput advantage a tier must show before a cutoff
+/// moves toward it (25%).
+pub const HYSTERESIS: f64 = 0.25;
+
+/// Minimum jobs observed on *each* side of a boundary, per epoch,
+/// before the boundary is judged at all.
+pub const MIN_SAMPLES: u64 = 8;
+
+/// Consecutive epochs the same verdict must repeat before a move.
+pub const CONFIRM: u8 = 2;
+
+/// Hard per-parameter bounds `(min, max)` the tuner can never leave,
+/// however lopsided the observations — the "safety rails" of the
+/// adaptive policy. Defaults keep every tier in its sane regime:
+/// `tiny` can never exceed 4096 (no large insertion sorts), `parallel`
+/// can never drop below 64K (no thread-scope setup for small jobs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutingBounds {
+    /// `tiny_cutoff` range.
+    pub tiny: (usize, usize),
+    /// `fuse_cutoff` range.
+    pub fuse: (usize, usize),
+    /// `parallel_cutoff` range.
+    pub parallel: (usize, usize),
+    /// `batch_max` range (min ≥ 1; `1` disables fusing).
+    pub batch: (usize, usize),
+}
+
+impl Default for RoutingBounds {
+    fn default() -> Self {
+        RoutingBounds {
+            tiny: (8, 4096),
+            fuse: (64, 1 << 16),
+            parallel: (1 << 16, 1 << 22),
+            batch: (1, 256),
+        }
+    }
+}
+
+impl RoutingBounds {
+    /// `Ok(())` when every range is non-empty and `batch.0 ≥ 1`.
+    pub(super) fn validate(&self) -> Result<(), String> {
+        for (name, (lo, hi)) in [
+            ("tiny", self.tiny),
+            ("fuse", self.fuse),
+            ("parallel", self.parallel),
+            ("batch", self.batch),
+        ] {
+            if lo > hi {
+                return Err(format!("adaptive bounds: {name} range ({lo}, {hi}) is empty"));
+            }
+        }
+        if self.batch.0 == 0 {
+            return Err("adaptive bounds: batch_max min must be ≥ 1".to_string());
+        }
+        // Order-compatibility: publish re-imposes tiny ≤ fuse ≤
+        // parallel by raising the larger cutoffs, so each upper bound
+        // must dominate the previous one or the raise could push a
+        // value past its own bounds — the "clamped to bounds"
+        // guarantee would silently break.
+        if self.tiny.1 > self.fuse.1 || self.fuse.1 > self.parallel.1 {
+            return Err(format!(
+                "adaptive bounds: upper bounds must order tiny ({}) <= fuse ({}) <= parallel ({})",
+                self.tiny.1, self.fuse.1, self.parallel.1
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Whether the service re-derives its routing cutoffs online.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum AdaptivePolicy {
+    /// Static routing: the `CoordinatorConfig` cutoffs are used as-is
+    /// for the life of the service (the pre-PR-4 behavior).
+    #[default]
+    Off,
+    /// Epoch-based online tuning: every `epoch_jobs` completed
+    /// requests, re-derive the cutoffs from the per-tier observations,
+    /// clamped to `bounds`.
+    Adaptive {
+        /// Completed jobs per tuning epoch (≥ 1; default 256).
+        epoch_jobs: u64,
+        /// Hard safety bounds on every tunable.
+        bounds: RoutingBounds,
+    },
+}
+
+impl AdaptivePolicy {
+    /// Adaptive with default epoch length and bounds.
+    pub fn adaptive() -> Self {
+        AdaptivePolicy::Adaptive { epoch_jobs: 256, bounds: RoutingBounds::default() }
+    }
+
+    /// True when tuning is enabled.
+    pub fn is_on(&self) -> bool {
+        matches!(self, AdaptivePolicy::Adaptive { .. })
+    }
+}
+
+/// Point-in-time copy of the published routing parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoutingSnapshot {
+    pub tiny_cutoff: usize,
+    pub fuse_cutoff: usize,
+    pub parallel_cutoff: usize,
+    pub batch_max: usize,
+}
+
+impl RoutingSnapshot {
+    /// The tier ladder — the single shared implementation behind both
+    /// [`CoordinatorConfig::route`] (static config values) and the
+    /// live `RoutingState` (published atomics): below `tiny_cutoff` →
+    /// insertion sort; `[xla_cutoff, parallel_cutoff)` with an
+    /// executor available → XLA; at or above `parallel_cutoff` →
+    /// merge-path parallel; otherwise single-thread NEON-MS.
+    pub fn route(&self, len: usize, xla_available: bool, xla_cutoff: Option<usize>) -> Route {
+        if len < self.tiny_cutoff {
+            return Route::Tiny;
+        }
+        if let Some(x) = xla_cutoff {
+            if xla_available && len >= x && len < self.parallel_cutoff {
+                return Route::Xla;
+            }
+        }
+        if len >= self.parallel_cutoff {
+            Route::Parallel
+        } else {
+            Route::SingleThread
+        }
+    }
+
+    /// True when a request of `len` may join a fused dynamic batch:
+    /// batching on, small enough, and routed to a CPU tier the fused
+    /// sort covers.
+    pub fn fuse_eligible(
+        &self,
+        len: usize,
+        xla_available: bool,
+        xla_cutoff: Option<usize>,
+    ) -> bool {
+        self.batch_max > 1
+            && len <= self.fuse_cutoff
+            && matches!(
+                self.route(len, xla_available, xla_cutoff),
+                Route::Tiny | Route::SingleThread
+            )
+    }
+}
+
+/// One cutoff change the tuner committed, with the measurements that
+/// drove it — the decision trace `serve-demo --adaptive` prints and
+/// `benches/routing_adaptive.rs` records to JSON.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Tuning epoch (1-based) the change was committed in.
+    pub epoch: u64,
+    /// `"tiny_cutoff"` | `"fuse_cutoff"` | `"parallel_cutoff"` |
+    /// `"batch_max"`.
+    pub param: &'static str,
+    pub from: usize,
+    pub to: usize,
+    /// Observed elements/µs of the boundary's lower tier (smaller
+    /// sizes / solo execution) this epoch.
+    pub lo_elems_per_us: f64,
+    /// Observed elements/µs of the boundary's upper tier (larger
+    /// sizes / fused execution) this epoch.
+    pub hi_elems_per_us: f64,
+}
+
+/// The live routing parameters, published by the tuner and read by
+/// the worker hot path — plain atomics, no locks, no dependencies.
+/// When the policy is [`AdaptivePolicy::Off`] the values are seeded
+/// from the config and never change, so static routing behaves
+/// exactly as before.
+pub(super) struct RoutingState {
+    tiny: AtomicUsize,
+    fuse: AtomicUsize,
+    parallel: AtomicUsize,
+    batch_max: AtomicUsize,
+    adaptive: bool,
+    /// False when XLA offload is configured: the tuner then freezes
+    /// the single/parallel boundary (see [`Tuner::new`]), so paying a
+    /// single-threaded sort for a multi-megabyte down-probe would buy
+    /// telemetry nobody reads — those probe arms are gated off.
+    probe_parallel: bool,
+    /// Deterministic clocks driving the 1/[`PROBE_PERIOD`] probes,
+    /// one per boundary *side* (tiny-up, tiny-down, parallel-up,
+    /// parallel-down) plus one for solo-execution probes of fused
+    /// batch candidates, so one side's traffic pattern can never
+    /// phase-lock another side out of probing. Each clock only
+    /// advances for jobs inside its own window.
+    probe_clocks: [AtomicUsize; PROBE_SLOTS],
+}
+
+/// [`RoutingState::probe_clocks`] slots.
+const PROBE_TINY_UP: usize = 0;
+const PROBE_TINY_DOWN: usize = 1;
+const PROBE_PAR_UP: usize = 2;
+const PROBE_PAR_DOWN: usize = 3;
+/// Solo-execution probe for fused-batch candidates (see
+/// [`RoutingState::solo_probe`]).
+const PROBE_SOLO: usize = 4;
+const PROBE_SLOTS: usize = 5;
+
+impl RoutingState {
+    /// `xla_configured` mirrors the tuner's frozen single/parallel
+    /// boundary: when true, the parallel-side probe arms never fire.
+    pub(super) fn new(cfg: &CoordinatorConfig, xla_configured: bool) -> Self {
+        let (adaptive, seed) = match &cfg.adaptive {
+            AdaptivePolicy::Off => (false, cfg.routing_snapshot()),
+            // Clamp the config seeds into the bounds so the
+            // invariants hold from the first request on.
+            AdaptivePolicy::Adaptive { bounds, .. } => {
+                (true, constrain(cfg.routing_snapshot(), bounds))
+            }
+        };
+        RoutingState {
+            tiny: AtomicUsize::new(seed.tiny_cutoff),
+            fuse: AtomicUsize::new(seed.fuse_cutoff),
+            parallel: AtomicUsize::new(seed.parallel_cutoff),
+            batch_max: AtomicUsize::new(seed.batch_max),
+            adaptive,
+            probe_parallel: adaptive && !xla_configured,
+            probe_clocks: Default::default(),
+        }
+    }
+
+    pub(super) fn snapshot(&self) -> RoutingSnapshot {
+        RoutingSnapshot {
+            tiny_cutoff: self.tiny.load(Ordering::Relaxed),
+            fuse_cutoff: self.fuse.load(Ordering::Relaxed),
+            parallel_cutoff: self.parallel.load(Ordering::Relaxed),
+            batch_max: self.batch_max.load(Ordering::Relaxed),
+        }
+    }
+
+    pub(super) fn batch_max(&self) -> usize {
+        self.batch_max.load(Ordering::Relaxed)
+    }
+
+    fn publish(&self, s: RoutingSnapshot) {
+        self.tiny.store(s.tiny_cutoff, Ordering::Relaxed);
+        self.fuse.store(s.fuse_cutoff, Ordering::Relaxed);
+        self.parallel.store(s.parallel_cutoff, Ordering::Relaxed);
+        self.batch_max.store(s.batch_max, Ordering::Relaxed);
+    }
+
+    /// Route a request of `len` elements against the *live* cutoffs —
+    /// [`RoutingSnapshot::route`] over the published atomics.
+    pub(super) fn route(
+        &self,
+        len: usize,
+        xla_available: bool,
+        xla_cutoff: Option<usize>,
+    ) -> Route {
+        self.snapshot().route(len, xla_available, xla_cutoff)
+    }
+
+    /// [`RoutingState::route`], plus boundary probing when adaptive:
+    /// 1 in [`PROBE_PERIOD`] jobs whose length falls within one octave
+    /// of the tiny or parallel cutoff executes on the neighboring tier
+    /// so the tuner observes both sides of the boundary. Never probes
+    /// outside the `[cutoff/2, 2·cutoff)` window, so the extra cost is
+    /// bounded by the cutoff's hard upper bound.
+    pub(super) fn route_probed(
+        &self,
+        len: usize,
+        xla_available: bool,
+        xla_cutoff: Option<usize>,
+    ) -> Route {
+        let natural = self.route(len, xla_available, xla_cutoff);
+        if !self.adaptive {
+            return natural;
+        }
+        let tiny = self.tiny.load(Ordering::Relaxed);
+        let parallel = self.parallel.load(Ordering::Relaxed);
+        match natural {
+            // Up-probe: top half of the tiny range → vector tier.
+            Route::Tiny if 2 * len >= tiny && self.probe(PROBE_TINY_UP) => Route::SingleThread,
+            Route::SingleThread => {
+                if len < 2 * tiny && self.probe(PROBE_TINY_DOWN) {
+                    // Down-probe: first octave above tiny → insertion
+                    // sort (≤ 2·bounds.tiny.1 elements, bounded).
+                    Route::Tiny
+                } else if self.probe_parallel && 2 * len >= parallel && self.probe(PROBE_PAR_UP)
+                {
+                    // Up-probe: top octave below parallel → threads.
+                    Route::Parallel
+                } else {
+                    natural
+                }
+            }
+            // Down-probe: first octave above parallel → single thread.
+            Route::Parallel
+                if self.probe_parallel && len < 2 * parallel && self.probe(PROBE_PAR_DOWN) =>
+            {
+                Route::SingleThread
+            }
+            _ => natural,
+        }
+    }
+
+    fn probe(&self, side: usize) -> bool {
+        self.probe_clocks[side].fetch_add(1, Ordering::Relaxed) % PROBE_PERIOD == 0
+    }
+
+    /// Solo-execution probe: when adaptive, 1 in [`PROBE_PERIOD`]
+    /// fused-batch candidates is pulled out of the batch and executed
+    /// solo instead. Under sustained load the batcher would otherwise
+    /// fuse *every* small job, starving the Tiny/Single observation
+    /// classes — and with them both the boundary verdicts and the
+    /// solo side of the fused-vs-solo comparison — exactly when there
+    /// is the most signal to learn from. Always `false` when the
+    /// policy is off (static batching untouched).
+    pub(super) fn solo_probe(&self) -> bool {
+        self.adaptive && self.probe(PROBE_SOLO)
+    }
+
+    /// Live-cutoff version of [`CoordinatorConfig::fuse_eligible`]
+    /// ([`RoutingSnapshot::fuse_eligible`] over the atomics).
+    pub(super) fn fuse_eligible(
+        &self,
+        len: usize,
+        xla_available: bool,
+        xla_cutoff: Option<usize>,
+    ) -> bool {
+        self.snapshot().fuse_eligible(len, xla_available, xla_cutoff)
+    }
+}
+
+/// Clamp a candidate parameter set to `bounds` and re-impose the
+/// tier-ordering invariant `tiny ≤ fuse ≤ parallel`.
+fn constrain(mut s: RoutingSnapshot, b: &RoutingBounds) -> RoutingSnapshot {
+    s.tiny_cutoff = s.tiny_cutoff.clamp(b.tiny.0, b.tiny.1);
+    s.fuse_cutoff = s.fuse_cutoff.clamp(b.fuse.0, b.fuse.1).max(s.tiny_cutoff);
+    s.parallel_cutoff = s.parallel_cutoff.clamp(b.parallel.0, b.parallel.1).max(s.fuse_cutoff);
+    s.batch_max = s.batch_max.clamp(b.batch.0, b.batch.1);
+    s
+}
+
+/// A `(jobs, elements, busy_ns)` grid per `[tier][size class]` — one
+/// shape for both roles the tick needs: the cumulative totals as of
+/// the last tick, and the per-epoch deltas [`TunerCore::step`]
+/// consumes ([`ObsGrid::absorb`] turns the former into the latter).
+struct ObsGrid {
+    jobs: [[u64; SIZE_CLASSES]; TIER_COUNT],
+    elements: [[u64; SIZE_CLASSES]; TIER_COUNT],
+    busy_ns: [[u64; SIZE_CLASSES]; TIER_COUNT],
+}
+
+impl ObsGrid {
+    fn zero() -> Self {
+        ObsGrid {
+            jobs: [[0; SIZE_CLASSES]; TIER_COUNT],
+            elements: [[0; SIZE_CLASSES]; TIER_COUNT],
+            busy_ns: [[0; SIZE_CLASSES]; TIER_COUNT],
+        }
+    }
+
+    /// Read the live cumulative totals out of `m`, returning the
+    /// delta against `self` (the totals at the previous absorb) and
+    /// updating `self` to the new totals — one call per epoch tick.
+    fn absorb(&mut self, m: &Metrics) -> ObsGrid {
+        let mut delta = ObsGrid::zero();
+        for tier in Tier::all() {
+            let route = m.routes.get(tier);
+            let t = tier.index();
+            for c in 0..SIZE_CLASSES {
+                let (j, e, n) = route.class_totals(c);
+                delta.jobs[t][c] = j.saturating_sub(self.jobs[t][c]);
+                delta.elements[t][c] = e.saturating_sub(self.elements[t][c]);
+                delta.busy_ns[t][c] = n.saturating_sub(self.busy_ns[t][c]);
+                self.jobs[t][c] = j;
+                self.elements[t][c] = e;
+                self.busy_ns[t][c] = n;
+            }
+        }
+        delta
+    }
+
+    /// Class totals of one tier at one class.
+    fn at(&self, tier: Tier, c: usize) -> (u64, u64, u64) {
+        let t = tier.index();
+        (self.jobs[t][c], self.elements[t][c], self.busy_ns[t][c])
+    }
+
+    /// Pool two tiers over `[lo, hi]`, including only the classes
+    /// where **both** tiers executed at least one job this epoch.
+    ///
+    /// Pooling unpaired classes would compare different size mixes:
+    /// elements/µs grows with request size as fixed per-sort overhead
+    /// amortizes, so the tier running the larger jobs would win the
+    /// aggregate regardless of which mechanism is actually faster at
+    /// equal size. Near a cutoff the natural traffic of the two tiers
+    /// sits on *opposite* sides of it; the probes exist precisely to
+    /// give each tier samples in the other's classes, and this
+    /// pairing restricts the comparison to those shared classes.
+    fn paired(
+        &self,
+        lo_tier: Tier,
+        hi_tier: Tier,
+        lo: usize,
+        hi: usize,
+    ) -> ((u64, u64, u64), (u64, u64, u64)) {
+        let (mut l, mut h) = ((0, 0, 0), (0, 0, 0));
+        for c in lo..=hi.min(SIZE_CLASSES - 1) {
+            let lc = self.at(lo_tier, c);
+            let hc = self.at(hi_tier, c);
+            if lc.0 > 0 && hc.0 > 0 {
+                l = (l.0 + lc.0, l.1 + lc.1, l.2 + lc.2);
+                h = (h.0 + hc.0, h.1 + hc.1, h.2 + hc.2);
+            }
+        }
+        (l, h)
+    }
+}
+
+/// Which way a boundary verdict points: `-1` = lower the cutoff (the
+/// upper tier measured faster near the boundary), `+1` = raise it.
+type Verdict = Option<(i8, f64, f64)>;
+
+/// The shared verdict rule: given two pooled `(jobs, elements,
+/// busy_ns)` sides, apply the [`MIN_SAMPLES`] floor, then require a
+/// [`HYSTERESIS`] throughput lead. `-1` = the `hi` side won.
+fn verdict_from(lo: (u64, u64, u64), hi: (u64, u64, u64)) -> Verdict {
+    if lo.0 < MIN_SAMPLES || hi.0 < MIN_SAMPLES {
+        return None;
+    }
+    let lo_eu = elems_per_us(lo.1, lo.2);
+    let hi_eu = elems_per_us(hi.1, hi.2);
+    if hi_eu > lo_eu * (1.0 + HYSTERESIS) {
+        Some((-1, lo_eu, hi_eu))
+    } else if lo_eu > hi_eu * (1.0 + HYSTERESIS) {
+        Some((1, lo_eu, hi_eu))
+    } else {
+        None
+    }
+}
+
+/// Confirmation memory for one tunable parameter.
+#[derive(Clone, Copy, Default)]
+struct ParamMemory {
+    /// Direction of the current verdict streak (0 = none).
+    dir: i8,
+    /// Consecutive epochs the verdict has pointed in `dir`.
+    streak: u8,
+}
+
+/// The decision engine: pure state machine over epoch observations —
+/// no clocks, no atomics — so convergence, hysteresis, and clamping
+/// are unit-testable without a running service.
+struct TunerCore {
+    bounds: RoutingBounds,
+    /// False while XLA offload is configured: jobs below
+    /// `parallel_cutoff` then route to the accelerator, so the
+    /// Single-vs-Parallel verdict would re-partition traffic between
+    /// Xla and Parallel based on a tier (Single) that carries almost
+    /// none of it — hold that boundary instead. (Learning
+    /// `xla_cutoff` itself is a ROADMAP follow-on.)
+    tune_parallel: bool,
+    epoch: u64,
+    tiny_mem: ParamMemory,
+    parallel_mem: ParamMemory,
+    fuse_mem: ParamMemory,
+}
+
+impl TunerCore {
+    fn new(bounds: RoutingBounds, tune_parallel: bool) -> Self {
+        TunerCore {
+            bounds,
+            tune_parallel,
+            epoch: 0,
+            tiny_mem: ParamMemory::default(),
+            parallel_mem: ParamMemory::default(),
+            fuse_mem: ParamMemory::default(),
+        }
+    }
+
+    /// Judge one boundary: compare the two tiers' throughput over the
+    /// classes within one octave of `cutoff`, restricted to classes
+    /// both tiers were observed in ([`ObsGrid::paired`] — unpaired
+    /// pooling would reward whichever tier ran the larger jobs).
+    /// `None` when either side lacks [`MIN_SAMPLES`] or neither wins
+    /// by [`HYSTERESIS`].
+    fn boundary_verdict(obs: &ObsGrid, lo_tier: Tier, hi_tier: Tier, cutoff: usize) -> Verdict {
+        let c = size_class(cutoff);
+        let (lo, hi) = obs.paired(lo_tier, hi_tier, c.saturating_sub(1), c + 1);
+        verdict_from(lo, hi)
+    }
+
+    /// Fold a verdict into a parameter's confirmation memory; returns
+    /// the confirmed direction once the same verdict has repeated
+    /// [`CONFIRM`] epochs in a row (then resets, so the *next* move
+    /// needs fresh confirmation too).
+    fn confirm(mem: &mut ParamMemory, verdict: Verdict) -> Option<(i8, f64, f64)> {
+        match verdict {
+            None => {
+                *mem = ParamMemory::default();
+                None
+            }
+            Some((dir, lo, hi)) => {
+                if mem.dir == dir {
+                    mem.streak += 1;
+                } else {
+                    mem.dir = dir;
+                    mem.streak = 1;
+                }
+                if mem.streak >= CONFIRM {
+                    *mem = ParamMemory::default();
+                    Some((dir, lo, hi))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// One ×2/÷2 step of `value` in `dir`, clamped to `(min, max)`.
+    fn step_value(value: usize, dir: i8, (min, max): (usize, usize)) -> usize {
+        if dir < 0 {
+            (value / 2).clamp(min, max)
+        } else {
+            value.saturating_mul(2).clamp(min, max)
+        }
+    }
+
+    /// One tuning epoch: consume the observation deltas, return the
+    /// next parameter set (bounds-clamped, ordering-constrained) and
+    /// the decision records for every parameter that moved.
+    fn step(&mut self, obs: &ObsGrid, cur: RoutingSnapshot) -> (RoutingSnapshot, Vec<Decision>) {
+        self.epoch += 1;
+        let mut next = cur;
+
+        // Boundary 1: insertion sort vs single-thread vector sort.
+        let tiny_v = Self::confirm(
+            &mut self.tiny_mem,
+            Self::boundary_verdict(obs, Tier::Tiny, Tier::Single, cur.tiny_cutoff),
+        );
+        if let Some((dir, _, _)) = tiny_v {
+            next.tiny_cutoff = Self::step_value(cur.tiny_cutoff, dir, self.bounds.tiny);
+        }
+
+        // Boundary 2: single-thread vs merge-path parallel. Held when
+        // XLA offload is configured (see `tune_parallel`).
+        let parallel_v = if self.tune_parallel {
+            Self::confirm(
+                &mut self.parallel_mem,
+                Self::boundary_verdict(obs, Tier::Single, Tier::Parallel, cur.parallel_cutoff),
+            )
+        } else {
+            None
+        };
+        if let Some((dir, _, _)) = parallel_v {
+            next.parallel_cutoff = Self::step_value(cur.parallel_cutoff, dir, self.bounds.parallel);
+        }
+
+        // Fusing: fused-batch execution vs solo (tiny + single) over
+        // the classes at or below the fuse cutoff — paired per class
+        // like the boundaries (only classes where both fused and solo
+        // execution were observed count). Fused faster → fuse more
+        // (raise fuse_cutoff, grow batch_max); solo faster → fuse
+        // less. dir < 0 means "the fused side won", mirroring the
+        // boundary verdicts' "upper tier won" sense.
+        let fc = size_class(cur.fuse_cutoff);
+        let (mut solo, mut fused) = ((0u64, 0u64, 0u64), (0u64, 0u64, 0u64));
+        for c in 0..=fc.min(SIZE_CLASSES - 1) {
+            let t = obs.at(Tier::Tiny, c);
+            let s = obs.at(Tier::Single, c);
+            let f = obs.at(Tier::Fused, c);
+            if t.0 + s.0 > 0 && f.0 > 0 {
+                solo = (solo.0 + t.0 + s.0, solo.1 + t.1 + s.1, solo.2 + t.2 + s.2);
+                fused = (fused.0 + f.0, fused.1 + f.1, fused.2 + f.2);
+            }
+        }
+        let fuse_v = Self::confirm(&mut self.fuse_mem, verdict_from(solo, fused));
+        if let Some((dir, _, _)) = fuse_v {
+            // dir < 0 (fused won): more fusing; dir > 0: less.
+            next.fuse_cutoff = Self::step_value(cur.fuse_cutoff, -dir, self.bounds.fuse);
+            let mut bm = Self::step_value(cur.batch_max, -dir, self.bounds.batch);
+            // Never self-disable fusing: at batch_max = 1 nothing
+            // fuses, the Fused tier stops producing observations, and
+            // the min-sample floor would lock this verdict to `None`
+            // forever — an unrecoverable ratchet. The tuner throttles
+            // to 2 at most; only explicit config/bounds can turn
+            // fusing off outright.
+            if dir > 0 && bm < 2 {
+                bm = 2usize.clamp(self.bounds.batch.0, self.bounds.batch.1);
+            }
+            next.batch_max = bm;
+        }
+
+        let next = constrain(next, &self.bounds);
+        // A param may also move without its own verdict when the
+        // ordering constraint drags it along; record 0.0 gauges then.
+        let measured = |v: Option<(i8, f64, f64)>| match v {
+            Some((_, lo, hi)) => (lo, hi),
+            None => (0.0, 0.0),
+        };
+        let mut decisions = Vec::new();
+        for (param, from, to, v) in [
+            ("tiny_cutoff", cur.tiny_cutoff, next.tiny_cutoff, tiny_v),
+            ("fuse_cutoff", cur.fuse_cutoff, next.fuse_cutoff, fuse_v),
+            ("parallel_cutoff", cur.parallel_cutoff, next.parallel_cutoff, parallel_v),
+            ("batch_max", cur.batch_max, next.batch_max, fuse_v),
+        ] {
+            if from != to {
+                let (lo, hi) = measured(v);
+                decisions.push(Decision {
+                    epoch: self.epoch,
+                    param,
+                    from,
+                    to,
+                    lo_elems_per_us: lo,
+                    hi_elems_per_us: hi,
+                });
+            }
+        }
+        (next, decisions)
+    }
+}
+
+/// The epoch controller: owns the decision engine and the last-tick
+/// snapshot behind a mutex (contended only by the losing `try_lock`
+/// callers, who simply skip), plus the append-only decision trace.
+pub(super) struct Tuner {
+    epoch_jobs: u64,
+    inner: Mutex<TunerInner>,
+    decisions: Mutex<Vec<Decision>>,
+}
+
+struct TunerInner {
+    core: TunerCore,
+    /// Cumulative totals as of the last tick ([`ObsGrid::absorb`]).
+    last: ObsGrid,
+    last_completed: u64,
+}
+
+/// Cap on the retained decision trace (the tuner keeps deciding past
+/// it; only the record stops growing).
+const MAX_DECISIONS: usize = 1024;
+
+impl Tuner {
+    /// `tune_parallel: false` freezes the single/parallel boundary —
+    /// used when XLA offload is active, since the traffic below
+    /// `parallel_cutoff` then runs on the accelerator and the
+    /// Single-vs-Parallel comparison would not describe it.
+    pub(super) fn new(epoch_jobs: u64, bounds: RoutingBounds, tune_parallel: bool) -> Self {
+        Tuner {
+            epoch_jobs: epoch_jobs.max(1),
+            inner: Mutex::new(TunerInner {
+                core: TunerCore::new(bounds, tune_parallel),
+                last: ObsGrid::zero(),
+                last_completed: 0,
+            }),
+            decisions: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Worker-wakeup hook: if an epoch's worth of jobs has completed
+    /// since the last tick, diff the observation grid, run one
+    /// decision step, and publish the result. `try_lock` keeps this
+    /// off the hot path — at most one worker pays per epoch, the rest
+    /// skip in a few nanoseconds.
+    pub(super) fn maybe_tick(&self, m: &Metrics, routing: &RoutingState) {
+        let completed = m.completed.load(Ordering::Relaxed);
+        let Ok(mut inner) = self.inner.try_lock() else {
+            return;
+        };
+        if completed.saturating_sub(inner.last_completed) < self.epoch_jobs {
+            return;
+        }
+        inner.last_completed = completed;
+        let obs = inner.last.absorb(m);
+        let (next, decisions) = inner.core.step(&obs, routing.snapshot());
+        routing.publish(next);
+        drop(inner);
+        if !decisions.is_empty() {
+            let mut log = self.decisions.lock().unwrap();
+            let room = MAX_DECISIONS.saturating_sub(log.len());
+            log.extend(decisions.into_iter().take(room));
+        }
+    }
+
+    /// The committed decision trace so far.
+    pub(super) fn decisions(&self) -> Vec<Decision> {
+        self.decisions.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an ObsGrid where `tier` executed `jobs` jobs of
+    /// `len`-element requests at `eu` elements/µs.
+    fn obs_point(obs: &mut ObsGrid, tier: Tier, len: usize, jobs: u64, eu: f64) {
+        let elements = jobs * len as u64;
+        let busy_ns = (elements as f64 * 1e3 / eu) as u64;
+        let c = size_class(len);
+        // Accumulate (set adds per class; combine with any prior).
+        let t = tier.index();
+        obs.jobs[t][c] += jobs;
+        obs.elements[t][c] += elements;
+        obs.busy_ns[t][c] += busy_ns;
+    }
+
+    fn snap(tiny: usize, fuse: usize, parallel: usize, batch: usize) -> RoutingSnapshot {
+        RoutingSnapshot {
+            tiny_cutoff: tiny,
+            fuse_cutoff: fuse,
+            parallel_cutoff: parallel,
+            batch_max: batch,
+        }
+    }
+
+    /// Epoch where the single-thread tier clearly beats insertion
+    /// sort around the tiny boundary.
+    fn single_wins_at(cur: RoutingSnapshot) -> ObsGrid {
+        let mut o = ObsGrid::zero();
+        obs_point(&mut o, Tier::Tiny, cur.tiny_cutoff / 2, 20, 10.0);
+        obs_point(&mut o, Tier::Single, cur.tiny_cutoff / 2, 20, 40.0);
+        o
+    }
+
+    #[test]
+    fn converges_toward_better_tier_and_clamps_at_bounds() {
+        let bounds = RoutingBounds::default();
+        let mut core = TunerCore::new(bounds.clone(), true);
+        let mut cur = snap(256, 4096, 1 << 20, 32);
+        let mut moved = 0;
+        for _ in 0..32 {
+            let obs = single_wins_at(cur);
+            let (next, ds) = core.step(&obs, cur);
+            if next.tiny_cutoff != cur.tiny_cutoff {
+                assert!(next.tiny_cutoff < cur.tiny_cutoff, "must move toward the faster tier");
+                assert_eq!(ds.len(), 1);
+                assert_eq!(ds[0].param, "tiny_cutoff");
+                assert!(ds[0].hi_elems_per_us > ds[0].lo_elems_per_us);
+                moved += 1;
+            }
+            cur = next;
+        }
+        assert!(moved >= 2, "a persistent signal must move the cutoff, got {moved} moves");
+        assert_eq!(
+            cur.tiny_cutoff, bounds.tiny.0,
+            "persistent signal converges to the hard lower bound, never past it"
+        );
+    }
+
+    #[test]
+    fn confirmation_requires_consecutive_epochs() {
+        // One winning epoch is not enough (CONFIRM = 2): the first
+        // verdict arms the streak, the second commits the move.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let cur = snap(256, 4096, 1 << 20, 32);
+        let (next, ds) = core.step(&single_wins_at(cur), cur);
+        assert_eq!(next, cur, "first verdict must not move anything");
+        assert!(ds.is_empty());
+        let (next, _) = core.step(&single_wins_at(cur), cur);
+        assert_eq!(next.tiny_cutoff, cur.tiny_cutoff / 2, "second consecutive verdict commits");
+    }
+
+    #[test]
+    fn hysteresis_no_flapping_on_alternating_workloads() {
+        // Verdicts that alternate direction every epoch never reach
+        // CONFIRM consecutive agreements, so the cutoff never moves —
+        // the no-flap property.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let cur = snap(256, 4096, 1 << 20, 32);
+        for i in 0..16 {
+            let mut o = ObsGrid::zero();
+            let (tiny_eu, single_eu) = if i % 2 == 0 { (10.0, 40.0) } else { (40.0, 10.0) };
+            obs_point(&mut o, Tier::Tiny, 128, 20, tiny_eu);
+            obs_point(&mut o, Tier::Single, 128, 20, single_eu);
+            let (next, ds) = core.step(&o, cur);
+            assert_eq!(next, cur, "alternating verdicts must not move cutoffs (epoch {i})");
+            assert!(ds.is_empty());
+        }
+    }
+
+    #[test]
+    fn within_hysteresis_band_is_a_hold() {
+        // A 10% advantage is inside the 25% band: no verdict, and the
+        // streak resets so it can't slow-walk into a move either.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let cur = snap(256, 4096, 1 << 20, 32);
+        for _ in 0..8 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Tiny, 128, 50, 10.0);
+            obs_point(&mut o, Tier::Single, 128, 50, 11.0);
+            let (next, ds) = core.step(&o, cur);
+            assert_eq!(next, cur);
+            assert!(ds.is_empty());
+        }
+    }
+
+    #[test]
+    fn min_sample_floor_blocks_noisy_epochs() {
+        // Huge measured advantage but too few samples: hold.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let cur = snap(256, 4096, 1 << 20, 32);
+        for _ in 0..8 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Tiny, 128, MIN_SAMPLES - 1, 1.0);
+            obs_point(&mut o, Tier::Single, 128, 100, 100.0);
+            let (next, ds) = core.step(&o, cur);
+            assert_eq!(next, cur, "min-sample floor must gate the verdict");
+            assert!(ds.is_empty());
+        }
+    }
+
+    #[test]
+    fn bounds_and_ordering_invariant_always_hold() {
+        // Drive every boundary hard in both directions with extreme
+        // observations; whatever happens, published values stay inside
+        // bounds and tiny ≤ fuse ≤ parallel.
+        let bounds = RoutingBounds {
+            tiny: (16, 128),
+            fuse: (32, 1024),
+            parallel: (2048, 1 << 18),
+            batch: (1, 64),
+        };
+        let mut core = TunerCore::new(bounds.clone(), true);
+        let mut cur = constrain(snap(64, 512, 4096, 16), &bounds);
+        for round in 0..64 {
+            let mut o = ObsGrid::zero();
+            let flip = round % 4 < 2;
+            let (a, b) = if flip { (1.0, 1000.0) } else { (1000.0, 1.0) };
+            obs_point(&mut o, Tier::Tiny, cur.tiny_cutoff.max(2) / 2, 50, a);
+            obs_point(&mut o, Tier::Single, cur.tiny_cutoff.max(2) / 2, 50, b);
+            obs_point(&mut o, Tier::Single, cur.parallel_cutoff / 2, 50, a);
+            obs_point(&mut o, Tier::Parallel, cur.parallel_cutoff / 2, 50, b);
+            obs_point(&mut o, Tier::Fused, cur.fuse_cutoff / 2, 50, b);
+            let (next, _) = core.step(&o, cur);
+            assert!(next.tiny_cutoff >= bounds.tiny.0 && next.tiny_cutoff <= bounds.tiny.1);
+            assert!(next.fuse_cutoff >= bounds.fuse.0 && next.fuse_cutoff <= bounds.fuse.1);
+            assert!(
+                next.parallel_cutoff >= bounds.parallel.0
+                    && next.parallel_cutoff <= bounds.parallel.1
+            );
+            assert!(next.batch_max >= bounds.batch.0 && next.batch_max <= bounds.batch.1);
+            assert!(next.tiny_cutoff <= next.fuse_cutoff);
+            assert!(next.fuse_cutoff <= next.parallel_cutoff);
+            cur = next;
+        }
+    }
+
+    #[test]
+    fn parallel_boundary_frozen_while_xla_offload_is_active() {
+        // tune_parallel = false (XLA configured): even a persistent,
+        // decisive Single-vs-Parallel signal must not move
+        // parallel_cutoff — the traffic below it routes to the
+        // accelerator, which this comparison says nothing about. The
+        // tiny boundary keeps tuning normally.
+        let mut core = TunerCore::new(RoutingBounds::default(), false);
+        let mut cur = snap(256, 4096, 1 << 20, 32);
+        for _ in 0..8 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Single, 1 << 19, 50, 10.0);
+            obs_point(&mut o, Tier::Parallel, 1 << 19, 50, 100.0);
+            obs_point(&mut o, Tier::Tiny, 128, 20, 10.0);
+            obs_point(&mut o, Tier::Single, 128, 20, 40.0);
+            let (next, _) = core.step(&o, cur);
+            assert_eq!(next.parallel_cutoff, cur.parallel_cutoff, "parallel boundary held");
+            cur = next;
+        }
+        assert!(cur.tiny_cutoff < 256, "tiny boundary still tunes while parallel is frozen");
+    }
+
+    #[test]
+    fn unpaired_size_classes_never_drive_a_verdict() {
+        // The boundary comparison must not reward a tier for running
+        // bigger jobs: here every Tiny sample sits in the class below
+        // the cutoff and every Single sample in the class above, with
+        // Single's aggregate elements/µs far higher purely because its
+        // jobs are larger. No shared class → no verdict → no move.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let cur = snap(256, 4096, 1 << 20, 32);
+        for _ in 0..8 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Tiny, 140, 50, 10.0); // class 7, below 256
+            obs_point(&mut o, Tier::Single, 300, 50, 80.0); // class 8, above 256
+            let (next, ds) = core.step(&o, cur);
+            assert_eq!(next, cur, "size-mix bias must not move the cutoff");
+            assert!(ds.is_empty());
+        }
+        // With probe samples pairing the below-cutoff class, the
+        // within-class comparison decides — here Tiny genuinely wins
+        // at its own sizes despite Single's bigger-job aggregate.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let mut cur = snap(256, 4096, 1 << 20, 32);
+        for _ in 0..2 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Tiny, 140, 50, 30.0);
+            obs_point(&mut o, Tier::Single, 140, 10, 10.0); // probes, same class
+            obs_point(&mut o, Tier::Single, 300, 50, 80.0); // unpaired: ignored
+            let (next, _) = core.step(&o, cur);
+            cur = next;
+        }
+        assert_eq!(cur.tiny_cutoff, 512, "paired comparison raises toward the real winner");
+    }
+
+    #[test]
+    fn batch_max_never_ratchets_to_one() {
+        // Persistent solo-wins verdicts shrink batching, but the tuner
+        // must stop at 2: batch_max = 1 would end Fused observations
+        // and the min-sample floor would lock fusing off forever.
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let mut cur = snap(8, 1024, 1 << 20, 8);
+        for _ in 0..12 {
+            let mut o = ObsGrid::zero();
+            // len 40 (class 5) stays inside the fuse window even once
+            // fuse_cutoff has shrunk to its 64-element lower bound.
+            obs_point(&mut o, Tier::Single, 40, 30, 50.0);
+            obs_point(&mut o, Tier::Fused, 40, 30, 10.0);
+            let (next, _) = core.step(&o, cur);
+            cur = next;
+        }
+        assert_eq!(cur.batch_max, 2, "tuner throttles fusing but never disables it");
+        assert_eq!(cur.fuse_cutoff, RoutingBounds::default().fuse.0);
+    }
+
+    #[test]
+    fn fused_advantage_grows_batching_solo_advantage_shrinks_it() {
+        let mut core = TunerCore::new(RoutingBounds::default(), true);
+        let mut cur = snap(64, 1024, 1 << 20, 8);
+        // Fused clearly faster for two consecutive epochs → both
+        // fuse_cutoff and batch_max grow one step.
+        for _ in 0..2 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Single, 512, 30, 10.0);
+            obs_point(&mut o, Tier::Fused, 512, 30, 30.0);
+            let (next, _) = core.step(&o, cur);
+            cur = next;
+        }
+        assert_eq!(cur.fuse_cutoff, 2048, "fused won → fuse more");
+        assert_eq!(cur.batch_max, 16, "fused won → bigger batches");
+        // Now solo clearly faster → both shrink again.
+        for _ in 0..2 {
+            let mut o = ObsGrid::zero();
+            obs_point(&mut o, Tier::Single, 512, 30, 50.0);
+            obs_point(&mut o, Tier::Fused, 512, 30, 10.0);
+            let (next, _) = core.step(&o, cur);
+            cur = next;
+        }
+        assert_eq!(cur.fuse_cutoff, 1024);
+        assert_eq!(cur.batch_max, 8);
+    }
+
+    #[test]
+    fn routing_state_probes_only_inside_the_window() {
+        let cfg = CoordinatorConfig {
+            tiny_cutoff: 64,
+            parallel_cutoff: 1 << 20,
+            adaptive: AdaptivePolicy::adaptive(),
+            ..Default::default()
+        };
+        let state = RoutingState::new(&cfg, false);
+        // Far outside any boundary window: never probed, whatever the
+        // probe clock says.
+        for _ in 0..64 {
+            assert_eq!(state.route_probed(8, false, None), Route::Tiny);
+            assert_eq!(state.route_probed(4096, false, None), Route::SingleThread);
+            assert_eq!(state.route_probed(1 << 23, false, None), Route::Parallel);
+        }
+        // Inside the tiny window: exactly 1 in PROBE_PERIOD goes to
+        // the neighbor tier.
+        let mut probed = 0;
+        for _ in 0..(PROBE_PERIOD * 8) {
+            if state.route_probed(48, false, None) == Route::SingleThread {
+                probed += 1;
+            }
+        }
+        assert_eq!(probed, 8, "1/{PROBE_PERIOD} of boundary-window jobs probe");
+    }
+
+    #[test]
+    fn parallel_probes_gated_off_while_xla_configured() {
+        // With XLA configured the tuner freezes the single/parallel
+        // boundary, so its probes must not fire either — a down-probe
+        // would pay a single-threaded multi-megabyte sort for
+        // telemetry nobody reads. The tiny boundary keeps probing.
+        let cfg = CoordinatorConfig {
+            tiny_cutoff: 64,
+            parallel_cutoff: 1 << 20,
+            adaptive: AdaptivePolicy::adaptive(),
+            ..Default::default()
+        };
+        let state = RoutingState::new(&cfg, true);
+        for _ in 0..(PROBE_PERIOD * 8) {
+            assert_eq!(
+                state.route_probed((1 << 20) + 1, false, None),
+                Route::Parallel,
+                "no down-probes while the parallel boundary is frozen"
+            );
+            assert_eq!(
+                state.route_probed((1 << 19) + 1, false, None),
+                Route::SingleThread,
+                "no up-probes while the parallel boundary is frozen"
+            );
+        }
+        let mut tiny_probes = 0;
+        for _ in 0..(PROBE_PERIOD * 8) {
+            if state.route_probed(48, false, None) == Route::SingleThread {
+                tiny_probes += 1;
+            }
+        }
+        assert_eq!(tiny_probes, 8, "tiny boundary probing unaffected");
+    }
+
+    #[test]
+    fn routing_state_static_when_policy_off() {
+        let cfg = CoordinatorConfig::default();
+        let state = RoutingState::new(&cfg, false);
+        for _ in 0..64 {
+            assert_eq!(state.route_probed(63, false, None), Route::Tiny, "no probes when off");
+        }
+        let s = state.snapshot();
+        assert_eq!(s.tiny_cutoff, cfg.tiny_cutoff);
+        assert_eq!(s.fuse_cutoff, cfg.fuse_cutoff);
+        assert_eq!(s.parallel_cutoff, cfg.parallel_cutoff);
+        assert_eq!(s.batch_max, cfg.batch_max);
+    }
+
+    #[test]
+    fn adaptive_seed_is_clamped_into_bounds() {
+        let cfg = CoordinatorConfig {
+            tiny_cutoff: 1 << 20, // absurd seed
+            adaptive: AdaptivePolicy::adaptive(),
+            ..Default::default()
+        };
+        let s = RoutingState::new(&cfg, false).snapshot();
+        assert_eq!(s.tiny_cutoff, RoutingBounds::default().tiny.1);
+        assert!(s.tiny_cutoff <= s.fuse_cutoff && s.fuse_cutoff <= s.parallel_cutoff);
+    }
+
+    #[test]
+    fn bounds_validation() {
+        assert!(RoutingBounds::default().validate().is_ok());
+        let empty = RoutingBounds { tiny: (64, 8), ..Default::default() };
+        assert!(empty.validate().is_err());
+        let zero_batch = RoutingBounds { batch: (0, 4), ..Default::default() };
+        assert!(zero_batch.validate().is_err());
+        // Order-incompatible upper bounds: the ordering constraint
+        // could push parallel above its own max — must be rejected so
+        // the "clamped to bounds" guarantee holds unconditionally.
+        let crossed = RoutingBounds {
+            fuse: (1 << 20, 1 << 21),
+            parallel: (1 << 16, 1 << 18),
+            ..Default::default()
+        };
+        assert!(crossed.validate().is_err());
+    }
+
+    #[test]
+    fn probe_clocks_are_independent_per_boundary_side() {
+        // Strictly alternating tiny-window / parallel-window traffic:
+        // with one shared clock, one boundary could phase-lock the
+        // other out of probing entirely. Each side owns its clock, so
+        // both boundaries probe at the full 1/PROBE_PERIOD rate.
+        let cfg = CoordinatorConfig {
+            tiny_cutoff: 64,
+            parallel_cutoff: 1 << 20,
+            adaptive: AdaptivePolicy::adaptive(),
+            ..Default::default()
+        };
+        let state = RoutingState::new(&cfg, false);
+        let (mut tiny_probes, mut par_probes) = (0, 0);
+        for _ in 0..(PROBE_PERIOD * 8) {
+            if state.route_probed(48, false, None) == Route::SingleThread {
+                tiny_probes += 1;
+            }
+            if state.route_probed((1 << 19) + 1, false, None) == Route::Parallel {
+                par_probes += 1;
+            }
+        }
+        assert_eq!(tiny_probes, 8, "tiny boundary probes at full rate");
+        assert_eq!(par_probes, 8, "parallel boundary probes at full rate despite interleaving");
+    }
+}

@@ -81,11 +81,12 @@ pub struct RunMerger {
 }
 
 impl RunMerger {
-    /// Default: hybrid 2×4 on `V128` — the fastest configuration in
-    /// this host's recorded sweep (`BENCH_width_sweep.json`; see
-    /// README §Benchmarks).
+    /// Default: hybrid 2×16 on `V128` — the recorded sweep's
+    /// full-sort winner (`BENCH_width_sweep.json` `best_fullsort`),
+    /// matching the paper's Table 3 finding that the hybrid merger is
+    /// fastest at 2×{8,16}. See README §Benchmarks to re-tune.
     pub fn paper_default() -> Self {
-        RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid, vector: VectorWidth::V128 }
+        RunMerger { width: MergeWidth::K16, imp: MergeImpl::Hybrid, vector: VectorWidth::V128 }
     }
 
     /// The register width this merger actually instantiates kernels

@@ -11,12 +11,17 @@
 //! neonms regmachine [--phys F]
 //! neonms serve-demo [--requests N] [--tenants T] [--workers W]
 //!                   [--shards S] [--batch-max B] [--fuse-cutoff F]
-//!                   [--xla]
+//!                   [--xla] [--adaptive] [--epoch J]
 //! ```
+//!
+//! `--adaptive` turns on online routing: the service re-derives the
+//! tiny/fuse/parallel cutoffs and `batch_max` from live per-tier
+//! throughput every `--epoch` completed jobs (default 256) and the
+//! demo prints the decision trace and per-route observations.
 
 use neonms::bench::tables;
 use neonms::bench::Workload;
-use neonms::coordinator::{CoordinatorConfig, SortService};
+use neonms::coordinator::{AdaptivePolicy, CoordinatorConfig, RoutingBounds, SortService};
 use neonms::regmachine;
 use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
 use neonms::sortnet::gen;
@@ -207,22 +212,33 @@ fn cmd_serve(flags: &Flags) {
         .has("xla")
         .then(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
     let defaults = CoordinatorConfig::default();
+    let adaptive = if flags.has("adaptive") {
+        AdaptivePolicy::Adaptive {
+            epoch_jobs: flags.get_usize("epoch", 256).max(1) as u64,
+            bounds: RoutingBounds::default(),
+        }
+    } else {
+        AdaptivePolicy::Off
+    };
     let cfg = CoordinatorConfig {
         workers: flags.get_usize("workers", defaults.workers),
         shards: flags.get_usize("shards", defaults.shards),
         batch_max: flags.get_usize("batch-max", defaults.batch_max),
         fuse_cutoff: flags.get_usize("fuse-cutoff", defaults.fuse_cutoff),
         xla_cutoff: flags.has("xla").then_some(4096),
+        adaptive,
         ..defaults
     };
     let svc = SortService::start(cfg.clone(), artifacts).expect("service start");
+    let initial_routing = svc.routing();
     println!(
-        "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants)",
+        "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants, adaptive={})",
         cfg.workers,
         cfg.shards,
         cfg.batch_max,
         svc.xla_enabled(),
-        tenants
+        tenants,
+        cfg.adaptive.is_on()
     );
     // One client per tenant, each submitting from its own thread
     // through the non-blocking handle API.
@@ -276,6 +292,39 @@ fn cmd_serve(flags: &Flags) {
             "  {:10} accepted={:<5} shed={:<4} completed={:<5} p50 {}µs p99 {}µs",
             t.name, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
         );
+    }
+    println!("per-route (service time):");
+    for r in &m.routes {
+        if r.jobs > 0 {
+            println!(
+                "  {:8} jobs={:<6} elements={:<9} {:8.1} e/µs p50 {}µs p99 {}µs",
+                r.tier, r.jobs, r.elements, r.elems_per_us, r.p50_us, r.p99_us
+            );
+        }
+    }
+    if cfg.adaptive.is_on() {
+        let fin = svc.routing();
+        println!(
+            "adaptive routing: tiny {}→{} fuse {}→{} parallel {}→{} batch_max {}→{}",
+            initial_routing.tiny_cutoff,
+            fin.tiny_cutoff,
+            initial_routing.fuse_cutoff,
+            fin.fuse_cutoff,
+            initial_routing.parallel_cutoff,
+            fin.parallel_cutoff,
+            initial_routing.batch_max,
+            fin.batch_max
+        );
+        let decisions = svc.decisions();
+        if decisions.is_empty() {
+            println!("  no confirmed cutoff moves (short run, or tiers already balanced)");
+        }
+        for d in decisions {
+            println!(
+                "  epoch {:3}: {} {} -> {} (lower tier {:.1} e/µs vs upper {:.1} e/µs)",
+                d.epoch, d.param, d.from, d.to, d.lo_elems_per_us, d.hi_elems_per_us
+            );
+        }
     }
     svc.shutdown();
 }

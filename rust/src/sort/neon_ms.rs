@@ -62,10 +62,12 @@ pub struct SortConfig {
     pub column_network: ColumnNetwork,
     /// Register-merge kernel width for the merge passes, up to the
     /// `MAX_K = 64` budget (2×64). The paper's Table 3 finds the
-    /// hybrid merger fastest at 2×{8,16}; on this host the recorded
-    /// width sweep (`BENCH_width_sweep.json`, regenerate with `cargo
-    /// bench --bench ablations`) keeps hybrid 2×4 at `V128` as the
-    /// default; benches sweep all widths at both register widths.
+    /// hybrid merger fastest at 2×{8,16}, and the recorded width
+    /// sweep's full-sort winner agrees (`BENCH_width_sweep.json`
+    /// `best_fullsort`: hybrid 2×16 at `V128`), so 2×16 is the
+    /// default. Re-run the sweep (`cargo bench --bench ablations`, or
+    /// take the CI artifact) and re-tune on your own hardware; the
+    /// benches sweep all widths at both register widths.
     pub merge_width: MergeWidth,
     /// Merge kernel implementation (paper: hybrid).
     pub merge_impl: MergeImpl,
@@ -80,7 +82,7 @@ impl Default for SortConfig {
         SortConfig {
             r: 16,
             column_network: ColumnNetwork::Best,
-            merge_width: MergeWidth::K4,
+            merge_width: MergeWidth::K16,
             merge_impl: MergeImpl::Hybrid,
             vector_width: VectorWidth::V128,
         }
@@ -113,7 +115,7 @@ impl NeonMergeSort {
     }
 
     /// The paper's configuration: R = 16* with hybrid merges (width
-    /// host-tuned to 2×4 at V128; see SortConfig::merge_width).
+    /// sweep-tuned to 2×16 at V128; see SortConfig::merge_width).
     pub fn paper_default() -> Self {
         NeonMergeSort::new(SortConfig::default())
     }
