@@ -14,15 +14,28 @@
 //! sorts (result pages), XLA-sized shard merges, and occasional large
 //! report builds. Every submit is **non-blocking**: `try_submit`
 //! either returns a pollable [`SortHandle`] or sheds with `Busy`, in
-//! which case the tenant drains whatever handles already resolved and
-//! retries — zero blocking submits anywhere. Per-tenant accepted /
-//! shed / completed counts and latency quantiles come straight from
+//! which case the tenant drains whatever handles already resolved,
+//! backs off (by the service's hint when the reason is
+//! [`BusyReason::OverShare`]) and retries — zero blocking submits
+//! anywhere. Per-tenant accepted / shed / completed counts, latency
+//! quantiles, and the fair-share gauges come straight from
 //! `MetricsSnapshot::tenants`.
+//!
+//! Each tenant carries a QoS [`ClientConfig`]: report builds get the
+//! largest weight *and* a burst allowance sized to their multi-MB
+//! requests, so batch traffic is first-class without being able to
+//! starve the interactive tenants — under contention the service
+//! sheds whichever tenant is furthest over its weighted share, not
+//! whoever submitted last.
 //!
 //! [`SortClient`]: neonms::coordinator::SortClient
 //! [`SortHandle`]: neonms::coordinator::SortHandle
+//! [`BusyReason::OverShare`]: neonms::coordinator::BusyReason::OverShare
+//! [`ClientConfig`]: neonms::coordinator::ClientConfig
 
-use neonms::coordinator::{BusyReason, CoordinatorConfig, SortClient, SortHandle, SortService};
+use neonms::coordinator::{
+    BusyReason, ClientConfig, CoordinatorConfig, SortClient, SortHandle, SortService,
+};
 use neonms::testutil::Rng;
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -32,6 +45,10 @@ struct TenantPlan {
     name: &'static str,
     base: usize,
     count: usize,
+    /// Fair-share weight + burst allowance for this traffic class
+    /// (bursts sized so each class rides within its allowance: the
+    /// demo showcases weighted *service order*, not forced sheds).
+    qos: ClientConfig,
 }
 
 /// Take every handle that already resolved; verify its response.
@@ -70,13 +87,18 @@ fn run_tenant(client: &SortClient, plan: &TenantPlan, seed: u64) -> (usize, usiz
                 Err(busy) => {
                     // Shed under backpressure: reclaim the input,
                     // drain what's ready, back off, retry — never a
-                    // blocking submit. A Shutdown reason would mean
-                    // retrying can never succeed; stop instead.
-                    assert_eq!(busy.reason, BusyReason::QueueFull, "service shut down mid-run");
+                    // blocking submit. OverShare carries the
+                    // service's own back-off hint; a Shutdown reason
+                    // would mean retrying can never succeed.
+                    let backoff = match busy.reason {
+                        BusyReason::QueueFull => Duration::from_micros(200),
+                        BusyReason::OverShare { retry_after_hint } => retry_after_hint,
+                        BusyReason::Shutdown => panic!("service shut down mid-run"),
+                    };
                     sheds += 1;
                     data = busy.data;
                     done += drain_ready(&mut pending);
-                    std::thread::sleep(Duration::from_micros(200));
+                    std::thread::sleep(backoff);
                 }
             }
         }
@@ -111,19 +133,43 @@ fn main() {
         parallel_cutoff: 1 << 21,
         threads_per_parallel_sort: 4,
         xla_cutoff: Some(4096),
+        // Kernel config, static routing, fair-share QoS — defaults.
+        ..Default::default()
     };
     let svc = SortService::start(cfg, have_artifacts.then_some(artifacts)).expect("start service");
     println!(
-        "service up: 2 workers over 2 shards, XLA offload {}",
+        "service up: 2 workers over 2 shards, fair-share QoS, XLA offload {}",
         if svc.xla_enabled() { "ENABLED (≥4096-element requests)" } else { "disabled" }
     );
 
-    // Four concurrent tenants, Zipf-flavored class mix.
+    // Four concurrent tenants, Zipf-flavored class mix. Weights rank
+    // the classes; bursts are sized to each class's in-flight ceiling
+    // (window × typical request) so none trips over-share shedding.
     let plans: [TenantPlan; 4] = [
-        TenantPlan { name: "facet-frontend", base: 16, count: 600 },
-        TenantPlan { name: "page-backend", base: 2_000, count: 250 },
-        TenantPlan { name: "shard-analytics", base: 16_384, count: 120 },
-        TenantPlan { name: "report-builder", base: 3 << 20, count: 4 },
+        TenantPlan {
+            name: "facet-frontend",
+            base: 16,
+            count: 600,
+            qos: ClientConfig { weight: 1, burst: 1 << 16 },
+        },
+        TenantPlan {
+            name: "page-backend",
+            base: 2_000,
+            count: 250,
+            qos: ClientConfig { weight: 2, burst: 1 << 20 },
+        },
+        TenantPlan {
+            name: "shard-analytics",
+            base: 16_384,
+            count: 120,
+            qos: ClientConfig { weight: 2, burst: 4 << 20 },
+        },
+        TenantPlan {
+            name: "report-builder",
+            base: 3 << 20,
+            count: 4,
+            qos: ClientConfig { weight: 4, burst: 32 << 20 },
+        },
     ];
     println!("{} tenants submitting concurrently, zero blocking submits", plans.len());
 
@@ -133,7 +179,7 @@ fn main() {
             .iter()
             .enumerate()
             .map(|(i, plan)| {
-                let client = svc.client(plan.name);
+                let client = svc.client_with(plan.name, plan.qos);
                 s.spawn(move || run_tenant(&client, plan, 2024 + i as u64))
             })
             .collect();
@@ -144,13 +190,13 @@ fn main() {
     let m = svc.metrics();
     println!("\n== per-tenant ==");
     println!(
-        "  {:16} {:>8} {:>6} {:>9} {:>8} {:>8}",
-        "tenant", "accepted", "shed", "completed", "p50(µs)", "p99(µs)"
+        "  {:16} {:>2} {:>5} {:>8} {:>6} {:>9} {:>8} {:>8}",
+        "tenant", "w", "share", "accepted", "shed", "completed", "p50(µs)", "p99(µs)"
     );
     for t in &m.tenants {
         println!(
-            "  {:16} {:>8} {:>6} {:>9} {:>8} {:>8}",
-            t.name, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
+            "  {:16} {:>2} {:>5.2} {:>8} {:>6} {:>9} {:>8} {:>8}",
+            t.name, t.weight, t.share, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
         );
     }
     println!(

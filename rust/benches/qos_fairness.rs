@@ -1,0 +1,255 @@
+//! Bench: aggressor-vs-victim fairness — how much of its isolated
+//! throughput a well-behaved tenant keeps while a greedy one floods
+//! the service, under global FIFO versus weighted fair-share QoS.
+//!
+//! Setup (both tenants weight 1, so the fair split is 50/50 and the
+//! victim's demand is far below its half — the victim is
+//! latency-bound, like an interactive tenant, while the aggressor is
+//! throughput-bound):
+//!
+//! * **victim** — closed loop, `VICTIM_WINDOW` (= 1) request
+//!   outstanding, `JOB_LEN`-element jobs; its completed-jobs/s is
+//!   the metric. Its isolated throughput uses a fraction of the
+//!   `WORKERS`-way service, well under its fair half.
+//! * **aggressor** — `AGGRESSOR_FACTOR × WORKERS` requests held
+//!   outstanding continuously (the "8× offered load": eight times
+//!   the worker parallelism), same job size, submitting through
+//!   `try_submit` and retrying immediately on shed with a tiny yield
+//!   — a saturating flood against a deliberately small
+//!   `queue_capacity`, so admission pressure (sheds, evictions) is
+//!   real, not just dequeue ordering. Its burst allowance is small,
+//!   so its backlog counts as over-share; the victim's is generous,
+//!   so the victim is never over-share.
+//!
+//! Three measurements per run: the victim alone (isolated baseline),
+//! then victim + aggressor under [`QosPolicy::Fifo`], then under
+//! [`QosPolicy::FairShare`]. The headline number is **retention** =
+//! contended / isolated victim throughput; the fair-share acceptance
+//! bar is ≥ 0.8 while FIFO collapses (the aggressor owns the queues
+//! and the victim is shed like anyone else). Results are written as
+//! JSON (`BENCH_qos_fairness.json` at the repo root by default) with
+//! a `source` provenance field, like the width-sweep and
+//! routing-adaptive artifacts.
+//!
+//! Env knobs:
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (shorter runs).
+//! * `NEONMS_BENCH_JOBS` — victim jobs per measurement.
+//! * `NEONMS_BENCH_OUT` — artifact path (default
+//!   `../BENCH_qos_fairness.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::coordinator::{
+    BusyReason, ClientConfig, CoordinatorConfig, QosPolicy, SortService, TenantSnapshot,
+};
+use neonms::testutil::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+const JOB_LEN: usize = 2048;
+const VICTIM_WINDOW: usize = 1;
+const AGGRESSOR_FACTOR: usize = 8;
+const WORKERS: usize = 4;
+
+fn service(qos: QosPolicy) -> SortService {
+    let cfg = CoordinatorConfig {
+        workers: WORKERS,
+        shards: 2,
+        queue_capacity: 16,
+        qos,
+        ..Default::default()
+    };
+    SortService::start(cfg, None).expect("service start")
+}
+
+fn victim_client(svc: &SortService) -> neonms::coordinator::SortClient {
+    // Generous burst: the victim's whole window fits inside it, so it
+    // is never the over-share tenant.
+    svc.client_with("victim", ClientConfig { weight: 1, burst: 1 << 20 })
+}
+
+/// Closed-loop victim: keep `VICTIM_WINDOW` requests outstanding
+/// until `jobs` complete; returns jobs/s of wall time. Sheds retry
+/// after the service's own hint (QoS-aware client behavior); evicted
+/// handles are counted and resubmitted — under fair-share with a
+/// within-burst victim neither ever fires.
+fn run_victim(svc: &SortService, jobs: usize, seed: u64) -> f64 {
+    let client = victim_client(svc);
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::new();
+    let mut done = 0usize;
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    while done < jobs {
+        while submitted < jobs && pending.len() < VICTIM_WINDOW {
+            match client.try_submit(rng.vec_u32(JOB_LEN)) {
+                Ok(h) => {
+                    pending.push(h);
+                    submitted += 1;
+                }
+                Err(busy) => {
+                    let backoff = match busy.reason {
+                        BusyReason::OverShare { retry_after_hint } => retry_after_hint,
+                        _ => std::time::Duration::from_micros(100),
+                    };
+                    std::thread::sleep(backoff);
+                }
+            }
+        }
+        // Count only successful completions toward the throughput;
+        // an evicted request must be redone.
+        let mut completed_now = 0usize;
+        pending.retain_mut(|h| match h.try_take() {
+            Some(Ok(_)) => {
+                completed_now += 1;
+                false
+            }
+            Some(Err(_)) => {
+                submitted -= 1;
+                false
+            }
+            None => true,
+        });
+        done += completed_now;
+        if completed_now == 0 {
+            std::thread::yield_now();
+        }
+    }
+    jobs as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Saturating aggressor: `AGGRESSOR_FACTOR × WORKERS` outstanding,
+/// immediate resubmit on shed, until `stop`.
+fn run_aggressor(svc: &SortService, stop: &AtomicBool, seed: u64) {
+    let client =
+        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 4 * JOB_LEN });
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        while pending.len() < AGGRESSOR_FACTOR * WORKERS {
+            match client.try_submit(rng.vec_u32(JOB_LEN)) {
+                Ok(h) => pending.push(h),
+                Err(_) => {
+                    std::thread::yield_now();
+                    break;
+                }
+            }
+        }
+        // Drain whatever resolved (results and eviction errors alike).
+        pending.retain_mut(|h| h.try_take().is_none());
+    }
+}
+
+struct Contended {
+    victim_jobs_per_s: f64,
+    victim: TenantSnapshot,
+    aggressor: TenantSnapshot,
+    evictions: u64,
+}
+
+fn run_contended(qos: QosPolicy, jobs: usize) -> Contended {
+    let svc = service(qos);
+    let stop = AtomicBool::new(false);
+    let rate = std::thread::scope(|s| {
+        let svc = &svc;
+        let stop = &stop;
+        s.spawn(move || run_aggressor(svc, stop, 7));
+        let rate = run_victim(svc, jobs, 11);
+        stop.store(true, Ordering::Relaxed);
+        rate
+    });
+    let m = svc.metrics();
+    let tenant = |name: &str| {
+        m.tenants.iter().find(|t| t.name == name).expect("tenant snapshot").clone()
+    };
+    let out = Contended {
+        victim_jobs_per_s: rate,
+        victim: tenant("victim"),
+        aggressor: tenant("aggressor"),
+        evictions: m.evicted,
+    };
+    svc.shutdown();
+    out
+}
+
+fn main() {
+    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let jobs: usize = std::env::var("NEONMS_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 400 } else { 2000 });
+
+    println!(
+        "qos fairness: victim (window {VICTIM_WINDOW}) vs aggressor \
+         ({AGGRESSOR_FACTOR}× offered load), {JOB_LEN}-element jobs, {jobs} victim jobs \
+         (smoke={smoke})"
+    );
+
+    // Isolated baseline: the victim alone on a fair-share service.
+    let svc = service(QosPolicy::FairShare);
+    let isolated = run_victim(&svc, jobs, 11);
+    svc.shutdown();
+    println!("| victim isolated       | {isolated:10.0} jobs/s | retention 1.00 |");
+
+    let mut rows = Vec::new();
+    for qos in [QosPolicy::Fifo, QosPolicy::FairShare] {
+        let c = run_contended(qos, jobs);
+        let retention = c.victim_jobs_per_s / isolated;
+        println!(
+            "| victim vs aggressor ({:9}) | {:10.0} jobs/s | retention {:.2} | \
+             victim shed {} | aggressor shed {} (over-share {}, evicted {})",
+            format!("{qos:?}"),
+            c.victim_jobs_per_s,
+            retention,
+            c.victim.shed,
+            c.aggressor.shed,
+            c.aggressor.shed_over_share,
+            c.aggressor.evicted,
+        );
+        rows.push((qos, c, retention));
+    }
+    if let Some((_, c, r)) = rows.iter().find(|(q, _, _)| *q == QosPolicy::FairShare) {
+        println!(
+            "fair-share verdict: victim retained {:.0}% of isolated throughput \
+             (acceptance bar 80%), victim sheds {}",
+            r * 100.0,
+            c.victim.shed
+        );
+    }
+
+    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"qos_fairness\",\n");
+    json.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str(&format!("  \"source\": \"{source}\",\n"));
+    json.push_str(&format!("  \"job_len\": {JOB_LEN},\n"));
+    json.push_str(&format!("  \"victim_window\": {VICTIM_WINDOW},\n"));
+    json.push_str(&format!("  \"aggressor_factor\": {AGGRESSOR_FACTOR},\n"));
+    json.push_str(&format!("  \"victim_jobs\": {jobs},\n"));
+    json.push_str(&format!("  \"victim_isolated_jobs_per_s\": {isolated:.1},\n"));
+    json.push_str("  \"scenarios\": [\n");
+    for (i, (qos, c, retention)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"policy\": \"{qos:?}\", \"victim_jobs_per_s\": {:.1}, \
+             \"victim_retention\": {retention:.3}, \"victim_shed\": {}, \
+             \"aggressor_completed\": {}, \"aggressor_shed\": {}, \
+             \"aggressor_shed_over_share\": {}, \"aggressor_evicted\": {}, \
+             \"evictions_total\": {}}}{}\n",
+            c.victim_jobs_per_s,
+            c.victim.shed,
+            c.aggressor.completed,
+            c.aggressor.shed,
+            c.aggressor.shed_over_share,
+            c.aggressor.evicted,
+            c.evictions,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("NEONMS_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_qos_fairness.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("fairness results recorded to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

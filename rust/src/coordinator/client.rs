@@ -26,9 +26,10 @@ enum State {
     Pending,
     /// Sorted result parked by a worker, not yet taken by the handle.
     Done(Vec<u32>),
-    /// The service dropped the request without completing it
-    /// (shutdown raced the submit); the handle resolves to an error.
-    Closed,
+    /// The service dropped the request without completing it; the
+    /// handle resolves to an error carrying the recorded reason
+    /// (shutdown raced the submit, or fair-share QoS evicted it).
+    Closed(&'static str),
     /// The handle already took the result.
     Taken,
 }
@@ -82,12 +83,19 @@ impl Slot {
     /// was dropped un-sorted (service shut down, or the job was
     /// abandoned after its handle was cancelled). Idempotent.
     pub(super) fn close(&self) {
+        self.close_with(CLOSED_MSG);
+    }
+
+    /// [`Slot::close`] with an explicit reason — the fair-share
+    /// eviction path uses this so a displaced tenant's handle error
+    /// says *why*. Idempotent; the first close (or completion) wins.
+    pub(super) fn close_with(&self, msg: &'static str) {
         let waker = {
             let mut inner = self.inner.lock().unwrap();
             if !matches!(inner.state, State::Pending) {
                 return;
             }
-            inner.state = State::Closed;
+            inner.state = State::Closed(msg);
             inner.waker.take()
         };
         self.cv.notify_all();
@@ -112,7 +120,7 @@ impl Slot {
         let mut inner = self.inner.lock().unwrap();
         match std::mem::replace(&mut inner.state, State::Taken) {
             State::Done(data) => Some(Ok(data)),
-            State::Closed => Some(Err(closed_error())),
+            State::Closed(msg) => Some(Err(anyhow::anyhow!(msg))),
             // `replace` already left `Taken` in place.
             State::Taken => {
                 Some(Err(anyhow::anyhow!("sort handle polled after completion")))
@@ -135,7 +143,7 @@ impl Slot {
         loop {
             match std::mem::replace(&mut inner.state, State::Taken) {
                 State::Done(data) => return Ok(data),
-                State::Closed => return Err(closed_error()),
+                State::Closed(msg) => return Err(anyhow::anyhow!(msg)),
                 State::Taken => {
                     return Err(anyhow::anyhow!("sort handle waited after completion"))
                 }
@@ -148,29 +156,67 @@ impl Slot {
     }
 }
 
-fn closed_error() -> anyhow::Error {
-    anyhow::anyhow!("sort service dropped the request before completing it")
-}
+/// Default [`Slot::close`] reason (shutdown / abandoned request).
+const CLOSED_MSG: &str = "sort service dropped the request before completing it";
 
 /// Why a [`super::SortClient::try_submit`] was shed.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum BusyReason {
-    /// Every shard was at capacity — transient backpressure; a retry
+    /// Every shard was at capacity and no tenant was further over its
+    /// fair share than this one — transient backpressure; a retry
     /// after draining some handles can succeed.
     QueueFull,
+    /// Every shard was at capacity and **this tenant** was the one
+    /// most over its fair share ([`super::ClientConfig`] weight/burst)
+    /// — the fair-share analog of `QueueFull`, telling the tenant the
+    /// overload is its own. Retrying before some of its in-flight
+    /// work drains will be shed again; `retry_after_hint` estimates
+    /// how long that drain takes (≈ one median queue-to-completion
+    /// latency — a hint, not a promise).
+    OverShare {
+        /// Suggested back-off before the next `try_submit`.
+        retry_after_hint: std::time::Duration,
+    },
     /// The service has shut down — permanent; stop retrying.
     Shutdown,
 }
 
 /// The input handed back by [`super::SortClient::try_submit`] when
 /// the request was shed: nothing was enqueued or copied, and the
-/// caller decides whether to retry ([`BusyReason::QueueFull`]),
-/// degrade, or stop ([`BusyReason::Shutdown`]).
+/// caller decides whether to retry ([`BusyReason::QueueFull`]), back
+/// off ([`BusyReason::OverShare`]), degrade, or stop
+/// ([`BusyReason::Shutdown`]).
+///
+/// # Examples
+///
+/// A QoS-aware retry loop distinguishes the three reasons — retry
+/// soon, back off by the hint, or stop:
+///
+/// ```
+/// use neonms::coordinator::{Busy, BusyReason};
+/// use std::time::Duration;
+///
+/// fn backoff(busy: &Busy) -> Option<Duration> {
+///     match busy.reason {
+///         BusyReason::QueueFull => Some(Duration::from_micros(100)),
+///         BusyReason::OverShare { retry_after_hint } => Some(retry_after_hint),
+///         BusyReason::Shutdown => None, // retrying can never succeed
+///     }
+/// }
+///
+/// let shed = Busy {
+///     data: vec![3, 1, 2], // handed back untouched
+///     reason: BusyReason::OverShare { retry_after_hint: Duration::from_micros(250) },
+/// };
+/// assert_eq!(backoff(&shed), Some(Duration::from_micros(250)));
+/// assert_eq!(shed.data, vec![3, 1, 2]);
+/// ```
 #[derive(Debug)]
 pub struct Busy {
     /// The original, untouched input.
     pub data: Vec<u32>,
-    /// Transient overload or permanent shutdown.
+    /// Transient overload ([`BusyReason::QueueFull`] /
+    /// [`BusyReason::OverShare`]) or permanent shutdown.
     pub reason: BusyReason,
 }
 

@@ -17,6 +17,30 @@ pub enum Route {
     Xla,
 }
 
+/// How admission and dequeue arbitrate between tenants when the
+/// service is contended.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum QosPolicy {
+    /// Global FIFO (the pre-QoS behavior): shards pop in arrival
+    /// order, and when every shard is full the *arriving* request is
+    /// the one shed — whoever submitted first owns the queues,
+    /// whatever their tenant's weight. Kept as the baseline
+    /// `benches/qos_fairness.rs` contrasts against, and for
+    /// single-tenant deployments that want strict arrival order.
+    Fifo,
+    /// Weighted fair share (the default): dequeue orders jobs by
+    /// per-tenant virtual time (completed elements converge to the
+    /// [`super::ClientConfig::weight`] ratios under contention), and
+    /// when every shard is full the tenant *most over its share* is
+    /// shed first — the arrival with [`super::BusyReason::OverShare`]
+    /// when it is the worst offender, else by evicting the worst
+    /// offender's newest queued job to make room. Admission stays
+    /// work-conserving: while any shard has room, everyone is
+    /// admitted regardless of share.
+    #[default]
+    FairShare,
+}
+
 /// Tunables for [`super::SortService`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -63,6 +87,12 @@ pub struct CoordinatorConfig {
     /// policy's hard bounds. [`AdaptivePolicy::Off`] (the default)
     /// keeps them static for the service's lifetime.
     pub adaptive: AdaptivePolicy,
+    /// Multi-tenant arbitration under contention:
+    /// [`QosPolicy::FairShare`] (the default) or the pre-QoS
+    /// [`QosPolicy::Fifo`] baseline. Per-tenant weights and burst
+    /// allowances ride on [`super::ClientConfig`] via
+    /// [`super::SortService::client_with`].
+    pub qos: QosPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,6 +109,7 @@ impl Default for CoordinatorConfig {
             xla_cutoff: None,
             sort: SortConfig::default(),
             adaptive: AdaptivePolicy::Off,
+            qos: QosPolicy::default(),
         }
     }
 }

@@ -1,8 +1,10 @@
 //! Lock-free service metrics: request counters per route, per-tenant
-//! accepted/shed/completed accounting, log-bucketed latency
-//! histograms, and the per-tier observation grid the adaptive router
-//! learns from (no external deps — atomics only).
+//! accepted/shed/completed accounting plus the fair-share QoS gauges
+//! (weight, share, credit, in-flight/queued occupancy), log-bucketed
+//! latency histograms, and the per-tier observation grid the adaptive
+//! router learns from (no external deps — atomics only).
 
+use super::qos::{ClientConfig, QosState};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -291,10 +293,21 @@ pub struct TenantMetrics {
     name: String,
     /// Requests admitted into a shard queue for this tenant.
     pub accepted: AtomicU64,
-    /// Requests shed at admission without being enqueued:
-    /// `try_submit` while every queue was full, or any submit
-    /// (including blocking `submit`) after shutdown.
+    /// Requests shed without a result: `try_submit` refused at
+    /// admission (queue full, over share, or shutdown), any submit
+    /// after shutdown, or a queued request evicted under fair-share
+    /// pressure.
     pub shed: AtomicU64,
+    /// The subset of `shed` caused by this tenant exceeding its fair
+    /// share under pressure (`OverShare` refusals + evictions) —
+    /// distinguishes "the service was full" from "*you* were the
+    /// overload".
+    pub shed_over_share: AtomicU64,
+    /// The subset of `shed` that was already queued when it was shed:
+    /// fair-share admission displaced it to make room for a tenant
+    /// further under its share (the evicted handle resolves to an
+    /// error).
+    pub evicted: AtomicU64,
     /// Requests completed with a result delivered to the slot.
     pub completed: AtomicU64,
     /// Requests that were admitted but never sorted: the handle was
@@ -304,6 +317,10 @@ pub struct TenantMetrics {
     pub cancelled: AtomicU64,
     /// Queue-to-completion latency, this tenant's requests only.
     pub latency: LatencyHistogram,
+    /// Live fair-share scheduling state (weight/burst config plus the
+    /// in-flight / queued / virtual-time counters); its atomics
+    /// double as the snapshot's QoS gauges.
+    pub(super) qos: QosState,
 }
 
 impl TenantMetrics {
@@ -312,9 +329,12 @@ impl TenantMetrics {
             name: name.to_string(),
             accepted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            shed_over_share: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             latency: LatencyHistogram::default(),
+            qos: QosState::new(ClientConfig::default()),
         }
     }
 
@@ -323,14 +343,27 @@ impl TenantMetrics {
         &self.name
     }
 
-    /// Point-in-time copy of this tenant's counters.
+    /// Point-in-time copy of this tenant's counters. The relative
+    /// gauges (`share`, `credit_elems`) need service-wide totals and
+    /// are zero here; [`TenantSnapshot::with_share`] fills them —
+    /// `SortService::metrics` and `SortClient::tenant_metrics` both
+    /// do.
     pub fn snapshot(&self) -> TenantSnapshot {
+        let cfg = self.qos.config();
         TenantSnapshot {
             name: self.name.clone(),
             accepted: self.accepted.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            shed_over_share: self.shed_over_share.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            weight: cfg.weight,
+            burst: cfg.burst as u64,
+            in_flight_elems: self.qos.in_flight(),
+            queued_jobs: self.qos.queued(),
+            share: 0.0,
+            credit_elems: 0,
             mean_latency_us: self.latency.mean_us(),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
@@ -345,11 +378,49 @@ pub struct TenantSnapshot {
     pub name: String,
     pub accepted: u64,
     pub shed: u64,
+    /// `shed` subset caused by this tenant exceeding its fair share
+    /// (`BusyReason::OverShare` refusals + evictions).
+    pub shed_over_share: u64,
+    /// `shed` subset displaced from a queue after admission (the
+    /// evicted handle resolves to an error).
+    pub evicted: u64,
     pub completed: u64,
     pub cancelled: u64,
+    /// Fair-share weight in force ([`super::ClientConfig::weight`]).
+    pub weight: u32,
+    /// Burst allowance in elements ([`super::ClientConfig::burst`]).
+    pub burst: u64,
+    /// Occupancy gauge: admission cost (elements, floored at 256 per
+    /// job so queue-slot hogs register) admitted and not yet
+    /// completed/cancelled/evicted (queued + executing).
+    pub in_flight_elems: u64,
+    /// Jobs currently sitting in a shard queue.
+    pub queued_jobs: u64,
+    /// Share gauge: this tenant's weight over the total registered
+    /// weight, in `(0, 1]` (filled against the live registry totals
+    /// by `SortService::metrics` / `SortClient::tenant_metrics`).
+    pub share: f64,
+    /// Credit gauge: `share × total in-flight elements −` this
+    /// tenant's in-flight elements. Positive = running under its fair
+    /// share of the current load (has credit); negative = over.
+    pub credit_elems: i64,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+}
+
+impl TenantSnapshot {
+    /// Fill the relative gauges from service-wide totals: `share`
+    /// from the registered-weight sum, `credit_elems` against the
+    /// total in-flight element count.
+    pub(super) fn with_share(mut self, total_weight: u64, total_in_flight: u64) -> Self {
+        if total_weight > 0 {
+            self.share = self.weight as f64 / total_weight as f64;
+        }
+        self.credit_elems =
+            (self.share * total_in_flight as f64) as i64 - self.in_flight_elems as i64;
+        self
+    }
 }
 
 /// All service-wide coordinator counters (shared via `Arc`).
@@ -358,6 +429,10 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// The subset of `rejected` that was displaced from a queue by
+    /// fair-share admission after having been accepted (summed over
+    /// tenants; the evicted handles resolve to errors).
+    pub evicted: AtomicU64,
     /// Requests admitted but never sorted: their [`super::SortHandle`]
     /// was dropped before a worker reached them, or they were still
     /// queued at shutdown.
@@ -397,7 +472,12 @@ pub struct ShardMetrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    /// Requests refused or shed: admission-time sheds (queue full,
+    /// over share, shutdown) plus fair-share evictions.
     pub rejected: u64,
+    /// The subset of `rejected` displaced from a queue after
+    /// admission by fair-share QoS (see [`TenantSnapshot::evicted`]).
+    pub evicted: u64,
     /// Requests admitted but never sorted (handle dropped, or still
     /// queued at shutdown).
     pub cancelled: u64,
@@ -437,6 +517,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             route_tiny: self.route_tiny.load(Ordering::Relaxed),
@@ -542,8 +623,32 @@ mod tests {
         let s = t.snapshot();
         assert_eq!(s.name, "acme");
         assert_eq!((s.accepted, s.shed, s.completed, s.cancelled), (3, 1, 2, 0));
+        assert_eq!((s.shed_over_share, s.evicted), (0, 0));
+        assert_eq!(s.weight, 1, "default ClientConfig weight");
         assert!(s.mean_latency_us > 0.0);
         assert_eq!(t.name(), "acme");
+    }
+
+    #[test]
+    fn tenant_share_and_credit_gauges() {
+        let t = TenantMetrics::new("gold");
+        t.qos.configure(ClientConfig { weight: 4, burst: 0 });
+        let gv = AtomicU64::new(0);
+        t.qos.charge(100, &gv);
+        // Bare snapshot: relative gauges unset.
+        let bare = t.snapshot();
+        assert_eq!(bare.share, 0.0);
+        assert_eq!(bare.credit_elems, 0);
+        assert_eq!(bare.in_flight_elems, 100);
+        // Against totals: weight 4 of 5 → share 0.8; fair in-flight
+        // at 500 total is 400, so 300 elements of credit remain.
+        let s = t.snapshot().with_share(5, 500);
+        assert!((s.share - 0.8).abs() < 1e-9);
+        assert_eq!(s.credit_elems, 300);
+        // An over-share tenant's credit goes negative.
+        t.qos.charge(900, &gv);
+        let s = t.snapshot().with_share(5, 1000);
+        assert_eq!(s.credit_elems, -200);
     }
 
     #[test]

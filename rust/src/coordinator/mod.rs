@@ -21,6 +21,19 @@
 //! and [`MetricsSnapshot::tenants`] reports accepted/shed/completed/
 //! cancelled counts and latency quantiles per tenant.
 //!
+//! Contended capacity is arbitrated by **weighted fair-share QoS**
+//! ([`QosPolicy::FairShare`], the default): each tenant carries a
+//! [`ClientConfig`] weight and burst allowance
+//! ([`SortService::client_with`]), admission tracks per-tenant
+//! in-flight cost in *elements*, shard dequeue orders jobs by
+//! per-tenant virtual time, and when every queue is full the tenant
+//! most over its share is shed first — [`BusyReason::OverShare`]
+//! with a retry-after hint for the offender's own arrivals, eviction
+//! of its newest queued job when a less-loaded tenant needs the
+//! slot. Share/credit/occupancy gauges land in
+//! [`MetricsSnapshot::tenants`]; [`QosPolicy::Fifo`] restores the
+//! pre-QoS global FIFO behavior.
+//!
 //! The routing cutoffs can be **learned online**: with
 //! [`AdaptivePolicy::Adaptive`] the service observes each tier's
 //! throughput per request-size class ([`MetricsSnapshot::routes`])
@@ -34,14 +47,16 @@
 mod client;
 mod config;
 mod metrics;
+mod qos;
 mod service;
 mod tuner;
 
 pub use client::{Busy, BusyReason, SortHandle};
-pub use config::{CoordinatorConfig, Route};
+pub use config::{CoordinatorConfig, QosPolicy, Route};
 pub use metrics::{
     LatencyHistogram, MetricsSnapshot, RouteSnapshot, ShardMetrics, TenantSnapshot, Tier,
 };
+pub use qos::ClientConfig;
 pub use service::{SortClient, SortService};
 pub use tuner::{AdaptivePolicy, Decision, RoutingBounds, RoutingSnapshot};
 

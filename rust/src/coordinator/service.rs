@@ -15,14 +15,59 @@
 //! style per request: poll ([`SortHandle::try_take`]), await (the
 //! handle is a `Future`), or park ([`SortHandle::wait`]).
 //!
-//! Tenants enter through [`SortService::client`]: a [`SortClient`] is
+//! Tenants enter through [`SortService::client`] (or
+//! [`SortService::client_with`], which also sets the tenant's
+//! fair-share [`ClientConfig`] weight and burst): a [`SortClient`] is
 //! a cheaply clonable handle binding one tenant identity to the
 //! service. [`SortClient::submit`] applies backpressure (parks only
 //! while *every* shard is at capacity); [`SortClient::try_submit`]
 //! never parks — it sheds with [`Busy`], handing the input back and
 //! bumping the tenant's `shed` counter. Accepted/shed/completed/
-//! cancelled counts and a latency histogram are kept per tenant and
+//! cancelled counts, a latency histogram, and the QoS gauges
+//! (share/credit/in-flight occupancy) are kept per tenant and
 //! reported in [`MetricsSnapshot::tenants`].
+//!
+//! # Per-tenant QoS (weighted fair share)
+//!
+//! Under [`QosPolicy::FairShare`] (the default) capacity under
+//! contention belongs to *weights*, not to arrival order:
+//!
+//! * Every admission is costed in **elements** — floored at
+//!   `qos::MIN_JOB_COST` per job, so a flood of tiny requests is
+//!   policed for the queue *slots* it hogs, not just its bytes — and
+//!   charged to its tenant: an in-flight gauge (admitted, not yet
+//!   completed/cancelled) plus a start-time-fair-queueing virtual
+//!   clock that advances by `cost / weight`. The job carries its
+//!   virtual-time tag into the queue.
+//! * **Dequeue is weight-aware**: a shard pops the lowest tag
+//!   instead of the head, so backlogged tenants drain elements in
+//!   proportion to their weights (FIFO within a tenant — tags are
+//!   strictly increasing per tenant). Everything else about the pop
+//!   is unchanged: the capacity bounds, work stealing, the dynamic
+//!   batcher (it drains further fuse-eligible jobs in tag order),
+//!   and cancellation filtering.
+//! * **Admission is work-conserving but fair under pressure**: while
+//!   any shard has room, everyone is admitted. When every shard is
+//!   full, the tenant *most over its share* (in-flight elements
+//!   beyond its [`ClientConfig::burst`], per unit weight) loses:
+//!   an over-share arrival is shed with [`BusyReason::OverShare`]
+//!   (carrying a retry-after hint), while an arrival from a tenant
+//!   further under its share **evicts** the worst offender's newest
+//!   queued job (its handle resolves to an error; counted `evicted`
+//!   and `shed_over_share`) and takes its place. A tenant within its
+//!   burst allowance is never shed for share reasons and never
+//!   evicted.
+//!
+//! Tenant-less [`SortService::submit`] / [`SortService::try_submit`]
+//! requests ride an internal anonymous bucket (weight 1): they get
+//! virtual-time tags and over-share accounting like everyone else —
+//! an over-burst anonymous flood gains no eviction privilege over
+//! registered tenants — but the bucket is never an eviction *victim*
+//! (it is not in the tenant registry) and its sheds surface exactly
+//! as the legacy API always surfaced them (`Err(data)` / a parked
+//! submit), never as per-tenant counters. [`QosPolicy::Fifo`]
+//! restores arrival-order dequeue and shed-the-arrival admission
+//! wholesale (the bench baseline).
 //!
 //! Dropping an unresolved [`SortHandle`] cancels the request: workers
 //! check the slot's cancellation flag before sorting and skip the
@@ -78,12 +123,17 @@
 //!
 //! # Lock order and wakeups
 //!
-//! Only `hub → shard.queue` is ever held nested (submit retry and the
-//! worker idle re-check). Push/pop wakeups lock the hub *after*
-//! releasing the queue, which closes the lost-wakeup race: a sleeper
-//! re-checks all queues while holding the hub, so any pop/push either
-//! happens before that check (and is seen) or after (and its notify
-//! lands on a registered waiter).
+//! Nested acquisition always starts from the hub: `hub → shard.queue`
+//! (submit retry and the worker idle re-check) and `hub → tenants`
+//! (the blocked submitter's fair-share victim scan). The tenants
+//! registry and the shard queues are never held together — victim
+//! selection releases the registry before `evict_and_place` takes a
+//! queue lock (the victim may race away; the placement loop just
+//! rescans) — and per-request slot mutexes are leaves. Push/pop
+//! wakeups lock the hub *after* releasing the queue, which closes the
+//! lost-wakeup race: a sleeper re-checks all queues while holding the
+//! hub, so any pop/push either happens before that check (and is
+//! seen) or after (and its notify lands on a registered waiter).
 //!
 //! The hub is kept off the hot path by parked-thread counters
 //! (`idle_workers`, `blocked_submitters`): a push/pop only locks the
@@ -107,10 +157,11 @@
 //! refused — never parked forever.
 
 use super::client::{Busy, BusyReason, Slot, SortHandle};
-use super::config::{CoordinatorConfig, Route};
+use super::config::{CoordinatorConfig, QosPolicy, Route};
 use super::metrics::{
     Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot, Tier,
 };
+use super::qos::{self, ClientConfig};
 use super::tuner::{AdaptivePolicy, Decision, RoutingSnapshot, RoutingState, Tuner};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
@@ -118,7 +169,7 @@ use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortScratch};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -129,11 +180,29 @@ use std::time::Instant;
 /// a waiter parked forever.
 struct Job {
     data: Vec<u32>,
+    /// Admission cost in elements (`qos::job_cost(data.len())` at
+    /// submit — floored at `MIN_JOB_COST` so slot hogs are policed),
+    /// kept so the tenant's in-flight gauge can be released after
+    /// `data` has been moved out by completion.
+    cost: u64,
+    /// Virtual-time tag the fair-share dequeue orders by
+    /// (`QosState::charge`; arrival order under `QosPolicy::Fifo`,
+    /// where it is ignored).
+    vtag: u64,
+    /// The virtual-clock advance this job's charge added, refunded if
+    /// the job is shed at admission or evicted (an evicted job
+    /// consumed no service; keeping the charge would starve the
+    /// evicted tenant under churn — see `QosState::release`).
+    vdelta: u64,
     enqueued: Instant,
     slot: Arc<Slot>,
-    /// Tenant attribution for completion/cancellation accounting;
-    /// `None` for the service-level [`SortService::submit`] path.
-    tenant: Option<Arc<TenantMetrics>>,
+    /// Tenant attribution for completion/cancellation accounting and
+    /// QoS cost release. Service-level [`SortService::submit`]
+    /// requests carry the internal anonymous bucket ([`Shared::anon`]
+    /// — not registered, so invisible in snapshots and never an
+    /// eviction victim, though its own load is policed at admission
+    /// like any tenant's).
+    tenant: Arc<TenantMetrics>,
 }
 
 impl Drop for Job {
@@ -169,6 +238,14 @@ struct Shared {
     blocked_submitters: AtomicUsize,
     shutdown: AtomicBool,
     metrics: Arc<Metrics>,
+    /// Global SFQ virtual clock: the largest virtual-time tag any
+    /// shard has dequeued. New charges start at
+    /// `max(tenant_vtime, vclock)` — the no-banked-credit rule.
+    vclock: AtomicU64,
+    /// QoS bucket for tenant-less submits (weight 1, never
+    /// registered in `tenants`, never shed for share reasons or
+    /// evicted — see the module docs).
+    anon: Arc<TenantMetrics>,
     /// Live routing parameters the worker hot path reads (plain
     /// atomics). Seeded from `cfg`; static unless `tuner` is present.
     routing: RoutingState,
@@ -220,6 +297,7 @@ impl Shared {
         if q.len() >= shard.capacity || self.shutdown.load(Ordering::SeqCst) {
             return Err(job);
         }
+        job.tenant.qos.enqueued();
         q.push_back(job);
         shard.metrics.depth.store(q.len() as u64, Ordering::Relaxed);
         Ok(())
@@ -283,51 +361,199 @@ impl Shared {
         self.space_cv.notify_all();
     }
 
+    /// True when `t` is the internal anonymous bucket (tenant-less
+    /// submits): counted service-wide but not per tenant. Its load is
+    /// policed at admission like any tenant's, but it can never be an
+    /// eviction victim (it is not in the registry).
+    fn is_anon(&self, t: &Arc<TenantMetrics>) -> bool {
+        Arc::ptr_eq(t, &self.anon)
+    }
+
     /// Take the optimistic admission counts. Pre-counting *before*
     /// the job becomes poppable keeps `submitted ≥ completed` (and
     /// `accepted ≥ completed` per tenant) true at every instant — a
     /// worker can finish a job before any post-placement increment
     /// would land.
-    fn count_admit(&self, tenant: Option<&Arc<TenantMetrics>>) {
+    fn count_admit(&self, tenant: &Arc<TenantMetrics>) {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        if let Some(t) = tenant {
-            t.accepted.fetch_add(1, Ordering::Relaxed);
+        if !self.is_anon(tenant) {
+            tenant.accepted.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Record a shed at admission: roll back the optimistic counts if
-    /// they were taken, bump the reject + tenant shed counters.
-    fn count_shed(&self, tenant: Option<&Arc<TenantMetrics>>, counted: bool) {
+    /// Record a shed: roll back the optimistic admission counts if
+    /// they were taken, bump the reject + tenant shed counters
+    /// (`over_share` additionally marks the shed as share-caused).
+    fn count_shed(&self, tenant: &Arc<TenantMetrics>, counted: bool, over_share: bool) {
         if counted {
             self.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
-            if let Some(t) = tenant {
-                t.accepted.fetch_sub(1, Ordering::Relaxed);
+            if !self.is_anon(tenant) {
+                tenant.accepted.fetch_sub(1, Ordering::Relaxed);
             }
         }
         self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-        if let Some(t) = tenant {
-            t.shed.fetch_add(1, Ordering::Relaxed);
+        if !self.is_anon(tenant) {
+            tenant.shed.fetch_add(1, Ordering::Relaxed);
+            if over_share {
+                tenant.shed_over_share.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
-    /// Backpressuring admission: park while every shard is full,
-    /// shed (resolving the handle to an error) if the service shuts
-    /// down first. Returns the handle in all cases — `submit` never
-    /// fails, it just may resolve unsuccessfully.
-    fn admit_blocking(&self, tenant: Option<&Arc<TenantMetrics>>, data: Vec<u32>) -> SortHandle {
+    /// Whether fair-share arbitration is in force.
+    fn fair(&self) -> bool {
+        self.cfg.qos == QosPolicy::FairShare
+    }
+
+    /// The most-over-share registered tenant with queued work,
+    /// provided it is *strictly* more over share than `arrival_over`
+    /// — the eviction victim. `exclude` (the arriving tenant) never
+    /// picks itself: displacing your own job to place your own job is
+    /// pure churn.
+    fn most_over_share(
+        &self,
+        arrival_over: u64,
+        exclude: &Arc<TenantMetrics>,
+    ) -> Option<Arc<TenantMetrics>> {
+        let reg = self.tenants.lock().unwrap();
+        let candidates = reg.iter().map(|t| {
+            if Arc::ptr_eq(t, exclude) {
+                (0, false)
+            } else {
+                (t.qos.over_share(), t.qos.queued() > 0)
+            }
+        });
+        qos::pick_victim(arrival_over, candidates).map(|i| Arc::clone(&reg[i]))
+    }
+
+    /// Scan the shards (newest job first within each) for one of
+    /// `victim`'s queued jobs; on find, swap `job` into its place
+    /// under the same queue lock, so the freed capacity cannot be
+    /// stolen between eviction and placement. `Err(job)` when the
+    /// victim's queued work raced away (or shutdown began).
+    fn evict_and_place(
+        &self,
+        victim: &Arc<TenantMetrics>,
+        job: Job,
+    ) -> std::result::Result<Job, Job> {
+        for shard in &self.shards {
+            let mut q = shard.queue.lock().unwrap();
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(job);
+            }
+            if let Some(idx) = q.iter().rposition(|j| Arc::ptr_eq(&j.tenant, victim)) {
+                let evicted = q.remove(idx).expect("rposition returned a valid index");
+                job.tenant.qos.enqueued();
+                q.push_back(job);
+                // Same length as before the swap; depth store keeps
+                // the gauge coherent with the push path anyway.
+                shard.metrics.depth.store(q.len() as u64, Ordering::Relaxed);
+                return Ok(evicted);
+            }
+            drop(q);
+        }
+        Err(job)
+    }
+
+    /// Account one eviction: the displaced job was admitted, so roll
+    /// its admission back and count it shed (share-caused) + evicted,
+    /// refund its QoS charges (in-flight *and* virtual time — it
+    /// consumed no service), and resolve its handle to an error that
+    /// says why.
+    fn count_eviction(&self, job: Job) {
+        let t = Arc::clone(&job.tenant);
+        t.qos.dequeued();
+        t.qos.uncharge(job.cost, job.vdelta);
+        self.count_shed(&t, true, true);
+        self.metrics.evicted.fetch_add(1, Ordering::Relaxed);
+        if !self.is_anon(&t) {
+            t.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        job.slot.close_with(
+            "request evicted: tenant exceeded its fair share while the service was full",
+        );
+        // Job's drop guard would close anyway; the explicit close
+        // above wins the race with it and records the reason.
+    }
+
+    /// Place `job`, arbitrating by fair share when every shard is
+    /// full: evict the most-over-share tenant's newest queued job to
+    /// make room, unless the arrival is itself the worst offender.
+    /// `Err((job, over_share))` hands the job back with whether the
+    /// shed is share-caused (drives [`BusyReason::OverShare`]).
+    fn place(&self, job: Job) -> std::result::Result<(), (Job, bool)> {
+        let mut job = job;
+        // Bounded retries: each eviction frees exactly the slot we
+        // then take under the same lock, so a second full pass only
+        // happens when a victim's queued work raced away.
+        for _ in 0..4 {
+            job = match self.try_place(job) {
+                Ok(()) => return Ok(()),
+                Err(j) => j,
+            };
+            if !self.fair() {
+                return Err((job, false));
+            }
+            // The anonymous bucket's own load counts too: a flooding
+            // legacy-API submitter must not keep eviction privilege
+            // over registered tenants just because it has no name.
+            let arrival_over = job.tenant.qos.over_share();
+            let Some(victim) = self.most_over_share(arrival_over, &job.tenant) else {
+                return Err((job, arrival_over > 0));
+            };
+            job = match self.evict_and_place(&victim, job) {
+                Ok(evicted) => {
+                    self.count_eviction(evicted);
+                    return Ok(());
+                }
+                Err(j) => j, // victim raced away; rescan from the top
+            };
+        }
+        Err((job, false))
+    }
+
+    /// Build the job + handle pair and charge the tenant's QoS state
+    /// for it (rolled back via `uncharge` if admission sheds — the
+    /// job carries its own `vdelta` for that).
+    fn make_job(&self, tenant: &Arc<TenantMetrics>, data: Vec<u32>) -> (Job, SortHandle) {
         let slot = Slot::new();
         let handle = SortHandle::new(Arc::clone(&slot));
-        let mut job = Job { data, enqueued: Instant::now(), slot, tenant: tenant.cloned() };
+        let cost = qos::job_cost(data.len());
+        let (vtag, vdelta) = tenant.qos.charge(cost, &self.vclock);
+        let job = Job {
+            data,
+            cost,
+            vtag,
+            vdelta,
+            enqueued: Instant::now(),
+            slot,
+            tenant: Arc::clone(tenant),
+        };
+        (job, handle)
+    }
+
+    /// Backpressuring admission: park while every shard is full (and
+    /// fair-share eviction finds no one worse-off to displace), shed
+    /// (resolving the handle to an error) if the service shuts down
+    /// first. Returns the handle in all cases — `submit` never
+    /// fails, it just may resolve unsuccessfully.
+    fn admit_blocking(&self, tenant: &Arc<TenantMetrics>, data: Vec<u32>) -> SortHandle {
+        let (job, handle) = self.make_job(tenant, data);
         self.count_admit(tenant);
+        let shed = |job: Job| {
+            self.count_shed(tenant, true, false);
+            tenant.qos.uncharge(job.cost, job.vdelta);
+            drop(job); // drop guard closes the slot → handle errors
+        };
+        let mut job = job;
         loop {
             if self.shutdown.load(Ordering::SeqCst) {
-                self.count_shed(tenant, true);
-                drop(job); // drop guard closes the slot → handle errors
+                shed(job);
                 return handle;
             }
-            job = match self.try_place(job) {
+            job = match self.place(job) {
                 Ok(()) => break,
-                Err(j) => j,
+                Err((j, _)) => j, // blocking path parks instead of reporting why
             };
             // All shards full: sleep until a pop frees space. The
             // counter increment *before* the retry under the hub lock
@@ -336,18 +562,17 @@ impl Shared {
             // the failed scan and the wait.
             let guard = self.hub.lock().unwrap();
             self.blocked_submitters.fetch_add(1, Ordering::SeqCst);
-            job = match self.try_place(job) {
+            job = match self.place(job) {
                 Ok(()) => {
                     self.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
                     drop(guard);
                     break;
                 }
-                Err(j) => {
+                Err((j, _)) => {
                     if self.shutdown.load(Ordering::SeqCst) {
                         self.blocked_submitters.fetch_sub(1, Ordering::SeqCst);
                         drop(guard);
-                        self.count_shed(tenant, true);
-                        drop(j);
+                        shed(j);
                         return handle;
                     }
                     let guard = self.space_cv.wait(guard).unwrap();
@@ -362,39 +587,71 @@ impl Shared {
     }
 
     /// Shedding admission: place or hand the input straight back,
-    /// tagged with why ([`BusyReason`]) so callers know whether a
-    /// retry can ever succeed.
+    /// tagged with why ([`BusyReason`]) so callers know whether (and
+    /// when) a retry can succeed.
     fn admit_try(
         &self,
-        tenant: Option<&Arc<TenantMetrics>>,
+        tenant: &Arc<TenantMetrics>,
         data: Vec<u32>,
     ) -> std::result::Result<SortHandle, Busy> {
         if self.shutdown.load(Ordering::SeqCst) {
-            self.count_shed(tenant, false);
+            self.count_shed(tenant, false, false);
             return Err(Busy { data, reason: BusyReason::Shutdown });
         }
-        let slot = Slot::new();
-        let handle = SortHandle::new(Arc::clone(&slot));
-        // Pre-count, roll back on rejection (see count_admit).
+        // Pre-count + pre-charge, rolled back on rejection (see
+        // count_admit).
+        let (job, handle) = self.make_job(tenant, data);
         self.count_admit(tenant);
-        let job = Job { data, enqueued: Instant::now(), slot, tenant: tenant.cloned() };
-        match self.try_place(job) {
+        match self.place(job) {
             Ok(()) => {
                 self.signal_work();
                 Ok(handle)
             }
-            Err(mut job) => {
-                self.count_shed(tenant, true);
+            Err((mut job, over_share)) => {
+                self.count_shed(tenant, true, over_share);
+                tenant.qos.uncharge(job.cost, job.vdelta);
                 // push_to also refuses once the shutdown flag is up;
                 // report that precisely so retry loops terminate.
                 let reason = if self.shutdown.load(Ordering::SeqCst) {
                     BusyReason::Shutdown
+                } else if over_share {
+                    BusyReason::OverShare {
+                        retry_after_hint: qos::retry_after_hint(
+                            self.metrics.latency.quantile_us(0.5),
+                        ),
+                    }
                 } else {
                     BusyReason::QueueFull
                 };
                 Err(Busy { data: std::mem::take(&mut job.data), reason })
             }
         }
+    }
+
+    /// Snapshots of every registered tenant with the relative QoS
+    /// gauges (share/credit) filled against the registry totals,
+    /// sorted by name.
+    fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        let reg = self.tenants.lock().unwrap();
+        let total_weight: u64 = reg.iter().map(|t| t.qos.weight() as u64).sum();
+        let total_in_flight: u64 = reg.iter().map(|t| t.qos.in_flight()).sum();
+        let mut tenants: Vec<TenantSnapshot> = reg
+            .iter()
+            .map(|t| t.snapshot().with_share(total_weight, total_in_flight))
+            .collect();
+        drop(reg);
+        tenants.sort_by(|a, b| a.name.cmp(&b.name));
+        tenants
+    }
+
+    /// One tenant's snapshot with the relative gauges filled (see
+    /// [`Shared::tenant_snapshots`]).
+    fn tenant_snapshot_of(&self, tenant: &Arc<TenantMetrics>) -> TenantSnapshot {
+        let reg = self.tenants.lock().unwrap();
+        let total_weight: u64 = reg.iter().map(|t| t.qos.weight() as u64).sum();
+        let total_in_flight: u64 = reg.iter().map(|t| t.qos.in_flight()).sum();
+        drop(reg);
+        tenant.snapshot().with_share(total_weight, total_in_flight)
     }
 }
 
@@ -446,27 +703,48 @@ impl SortClient {
         self.tenant.name()
     }
 
+    /// The fair-share configuration currently in force for this
+    /// tenant (the last explicit [`SortService::client_with`] wins;
+    /// [`ClientConfig::default`] otherwise).
+    pub fn config(&self) -> ClientConfig {
+        self.tenant.qos.config()
+    }
+
     /// Submit with backpressure: parks only while *every* shard is at
-    /// capacity, then returns a [`SortHandle`] that resolves when a
-    /// shard worker completes the request. If the service shuts down
-    /// first, the handle resolves to an error (and the request counts
-    /// as shed).
+    /// capacity (and, under [`QosPolicy::FairShare`], no tenant
+    /// further over its share than this one has queued work to
+    /// displace), then returns a [`SortHandle`] that resolves when a
+    /// shard worker completes the request.
+    ///
+    /// The handle resolves to an **error** in two cases: the service
+    /// shut down first (the request counts as shed), or — fair-share
+    /// only — this request was **evicted** after placement because
+    /// this tenant was the one most over its share while the service
+    /// was full (the error message names the eviction; counted under
+    /// `shed`/`shed_over_share`/`evicted`). A tenant operating within
+    /// its [`ClientConfig::burst`] allowance can never hit the
+    /// eviction case, which is why `wait().unwrap()` stays sound for
+    /// well-behaved tenants; a tenant that deliberately runs over its
+    /// share should treat an eviction error as "resubmit later".
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
-        self.shared.admit_blocking(Some(&self.tenant), data)
+        self.shared.admit_blocking(&self.tenant, data)
     }
 
     /// Non-blocking submit: returns [`Busy`] — handing the input
     /// back untouched and bumping this tenant's `shed` counter — when
     /// every shard is at capacity ([`BusyReason::QueueFull`], retry
-    /// later) or the service has shut down ([`BusyReason::Shutdown`],
-    /// stop retrying). Never parks, never spins.
+    /// later; [`BusyReason::OverShare`] when this tenant is itself
+    /// the most over its fair share, back off by the hint) or the
+    /// service has shut down ([`BusyReason::Shutdown`], stop
+    /// retrying). Never parks, never spins.
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Busy> {
-        self.shared.admit_try(Some(&self.tenant), data)
+        self.shared.admit_try(&self.tenant, data)
     }
 
-    /// Point-in-time copy of this tenant's counters.
+    /// Point-in-time copy of this tenant's counters and QoS gauges
+    /// (share/credit filled against the live registry totals).
     pub fn tenant_metrics(&self) -> TenantSnapshot {
-        self.tenant.snapshot()
+        self.shared.tenant_snapshot_of(&self.tenant)
     }
 }
 
@@ -550,6 +828,8 @@ impl SortService {
             blocked_submitters: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             metrics,
+            vclock: AtomicU64::new(0),
+            anon: Arc::new(TenantMetrics::new("(anonymous)")),
             tenants: Mutex::new(Vec::new()),
             xla_on: AtomicBool::new(xla_tx.is_some()),
             xla_tx: Mutex::new(xla_tx),
@@ -580,10 +860,26 @@ impl SortService {
     }
 
     /// Register (or look up) the named tenant and return a client
-    /// bound to it. Calling twice with the same name returns clients
-    /// sharing one set of counters — a tenant is an identity, not a
-    /// connection.
+    /// bound to it, with fair-share defaults ([`ClientConfig`]:
+    /// weight 1) for a new tenant — an existing tenant's
+    /// configuration is left untouched, so a default client joining
+    /// does not reset a weight set via
+    /// [`SortService::client_with`]. Calling twice with the same name
+    /// returns clients sharing one set of counters — a tenant is an
+    /// identity, not a connection.
     pub fn client(&self, tenant: &str) -> SortClient {
+        self.client_inner(tenant, None)
+    }
+
+    /// [`SortService::client`] with an explicit fair-share
+    /// [`ClientConfig`] (weight + burst). Reconfigures an existing
+    /// tenant — the last explicit configuration wins; jobs already
+    /// queued keep the virtual-time tags they were charged under.
+    pub fn client_with(&self, tenant: &str, cfg: ClientConfig) -> SortClient {
+        self.client_inner(tenant, Some(cfg))
+    }
+
+    fn client_inner(&self, tenant: &str, cfg: Option<ClientConfig>) -> SortClient {
         let mut reg = self.shared.tenants.lock().unwrap();
         let tenant = match reg.iter().find(|t| t.name() == tenant) {
             Some(t) => Arc::clone(t),
@@ -593,15 +889,21 @@ impl SortService {
                 t
             }
         };
+        if let Some(cfg) = cfg {
+            tenant.qos.configure(cfg);
+        }
         SortClient { shared: Arc::clone(&self.shared), tenant }
     }
 
     /// Submit a sort request without tenant attribution, blocking
-    /// while every shard is full (backpressure). Prefer
+    /// while every shard is full (backpressure). Rides the internal
+    /// anonymous QoS bucket (weight 1; policed at admission like any
+    /// tenant, but never an eviction victim). Prefer
     /// [`SortService::client`] + [`SortClient::submit`] for anything
     /// multi-tenant.
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
-        self.shared.admit_blocking(None, data)
+        let anon = Arc::clone(&self.shared.anon);
+        self.shared.admit_blocking(&anon, data)
     }
 
     /// Non-blocking submit without tenant attribution; `Err(data)`
@@ -609,7 +911,8 @@ impl SortService {
     /// retry/shed). The tenant-aware [`SortClient::try_submit`]
     /// additionally reports *why* via [`Busy`].
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
-        self.shared.admit_try(None, data).map_err(|b| b.data)
+        let anon = Arc::clone(&self.shared.anon);
+        self.shared.admit_try(&anon, data).map_err(|b| b.data)
     }
 
     /// The routing parameters currently in force: the configured
@@ -627,16 +930,14 @@ impl SortService {
     }
 
     /// Current metrics, with per-shard counters aggregated in and
-    /// per-tenant snapshots (sorted by name) attached.
+    /// per-tenant snapshots (sorted by name, share/credit gauges
+    /// filled against the registry totals) attached.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self
             .shared
             .metrics
             .snapshot_with_shards(self.shared.shards.iter().map(|s| &s.metrics));
-        let mut tenants: Vec<TenantSnapshot> =
-            self.shared.tenants.lock().unwrap().iter().map(|t| t.snapshot()).collect();
-        tenants.sort_by(|a, b| a.name.cmp(&b.name));
-        snap.tenants = tenants;
+        snap.tenants = self.shared.tenant_snapshots();
         snap
     }
 
@@ -661,6 +962,9 @@ impl SortService {
         for shard in &shared.shards {
             let drained: Vec<Job> = shard.queue.lock().unwrap().drain(..).collect();
             for job in drained {
+                // These never went through take_batch, so drop them
+                // from the queued gauge here before abandoning.
+                job.tenant.qos.dequeued();
                 abandon(&shared.metrics, job);
             }
         }
@@ -708,25 +1012,68 @@ impl WorkerCtx {
     }
 }
 
-/// Pop one dynamic batch from shard `s`: the head job, plus up to
-/// `batch_max - 1` consecutive fuse-eligible followers in the same
-/// wakeup (`batch_max` and the fuse eligibility read the *live*
+/// Index of the next job to pop under fair-share dequeue: the lowest
+/// virtual-time tag, first arrival winning ties (strict `<`), so the
+/// scan is FIFO within a tenant and FIFO overall when tags tie.
+///
+/// Deliberately an O(depth) linear scan over the shard's `VecDeque`
+/// (depth ≤ `queue_capacity / shards`, 512 at defaults) rather than
+/// an ordered index: the queue structure stays the plain deque every
+/// other path (capacity checks, newest-of-tenant eviction scan,
+/// shutdown drain) already works on, and eviction would need
+/// tombstones in any heap variant. If profiling ever shows this scan
+/// on top under deep backlogs, a per-shard `BTreeMap<(vtag, seq)>`
+/// index is the upgrade path (ROADMAP follow-on).
+fn min_vtag_idx(q: &VecDeque<Job>) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, j) in q.iter().enumerate() {
+        match best {
+            Some((_, tag)) if j.vtag >= tag => {}
+            _ => best = Some((i, j.vtag)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Pop one dynamic batch from shard `s`: the next job — the queue
+/// head under [`QosPolicy::Fifo`], the lowest virtual-time tag under
+/// [`QosPolicy::FairShare`] — plus up to `batch_max - 1` further
+/// fuse-eligible followers in the same wakeup, drained in the same
+/// order (`batch_max` and the fuse eligibility read the *live*
 /// routing state, so an adaptive service re-shapes its batches as the
 /// tuner publishes). Returns `None` when the queue is empty.
 fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
     let xla = shared.xla_enabled();
     let xla_cut = shared.cfg.xla_cutoff;
     let batch_max = shared.routing.batch_max();
+    let fair = shared.fair();
     let shard = &shared.shards[s];
     let batch = {
         let mut q = shard.queue.lock().unwrap();
-        let first = q.pop_front()?;
+        let first = if fair {
+            let idx = min_vtag_idx(&q)?;
+            q.remove(idx).expect("min_vtag_idx returned a valid index")
+        } else {
+            q.pop_front()?
+        };
         let mut batch = vec![first];
         if shared.routing.fuse_eligible(batch[0].data.len(), xla, xla_cut) {
             while batch.len() < batch_max {
-                match q.front() {
+                // Next candidate in pop order: lowest remaining tag
+                // when fair, the head when FIFO. Stop at the first
+                // non-fusable candidate either way — the batch never
+                // skips past the job that should run next.
+                let idx = if fair {
+                    match min_vtag_idx(&q) {
+                        Some(i) => i,
+                        None => break,
+                    }
+                } else {
+                    0
+                };
+                match q.get(idx) {
                     Some(j) if shared.routing.fuse_eligible(j.data.len(), xla, xla_cut) => {
-                        batch.push(q.pop_front().unwrap());
+                        batch.push(q.remove(idx).expect("checked index"));
                     }
                     _ => break,
                 }
@@ -735,6 +1082,15 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
         shard.metrics.depth.store(q.len() as u64, Ordering::Relaxed);
         batch
     };
+    // Dequeue bookkeeping outside the queue lock: advance the global
+    // virtual clock to the largest tag served (the SFQ no-banking
+    // anchor) and drop the jobs from their tenants' queued gauges.
+    let mut max_tag = 0;
+    for job in &batch {
+        max_tag = max_tag.max(job.vtag);
+        job.tenant.qos.dequeued();
+    }
+    shared.vclock.fetch_max(max_tag, Ordering::Relaxed);
     shared.signal_space();
     Some(batch)
 }
@@ -797,13 +1153,14 @@ fn tick_tuner(shared: &Shared) {
 
 /// Discard a job that will never be sorted — its handle was dropped
 /// before a worker reached it, or it was still queued when the
-/// service shut down: count the skip, then let the job's drop guard
-/// close the slot.
+/// service shut down: count the skip, release the tenant's in-flight
+/// QoS cost, then let the job's drop guard close the slot. (For the
+/// anonymous bucket the tenant-side counter is invisible — it is
+/// never snapshotted — but the release keeps the gauge exact.)
 fn abandon(m: &Metrics, job: Job) {
     m.cancelled.fetch_add(1, Ordering::Relaxed);
-    if let Some(t) = &job.tenant {
-        t.cancelled.fetch_add(1, Ordering::Relaxed);
-    }
+    job.tenant.cancelled.fetch_add(1, Ordering::Relaxed);
+    job.tenant.qos.release(job.cost);
 }
 
 /// Execute one dynamic batch taken from shard `src`: single jobs go
@@ -948,20 +1305,21 @@ fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
     finish(m, job);
 }
 
-/// Complete one job: record the metrics, then deposit the sorted data
-/// in the slot — which wakes the parked waiter and/or registered
-/// async waker. Counters land before the completion signal so a
-/// caller that observes the result also observes its own counts.
+/// Complete one job: record the metrics and release the tenant's
+/// in-flight QoS cost, then deposit the sorted data in the slot —
+/// which wakes the parked waiter and/or registered async waker.
+/// Counters (and the release) land before the completion signal so a
+/// caller that observes the result also observes its own counts and
+/// a drained in-flight gauge.
 fn finish(m: &Metrics, mut job: Job) {
     let data = std::mem::take(&mut job.data);
     let latency = job.enqueued.elapsed();
     m.elements.fetch_add(data.len() as u64, Ordering::Relaxed);
     m.latency.record(latency);
     m.completed.fetch_add(1, Ordering::Relaxed);
-    if let Some(t) = &job.tenant {
-        t.completed.fetch_add(1, Ordering::Relaxed);
-        t.latency.record(latency);
-    }
+    job.tenant.completed.fetch_add(1, Ordering::Relaxed);
+    job.tenant.latency.record(latency);
+    job.tenant.qos.release(job.cost);
     // Receiver may have given up; complete() discards in that case.
     job.slot.complete(data);
 }

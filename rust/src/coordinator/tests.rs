@@ -1,7 +1,10 @@
 //! Service-level tests: every request completes exactly once with the
 //! oracle result; queue bounds hold under overload; shutdown drains;
 //! tenant clients account their accepted/shed/completed/cancelled
-//! requests; dropped handles cancel without wedging workers.
+//! requests; dropped handles cancel without wedging workers; and
+//! fair-share QoS holds its two contracts — completed elements
+//! converge to the weight ratios under saturation, and a within-burst
+//! victim is never shed while an over-share tenant has queued work.
 
 use super::*;
 use crate::testutil::{assert_sorted, Rng};
@@ -743,6 +746,296 @@ fn invalid_adaptive_policy_fails_at_start() {
         ..Default::default()
     };
     assert!(SortService::start(bad_bounds, None).is_err(), "empty bounds must be rejected");
+}
+
+#[test]
+fn fair_share_completed_elements_converge_to_weights() {
+    // Property (statistical form): three saturating tenants with
+    // weights 4:2:1 and identical job sizes; once every tenant is
+    // permanently backlogged, the weight-aware dequeue serves
+    // completed elements in (roughly) the weight ratio. Tolerances
+    // are generous — the first queue-capacity worth of admissions is
+    // FIFO-raced before fairness bites — but a FIFO service would
+    // measure ~1:1:1 here, far outside them.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        queue_capacity: 48,
+        batch_max: 8,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let weights = [4u32, 2, 1];
+    let clients: Vec<SortClient> = weights
+        .iter()
+        .map(|&w| {
+            svc.client_with(
+                &format!("w{w}"),
+                ClientConfig { weight: w, burst: 2048 },
+            )
+        })
+        .collect();
+    // Pin the worker so the queue is deeply mixed across all three
+    // tenants before the first tenant completion — the measured order
+    // then reflects the scheduler, not submission racing. Wait until
+    // the pin job has been *popped*: once queued jobs exist, the
+    // fair dequeue would otherwise serve the (cheaper, lower-tag)
+    // tenant jobs first and the pin would never pin.
+    let mut pin_rng = Rng::new(39);
+    let pin = svc.submit(pin_rng.vec_u32(2_000_000));
+    while svc.metrics().shard_depths[0] > 0 {
+        std::thread::yield_now();
+    }
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let snap_at_stop = std::thread::scope(|s| {
+        for (i, client) in clients.iter().enumerate() {
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = Rng::new(40 + i as u64);
+                let mut pending: Vec<SortHandle> = Vec::new();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    match client.try_submit(rng.vec_u32(4096)) {
+                        Ok(h) => pending.push(h),
+                        // Shed (queue full / over share): stay
+                        // saturating, just give the queue a beat.
+                        Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+                    }
+                    if pending.len() > 48 {
+                        // Evicted handles resolve to errors; both
+                        // outcomes just free the slot here.
+                        pending.retain_mut(|h| h.try_take().is_none());
+                    }
+                }
+                drop(pending); // cancels whatever is still queued
+            });
+        }
+        loop {
+            let m = svc.metrics();
+            if m.completed >= 500 {
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                break m;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    });
+    let done: Vec<u64> = weights
+        .iter()
+        .map(|w| {
+            snap_at_stop
+                .tenants
+                .iter()
+                .find(|t| t.name == format!("w{w}"))
+                .expect("tenant snapshot")
+                .completed
+        })
+        .collect();
+    assert!(
+        done[0] > done[1] && done[1] > done[2],
+        "service order must follow weights, got {done:?}"
+    );
+    let r42 = done[0] as f64 / done[1].max(1) as f64;
+    let r21 = done[1] as f64 / done[2].max(1) as f64;
+    assert!((1.3..=3.2).contains(&r42), "w4/w2 ratio {r42:.2} outside tolerance ({done:?})");
+    assert!((1.3..=3.2).contains(&r21), "w2/w1 ratio {r21:.2} outside tolerance ({done:?})");
+    assert_sorted(&pin.wait().unwrap(), "pin job");
+    svc.shutdown();
+}
+
+#[test]
+fn within_burst_victim_never_shed_while_aggressor_over_share() {
+    // Property (deterministic form): queue full of an over-share
+    // aggressor's jobs, worker pinned. A within-burst victim's
+    // try_submit must *always* be admitted — each admission evicting
+    // the aggressor's newest queued job — and the victim must never
+    // appear in any shed counter.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        queue_capacity: 8,
+        batch_max: 1,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let aggressor =
+        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 1024 });
+    let victim = svc.client_with("victim", ClientConfig { weight: 1, burst: 1 << 16 });
+    let mut rng = Rng::new(55);
+    // Pin the worker with a big anonymous job, then wait until it has
+    // been popped so it does not occupy a queue slot.
+    let big = svc.submit(rng.vec_u32(2_000_000));
+    while svc.metrics().shard_depths[0] > 0 {
+        std::thread::yield_now();
+    }
+    // Fill the queue with aggressor jobs until it sheds: every shed
+    // proves the queue is full and the aggressor is the most
+    // over-share tenant, so the reason must be OverShare with a hint.
+    let mut agg_handles = Vec::new();
+    let mut agg_refused = 0;
+    while agg_refused < 4 {
+        match aggressor.try_submit(rng.vec_u32(50_000)) {
+            Ok(h) => agg_handles.push(h),
+            Err(busy) => {
+                match busy.reason {
+                    BusyReason::OverShare { retry_after_hint } => {
+                        assert!(retry_after_hint.as_micros() > 0);
+                    }
+                    other => panic!("over-share aggressor shed with {other:?}"),
+                }
+                agg_refused += 1;
+            }
+        }
+    }
+    assert_eq!(agg_handles.len(), 8, "queue capacity admitted exactly");
+    // The victim displaces the aggressor: six submits, six evictions,
+    // zero victim sheds.
+    let mut victim_handles = Vec::new();
+    for i in 0..6 {
+        match victim.try_submit(rng.vec_u32(1000)) {
+            Ok(h) => victim_handles.push(h),
+            Err(busy) => panic!("victim shed on submit {i}: {:?}", busy.reason),
+        }
+    }
+    let vt = victim.tenant_metrics();
+    assert_eq!(vt.shed, 0, "victim never shed");
+    assert_eq!(vt.evicted, 0, "victim never evicted");
+    assert_eq!(vt.queued_jobs, 6);
+    let at = aggressor.tenant_metrics();
+    assert_eq!(at.evicted, 6, "one aggressor eviction per victim admission");
+    assert_eq!(at.shed, agg_refused + 6);
+    assert_eq!(at.shed_over_share, agg_refused + 6, "every aggressor shed was share-caused");
+    assert_eq!(at.accepted, 2, "8 admitted − 6 evicted");
+    assert!(at.in_flight_elems >= 2 * 50_000, "evicted cost released, queued cost kept");
+    // Evictions target the *newest* queued job first: the last six
+    // admitted aggressor handles error out (with the reason), the
+    // first two still complete.
+    let evicted_handle = agg_handles.pop().unwrap();
+    let err = evicted_handle.wait().expect_err("newest aggressor job was evicted");
+    assert!(format!("{err}").contains("evicted"), "error names the eviction: {err}");
+    assert_sorted(&big.wait().unwrap(), "pin job");
+    for h in victim_handles {
+        assert_sorted(&h.wait().unwrap(), "victim job");
+    }
+    // First two aggressor jobs were never evicted; they complete.
+    for h in agg_handles.drain(..2) {
+        assert_sorted(&h.wait().unwrap(), "surviving aggressor job");
+    }
+    drop(agg_handles); // remaining evicted handles resolve to errors on drop
+    svc.shutdown();
+    let at = aggressor.tenant_metrics();
+    assert_eq!(
+        at.accepted,
+        at.completed + at.cancelled,
+        "accounting identity holds through evictions"
+    );
+}
+
+#[test]
+fn tiny_job_flood_cannot_hog_queue_slots() {
+    // Admission cost is floored per job (qos::MIN_JOB_COST = 256
+    // elements), so a flood of tiny requests is policed for the queue
+    // *slots* it occupies: with 256 slots the flood crosses the
+    // default 32K burst at ~128 queued jobs, and a victim's arrival
+    // still displaces it even though the literal element count of the
+    // hog's backlog (256 × 8 elements) is far below any burst.
+    let cfg = CoordinatorConfig {
+        workers: 0,
+        shards: 1,
+        queue_capacity: 256,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let hog = svc.client("hog"); // default ClientConfig: burst 32768
+    let victim = svc.client("victim");
+    let mut handles = Vec::new();
+    let refused = loop {
+        match hog.try_submit(vec![3u32; 8]) {
+            Ok(h) => handles.push(h),
+            Err(busy) => break busy,
+        }
+    };
+    assert_eq!(handles.len(), 256, "queue slots are the binding constraint");
+    assert!(
+        matches!(refused.reason, BusyReason::OverShare { .. }),
+        "slot hog must be recognized as over share, got {:?}",
+        refused.reason
+    );
+    // The victim's first-ever submit (in-flight 0, well within burst)
+    // must displace the hog rather than be turned away.
+    victim.try_submit(vec![2u32, 1]).expect("victim admitted by eviction");
+    assert_eq!(victim.tenant_metrics().shed, 0);
+    assert_eq!(hog.tenant_metrics().evicted, 1);
+    drop(handles);
+    svc.shutdown();
+}
+
+#[test]
+fn fifo_policy_restores_legacy_shedding() {
+    // Under QosPolicy::Fifo an over-share flood is shed with plain
+    // QueueFull (never OverShare), nothing is ever evicted, and
+    // dequeue stays strict arrival order.
+    let cfg = CoordinatorConfig {
+        workers: 0,
+        queue_capacity: 4,
+        qos: QosPolicy::Fifo,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let greedy = svc.client_with("greedy", ClientConfig { weight: 1, burst: 0 });
+    let mut handles = Vec::new();
+    for _ in 0..10 {
+        match greedy.try_submit(vec![3, 1, 2]) {
+            Ok(h) => handles.push(h),
+            Err(busy) => assert_eq!(
+                busy.reason,
+                BusyReason::QueueFull,
+                "FIFO never reports OverShare"
+            ),
+        }
+    }
+    let t = greedy.tenant_metrics();
+    assert_eq!(t.shed, 6);
+    assert_eq!(t.shed_over_share, 0);
+    assert_eq!(t.evicted, 0);
+    assert_eq!(svc.metrics().evicted, 0);
+    drop(handles);
+    svc.shutdown();
+}
+
+#[test]
+fn qos_gauges_track_occupancy_and_drain_at_shutdown() {
+    let cfg = CoordinatorConfig { workers: 0, queue_capacity: 4, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client_with("gauged", ClientConfig { weight: 2, burst: 0 });
+    let handles: Vec<_> =
+        (0..3).map(|_| client.try_submit(vec![7; 1000]).expect("room")).collect();
+    let t = client.tenant_metrics();
+    assert_eq!(t.weight, 2);
+    assert_eq!(t.burst, 0);
+    assert_eq!(t.in_flight_elems, 3000);
+    assert_eq!(t.queued_jobs, 3);
+    assert!((t.share - 1.0).abs() < 1e-9, "sole registered tenant owns the whole share");
+    assert_eq!(t.credit_elems, 0, "share × total in-flight equals own in-flight");
+    drop(handles);
+    svc.shutdown();
+    let t = client.tenant_metrics();
+    assert_eq!(t.in_flight_elems, 0, "shutdown drain releases in-flight cost");
+    assert_eq!(t.queued_jobs, 0);
+    assert_eq!(t.accepted, t.completed + t.cancelled);
+}
+
+#[test]
+fn client_with_reconfigures_but_plain_client_does_not() {
+    let svc = SortService::start_default().unwrap();
+    let a = svc.client_with("acme", ClientConfig { weight: 8, burst: 64 });
+    assert_eq!(a.config(), ClientConfig { weight: 8, burst: 64 });
+    // A default client joining the same tenant must not reset it.
+    let b = svc.client("acme");
+    assert_eq!(b.config().weight, 8, "client() preserves the explicit config");
+    // The last explicit configuration wins.
+    let c = svc.client_with("acme", ClientConfig { weight: 3, burst: 128 });
+    assert_eq!(a.config().weight, 3, "clones observe the reconfiguration");
+    drop((b, c));
+    svc.shutdown();
 }
 
 #[test]

@@ -55,7 +55,10 @@
 //! [`coordinator::SortClient`] whose submits return non-blocking
 //! [`coordinator::SortHandle`]s (poll, `.await`, or park), with
 //! per-tenant shed/latency accounting in
-//! [`coordinator::MetricsSnapshot`].
+//! [`coordinator::MetricsSnapshot`]. Contended capacity is split by
+//! weighted fair-share QoS ([`coordinator::ClientConfig`] weights;
+//! the most-over-share tenant is shed first), and routing cutoffs
+//! can be learned online ([`coordinator::AdaptivePolicy`]).
 //!
 //! # Quickstart
 //!

@@ -12,16 +12,25 @@
 //! neonms serve-demo [--requests N] [--tenants T] [--workers W]
 //!                   [--shards S] [--batch-max B] [--fuse-cutoff F]
 //!                   [--xla] [--adaptive] [--epoch J]
+//!                   [--tenant-weights W1,W2,...] [--qos fair|fifo]
 //! ```
 //!
 //! `--adaptive` turns on online routing: the service re-derives the
 //! tiny/fuse/parallel cutoffs and `batch_max` from live per-tier
 //! throughput every `--epoch` completed jobs (default 256) and the
 //! demo prints the decision trace and per-route observations.
+//!
+//! `--tenant-weights` assigns fair-share weights to the demo tenants
+//! (CSV, cycled when shorter than `--tenants`; default all 1), and
+//! `--qos fifo` switches admission/dequeue back to the pre-QoS global
+//! FIFO baseline — the per-tenant table prints the share/credit
+//! gauges and shed breakdown either way.
 
 use neonms::bench::tables;
 use neonms::bench::Workload;
-use neonms::coordinator::{AdaptivePolicy, CoordinatorConfig, RoutingBounds, SortService};
+use neonms::coordinator::{
+    AdaptivePolicy, ClientConfig, CoordinatorConfig, QosPolicy, RoutingBounds, SortService,
+};
 use neonms::regmachine;
 use neonms::sort::{NeonMergeSort, ParallelNeonMergeSort};
 use neonms::sortnet::gen;
@@ -220,6 +229,16 @@ fn cmd_serve(flags: &Flags) {
     } else {
         AdaptivePolicy::Off
     };
+    // Fair-share weights, one per tenant (CSV cycled; default 1).
+    let weights: Vec<u32> = flags
+        .get_str("tenant-weights", "1")
+        .split(',')
+        .map(|w| w.trim().parse().unwrap_or(1).max(1))
+        .collect();
+    let qos = match flags.get_str("qos", "fair").as_str() {
+        "fifo" => QosPolicy::Fifo,
+        _ => QosPolicy::FairShare,
+    };
     let cfg = CoordinatorConfig {
         workers: flags.get_usize("workers", defaults.workers),
         shards: flags.get_usize("shards", defaults.shards),
@@ -227,18 +246,21 @@ fn cmd_serve(flags: &Flags) {
         fuse_cutoff: flags.get_usize("fuse-cutoff", defaults.fuse_cutoff),
         xla_cutoff: flags.has("xla").then_some(4096),
         adaptive,
+        qos,
         ..defaults
     };
     let svc = SortService::start(cfg.clone(), artifacts).expect("service start");
     let initial_routing = svc.routing();
     println!(
-        "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants, adaptive={})",
+        "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants, adaptive={}, \
+         qos={:?})",
         cfg.workers,
         cfg.shards,
         cfg.batch_max,
         svc.xla_enabled(),
         tenants,
-        cfg.adaptive.is_on()
+        cfg.adaptive.is_on(),
+        cfg.qos
     );
     // One client per tenant, each submitting from its own thread
     // through the non-blocking handle API.
@@ -246,7 +268,13 @@ fn cmd_serve(flags: &Flags) {
     let total: usize = std::thread::scope(|s| {
         let joins: Vec<_> = (0..tenants)
             .map(|t| {
-                let client = svc.client(&format!("tenant-{t}"));
+                let client = svc.client_with(
+                    &format!("tenant-{t}"),
+                    ClientConfig {
+                        weight: weights[t % weights.len()],
+                        ..Default::default()
+                    },
+                );
                 let share = n_requests / tenants + usize::from(t < n_requests % tenants);
                 s.spawn(move || {
                     let mut rng = neonms::testutil::Rng::new(7 + t as u64);
@@ -286,11 +314,22 @@ fn cmd_serve(flags: &Flags) {
         m.p50_us,
         m.p99_us
     );
-    println!("per-tenant:");
+    println!("per-tenant (share = weight fraction; credit > 0 = under fair share):");
     for t in &m.tenants {
         println!(
-            "  {:10} accepted={:<5} shed={:<4} completed={:<5} p50 {}µs p99 {}µs",
-            t.name, t.accepted, t.shed, t.completed, t.p50_us, t.p99_us
+            "  {:10} w={:<2} share={:.2} credit={:<6} accepted={:<5} shed={:<4} \
+             (over-share {} evicted {}) completed={:<5} p50 {}µs p99 {}µs",
+            t.name,
+            t.weight,
+            t.share,
+            t.credit_elems,
+            t.accepted,
+            t.shed,
+            t.shed_over_share,
+            t.evicted,
+            t.completed,
+            t.p50_us,
+            t.p99_us
         );
     }
     println!("per-route (service time):");

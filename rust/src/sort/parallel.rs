@@ -88,7 +88,12 @@ impl ParallelNeonMergeSort {
     /// is fully sorted, while the rest of the batch may still be in
     /// flight. The service's dynamic batcher uses this to complete
     /// each fused request's handle as soon as *its* data is ready
-    /// instead of when the whole batch finishes.
+    /// instead of when the whole batch finishes — and, since the
+    /// coordinator's fair-share QoS charges admission in elements,
+    /// the hook is also where each fused request's in-flight cost is
+    /// released back to its tenant (the per-segment completion is the
+    /// service's QoS accounting point, not just a latency
+    /// optimization).
     ///
     /// The hook is called exactly once per segment, from whichever
     /// worker sorted it (hence `Sync`); segment indices follow

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Offline markdown link check for the repo's doc set.
+
+Verifies, for every tracked ``*.md`` file (repo root + docs/, skipping
+build output and vendored trees):
+
+* relative links point at files/directories that exist;
+* intra-doc anchors (``#heading`` and ``file.md#heading``) resolve to
+  a real heading in the target file, using GitHub's slug rules
+  (lowercase, punctuation stripped, spaces to dashes, ``-N`` suffixes
+  for duplicates);
+* reference-style definitions ``[label]: target`` get the same checks.
+
+External links (http/https/mailto) are deliberately **skipped** — CI
+must stay offline-safe and deterministic. Exit code 1 with a findings
+list when anything is broken; 0 otherwise.
+
+Usage: ``python3 tools/check_links.py [repo_root]``
+"""
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", "node_modules", "vendor", ".github"}
+LINK_RE = re.compile(r"(?<!!)\[(?:[^\]\\]|\\.)*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMAGE_RE = re.compile(r"!\[(?:[^\]\\]|\\.)*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF_RE = re.compile(r"^\s{0,3}\[([^\]]+)\]:\s+(\S+)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp:")
+
+
+def md_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.lower().endswith(".md"):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def strip_code_fences(text):
+    """Blank out fenced code blocks and inline code spans so links in
+    code samples are not treated as document links."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        stripped = line.lstrip()
+        if stripped.startswith("```") or stripped.startswith("~~~"):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else re.sub(r"`[^`]*`", "", line))
+    return out
+
+
+def github_slugs(path):
+    """The set of anchor slugs a markdown file exposes, GitHub-style."""
+    slugs = {}
+    try:
+        text = open(path, encoding="utf-8").read()
+    except OSError:
+        return set()
+    for line in strip_code_fences(text):
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        title = re.sub(r"`([^`]*)`", r"\1", m.group(2)).strip()
+        # strip markdown emphasis/links from the heading text
+        title = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", title)
+        title = title.replace("*", "").replace("_", " ")
+        slug = re.sub(r"[^\w\- ]", "", title.lower(), flags=re.UNICODE)
+        slug = slug.strip().replace(" ", "-")
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        if n:
+            slugs[f"{slug}-{n}"] = 1
+    return set(slugs)
+
+
+def check_file(path, root, findings):
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    for lineno, line in enumerate(strip_code_fences(text), 1):
+        targets = LINK_RE.findall(line) + IMAGE_RE.findall(line)
+        m = REFDEF_RE.match(line)
+        if m and not m.group(1).startswith("^"):
+            targets.append(m.group(2))
+        for target in targets:
+            if target.startswith(EXTERNAL) or target.startswith("<"):
+                continue
+            dest, _, anchor = target.partition("#")
+            dest = dest.strip()
+            if dest == "":
+                dest_path = path  # same-file anchor
+            else:
+                dest_path = os.path.normpath(os.path.join(base, dest))
+                if not os.path.exists(dest_path):
+                    findings.append(
+                        f"{os.path.relpath(path, root)}:{lineno}: "
+                        f"broken relative link -> {target}")
+                    continue
+            if anchor and dest_path.lower().endswith(".md"):
+                if anchor.lower() not in github_slugs(dest_path):
+                    findings.append(
+                        f"{os.path.relpath(path, root)}:{lineno}: "
+                        f"missing anchor -> {target}")
+
+
+def main():
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    findings = []
+    files = md_files(root)
+    for path in files:
+        check_file(path, root, findings)
+    if findings:
+        print(f"link check FAILED: {len(findings)} broken link(s) "
+              f"across {len(files)} markdown files")
+        for f in findings:
+            print(f"  {f}")
+        return 1
+    print(f"link check OK: {len(files)} markdown files, all relative "
+          f"links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
