@@ -1,20 +1,32 @@
 //! Database-retrieval scenario (the paper's intro motivation [11]):
-//! build a sorted index over 4M `(key, rowid)` pairs, two ways:
+//! build a sorted index over 4M `(key, rowid)` pairs.
 //!
-//! 1. **pack-and-sort** — pack key+rowid into `u64`, scalar sort
-//!    (the conventional approach);
-//! 2. **NEON-MS key column + stable gather** — SIMD-sort the 32-bit
-//!    key column with NEON-MS, then place each original pair at the
-//!    next free slot of its key's run (a stable counting gather).
-//!    This keeps the hot O(n log n) work on the vectorized sorter and
-//!    leaves only O(n) scalar placement.
+//! The element-generic stack sorts the pairs **directly on the 8-byte
+//! SIMD lanes**: each pair packs into a [`KeyValue`] (key in the high
+//! half, rowid in the low), so key-major order with rowid tie-break
+//! *is* the packed integer order, and NEON-MS sorts the pairs on the
+//! `V128D`/`V256D` register types — no scalar gather pass, no
+//! second-stage permutation.
 //!
-//! Verifies both produce the same stable index order, reports rates.
+//! Three builds of the same index:
+//!
+//! 1. **pack-and-sort (scalar baseline)** — pack key+rowid into
+//!    `u64`, `sort_unstable` (the conventional approach);
+//! 2. **vectorized pair sort** — [`NeonMergeSort::sort`] over
+//!    `Vec<KeyValue>`: the same O(n log n) hot loop the paper
+//!    vectorizes, running on the 2-lane 64-bit registers;
+//! 3. **service round-trip** — the same pairs through a live
+//!    [`SortService`] via [`SortClient::submit_pairs`], exercising
+//!    the typed submission path end to end.
+//!
+//! Verifies all three produce the identical stable index order.
+//!
+//! [`SortClient::submit_pairs`]: neonms::coordinator::SortClient::submit_pairs
 
 use neonms::bench::Workload;
-use neonms::simd::{pack_key_rowid, unpack_key_rowid};
+use neonms::coordinator::SortService;
+use neonms::simd::{pack_key_rowid, KeyValue};
 use neonms::sort::NeonMergeSort;
-use std::collections::HashMap;
 use std::time::Instant;
 
 fn main() {
@@ -22,47 +34,49 @@ fn main() {
     let keys = Workload::FewDups.generate(n, 11); // realistic dup-heavy keys
     let rowids: Vec<u32> = (0..n as u32).collect();
 
-    // --- 1. conventional: pack into u64, scalar sort ---
+    // --- 1. conventional scalar baseline: pack into u64, scalar sort ---
     let t0 = Instant::now();
     let mut packed: Vec<u64> =
         keys.iter().zip(&rowids).map(|(&k, &r)| pack_key_rowid(k, r)).collect();
     packed.sort_unstable(); // rowid ascending within key == stable by key
-    let t_pack = t0.elapsed();
-    let conventional: Vec<(u32, u32)> =
-        packed.iter().map(|&p| unpack_key_rowid(p)).collect();
+    let t_scalar = t0.elapsed();
 
-    // --- 2. NEON-MS key column + stable counting gather ---
-    let t0 = Instant::now();
+    // --- 2. vectorized pair sort on the 8-byte lanes ---
     let sorter = NeonMergeSort::paper_default();
-    let mut sorted_keys = keys.clone();
-    sorter.sort(&mut sorted_keys); // the SIMD hot loop
-    // Next-free-slot cursor per distinct key (first slot found by
-    // binary search on the sorted column).
-    let mut cursor: HashMap<u32, usize> = HashMap::new();
-    let mut index: Vec<(u32, u32)> = vec![(0, 0); n];
-    for (&k, &r) in keys.iter().zip(&rowids) {
-        let slot = cursor
-            .entry(k)
-            .or_insert_with(|| sorted_keys.partition_point(|&x| x < k));
-        index[*slot] = (k, r);
-        *slot += 1;
-    }
+    let mut pairs: Vec<KeyValue> =
+        keys.iter().zip(&rowids).map(|(&k, &r)| KeyValue::new(k, r)).collect();
+    let t0 = Instant::now();
+    sorter.sort(&mut pairs); // the SIMD hot loop, V128D registers
     let t_simd = t0.elapsed();
 
-    // --- verify agreement (stable order ⇒ exact match) ---
-    assert_eq!(index, conventional, "index orders diverged");
-    for (ks, &(kp, _)) in sorted_keys.iter().zip(&index) {
-        assert_eq!(*ks, kp);
+    // --- verify: pair order == packed baseline order exactly ---
+    assert_eq!(pairs.len(), packed.len());
+    for (p, &q) in pairs.iter().zip(&packed) {
+        assert_eq!(p.packed(), q, "pair sort diverged from the scalar baseline");
     }
+
+    // --- 3. the same pairs through a live sort service ---
+    let svc = SortService::start_default().expect("service start");
+    let client = svc.client("index-builder");
+    let resubmit: Vec<KeyValue> =
+        keys.iter().zip(&rowids).map(|(&k, &r)| KeyValue::new(k, r)).collect();
+    let t0 = Instant::now();
+    let served = client.submit_pairs(resubmit).wait().expect("service sort");
+    let t_svc = t0.elapsed();
+    assert_eq!(served, pairs, "service round-trip diverged");
+    svc.shutdown();
 
     println!(
         "index build over {n} (key,rowid) pairs:\n\
-         pack-and-sort (u64 scalar):          {:.3}s ({:.1} ME/s)\n\
-         NEON-MS key sort + stable gather:    {:.3}s ({:.1} ME/s)",
-        t_pack.as_secs_f64(),
-        n as f64 / t_pack.as_secs_f64() / 1e6,
+         pack-and-sort (u64 scalar baseline):   {:.3}s ({:.1} ME/s)\n\
+         NEON-MS pair sort (8-byte lanes):      {:.3}s ({:.1} ME/s)\n\
+         service submit_pairs round-trip:       {:.3}s ({:.1} ME/s)",
+        t_scalar.as_secs_f64(),
+        n as f64 / t_scalar.as_secs_f64() / 1e6,
         t_simd.as_secs_f64(),
         n as f64 / t_simd.as_secs_f64() / 1e6,
+        t_svc.as_secs_f64(),
+        n as f64 / t_svc.as_secs_f64() / 1e6,
     );
     println!("database_keys OK");
 }

@@ -1,39 +1,56 @@
 //! Visual-computing / analytics scenario (paper intro refs [4], [7]):
-//! per-block top-k selection over a stream of frames.
+//! per-frame top-k selection **with provenance** over a stream of
+//! frames.
 //!
 //! Each "frame" is a block of pixel scores; the pipeline keeps the
 //! top-k of every frame (e.g. brightest samples for a tone-mapping
-//! pass). NEON-MS's in-register sort makes a natural streaming
-//! primitive: sort each 64-element tile, keep tile maxima runs, and
-//! merge — here we compare full-sort-then-take against a
-//! select-via-partial-merge built from the same kernels.
+//! pass) *and needs to know which samples won*, not just their
+//! values. The element-generic stack makes that one sort: every
+//! sample becomes a [`KeyValue`] pair (score in the key half, sample
+//! index in the payload half) and the kernels sort the pairs directly
+//! on the 8-byte SIMD lanes — provenance rides along for free, and
+//! equal scores break ties by index deterministically.
+//!
+//! The in-register tile length is per element type:
+//! [`InRegisterSorter::block_len_for`] gives R×2 = 32 pairs at R = 16
+//! on `V128D`'s two 64-bit lanes (half the 64-element `u32` tile).
+//! We compare full-sort-then-take against a select-via-partial-merge
+//! built from the same kernels at that tile size.
 
 use neonms::bench::Workload;
 use neonms::kernels::inregister::InRegisterSorter;
 use neonms::kernels::runmerge::RunMerger;
+use neonms::simd::KeyValue;
 use neonms::sort::NeonMergeSort;
 use std::time::Instant;
 
-/// Top-k via full sort (baseline).
-fn topk_full_sort(frame: &[u32], k: usize, sorter: &NeonMergeSort) -> Vec<u32> {
+/// Top-k via full pair sort (baseline).
+fn topk_full_sort(frame: &[KeyValue], k: usize, sorter: &NeonMergeSort) -> Vec<KeyValue> {
     let mut v = frame.to_vec();
     sorter.sort(&mut v);
     v[v.len() - k..].to_vec()
 }
 
-/// Top-k via tile sort + tournament of sorted 64-runs: sort tiles
-/// in-register, then repeatedly merge the two best runs and truncate
-/// to k — O(n) tile pass + O((n/64)·k) merge work.
-fn topk_tile_merge(frame: &[u32], k: usize, inreg: &InRegisterSorter, merger: &RunMerger) -> Vec<u32> {
-    assert!(k <= 64 && frame.len() % 64 == 0);
+/// Top-k via tile sort + tournament of sorted tile-runs: sort tiles
+/// in-register, then repeatedly merge the running best against the
+/// next tile and truncate to k — O(n) tile pass + O((n/tile)·k)
+/// merge work, all on the 8-byte vector kernels.
+fn topk_tile_merge(
+    frame: &[KeyValue],
+    k: usize,
+    inreg: &InRegisterSorter,
+    merger: &RunMerger,
+) -> Vec<KeyValue> {
+    let tile = inreg.block_len_for::<KeyValue>();
+    assert!(k <= tile && frame.len() % tile == 0);
     let mut v = frame.to_vec();
     inreg.sort_runs(&mut v);
     // Keep a running top-k (ascending slice of length k).
-    let mut best: Vec<u32> = v[..64][64 - k..].to_vec();
-    let mut merged = vec![0u32; k + 64];
-    for tile in v.chunks_exact(64).skip(1) {
-        merger.merge(&best, tile, &mut merged);
-        best.copy_from_slice(&merged[64..]);
+    let mut best: Vec<KeyValue> = v[..tile][tile - k..].to_vec();
+    let mut merged = vec![KeyValue::new(0, 0); k + tile];
+    for t in v.chunks_exact(tile).skip(1) {
+        merger.merge(&best, t, &mut merged);
+        best.copy_from_slice(&merged[tile..]);
     }
     best
 }
@@ -46,24 +63,50 @@ fn main() {
     let inreg = InRegisterSorter::paper_default();
     let merger = RunMerger::paper_default();
 
-    let inputs: Vec<Vec<u32>> =
-        (0..frames).map(|f| Workload::Clustered.generate(frame_len, f as u64)).collect();
+    // Score + sample-index pairs: the index payload is the
+    // provenance the tone-mapping pass actually consumes.
+    let inputs: Vec<Vec<KeyValue>> = (0..frames)
+        .map(|f| {
+            Workload::Clustered
+                .generate(frame_len, f as u64)
+                .into_iter()
+                .enumerate()
+                .map(|(i, score)| KeyValue::new(score, i as u32))
+                .collect()
+        })
+        .collect();
 
     let t0 = Instant::now();
-    let full: Vec<Vec<u32>> = inputs.iter().map(|f| topk_full_sort(f, k, &sorter)).collect();
+    let full: Vec<Vec<KeyValue>> =
+        inputs.iter().map(|f| topk_full_sort(f, k, &sorter)).collect();
     let t_full = t0.elapsed();
 
     let t0 = Instant::now();
-    let tiled: Vec<Vec<u32>> =
+    let tiled: Vec<Vec<KeyValue>> =
         inputs.iter().map(|f| topk_tile_merge(f, k, &inreg, &merger)).collect();
     let t_tiled = t0.elapsed();
 
+    // Pair order is strict (score, then index), so the two methods
+    // must agree *exactly* — including which of several equal-score
+    // samples made the cut.
     assert_eq!(full, tiled, "top-k methods disagree");
+    // Provenance check: every winner's payload indexes a sample in
+    // its frame that really has that score.
+    for (frame, top) in inputs.iter().zip(&tiled) {
+        for kv in top {
+            assert_eq!(
+                kv.key(),
+                frame[kv.payload() as usize].key(),
+                "payload index does not point at the winning sample"
+            );
+        }
+    }
+
     let total = frames * frame_len;
     println!(
-        "top-{k} over {frames} frames × {frame_len} samples:\n\
-         full sort:          {:.3}s ({:.1} ME/s)\n\
-         tile sort + merge:  {:.3}s ({:.1} ME/s, {:.1}× vs full sort)",
+        "top-{k} (score, index) over {frames} frames × {frame_len} samples:\n\
+         full pair sort:          {:.3}s ({:.1} ME/s)\n\
+         tile sort + merge:       {:.3}s ({:.1} ME/s, {:.1}× vs full sort)",
         t_full.as_secs_f64(),
         total as f64 / t_full.as_secs_f64() / 1e6,
         t_tiled.as_secs_f64(),

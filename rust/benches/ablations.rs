@@ -1,17 +1,21 @@
 //! Bench: ablations of the design choices DESIGN.md §5 calls out —
 //! column-network family, merge-kernel width, input distribution, and
-//! the cooperative merge-path strategy — plus the width × K × impl
-//! sweep, whose results are recorded to `BENCH_width_sweep.json` so
-//! the perf trajectory is comparable across PRs.
+//! the cooperative merge-path strategy — plus two recorded sweeps:
+//! the width × K × impl sweep (`BENCH_width_sweep.json`) and the
+//! element-width sweep (u32 vs u64 vs `KeyValue` pairs at each
+//! register width × K, `BENCH_elem_width.json`), so the perf
+//! trajectory is comparable across PRs and element widths.
 //! Run via `cargo bench --bench ablations`.
 //!
 //! Env knobs:
 //! * `NEONMS_BENCH_REPS` — repetitions per point (default 10).
-//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode: small n, 2 reps, width
-//!   sweep only (the recorded artifact still has every point).
-//! * `NEONMS_BENCH_OUT` — where to write the sweep JSON (default
-//!   `../BENCH_width_sweep.json`, i.e. the repo root when run via
-//!   `cargo bench` from `rust/`).
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode: small n, 2 reps, the two
+//!   recorded sweeps only (the artifacts still have every point).
+//! * `NEONMS_BENCH_OUT` — where to write the width-sweep JSON
+//!   (default `../BENCH_width_sweep.json`, i.e. the repo root when
+//!   run via `cargo bench` from `rust/`).
+//! * `NEONMS_BENCH_ELEM_OUT` — where to write the element-width JSON
+//!   (default `../BENCH_elem_width.json`).
 
 fn main() {
     let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
@@ -42,6 +46,16 @@ fn main() {
         .unwrap_or_else(|_| "../BENCH_width_sweep.json".to_string());
     match std::fs::write(&out, &json) {
         Ok(()) => println!("width sweep recorded to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    let (table, points) = neonms::bench::tables::elem_width_sweep(n, reps);
+    print!("{table}");
+    let json = neonms::bench::tables::elem_width_json(&points, n, reps, source);
+    let out = std::env::var("NEONMS_BENCH_ELEM_OUT")
+        .unwrap_or_else(|_| "../BENCH_elem_width.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("element-width sweep recorded to {out}"),
         Err(e) => eprintln!("could not write {out}: {e}"),
     }
 }

@@ -62,9 +62,9 @@ fn service(qos: QosPolicy) -> SortService {
 }
 
 fn victim_client(svc: &SortService) -> neonms::coordinator::SortClient {
-    // Generous burst: the victim's whole window fits inside it, so it
-    // is never the over-share tenant.
-    svc.client_with("victim", ClientConfig { weight: 1, burst: 1 << 20 })
+    // Generous burst (bytes): the victim's whole window fits inside
+    // it, so it is never the over-share tenant.
+    svc.client_with("victim", ClientConfig { weight: 1, burst: 4 << 20 })
 }
 
 /// Closed-loop victim: keep `VICTIM_WINDOW` requests outstanding
@@ -121,7 +121,9 @@ fn run_victim(svc: &SortService, jobs: usize, seed: u64) -> f64 {
 /// immediate resubmit on shed, until `stop`.
 fn run_aggressor(svc: &SortService, stop: &AtomicBool, seed: u64) {
     let client =
-        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 4 * JOB_LEN });
+        // Small burst (bytes): four u32 jobs' worth, so the flood's
+        // backlog counts as over-share almost immediately.
+        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 4 * JOB_LEN * 4 });
     let mut rng = Rng::new(seed);
     let mut pending = Vec::new();
     while !stop.load(Ordering::Relaxed) {

@@ -10,9 +10,10 @@ use crate::kernels::inregister::{table2_configs, ColumnNetwork, InRegisterSorter
 use crate::kernels::runmerge::{table3_impls, RunMerger};
 use crate::kernels::{bitonic, hybrid, MergeImpl, MergeWidth};
 use crate::regmachine;
-use crate::simd::VectorWidth;
+use crate::simd::{KeyValue, Lane, VectorWidth};
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortConfig};
 use crate::sortnet::gen;
+use crate::testutil::Rng;
 
 /// Paper §3 protocol for Table 2: 64K integers per repetition.
 pub const TABLE2_N: usize = 64 * 1024;
@@ -371,6 +372,135 @@ pub fn width_sweep_json(points: &[WidthSweepPoint], n: usize, reps: usize, sourc
             p.imp,
             p.stream_elems_per_us,
             p.fullsort_me_per_s,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// One measured point of the element-width sweep (element type ×
+/// register width × K).
+#[derive(Clone, Debug)]
+pub struct ElemWidthPoint {
+    /// Register width label (`"V128"` / `"V256"`); 8-byte elements run
+    /// on the D-suffixed register types of the same physical width.
+    pub vector: &'static str,
+    /// Elements per kernel side (K).
+    pub k: usize,
+    /// Element label (`"u32"` / `"u64"` / `"pair"`).
+    pub elem: &'static str,
+    /// Bytes per element (4 or 8).
+    pub elem_bytes: usize,
+    /// Full-sort rate, millions of elements per second (Fig. 5's
+    /// unit — halves mechanically when elements double in size).
+    pub fullsort_me_per_s: f64,
+    /// Full-sort rate in MB/s — the cross-width comparable unit.
+    pub fullsort_mb_per_s: f64,
+}
+
+fn elem_sweep_rows<T: Lane>(
+    elem: &'static str,
+    base: &[T],
+    reps: usize,
+    out: &mut String,
+    rows: &mut Vec<ElemWidthPoint>,
+) {
+    let n = base.len();
+    for vector in VectorWidth::all() {
+        for width in MergeWidth::all() {
+            if width.clamp_for_bytes(T::BYTES) != width {
+                continue; // over the register byte budget; runs as the clamped K
+            }
+            if width.k() < vector.lanes_for::<T>() {
+                continue; // one register holds both runs; folds to the narrower width
+            }
+            let s = NeonMergeSort::new(SortConfig {
+                merge_width: width,
+                vector_width: vector,
+                ..Default::default()
+            });
+            let full = bench("es", n, 1, reps, |_| base.to_vec(), |mut d| s.sort(&mut d));
+            let me = full.me_per_sec();
+            let mb = me * T::BYTES as f64;
+            out.push_str(&format!(
+                "| {:6} | {elem:4} | {:3} | {me:8.2} | {mb:8.1} |\n",
+                vector.name(),
+                width.k(),
+            ));
+            rows.push(ElemWidthPoint {
+                vector: vector.name(),
+                k: width.k(),
+                elem,
+                elem_bytes: T::BYTES,
+                fullsort_me_per_s: me,
+                fullsort_mb_per_s: mb,
+            });
+        }
+    }
+}
+
+/// Element-width sweep: the full sort across element types — plain
+/// `u32`, 64-bit `u64` keys, and packed [`KeyValue`] pairs — at every
+/// register width × K the byte budget admits (K64 is 4-byte-only; its
+/// 8-byte dispatch folds to K32, measured as such). All points use
+/// the hybrid kernel (the paper default; the impl dimension is
+/// [`width_sweep`]'s job). ME/s halves mechanically when elements
+/// double, so the MB/s column is the one comparable across widths.
+pub fn elem_width_sweep(n: usize, reps: usize) -> (String, Vec<ElemWidthPoint>) {
+    let mut rows = Vec::new();
+    let mut out = String::from(
+        "Element-width sweep: element type × register width × K — full sort (hybrid)\n\
+         | vector | elem | 2xK | ME/s | MB/s |\n",
+    );
+    let u32s = Workload::Uniform.generate(n, 21);
+    let mut rng = Rng::new(22);
+    let u64s = rng.vec_u64(n);
+    // Pair keys use 24 bits so duplicate keys occur and the payload
+    // tie-break half of the comparison is actually exercised.
+    let pairs: Vec<KeyValue> =
+        (0..n).map(|i| KeyValue::new(rng.next_u32() >> 8, i as u32)).collect();
+    elem_sweep_rows("u32", &u32s, reps, &mut out, &mut rows);
+    elem_sweep_rows("u64", &u64s, reps, &mut out, &mut rows);
+    elem_sweep_rows("pair", &pairs, reps, &mut out, &mut rows);
+    (out, rows)
+}
+
+/// Serialize an element-width sweep to the `BENCH_elem_width.json`
+/// schema (hand-rolled — no serde offline). `source` records how the
+/// numbers were produced so CI artifacts, locally recorded baselines,
+/// and model-derived surrogates are distinguishable.
+pub fn elem_width_json(points: &[ElemWidthPoint], n: usize, reps: usize, source: &str) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"elem_width\",\n");
+    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
+    out.push_str(&format!("  \"n\": {n},\n  \"reps\": {reps},\n"));
+    out.push_str(&format!("  \"source\": \"{source}\",\n"));
+    // Per element type, the best (vector, K) by bytes/s — the number
+    // the docs' element-width story quotes.
+    for elem in ["u32", "u64", "pair"] {
+        if let Some(b) = points
+            .iter()
+            .filter(|p| p.elem == elem)
+            .max_by(|a, b| a.fullsort_mb_per_s.partial_cmp(&b.fullsort_mb_per_s).unwrap())
+        {
+            out.push_str(&format!(
+                "  \"best_{elem}\": {{\"vector\": \"{}\", \"k\": {}, \"mb_per_s\": {:.1}}},\n",
+                b.vector, b.k, b.fullsort_mb_per_s
+            ));
+        }
+    }
+    out.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"vector\": \"{}\", \"elem\": \"{}\", \"elem_bytes\": {}, \"k\": {}, \
+             \"fullsort_me_per_s\": {:.3}, \"fullsort_mb_per_s\": {:.2}}}{}\n",
+            p.vector,
+            p.elem,
+            p.elem_bytes,
+            p.k,
+            p.fullsort_me_per_s,
+            p.fullsort_mb_per_s,
             if i + 1 < points.len() { "," } else { "" }
         ));
     }

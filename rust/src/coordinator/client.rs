@@ -4,7 +4,7 @@
 //!
 //! A submitted request no longer owns a channel endpoint; submitter
 //! and worker share one heap slot. The worker stores the sorted
-//! vector and *signals* — waking a parked [`SortHandle::wait`] caller
+//! buffer and *signals* — waking a parked [`SortHandle::wait`] caller
 //! through the slot's condvar and any registered async task through
 //! its [`Waker`] — so completion costs one mutex hand-off, no channel
 //! allocation per request, and the handle can be polled without ever
@@ -12,9 +12,16 @@
 //! cancellation flag; workers check it before sorting and skip the
 //! work, so an abandoned request can never wedge a shard worker (it
 //! is counted under `cancelled` in the metrics instead).
+//!
+//! The slot itself is element-type-agnostic — it parks an [`ElemBuf`]
+//! — while the handle is typed: `SortHandle<T>` resolves to the
+//! `Vec<T>` the caller submitted (`T` defaults to `u32`, the original
+//! API, so pre-element-generic code compiles unchanged).
 
+use super::elem::{ElemBuf, SortElem};
 use anyhow::Result;
 use std::future::Future;
+use std::marker::PhantomData;
 use std::pin::Pin;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -25,7 +32,7 @@ enum State {
     /// No result yet; a worker still owns the request.
     Pending,
     /// Sorted result parked by a worker, not yet taken by the handle.
-    Done(Vec<u32>),
+    Done(ElemBuf),
     /// The service dropped the request without completing it; the
     /// handle resolves to an error carrying the recorded reason
     /// (shutdown raced the submit, or fair-share QoS evicted it).
@@ -64,7 +71,7 @@ impl Slot {
     /// Worker side: deposit the sorted result and wake the owner.
     /// No-op if the slot already resolved (idempotent, so the job's
     /// drop guard can unconditionally [`Slot::close`]).
-    pub(super) fn complete(&self, data: Vec<u32>) {
+    pub(super) fn complete(&self, data: ElemBuf) {
         let waker = {
             let mut inner = self.inner.lock().unwrap();
             if !matches!(inner.state, State::Pending) {
@@ -116,7 +123,7 @@ impl Slot {
 
     /// Non-blocking take. `None` while pending; registers `waker` (if
     /// given) to be woken exactly when the state next changes.
-    fn poll_take(&self, waker: Option<&Waker>) -> Option<Result<Vec<u32>>> {
+    fn poll_take(&self, waker: Option<&Waker>) -> Option<Result<ElemBuf>> {
         let mut inner = self.inner.lock().unwrap();
         match std::mem::replace(&mut inner.state, State::Taken) {
             State::Done(data) => Some(Ok(data)),
@@ -138,7 +145,7 @@ impl Slot {
     }
 
     /// Blocking take: park on the condvar until the slot resolves.
-    fn wait_take(&self) -> Result<Vec<u32>> {
+    fn wait_take(&self) -> Result<ElemBuf> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             match std::mem::replace(&mut inner.state, State::Taken) {
@@ -185,7 +192,9 @@ pub enum BusyReason {
 /// the request was shed: nothing was enqueued or copied, and the
 /// caller decides whether to retry ([`BusyReason::QueueFull`]), back
 /// off ([`BusyReason::OverShare`]), degrade, or stop
-/// ([`BusyReason::Shutdown`]).
+/// ([`BusyReason::Shutdown`]). `T` is the submitted element type
+/// (`u32` by default; `u64` / [`crate::simd::KeyValue`] for the typed
+/// submits), so the shed payload round-trips without conversion.
 ///
 /// # Examples
 ///
@@ -212,15 +221,17 @@ pub enum BusyReason {
 /// assert_eq!(shed.data, vec![3, 1, 2]);
 /// ```
 #[derive(Debug)]
-pub struct Busy {
+pub struct Busy<T: SortElem = u32> {
     /// The original, untouched input.
-    pub data: Vec<u32>,
+    pub data: Vec<T>,
     /// Transient overload ([`BusyReason::QueueFull`] /
     /// [`BusyReason::OverShare`]) or permanent shutdown.
     pub reason: BusyReason,
 }
 
-/// Non-blocking handle to a submitted sort request.
+/// Non-blocking handle to a submitted sort request for element type
+/// `T` (`u32` by default — [`super::SortClient::submit`]; `u64` and
+/// [`crate::simd::KeyValue`] via the typed submits).
 ///
 /// Three ways to consume it, all signalled by the shard worker
 /// through the request's completion slot (no blocking join anywhere
@@ -238,16 +249,17 @@ pub struct Busy {
 /// entirely (counted as `cancelled` in the metrics), and a result
 /// that was already computed is discarded. Cancellation never blocks
 /// and never wedges a worker.
-pub struct SortHandle {
+pub struct SortHandle<T: SortElem = u32> {
     slot: Arc<Slot>,
     /// Set once the result (or error) has been taken; suppresses the
     /// drop-cancellation.
     resolved: bool,
+    _elem: PhantomData<fn() -> T>,
 }
 
-impl SortHandle {
-    pub(super) fn new(slot: Arc<Slot>) -> SortHandle {
-        SortHandle { slot, resolved: false }
+impl<T: SortElem> SortHandle<T> {
+    pub(super) fn new(slot: Arc<Slot>) -> SortHandle<T> {
+        SortHandle { slot, resolved: false, _elem: PhantomData }
     }
 
     /// True once a result (or a shutdown error) is waiting; never
@@ -261,7 +273,7 @@ impl SortHandle {
     /// Non-blocking take: `None` while the request is still in
     /// flight, `Some(result)` exactly once when it resolves, and
     /// `None` again on any call after the result was taken.
-    pub fn try_take(&mut self) -> Option<Result<Vec<u32>>> {
+    pub fn try_take(&mut self) -> Option<Result<Vec<T>>> {
         if self.resolved {
             return None;
         }
@@ -269,33 +281,33 @@ impl SortHandle {
         if out.is_some() {
             self.resolved = true;
         }
-        out
+        out.map(|r| r.map(T::unwrap))
     }
 
     /// Block the calling thread until the result arrives (parked on
     /// the slot's condvar; woken directly by the completing worker).
-    pub fn wait(mut self) -> Result<Vec<u32>> {
+    pub fn wait(mut self) -> Result<Vec<T>> {
         self.resolved = true;
-        self.slot.wait_take()
+        self.slot.wait_take().map(T::unwrap)
     }
 }
 
-impl Future for SortHandle {
-    type Output = Result<Vec<u32>>;
+impl<T: SortElem> Future for SortHandle<T> {
+    type Output = Result<Vec<T>>;
 
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
         let this = self.get_mut();
         match this.slot.poll_take(Some(cx.waker())) {
             Some(out) => {
                 this.resolved = true;
-                Poll::Ready(out)
+                Poll::Ready(out.map(T::unwrap))
             }
             None => Poll::Pending,
         }
     }
 }
 
-impl Drop for SortHandle {
+impl<T: SortElem> Drop for SortHandle<T> {
     fn drop(&mut self) {
         if !self.resolved {
             self.slot.cancel();

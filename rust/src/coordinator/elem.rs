@@ -1,0 +1,232 @@
+//! Element-typed request payloads: the service-side representation of
+//! "what is being sorted", lifted out of the former hard-wired
+//! `Vec<u32>`.
+//!
+//! Every queued request carries an [`ElemBuf`] — a tagged buffer over
+//! the three supported element types (`u32` keys, `u64` keys, packed
+//! [`KeyValue`] key–payload pairs). The tag ([`ElemKind`]) is what the
+//! coordinator's *policy* layers dispatch on:
+//!
+//! * **batch fusion** only fuses jobs of the same kind — a fused
+//!   buffer is one contiguous typed allocation, and mixing widths
+//!   would corrupt it (`take_batch` checks the kind before draining a
+//!   follower);
+//! * **XLA offload** is `u32`-only (the AOT artifacts are compiled
+//!   for 32-bit rows), so routing falls back to the CPU tiers for the
+//!   wider types;
+//! * **QoS admission** costs requests in *bytes*
+//!   ([`ElemBuf::byte_len`]), so an 8-byte element counts twice the
+//!   budget of a 4-byte one and a tenant cannot double its effective
+//!   fair share by switching element types.
+//!
+//! The client-facing side is the [`SortElem`] trait: the typed
+//! submit/handle surface (`submit_u64`, `submit_pairs`,
+//! `SortHandle<T>`) is generic over it, and its associated functions
+//! are the only place the tag ↔ type correspondence lives.
+
+use crate::simd::{KeyValue, Lane};
+
+/// Which element type an [`ElemBuf`] holds. The coordinator's fusion,
+/// routing, and metrics layers dispatch on this tag.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum ElemKind {
+    /// 4-byte unsigned keys — the paper's element type, and the only
+    /// kind eligible for XLA offload.
+    U32,
+    /// 8-byte unsigned keys (sorted on the `V128D`/`V256D` register
+    /// types).
+    U64,
+    /// Packed `(u32 key, u32 payload)` pairs ([`KeyValue`]): key-major
+    /// order with payload tie-break, 8 bytes per element.
+    Pair,
+}
+
+impl ElemKind {
+    /// Bytes per element of this kind.
+    pub fn bytes(self) -> usize {
+        match self {
+            ElemKind::U32 => 4,
+            ElemKind::U64 | ElemKind::Pair => 8,
+        }
+    }
+
+    /// Stable lowercase label for logs and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemKind::U32 => "u32",
+            ElemKind::U64 => "u64",
+            ElemKind::Pair => "pair",
+        }
+    }
+}
+
+/// A request payload: one typed, owned buffer. This is what a queued
+/// job carries through the shards and what a completion slot hands
+/// back — the typed [`super::SortHandle`] unwraps it to the `Vec<T>`
+/// the caller submitted.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ElemBuf {
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+    Pair(Vec<KeyValue>),
+}
+
+impl Default for ElemBuf {
+    /// An empty `u32` buffer — the `mem::take` placeholder used when
+    /// a worker moves the payload out of a finished job.
+    fn default() -> Self {
+        ElemBuf::U32(Vec::new())
+    }
+}
+
+impl ElemBuf {
+    /// The element kind this buffer holds.
+    pub fn kind(&self) -> ElemKind {
+        match self {
+            ElemBuf::U32(_) => ElemKind::U32,
+            ElemBuf::U64(_) => ElemKind::U64,
+            ElemBuf::Pair(_) => ElemKind::Pair,
+        }
+    }
+
+    /// Element count (routing cutoffs and the size-class metrics are
+    /// element-denominated — register occupancy scales with elements,
+    /// not bytes).
+    pub fn len(&self) -> usize {
+        match self {
+            ElemBuf::U32(v) => v.len(),
+            ElemBuf::U64(v) => v.len(),
+            ElemBuf::Pair(v) => v.len(),
+        }
+    }
+
+    /// True when the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size in bytes — the QoS admission-cost denomination
+    /// (`len × kind().bytes()`).
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.kind().bytes()
+    }
+}
+
+/// An element type the sort service accepts end to end: `u32` keys,
+/// `u64` keys, or packed [`KeyValue`] pairs. Implemented only by those
+/// three types; the associated functions are the tag ↔ type
+/// correspondence the generic client/worker paths dispatch through.
+///
+/// The `Lane` supertrait is what lets one generic worker path drive
+/// the vectorized kernels for every kind: a `SortElem` always has
+/// concrete 128-/256-bit register types ([`Lane::Reg128`] /
+/// [`Lane::Reg256`]).
+pub trait SortElem: Lane + Ord {
+    /// The tag [`ElemBuf`]s of this type carry.
+    const KIND: ElemKind;
+
+    /// Wrap an owned buffer into the service's tagged representation.
+    fn wrap(data: Vec<Self>) -> ElemBuf;
+
+    /// Recover the owned buffer. Panics on a kind mismatch — the
+    /// service completes every slot with the same kind it admitted,
+    /// so a mismatch is a coordinator bug, not a caller error.
+    fn unwrap(buf: ElemBuf) -> Vec<Self>;
+
+    /// Borrow the elements. Panics on kind mismatch (see
+    /// [`SortElem::unwrap`]).
+    fn slice(buf: &ElemBuf) -> &[Self];
+
+    /// Mutably borrow the elements. Panics on kind mismatch.
+    fn slice_mut(buf: &mut ElemBuf) -> &mut [Self];
+}
+
+macro_rules! impl_sort_elem {
+    ($ty:ty, $kind:expr, $variant:ident) => {
+        impl SortElem for $ty {
+            const KIND: ElemKind = $kind;
+
+            fn wrap(data: Vec<Self>) -> ElemBuf {
+                ElemBuf::$variant(data)
+            }
+
+            fn unwrap(buf: ElemBuf) -> Vec<Self> {
+                match buf {
+                    ElemBuf::$variant(v) => v,
+                    other => panic!(
+                        "slot completed with {:?} elements for a {:?} request",
+                        other.kind(),
+                        $kind
+                    ),
+                }
+            }
+
+            fn slice(buf: &ElemBuf) -> &[Self] {
+                match buf {
+                    ElemBuf::$variant(v) => v,
+                    other => panic!("expected {:?} payload, found {:?}", $kind, other.kind()),
+                }
+            }
+
+            fn slice_mut(buf: &mut ElemBuf) -> &mut [Self] {
+                match buf {
+                    ElemBuf::$variant(v) => v,
+                    other => panic!("expected {:?} payload, found {:?}", $kind, other.kind()),
+                }
+            }
+        }
+    };
+}
+
+impl_sort_elem!(u32, ElemKind::U32, U32);
+impl_sort_elem!(u64, ElemKind::U64, U64);
+impl_sort_elem!(KeyValue, ElemKind::Pair, Pair);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_report_bytes_and_names() {
+        assert_eq!(ElemKind::U32.bytes(), 4);
+        assert_eq!(ElemKind::U64.bytes(), 8);
+        assert_eq!(ElemKind::Pair.bytes(), 8);
+        assert_eq!(ElemKind::U32.name(), "u32");
+        assert_eq!(ElemKind::Pair.name(), "pair");
+    }
+
+    #[test]
+    fn buf_len_and_byte_len_track_kind() {
+        let b32 = ElemBuf::U32(vec![1, 2, 3]);
+        let b64 = ElemBuf::U64(vec![1, 2, 3]);
+        let bp = ElemBuf::Pair(vec![KeyValue::new(1, 0); 3]);
+        assert_eq!((b32.len(), b32.byte_len()), (3, 12));
+        assert_eq!((b64.len(), b64.byte_len()), (3, 24));
+        assert_eq!((bp.len(), bp.byte_len()), (3, 24));
+        assert_eq!(b32.kind(), ElemKind::U32);
+        assert_eq!(b64.kind(), ElemKind::U64);
+        assert_eq!(bp.kind(), ElemKind::Pair);
+        assert!(!b32.is_empty());
+        assert!(ElemBuf::default().is_empty());
+        assert_eq!(ElemBuf::default().kind(), ElemKind::U32);
+    }
+
+    #[test]
+    fn wrap_unwrap_roundtrip_all_kinds() {
+        let u = vec![3u32, 1, 2];
+        assert_eq!(u32::unwrap(u32::wrap(u.clone())), u);
+        let d = vec![3u64, 1, 2];
+        assert_eq!(u64::unwrap(u64::wrap(d.clone())), d);
+        let p = vec![KeyValue::new(3, 0), KeyValue::new(1, 9)];
+        assert_eq!(KeyValue::unwrap(KeyValue::wrap(p.clone())), p);
+        let mut buf = u64::wrap(vec![5, 4]);
+        u64::slice_mut(&mut buf).sort_unstable();
+        assert_eq!(u64::slice(&buf), &[4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slot completed with")]
+    fn unwrap_mismatch_panics() {
+        let _ = u64::unwrap(ElemBuf::U32(vec![1]));
+    }
+}

@@ -344,7 +344,7 @@ impl TenantMetrics {
     }
 
     /// Point-in-time copy of this tenant's counters. The relative
-    /// gauges (`share`, `credit_elems`) need service-wide totals and
+    /// gauges (`share`, `credit_bytes`) need service-wide totals and
     /// are zero here; [`TenantSnapshot::with_share`] fills them —
     /// `SortService::metrics` and `SortClient::tenant_metrics` both
     /// do.
@@ -360,10 +360,10 @@ impl TenantMetrics {
             cancelled: self.cancelled.load(Ordering::Relaxed),
             weight: cfg.weight,
             burst: cfg.burst as u64,
-            in_flight_elems: self.qos.in_flight(),
+            in_flight_bytes: self.qos.in_flight(),
             queued_jobs: self.qos.queued(),
             share: 0.0,
-            credit_elems: 0,
+            credit_bytes: 0,
             mean_latency_us: self.latency.mean_us(),
             p50_us: self.latency.quantile_us(0.5),
             p99_us: self.latency.quantile_us(0.99),
@@ -388,22 +388,23 @@ pub struct TenantSnapshot {
     pub cancelled: u64,
     /// Fair-share weight in force ([`super::ClientConfig::weight`]).
     pub weight: u32,
-    /// Burst allowance in elements ([`super::ClientConfig::burst`]).
+    /// Burst allowance in bytes ([`super::ClientConfig::burst`]).
     pub burst: u64,
-    /// Occupancy gauge: admission cost (elements, floored at 256 per
-    /// job so queue-slot hogs register) admitted and not yet
-    /// completed/cancelled/evicted (queued + executing).
-    pub in_flight_elems: u64,
+    /// Occupancy gauge: admission cost (payload bytes, floored at
+    /// 1 KiB per job so queue-slot hogs register) admitted and not
+    /// yet completed/cancelled/evicted (queued + executing). Byte
+    /// denomination makes the gauge comparable across element widths.
+    pub in_flight_bytes: u64,
     /// Jobs currently sitting in a shard queue.
     pub queued_jobs: u64,
     /// Share gauge: this tenant's weight over the total registered
     /// weight, in `(0, 1]` (filled against the live registry totals
     /// by `SortService::metrics` / `SortClient::tenant_metrics`).
     pub share: f64,
-    /// Credit gauge: `share × total in-flight elements −` this
-    /// tenant's in-flight elements. Positive = running under its fair
-    /// share of the current load (has credit); negative = over.
-    pub credit_elems: i64,
+    /// Credit gauge: `share × total in-flight bytes −` this tenant's
+    /// in-flight bytes. Positive = running under its fair share of
+    /// the current load (has credit); negative = over.
+    pub credit_bytes: i64,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -411,14 +412,14 @@ pub struct TenantSnapshot {
 
 impl TenantSnapshot {
     /// Fill the relative gauges from service-wide totals: `share`
-    /// from the registered-weight sum, `credit_elems` against the
-    /// total in-flight element count.
+    /// from the registered-weight sum, `credit_bytes` against the
+    /// total in-flight byte count.
     pub(super) fn with_share(mut self, total_weight: u64, total_in_flight: u64) -> Self {
         if total_weight > 0 {
             self.share = self.weight as f64 / total_weight as f64;
         }
-        self.credit_elems =
-            (self.share * total_in_flight as f64) as i64 - self.in_flight_elems as i64;
+        self.credit_bytes =
+            (self.share * total_in_flight as f64) as i64 - self.in_flight_bytes as i64;
         self
     }
 }
@@ -638,17 +639,17 @@ mod tests {
         // Bare snapshot: relative gauges unset.
         let bare = t.snapshot();
         assert_eq!(bare.share, 0.0);
-        assert_eq!(bare.credit_elems, 0);
-        assert_eq!(bare.in_flight_elems, 100);
+        assert_eq!(bare.credit_bytes, 0);
+        assert_eq!(bare.in_flight_bytes, 100);
         // Against totals: weight 4 of 5 → share 0.8; fair in-flight
-        // at 500 total is 400, so 300 elements of credit remain.
+        // at 500 total is 400, so 300 bytes of credit remain.
         let s = t.snapshot().with_share(5, 500);
         assert!((s.share - 0.8).abs() < 1e-9);
-        assert_eq!(s.credit_elems, 300);
+        assert_eq!(s.credit_bytes, 300);
         // An over-share tenant's credit goes negative.
         t.qos.charge(900, &gv);
         let s = t.snapshot().with_share(5, 1000);
-        assert_eq!(s.credit_elems, -200);
+        assert_eq!(s.credit_bytes, -200);
     }
 
     #[test]

@@ -21,11 +21,22 @@
 //! and [`MetricsSnapshot::tenants`] reports accepted/shed/completed/
 //! cancelled counts and latency quantiles per tenant.
 //!
+//! Submission is **element-typed** end to end: `u32` keys
+//! ([`SortClient::submit`]), `u64` keys ([`SortClient::submit_u64`]),
+//! and packed key–payload pairs ([`SortClient::submit_pairs`],
+//! [`crate::simd::KeyValue`]) each ride the vectorized kernels on
+//! their width's register types and resolve to a matching typed
+//! handle. Jobs of different element kinds share queues and workers
+//! but are never fused into one batch, and only `u32` jobs are
+//! eligible for XLA offload — see [`ElemKind`] / [`ElemBuf`] /
+//! [`SortElem`].
+//!
 //! Contended capacity is arbitrated by **weighted fair-share QoS**
 //! ([`QosPolicy::FairShare`], the default): each tenant carries a
 //! [`ClientConfig`] weight and burst allowance
 //! ([`SortService::client_with`]), admission tracks per-tenant
-//! in-flight cost in *elements*, shard dequeue orders jobs by
+//! in-flight cost in *bytes* (width-honest: an 8-byte element costs
+//! twice a 4-byte one), shard dequeue orders jobs by
 //! per-tenant virtual time, and when every queue is full the tenant
 //! most over its share is shed first — [`BusyReason::OverShare`]
 //! with a retry-after hint for the offender's own arrivals, eviction
@@ -46,6 +57,7 @@
 
 mod client;
 mod config;
+mod elem;
 mod metrics;
 mod qos;
 mod service;
@@ -53,6 +65,7 @@ mod tuner;
 
 pub use client::{Busy, BusyReason, SortHandle};
 pub use config::{CoordinatorConfig, QosPolicy, Route};
+pub use elem::{ElemBuf, ElemKind, SortElem};
 pub use metrics::{
     LatencyHistogram, MetricsSnapshot, RouteSnapshot, ShardMetrics, TenantSnapshot, Tier,
 };

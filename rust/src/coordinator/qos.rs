@@ -7,16 +7,19 @@
 //! one greedy tenant could starve every other (the paper's kernel
 //! keeps the vector pipeline saturated, but saturation is worthless
 //! if it is all one tenant's backlog). Fair-share QoS splits the
-//! mechanism into two classic pieces, both costed in **elements**
+//! mechanism into two classic pieces, both costed in **bytes**
 //! rather than jobs (a 1M-element sort is not the same bite of the
-//! machine as a 100-element one):
+//! machine as a 100-element one — and now that the service accepts
+//! more than one element width, a 500K-element `u64` sort is the
+//! same bite as a 1M-element `u32` one; byte denomination is what
+//! keeps the shares comparable across widths):
 //!
 //! * **Start-time fair queueing (SFQ) dequeue.** Every enqueued job
 //!   carries a virtual-time tag: `tag = max(tenant_vtime, global_v) +
 //!   cost·SCALE/weight`, where `global_v` tracks the largest tag ever
 //!   dequeued. Shards pop the *lowest tag* instead of the head, so a
-//!   weight-2 tenant's tags advance half as fast per element and it
-//!   drains twice the elements per unit of contention. The
+//!   weight-2 tenant's tags advance half as fast per byte and it
+//!   drains twice the bytes per unit of contention. The
 //!   `max(…, global_v)` term is the no-banking rule: a tenant that
 //!   idles does not accumulate credit it can later dump as a burst —
 //!   it re-enters at the current virtual time.
@@ -43,31 +46,35 @@
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Fixed-point scale for virtual time: one element of cost advances a
+/// Fixed-point scale for virtual time: one byte of cost advances a
 /// weight-1 tenant's clock by `VT_SCALE` ticks, a weight-`w` tenant's
 /// by `VT_SCALE / w` — integer math with enough headroom that weights
 /// up to `VT_SCALE` still resolve distinctly.
 pub(super) const VT_SCALE: u64 = 1 << 10;
 
-/// Floor on a request's admission cost, in elements. The shard queues
-/// are bounded in *job slots* as well as memory, and a slot costs
-/// control plane (admission, dequeue scan, completion signaling)
-/// regardless of payload — without a floor, a flood of tiny requests
-/// could occupy every slot while its literal element count stayed
-/// under any reasonable burst, evading the over-share machinery
-/// entirely (job-count exhaustion instead of element exhaustion).
-/// Flooring each job at roughly a fuse-sized tiny request closes
-/// that: at the default `queue_capacity` (1024) a slot-hogging flood
-/// reaches the default 32K-element burst after ~128 queued jobs. The
-/// floor also feeds the virtual-time tags, so slot hogs are deranked
-/// by dequeue as well as policed by admission.
-pub(super) const MIN_JOB_COST: u64 = 256;
+/// Floor on a request's admission cost, in **bytes**. The shard
+/// queues are bounded in *job slots* as well as memory, and a slot
+/// costs control plane (admission, dequeue scan, completion
+/// signaling) regardless of payload — without a floor, a flood of
+/// tiny requests could occupy every slot while its literal byte count
+/// stayed under any reasonable burst, evading the over-share
+/// machinery entirely (job-count exhaustion instead of byte
+/// exhaustion). Flooring each job at roughly a fuse-sized tiny
+/// request's bytes (256 `u32` elements = 1 KiB) closes that: at the
+/// default `queue_capacity` (1024) a slot-hogging flood reaches the
+/// default 128 KiB burst after ~128 queued jobs. The floor also feeds
+/// the virtual-time tags, so slot hogs are deranked by dequeue as
+/// well as policed by admission.
+pub(super) const MIN_JOB_COST: u64 = 1024;
 
-/// A request's admission cost: its element count, floored at
+/// A request's admission cost: its payload size in bytes
+/// (`ElemBuf::byte_len` — element count × element width), floored at
 /// [`MIN_JOB_COST`] (see there). This is the unit the in-flight
-/// gauge, `burst`, and the virtual clock are all denominated in.
-pub(super) fn job_cost(len: usize) -> u64 {
-    (len as u64).max(MIN_JOB_COST)
+/// gauge, `burst`, and the virtual clock are all denominated in;
+/// bytes rather than elements, so a tenant cannot double its
+/// effective share by switching to 8-byte elements.
+pub(super) fn job_cost(byte_len: usize) -> u64 {
+    (byte_len as u64).max(MIN_JOB_COST)
 }
 
 /// Per-tenant QoS configuration, passed to
@@ -76,13 +83,16 @@ pub(super) fn job_cost(len: usize) -> u64 {
 ///
 /// * `weight` — the tenant's relative share of contended capacity:
 ///   under sustained pressure from multiple backlogged tenants,
-///   completed **elements** converge to the ratio of the weights.
+///   completed **bytes** converge to the ratio of the weights.
 ///   `0` is treated as `1`.
-/// * `burst` — in-flight elements the tenant may hold before it
-///   counts as *over its share* at all. Within the burst a tenant is
-///   never shed with `OverShare` and never eviction-targeted; sizing
-///   it to a few typical requests lets bursty-but-light tenants ride
-///   through contention untouched.
+/// * `burst` — in-flight payload **bytes** the tenant may hold before
+///   it counts as *over its share* at all. Within the burst a tenant
+///   is never shed with `OverShare` and never eviction-targeted;
+///   sizing it to a few typical requests lets bursty-but-light
+///   tenants ride through contention untouched. Remember the byte
+///   denomination when sizing for wide elements: a `u64` or
+///   key–payload request consumes its burst at 8 bytes per element,
+///   twice the `u32` rate.
 ///
 /// # Examples
 ///
@@ -111,18 +121,20 @@ pub struct ClientConfig {
     /// considered over its share at all (the over-share measure
     /// admission compares under pressure is
     /// `(in_flight − burst) / weight`, floored at zero). Denominated
-    /// in elements, with each job's cost floored at 256 — so the
-    /// default 32768 covers either ~32K elements or ~128 queued
-    /// requests, whichever a tenant's traffic hits first.
+    /// in **bytes**, with each job's cost floored at 1 KiB — so the
+    /// default 131072 covers either ~128 KiB of payload (32K `u32`
+    /// or 16K `u64`/pair elements) or ~128 queued requests, whichever
+    /// a tenant's traffic hits first.
     pub burst: usize,
 }
 
 impl Default for ClientConfig {
     fn default() -> Self {
-        // 32K elements ≈ a handful of fuse-cutoff-sized requests:
-        // enough that small interactive tenants never trip the
-        // over-share machinery, small enough that a flood does.
-        ClientConfig { weight: 1, burst: 32 * 1024 }
+        // 128 KiB ≈ a handful of fuse-cutoff-sized requests at either
+        // element width: enough that small interactive tenants never
+        // trip the over-share machinery, small enough that a flood
+        // does.
+        ClientConfig { weight: 1, burst: 128 * 1024 }
     }
 }
 
@@ -134,7 +146,7 @@ impl Default for ClientConfig {
 pub(super) struct QosState {
     weight: AtomicU32,
     burst: AtomicU64,
-    /// Elements admitted and not yet completed/cancelled/evicted.
+    /// Payload bytes admitted and not yet completed/cancelled/evicted.
     in_flight: AtomicU64,
     /// Jobs currently sitting in a shard queue (eviction candidates).
     queued: AtomicU64,
@@ -181,7 +193,7 @@ impl QosState {
         self.weight.load(Ordering::Relaxed).max(1)
     }
 
-    /// Charge an admission of `cost` elements: bump the in-flight
+    /// Charge an admission of `cost` bytes: bump the in-flight
     /// gauge and advance the virtual clock by `cost·SCALE/weight`
     /// from `max(vtime, global_v)` (SFQ start rule — no banked
     /// credit). Returns `(vtag, vdelta)`: the tag the queued job is
@@ -210,7 +222,7 @@ impl QosState {
         self.vtime.fetch_sub(vdelta, Ordering::Relaxed);
     }
 
-    /// Release `cost` in-flight elements — a job finished or was
+    /// Release `cost` in-flight bytes — a job finished or was
     /// cancelled. The virtual clock is *not* handed back here: served
     /// (or abandoned-after-dequeue) work is spent.
     ///
@@ -236,7 +248,7 @@ impl QosState {
     }
 
     /// The over-share measure admission compares under pressure:
-    /// in-flight elements beyond the burst allowance, normalized by
+    /// in-flight bytes beyond the burst allowance, normalized by
     /// weight (`VT_SCALE` fixed point). `0` means the tenant is
     /// within its allowance and can never be shed for share reasons
     /// or picked as an eviction victim.
@@ -369,7 +381,7 @@ mod tests {
         s.charge(100, &gv);
         assert_eq!(s.over_share(), 0, "within burst: never over share");
         s.charge(100, &gv);
-        // 100 elements beyond burst, weight 2 → 50·SCALE.
+        // 100 bytes beyond burst, weight 2 → 50·SCALE.
         assert_eq!(s.over_share(), 100 * VT_SCALE / 2);
         let heavy = state(4, 100);
         heavy.charge(200, &gv);

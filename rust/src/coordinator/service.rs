@@ -15,6 +15,27 @@
 //! style per request: poll ([`SortHandle::try_take`]), await (the
 //! handle is a `Future`), or park ([`SortHandle::wait`]).
 //!
+//! # Element types
+//!
+//! A request's payload is typed ([`super::ElemBuf`]): `u32` keys
+//! ([`SortClient::submit`]), `u64` keys ([`SortClient::submit_u64`]),
+//! or packed key–payload pairs ([`SortClient::submit_pairs`]). The
+//! handle a submit returns is typed to match, so every payload
+//! round-trips as the `Vec` the caller handed in. Element width cuts
+//! through three policy layers:
+//!
+//! * **Batch fusion is kind-segregated** — a fused buffer is one
+//!   contiguous typed allocation, so `take_batch` only drains
+//!   followers of the *same* element kind as the batch head; jobs of
+//!   different widths never share a fused sort.
+//! * **XLA offload is `u32`-only** (the AOT artifacts are compiled
+//!   for 32-bit rows): wider jobs route through the CPU tiers at the
+//!   same size cutoffs, and the executor defensively CPU-sorts any
+//!   non-`u32` job that reaches it anyway.
+//! * **QoS admission is costed in bytes** (see below), so switching
+//!   to 8-byte elements halves the element count a burst allowance
+//!   admits rather than doubling a tenant's effective share.
+//!
 //! Tenants enter through [`SortService::client`] (or
 //! [`SortService::client_with`], which also sets the tenant's
 //! fair-share [`ClientConfig`] weight and burst): a [`SortClient`] is
@@ -32,15 +53,18 @@
 //! Under [`QosPolicy::FairShare`] (the default) capacity under
 //! contention belongs to *weights*, not to arrival order:
 //!
-//! * Every admission is costed in **elements** — floored at
-//!   `qos::MIN_JOB_COST` per job, so a flood of tiny requests is
-//!   policed for the queue *slots* it hogs, not just its bytes — and
-//!   charged to its tenant: an in-flight gauge (admitted, not yet
-//!   completed/cancelled) plus a start-time-fair-queueing virtual
-//!   clock that advances by `cost / weight`. The job carries its
-//!   virtual-time tag into the queue.
+//! * Every admission is costed in **bytes** (`len × element size`,
+//!   floored at `qos::MIN_JOB_COST` per job so a flood of tiny
+//!   requests is policed for the queue *slots* it hogs, not just its
+//!   bytes) and charged to its tenant: an in-flight gauge (admitted,
+//!   not yet completed/cancelled) plus a start-time-fair-queueing
+//!   virtual clock that advances by `cost / weight`. The byte
+//!   denomination makes costs comparable across element widths — a
+//!   million `u64`s is twice the work of a million `u32`s, and is
+//!   charged as such. The job carries its virtual-time tag into the
+//!   queue.
 //! * **Dequeue is weight-aware**: a shard pops the lowest tag
-//!   instead of the head, so backlogged tenants drain elements in
+//!   instead of the head, so backlogged tenants drain bytes in
 //!   proportion to their weights (FIFO within a tenant — tags are
 //!   strictly increasing per tenant). Everything else about the pop
 //!   is unchanged: the capacity bounds, work stealing, the dynamic
@@ -48,7 +72,7 @@
 //!   and cancellation filtering.
 //! * **Admission is work-conserving but fair under pressure**: while
 //!   any shard has room, everyone is admitted. When every shard is
-//!   full, the tenant *most over its share* (in-flight elements
+//!   full, the tenant *most over its share* (in-flight bytes
 //!   beyond its [`ClientConfig::burst`], per unit weight) loses:
 //!   an over-share arrival is shed with [`BusyReason::OverShare`]
 //!   (carrying a retry-after hint), while an arrival from a tenant
@@ -158,6 +182,7 @@
 
 use super::client::{Busy, BusyReason, Slot, SortHandle};
 use super::config::{CoordinatorConfig, QosPolicy, Route};
+use super::elem::{ElemBuf, ElemKind, SortElem};
 use super::metrics::{
     Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot, Tier,
 };
@@ -165,6 +190,7 @@ use super::qos::{self, ClientConfig};
 use super::tuner::{AdaptivePolicy, Decision, RoutingSnapshot, RoutingState, Tuner};
 use crate::kernels::serial::insertion_sort;
 use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
+use crate::simd::KeyValue;
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortScratch};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
@@ -179,8 +205,11 @@ use std::time::Instant;
 /// dead executor) resolves its handle to an error instead of leaving
 /// a waiter parked forever.
 struct Job {
-    data: Vec<u32>,
-    /// Admission cost in elements (`qos::job_cost(data.len())` at
+    /// The typed payload. Workers dispatch on its [`ElemBuf::kind`]:
+    /// fusion only groups same-kind jobs, and only `U32` payloads may
+    /// reach the XLA executor.
+    data: ElemBuf,
+    /// Admission cost in bytes (`qos::job_cost(data.byte_len())` at
     /// submit — floored at `MIN_JOB_COST` so slot hogs are policed),
     /// kept so the tenant's in-flight gauge can be released after
     /// `data` has been moved out by completion.
@@ -514,11 +543,17 @@ impl Shared {
 
     /// Build the job + handle pair and charge the tenant's QoS state
     /// for it (rolled back via `uncharge` if admission sheds — the
-    /// job carries its own `vdelta` for that).
-    fn make_job(&self, tenant: &Arc<TenantMetrics>, data: Vec<u32>) -> (Job, SortHandle) {
+    /// job carries its own `vdelta` for that). The cost is the
+    /// payload's **byte** size, so the charge is width-honest.
+    fn make_job<T: SortElem>(
+        &self,
+        tenant: &Arc<TenantMetrics>,
+        data: Vec<T>,
+    ) -> (Job, SortHandle<T>) {
         let slot = Slot::new();
         let handle = SortHandle::new(Arc::clone(&slot));
-        let cost = qos::job_cost(data.len());
+        let data = T::wrap(data);
+        let cost = qos::job_cost(data.byte_len());
         let (vtag, vdelta) = tenant.qos.charge(cost, &self.vclock);
         let job = Job {
             data,
@@ -537,7 +572,11 @@ impl Shared {
     /// (resolving the handle to an error) if the service shuts down
     /// first. Returns the handle in all cases — `submit` never
     /// fails, it just may resolve unsuccessfully.
-    fn admit_blocking(&self, tenant: &Arc<TenantMetrics>, data: Vec<u32>) -> SortHandle {
+    fn admit_blocking<T: SortElem>(
+        &self,
+        tenant: &Arc<TenantMetrics>,
+        data: Vec<T>,
+    ) -> SortHandle<T> {
         let (job, handle) = self.make_job(tenant, data);
         self.count_admit(tenant);
         let shed = |job: Job| {
@@ -589,11 +628,11 @@ impl Shared {
     /// Shedding admission: place or hand the input straight back,
     /// tagged with why ([`BusyReason`]) so callers know whether (and
     /// when) a retry can succeed.
-    fn admit_try(
+    fn admit_try<T: SortElem>(
         &self,
         tenant: &Arc<TenantMetrics>,
-        data: Vec<u32>,
-    ) -> std::result::Result<SortHandle, Busy> {
+        data: Vec<T>,
+    ) -> std::result::Result<SortHandle<T>, Busy<T>> {
         if self.shutdown.load(Ordering::SeqCst) {
             self.count_shed(tenant, false, false);
             return Err(Busy { data, reason: BusyReason::Shutdown });
@@ -623,7 +662,7 @@ impl Shared {
                 } else {
                     BusyReason::QueueFull
                 };
-                Err(Busy { data: std::mem::take(&mut job.data), reason })
+                Err(Busy { data: T::unwrap(std::mem::take(&mut job.data)), reason })
             }
         }
     }
@@ -738,6 +777,42 @@ impl SortClient {
     /// service has shut down ([`BusyReason::Shutdown`], stop
     /// retrying). Never parks, never spins.
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Busy> {
+        self.shared.admit_try(&self.tenant, data)
+    }
+
+    /// [`SortClient::submit`] for 8-byte keys: the request sorts on
+    /// the 2-lane `V128D` / 4-lane `V256D` register types and resolves
+    /// to the same `Vec<u64>`. Costed at 8 bytes per element for QoS,
+    /// CPU-tier routed (never XLA-offloaded), and never fused with
+    /// jobs of another element type.
+    pub fn submit_u64(&self, data: Vec<u64>) -> SortHandle<u64> {
+        self.shared.admit_blocking(&self.tenant, data)
+    }
+
+    /// [`SortClient::try_submit`] for 8-byte keys (see
+    /// [`SortClient::submit_u64`]); sheds with `Busy<u64>`, handing
+    /// the input back untouched.
+    pub fn try_submit_u64(
+        &self,
+        data: Vec<u64>,
+    ) -> std::result::Result<SortHandle<u64>, Busy<u64>> {
+        self.shared.admit_try(&self.tenant, data)
+    }
+
+    /// [`SortClient::submit`] for packed key–payload pairs
+    /// ([`KeyValue`]): sorted key-major with deterministic payload
+    /// tie-break, on the 8-byte-lane register types. Same QoS/routing
+    /// treatment as [`SortClient::submit_u64`].
+    pub fn submit_pairs(&self, data: Vec<KeyValue>) -> SortHandle<KeyValue> {
+        self.shared.admit_blocking(&self.tenant, data)
+    }
+
+    /// [`SortClient::try_submit`] for key–payload pairs (see
+    /// [`SortClient::submit_pairs`]).
+    pub fn try_submit_pairs(
+        &self,
+        data: Vec<KeyValue>,
+    ) -> std::result::Result<SortHandle<KeyValue>, Busy<KeyValue>> {
         self.shared.admit_try(&self.tenant, data)
     }
 
@@ -983,18 +1058,26 @@ impl SortService {
 
 /// Per-worker execution state, built once at worker startup from
 /// [`CoordinatorConfig::sort`] and owned for the thread's lifetime:
-/// the sorters (construction precomputes network tables) and every
-/// reusable buffer the sort tiers need — the aux scratch, the fused
-/// batch buffer, and its offset table. After warmup the steady-state
-/// CPU paths therefore do **zero** per-job heap allocation: tiny jobs
+/// the sorters (construction precomputes network tables; they are
+/// element-generic, so one pair serves every kind) and every reusable
+/// buffer the sort tiers need — an aux scratch and a fused batch
+/// buffer *per element type* (a `Vec<u32>` cannot be reused as a
+/// `Vec<u64>`, so each kind keeps its own steady-state allocation),
+/// plus the shared offset table. After warmup the steady-state CPU
+/// paths therefore do **zero** per-job heap allocation: tiny jobs
 /// sort in place, single-thread and fused-batch jobs ping-pong
-/// through `scratch`, and the fused concatenation reuses `fused` /
-/// `bounds` (`Vec::clear` keeps capacity).
+/// through their kind's scratch, and the fused concatenation reuses
+/// the kind's `fused_*` buffer / `bounds` (`Vec::clear` keeps
+/// capacity).
 struct WorkerCtx {
     single: NeonMergeSort,
     parallel: ParallelNeonMergeSort,
-    scratch: SortScratch<u32>,
-    fused: Vec<u32>,
+    scratch_u32: SortScratch<u32>,
+    scratch_u64: SortScratch<u64>,
+    scratch_pair: SortScratch<KeyValue>,
+    fused_u32: Vec<u32>,
+    fused_u64: Vec<u64>,
+    fused_pair: Vec<KeyValue>,
     bounds: Vec<usize>,
 }
 
@@ -1005,8 +1088,12 @@ impl WorkerCtx {
         WorkerCtx {
             single,
             parallel,
-            scratch: SortScratch::new(),
-            fused: Vec::new(),
+            scratch_u32: SortScratch::new(),
+            scratch_u64: SortScratch::new(),
+            scratch_pair: SortScratch::new(),
+            fused_u32: Vec::new(),
+            fused_u64: Vec::new(),
+            fused_pair: Vec::new(),
             bounds: Vec::new(),
         }
     }
@@ -1056,6 +1143,10 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
         } else {
             q.pop_front()?
         };
+        // A fused batch is one contiguous typed buffer, so followers
+        // must match the head's element kind — a mixed-width batch
+        // would have nowhere coherent to concatenate.
+        let kind = first.data.kind();
         let mut batch = vec![first];
         if shared.routing.fuse_eligible(batch[0].data.len(), xla, xla_cut) {
             while batch.len() < batch_max {
@@ -1072,7 +1163,10 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
                     0
                 };
                 match q.get(idx) {
-                    Some(j) if shared.routing.fuse_eligible(j.data.len(), xla, xla_cut) => {
+                    Some(j)
+                        if j.data.kind() == kind
+                            && shared.routing.fuse_eligible(j.data.len(), xla, xla_cut) =>
+                    {
                         batch.push(q.remove(idx).expect("checked index"));
                     }
                     _ => break,
@@ -1212,17 +1306,64 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
     let sm = &shared.shards[src].metrics;
     sm.batches.fetch_add(1, Ordering::Relaxed);
     sm.batched_jobs.fetch_add(live.len() as u64, Ordering::Relaxed);
+    // take_batch only drains same-kind followers, so the whole batch
+    // shares the head's element kind; dispatch once to the typed
+    // fused path, handing it that kind's reusable buffers (disjoint
+    // WorkerCtx field borrows keep this a plain function call).
+    let kind = live[0].data.kind();
+    debug_assert!(live.iter().all(|j| j.data.kind() == kind), "mixed-kind fused batch");
+    match kind {
+        ElemKind::U32 => fused_sort::<u32>(
+            shared,
+            live,
+            &ctx.parallel,
+            &mut ctx.fused_u32,
+            &mut ctx.scratch_u32,
+            &mut ctx.bounds,
+        ),
+        ElemKind::U64 => fused_sort::<u64>(
+            shared,
+            live,
+            &ctx.parallel,
+            &mut ctx.fused_u64,
+            &mut ctx.scratch_u64,
+            &mut ctx.bounds,
+        ),
+        ElemKind::Pair => fused_sort::<KeyValue>(
+            shared,
+            live,
+            &ctx.parallel,
+            &mut ctx.fused_pair,
+            &mut ctx.scratch_pair,
+            &mut ctx.bounds,
+        ),
+    }
+}
+
+/// The typed fused-batch sort: concatenate the (same-kind) batch into
+/// the worker's reusable buffer for `T`, sort every segment in one
+/// [`ParallelNeonMergeSort::sort_segments_with_scratch`] pass, and
+/// complete each request's slot the moment its own segment is sorted.
+fn fused_sort<T: SortElem>(
+    shared: &Shared,
+    live: Vec<Job>,
+    parallel: &ParallelNeonMergeSort,
+    fused: &mut Vec<T>,
+    scratch: &mut SortScratch<T>,
+    bounds: &mut Vec<usize>,
+) {
+    let m = &shared.metrics;
     let total: usize = live.iter().map(|j| j.data.len()).sum();
     // Concatenate into the worker's reusable fused buffer (clear
     // keeps capacity — steady-state batches don't allocate here).
-    ctx.fused.clear();
-    ctx.fused.reserve(total);
-    ctx.bounds.clear();
-    ctx.bounds.push(0);
+    fused.clear();
+    fused.reserve(total);
+    bounds.clear();
+    bounds.push(0);
     let tiny_cutoff = shared.routing.snapshot().tiny_cutoff;
     for job in &live {
-        ctx.fused.extend_from_slice(&job.data);
-        ctx.bounds.push(ctx.fused.len());
+        fused.extend_from_slice(T::slice(&job.data));
+        bounds.push(fused.len());
         // Fused jobs still count under their size tier.
         if job.data.len() < tiny_cutoff {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
@@ -1235,21 +1376,16 @@ fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerC
     // practice — the per-segment lock is the completion hand-off).
     let cells: Vec<Mutex<Option<Job>>> = live.into_iter().map(|j| Mutex::new(Some(j))).collect();
     let t0 = Instant::now();
-    ctx.parallel.sort_segments_with_scratch(
-        &mut ctx.fused,
-        &ctx.bounds,
-        &mut ctx.scratch,
-        |k, seg: &[u32]| {
-            if let Some(mut job) = cells[k].lock().unwrap().take() {
-                job.data.copy_from_slice(seg);
-                finish(m, job);
-            }
-        },
-    );
+    parallel.sort_segments_with_scratch(fused, bounds, scratch, |k, seg: &[T]| {
+        if let Some(mut job) = cells[k].lock().unwrap().take() {
+            T::slice_mut(&mut job.data).copy_from_slice(seg);
+            finish(m, job);
+        }
+    });
     // One fused observation for the whole pass; each segment's size
     // class is charged its proportional share (see RouteObs), so the
     // tuner can compare fused against solo execution per class.
-    m.routes.get(Tier::Fused).record_segments(&ctx.bounds, t0.elapsed());
+    m.routes.get(Tier::Fused).record_segments(bounds, t0.elapsed());
 }
 
 fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
@@ -1259,9 +1395,12 @@ fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
     }
     // Live routing state, with boundary probing when adaptive: a
     // small fraction of jobs near a cutoff run on the neighbor tier
-    // so the tuner observes both sides of the boundary.
-    let mut route =
-        shared.routing.route_probed(job.data.len(), shared.xla_enabled(), shared.cfg.xla_cutoff);
+    // so the tuner observes both sides of the boundary. The XLA tier
+    // only exists for u32 payloads (the AOT artifacts are 32-bit), so
+    // wider jobs route as if the accelerator were absent.
+    let kind = job.data.kind();
+    let xla_ok = shared.xla_enabled() && kind == ElemKind::U32;
+    let mut route = shared.routing.route_probed(job.data.len(), xla_ok, shared.cfg.xla_cutoff);
     if route == Route::Xla {
         // Forward; the executor thread counts route_xla (after its
         // own cancellation check) and completes the slot. If it
@@ -1276,27 +1415,51 @@ fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
             }
         }
     }
-    // Each arm times the sort itself (not queueing) and records it
-    // against the tier that actually ran — probes included, which is
-    // the point: the observation grid is the tuner's input signal.
+    match kind {
+        ElemKind::U32 => process_cpu::<u32>(
+            shared, job, route, &ctx.single, &ctx.parallel, &mut ctx.scratch_u32,
+        ),
+        ElemKind::U64 => process_cpu::<u64>(
+            shared, job, route, &ctx.single, &ctx.parallel, &mut ctx.scratch_u64,
+        ),
+        ElemKind::Pair => process_cpu::<KeyValue>(
+            shared, job, route, &ctx.single, &ctx.parallel, &mut ctx.scratch_pair,
+        ),
+    }
+}
+
+/// The typed CPU tiers for one solo job: insertion sort, single-thread
+/// NEON-MS, or merge-path parallel, against the worker's per-kind
+/// scratch. Each arm times the sort itself (not queueing) and records
+/// it against the tier that actually ran — probes included, which is
+/// the point: the observation grid is the tuner's input signal.
+fn process_cpu<T: SortElem>(
+    shared: &Shared,
+    mut job: Job,
+    route: Route,
+    single: &NeonMergeSort,
+    parallel: &ParallelNeonMergeSort,
+    scratch: &mut SortScratch<T>,
+) {
+    let m = &shared.metrics;
     let len = job.data.len();
     let t0 = Instant::now();
     let tier = match route {
         Route::Tiny => {
             m.route_tiny.fetch_add(1, Ordering::Relaxed);
-            insertion_sort(&mut job.data);
+            insertion_sort(T::slice_mut(&mut job.data));
             Tier::Tiny
         }
         Route::SingleThread => {
             m.route_single.fetch_add(1, Ordering::Relaxed);
             // Worker-owned sorter + scratch: zero allocation once the
             // scratch has grown to the tier's largest request.
-            ctx.single.sort_with_scratch(&mut job.data, &mut ctx.scratch);
+            single.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
             Tier::Single
         }
         Route::Parallel => {
             m.route_parallel.fetch_add(1, Ordering::Relaxed);
-            ctx.parallel.sort_with_scratch(&mut job.data, &mut ctx.scratch);
+            parallel.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
             Tier::Parallel
         }
         Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
@@ -1322,6 +1485,19 @@ fn finish(m: &Metrics, mut job: Job) {
     job.tenant.qos.release(job.cost);
     // Receiver may have given up; complete() discards in that case.
     job.slot.complete(data);
+}
+
+/// CPU-sort a payload of any kind on the XLA executor's fallback
+/// sorter. Only non-`u32` payloads take the allocating `sort` arms —
+/// routing never forwards one (see `process`), so those arms exist
+/// purely as a defensive backstop against a routing bug; the `u32`
+/// callers below use the scratch-reusing path directly.
+fn wide_fallback(fallback: &NeonMergeSort, job: &mut Job) {
+    match &mut job.data {
+        ElemBuf::U32(v) => fallback.sort(v),
+        ElemBuf::U64(v) => fallback.sort(v),
+        ElemBuf::Pair(v) => fallback.sort(v),
+    }
 }
 
 /// Dedicated thread owning the (!Send) PJRT client + executables.
@@ -1361,6 +1537,16 @@ fn xla_executor(
         // route_xla only covers jobs the executor actually sorts —
         // mirroring how the CPU paths count after their filters.
         metrics.route_xla.fetch_add(1, Ordering::Relaxed);
+        // Routing never forwards non-u32 jobs (the AOT artifacts are
+        // compiled for 32-bit rows); if one arrives anyway, CPU-sort
+        // it rather than dropping the request.
+        if job.data.kind() != ElemKind::U32 {
+            let t0 = Instant::now();
+            wide_fallback(&fallback, &mut job);
+            metrics.routes.get(Tier::Xla).record(job.data.len(), t0.elapsed());
+            finish(&metrics, job);
+            continue;
+        }
         // Opportunistic dynamic batching through the accelerator: if a
         // batched artifact is compiled and this job fits one row, pull
         // whatever fitting jobs are already queued (non-blocking) and
@@ -1372,6 +1558,15 @@ fn xla_executor(
                 while group.len() < batch {
                     match rx.try_recv() {
                         Ok(j) if j.slot.is_cancelled() => abandon(&metrics, j),
+                        // Same defensive non-u32 backstop as the
+                        // outer loop: CPU-sort it, never batch it.
+                        Ok(mut j) if j.data.kind() != ElemKind::U32 => {
+                            metrics.route_xla.fetch_add(1, Ordering::Relaxed);
+                            let t0 = Instant::now();
+                            wide_fallback(&fallback, &mut j);
+                            metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
+                            finish(&metrics, j);
+                        }
                         Ok(j) if j.data.len() <= block => {
                             metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                             group.push(j);
@@ -1399,10 +1594,10 @@ fn xla_executor(
                     }
                     let t0 = Instant::now();
                     let mut rows: Vec<&mut [u32]> =
-                        group.iter_mut().map(|j| j.data.as_mut_slice()).collect();
+                        group.iter_mut().map(|j| u32::slice_mut(&mut j.data)).collect();
                     if sorter.sort_batch_u32(&mut rows).is_err() {
                         for j in group.iter_mut() {
-                            fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
+                            fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                         }
                     }
                     metrics.routes.get(Tier::Xla).record_segments(&offsets, t0.elapsed());
@@ -1412,8 +1607,8 @@ fn xla_executor(
                 } else {
                     for mut j in group {
                         let t0 = Instant::now();
-                        if sorter.sort_u32(&mut j.data).is_err() {
-                            fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
+                        if sorter.sort_u32(u32::slice_mut(&mut j.data)).is_err() {
+                            fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                         }
                         metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
                         finish(&metrics, j);
@@ -1431,8 +1626,8 @@ fn xla_executor(
                     }
                     metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                     let t0 = Instant::now();
-                    if sorter.sort_u32(&mut j.data).is_err() {
-                        fallback.sort_with_scratch(&mut j.data, &mut fb_scratch);
+                    if sorter.sort_u32(u32::slice_mut(&mut j.data)).is_err() {
+                        fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                     }
                     metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
                     finish(&metrics, j);
@@ -1441,9 +1636,9 @@ fn xla_executor(
             }
         }
         let t0 = Instant::now();
-        if sorter.sort_u32(&mut job.data).is_err() {
+        if sorter.sort_u32(u32::slice_mut(&mut job.data)).is_err() {
             // Fall back to the CPU path rather than dropping the job.
-            fallback.sort_with_scratch(&mut job.data, &mut fb_scratch);
+            fallback.sort_with_scratch(u32::slice_mut(&mut job.data), &mut fb_scratch);
         }
         metrics.routes.get(Tier::Xla).record(job.data.len(), t0.elapsed());
         finish(&metrics, job);

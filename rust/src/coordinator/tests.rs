@@ -7,6 +7,7 @@
 //! victim is never shed while an over-share tenant has queued work.
 
 use super::*;
+use crate::simd::KeyValue;
 use crate::testutil::{assert_sorted, Rng};
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -904,7 +905,7 @@ fn within_burst_victim_never_shed_while_aggressor_over_share() {
     assert_eq!(at.shed, agg_refused + 6);
     assert_eq!(at.shed_over_share, agg_refused + 6, "every aggressor shed was share-caused");
     assert_eq!(at.accepted, 2, "8 admitted − 6 evicted");
-    assert!(at.in_flight_elems >= 2 * 50_000, "evicted cost released, queued cost kept");
+    assert!(at.in_flight_bytes >= 2 * 50_000 * 4, "evicted cost released, queued cost kept");
     // Evictions target the *newest* queued job first: the last six
     // admitted aggressor handles error out (with the reason), the
     // first two still complete.
@@ -931,12 +932,12 @@ fn within_burst_victim_never_shed_while_aggressor_over_share() {
 
 #[test]
 fn tiny_job_flood_cannot_hog_queue_slots() {
-    // Admission cost is floored per job (qos::MIN_JOB_COST = 256
-    // elements), so a flood of tiny requests is policed for the queue
-    // *slots* it occupies: with 256 slots the flood crosses the
-    // default 32K burst at ~128 queued jobs, and a victim's arrival
-    // still displaces it even though the literal element count of the
-    // hog's backlog (256 × 8 elements) is far below any burst.
+    // Admission cost is floored per job (qos::MIN_JOB_COST = 1 KiB),
+    // so a flood of tiny requests is policed for the queue *slots* it
+    // occupies: with 256 slots the flood crosses the default 128 KiB
+    // burst at ~128 queued jobs, and a victim's arrival still
+    // displaces it even though the literal byte count of the hog's
+    // backlog (256 × 32 bytes) is far below any burst.
     let cfg = CoordinatorConfig {
         workers: 0,
         shards: 1,
@@ -944,7 +945,7 @@ fn tiny_job_flood_cannot_hog_queue_slots() {
         ..Default::default()
     };
     let svc = SortService::start(cfg, None).unwrap();
-    let hog = svc.client("hog"); // default ClientConfig: burst 32768
+    let hog = svc.client("hog"); // default ClientConfig: burst 128 KiB
     let victim = svc.client("victim");
     let mut handles = Vec::new();
     let refused = loop {
@@ -1011,14 +1012,14 @@ fn qos_gauges_track_occupancy_and_drain_at_shutdown() {
     let t = client.tenant_metrics();
     assert_eq!(t.weight, 2);
     assert_eq!(t.burst, 0);
-    assert_eq!(t.in_flight_elems, 3000);
+    assert_eq!(t.in_flight_bytes, 12_000, "3 jobs × 1000 u32 × 4 bytes");
     assert_eq!(t.queued_jobs, 3);
     assert!((t.share - 1.0).abs() < 1e-9, "sole registered tenant owns the whole share");
-    assert_eq!(t.credit_elems, 0, "share × total in-flight equals own in-flight");
+    assert_eq!(t.credit_bytes, 0, "share × total in-flight equals own in-flight");
     drop(handles);
     svc.shutdown();
     let t = client.tenant_metrics();
-    assert_eq!(t.in_flight_elems, 0, "shutdown drain releases in-flight cost");
+    assert_eq!(t.in_flight_bytes, 0, "shutdown drain releases in-flight cost");
     assert_eq!(t.queued_jobs, 0);
     assert_eq!(t.accepted, t.completed + t.cancelled);
 }
@@ -1057,4 +1058,93 @@ fn submits_after_shutdown_resolve_to_errors() {
     let snap = client.tenant_metrics();
     assert_eq!(snap.shed, 2);
     assert_eq!(snap.accepted, 0);
+}
+
+#[test]
+fn mixed_element_types_from_concurrent_tenants_complete_exactly_once() {
+    // E2E for the element-generic stack: three tenants concurrently
+    // push u32, u64, and key–payload jobs (sizes spanning the tiny /
+    // fused / single tiers) through one service. Every handle must
+    // resolve to its own submission's oracle result — a fused batch
+    // that mixed element kinds would either corrupt payloads or panic
+    // on a kind mismatch in the typed concatenation — and the
+    // per-tenant identity accepted == completed + cancelled must hold
+    // for every kind.
+    let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max: 8, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    const JOBS: usize = 40;
+    const LENS: [usize; 4] = [5, 40, 900, 4000];
+    std::thread::scope(|s| {
+        let svc = &svc;
+        s.spawn(move || {
+            let client = svc.client("alpha-u32");
+            let mut rng = Rng::new(71);
+            for i in 0..JOBS {
+                let data = rng.vec_u32(LENS[i % LENS.len()]);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(client.submit(data).wait().unwrap(), expect, "u32 job {i}");
+            }
+        });
+        s.spawn(move || {
+            let client = svc.client("bravo-u64");
+            let mut rng = Rng::new(72);
+            for i in 0..JOBS {
+                let data = rng.vec_u64(LENS[i % LENS.len()]);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(client.submit_u64(data).wait().unwrap(), expect, "u64 job {i}");
+            }
+        });
+        s.spawn(move || {
+            let client = svc.client("carol-pair");
+            let mut rng = Rng::new(73);
+            for i in 0..JOBS {
+                // Heavy key duplication (mod 97) so equal-key runs
+                // exercise the deterministic payload tie-break.
+                let data: Vec<KeyValue> = (0..LENS[i % LENS.len()])
+                    .map(|j| KeyValue::new(rng.next_u32() % 97, j as u32))
+                    .collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(client.submit_pairs(data).wait().unwrap(), expect, "pair job {i}");
+            }
+        });
+    });
+    let m = svc.metrics();
+    assert_eq!(m.submitted, 3 * JOBS as u64);
+    assert_eq!(m.completed, 3 * JOBS as u64);
+    assert_eq!(m.rejected, 0);
+    for t in &m.tenants {
+        assert_eq!(t.accepted, 40, "{} accepted all its jobs", t.name);
+        assert_eq!(t.accepted, t.completed + t.cancelled, "{} accounting identity", t.name);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn typed_try_submits_shed_with_typed_payloads() {
+    // The non-blocking typed submits hand the exact input back on
+    // shed, at the submitted type — and QoS costs 8-byte elements
+    // twice as much, so the same element count fills a byte budget
+    // twice as fast.
+    let cfg = CoordinatorConfig { workers: 0, queue_capacity: 2, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("typed");
+    let h64 = client.try_submit_u64(vec![9u64, 3]).expect("room");
+    let hp = client
+        .try_submit_pairs(vec![KeyValue::new(2, 0), KeyValue::new(1, 1)])
+        .expect("room");
+    // Queue full now (capacity 2): both typed sheds round-trip.
+    let busy = client.try_submit_u64(vec![u64::MAX, 0]).expect_err("queue full");
+    assert_eq!(busy.data, vec![u64::MAX, 0]);
+    let busy = client
+        .try_submit_pairs(vec![KeyValue::new(7, 7)])
+        .expect_err("queue full");
+    assert_eq!(busy.data, vec![KeyValue::new(7, 7)]);
+    // Two queued jobs of 2 × 8 bytes each, floored at MIN_JOB_COST
+    // (1 KiB) per job.
+    assert_eq!(client.tenant_metrics().in_flight_bytes, 2 * 1024);
+    drop((h64, hp));
+    svc.shutdown();
 }

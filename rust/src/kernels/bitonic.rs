@@ -32,7 +32,7 @@
 //!   [`crate::simd::V256`] yields the same network shape with half
 //!   the register count per K.
 
-use crate::simd::{Lane, Vector, V128};
+use crate::simd::{Lane, Lanes, Vector, V128};
 
 /// Distance-2 + distance-1 bitonic stages within one `V128`: sorts
 /// any 4-element bitonic sequence ascending. 2 shuffles, 2 blends,
@@ -103,38 +103,42 @@ pub fn merge_sorted_regs<T: Lane, V: Vector<T>>(regs: &mut [V]) {
 }
 
 /// Convenience: vectorized merge of two equal-length sorted slices
-/// (lengths equal, multiple of 4, power-of-two total) into `out`,
-/// through the `V128` register kernel. Used by tests and the
-/// regmachine cross-check; the streaming path for arbitrary lengths
-/// is [`super::runmerge`].
+/// (lengths equal, multiple of the lane count, power-of-two total)
+/// into `out`, through the element's 128-bit register kernel
+/// ([`Lane::Reg128`] — `V128` for 4-byte lanes, `V128D` for 8-byte).
+/// Used by tests and the regmachine cross-check; the streaming path
+/// for arbitrary lengths is [`super::runmerge`].
 pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
+    let w = <T::Reg128 as Lanes>::LANES;
     assert_eq!(a.len(), b.len());
-    assert!((2 * a.len()).is_power_of_two() && a.len() % 4 == 0);
+    assert!((2 * a.len()).is_power_of_two() && a.len() % w == 0);
     assert!(
-        a.len() <= super::hybrid::MAX_K,
-        "register kernel supports up to 2x{}",
-        super::hybrid::MAX_K
+        a.len() * T::BYTES <= super::hybrid::MAX_K_BYTES,
+        "register kernel supports up to 2x{} bytes per side",
+        super::hybrid::MAX_K_BYTES
     );
     assert_eq!(out.len(), a.len() * 2);
     // Monomorphize on the register count so the stage loops unroll.
-    match a.len() / 4 {
-        1 => merge_slices_impl::<T, 2>(a, b, out),
-        2 => merge_slices_impl::<T, 4>(a, b, out),
-        4 => merge_slices_impl::<T, 8>(a, b, out),
-        8 => merge_slices_impl::<T, 16>(a, b, out),
-        16 => merge_slices_impl::<T, 32>(a, b, out),
+    match 2 * a.len() / w {
+        2 => merge_slices_impl::<T, 2>(a, b, out),
+        4 => merge_slices_impl::<T, 4>(a, b, out),
+        8 => merge_slices_impl::<T, 8>(a, b, out),
+        16 => merge_slices_impl::<T, 16>(a, b, out),
+        32 => merge_slices_impl::<T, 32>(a, b, out),
         _ => unreachable!(),
     }
 }
 
 #[inline(always)]
 fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
-    let mut regs = [V128::splat(T::MIN_VALUE); N];
-    for (v, c) in regs.iter_mut().zip(a.chunks_exact(4).chain(b.chunks_exact(4))) {
-        *v = V128::load(c);
+    let () = super::hybrid::RegsFitMaxK::<T::Reg128, N>::OK;
+    let w = <T::Reg128 as Lanes>::LANES;
+    let mut regs = [T::Reg128::splat(T::MIN_VALUE); N];
+    for (v, c) in regs.iter_mut().zip(a.chunks_exact(w).chain(b.chunks_exact(w))) {
+        *v = T::Reg128::load(c);
     }
     merge_sorted_regs(&mut regs[..]);
-    for (c, v) in out.chunks_exact_mut(4).zip(&regs) {
+    for (c, v) in out.chunks_exact_mut(w).zip(&regs) {
         v.store(c);
     }
 }

@@ -32,18 +32,22 @@
 //!   is *proved at monomorphization time*: each kernel instantiated
 //!   over `N` registers of width `V` evaluates
 //!   [`RegsFitMaxK::OK`] (`RegsFitMaxK::<V, N>::OK`), a const
-//!   assertion of `N·W/2 ≤ MAX_K`. Widening [`super::MergeWidth`]
-//!   past 2×64 — at any vector width — without growing `MAX_K`
-//!   therefore fails to *compile*: the register budget can never
-//!   silently become a buffer overflow.
+//!   assertion of `N·W/2·lane_bytes ≤ MAX_K_BYTES`. Widening
+//!   [`super::MergeWidth`] past the byte budget — at any vector width
+//!   or element width — without growing [`MAX_K_BYTES`] therefore
+//!   fails to *compile*: the register budget can never silently
+//!   become a buffer overflow. Because the budget is in bytes, an
+//!   8-byte element (u64, `KeyValue`) gets half the K of a 4-byte
+//!   one for the same register count.
 
 use super::bitonic::{bitonic_merge_regs, reverse_regs};
 use crate::simd::{Lane, Lanes, Vector};
 
-/// Maximum K (elements per side) the register-merge kernels support:
-/// 2×64, i.e. 32 `V128` or 16 `V256` registers in flight. Every
-/// fixed-size flight/spill buffer in this module and in
-/// [`super::runmerge`] is sized by this constant.
+/// Maximum K (elements per side) the register-merge kernels support
+/// for 4-byte lanes: 2×64, i.e. 32 `V128` or 16 `V256` registers in
+/// flight. Every fixed-size flight/spill buffer in this module and in
+/// [`super::runmerge`] is sized by this constant — 8-byte lanes use
+/// at most half of it, since the true budget is [`MAX_K_BYTES`].
 ///
 /// PR 3 raised this from 32 to 64 to open the 2×64 row of the width
 /// sweep (see `BENCH_width_sweep.json`); the compile-time
@@ -51,20 +55,32 @@ use crate::simd::{Lane, Lanes, Vector};
 /// single-point change.
 pub const MAX_K: usize = 64;
 
+/// The per-side register-merge budget in **bytes** (`MAX_K` 4-byte
+/// lanes). Denominating the budget in bytes is what makes the
+/// element-width axis safe: the same 32-register `V128` flight that
+/// carries K = 64 `u32` elements carries K = 32 `u64`/`KeyValue`
+/// elements, and both sit exactly at this bound.
+pub const MAX_K_BYTES: usize = MAX_K * 4;
+
 /// Monomorphization-time guard: referencing [`RegsFitMaxK::OK`] in a
 /// kernel monomorphized over `N` registers of vector type `V` proves
-/// `N` registers (K = N·W/2 elements per side, `W = V::LANES`) fit
-/// the `MAX_K`-element stack buffers — a K sweep beyond `MAX_K`
+/// `N` registers (K = N·W/2 lanes per side, `W = V::LANES`, each lane
+/// `V::LANE_BYTES` wide) fit the [`MAX_K_BYTES`] budget — and hence
+/// the `MAX_K`-element stack buffers — so a K sweep beyond the budget
 /// becomes a compile error rather than a silent buffer overflow.
 ///
-/// A configuration inside the budget compiles and runs:
+/// A configuration inside the budget compiles and runs. The bound is
+/// per *byte*, so the 64-bit register types reach it at half the
+/// element count:
 ///
 /// ```
 /// use neonms::kernels::hybrid::RegsFitMaxK;
-/// use neonms::simd::{V128, V256};
+/// use neonms::simd::{V128, V128D, V256, V256D, KeyValue};
 ///
 /// let () = RegsFitMaxK::<V128<u32>, 32>::OK; // K = 64 — at the bound
 /// let () = RegsFitMaxK::<V256<u32>, 16>::OK; // K = 64 via 8 lanes
+/// let () = RegsFitMaxK::<V128D<u64>, 32>::OK; // K = 32 — same bytes
+/// let () = RegsFitMaxK::<V256D<KeyValue>, 16>::OK; // K = 32 via 4 lanes
 /// ```
 ///
 /// One register past the budget fails to *compile* (the const
@@ -74,22 +90,35 @@ pub const MAX_K: usize = 64;
 /// use neonms::kernels::hybrid::RegsFitMaxK;
 /// use neonms::simd::V128;
 ///
-/// let () = RegsFitMaxK::<V128<u32>, 64>::OK; // K = 128 > MAX_K = 64
+/// let () = RegsFitMaxK::<V128<u32>, 64>::OK; // K = 128 > 64 u32 budget
 /// ```
 ///
 /// ```compile_fail
 /// use neonms::kernels::hybrid::RegsFitMaxK;
 /// use neonms::simd::V256;
 ///
-/// let () = RegsFitMaxK::<V256<u32>, 32>::OK; // K = 128 > MAX_K = 64
+/// let () = RegsFitMaxK::<V256<u32>, 32>::OK; // K = 128 > 64 u32 budget
+/// ```
+///
+/// The byte denomination halves the register budget for 8-byte
+/// elements: 64 two-lane registers is exactly the 2×64 configuration
+/// that *fits* for `u32` (`V128<u32>, 32` above), but must be
+/// rejected for `u64`:
+///
+/// ```compile_fail
+/// use neonms::kernels::hybrid::RegsFitMaxK;
+/// use neonms::simd::V128D;
+///
+/// let () = RegsFitMaxK::<V128D<u64>, 64>::OK; // K = 64 × 8 B > MAX_K_BYTES
 /// ```
 pub struct RegsFitMaxK<V, const N: usize>(core::marker::PhantomData<V>);
 
 impl<V: Lanes, const N: usize> RegsFitMaxK<V, N> {
-    /// Evaluates (at compile time) the `N·W/2 ≤ MAX_K` bound.
+    /// Evaluates (at compile time) the `N·W/2·lane_bytes ≤
+    /// MAX_K_BYTES` bound.
     pub const OK: () = assert!(
-        N * V::LANES / 2 <= MAX_K,
-        "register count implies K > MAX_K: widen MAX_K before sweeping wider kernels"
+        N * V::LANES / 2 * V::LANE_BYTES <= MAX_K_BYTES,
+        "register count implies K over the MAX_K_BYTES budget: widen it before sweeping wider kernels"
     );
 }
 
@@ -166,17 +195,22 @@ fn serial_bitonic_merge<T: Lane>(buf: &mut [T]) {
 }
 
 /// Convenience: hybrid merge of two equal-length sorted slices into
-/// `out` through the `V128` register kernel. Same contract as
-/// [`super::bitonic::merge_slices`].
+/// `out` through the element's 128-bit register kernel
+/// ([`Lane::Reg128`] — `V128` for 4-byte lanes, `V128D` for 8-byte).
+/// Same contract as [`super::bitonic::merge_slices`].
 pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
-    use crate::simd::W;
+    let w = <T::Reg128 as Lanes>::LANES;
     assert_eq!(a.len(), b.len());
-    assert!((2 * a.len()).is_power_of_two() && a.len() % W == 0);
-    assert!(a.len() <= MAX_K, "hybrid kernel supports up to 2x{MAX_K}");
+    assert!((2 * a.len()).is_power_of_two() && a.len() % w == 0);
+    assert!(
+        a.len() * T::BYTES <= MAX_K_BYTES,
+        "hybrid kernel supports up to 2x{} bytes per side",
+        MAX_K_BYTES
+    );
     assert_eq!(out.len(), a.len() * 2);
     // Monomorphize on the register count so both the vector stages and
     // the serial half's comparator loops unroll to straight-line code.
-    match 2 * a.len() / W {
+    match 2 * a.len() / w {
         2 => merge_slices_impl::<T, 2>(a, b, out),
         4 => merge_slices_impl::<T, 4>(a, b, out),
         8 => merge_slices_impl::<T, 8>(a, b, out),
@@ -188,14 +222,14 @@ pub fn merge_slices<T: Lane>(a: &[T], b: &[T], out: &mut [T]) {
 
 #[inline(always)]
 fn merge_slices_impl<T: Lane, const N: usize>(a: &[T], b: &[T], out: &mut [T]) {
-    use crate::simd::{V128, W};
-    let () = RegsFitMaxK::<V128<T>, N>::OK;
-    let mut regs = [V128::splat(T::MIN_VALUE); N];
-    for (v, c) in regs.iter_mut().zip(a.chunks_exact(W).chain(b.chunks_exact(W))) {
-        *v = V128::load(c);
+    let () = RegsFitMaxK::<T::Reg128, N>::OK;
+    let w = <T::Reg128 as Lanes>::LANES;
+    let mut regs = [T::Reg128::splat(T::MIN_VALUE); N];
+    for (v, c) in regs.iter_mut().zip(a.chunks_exact(w).chain(b.chunks_exact(w))) {
+        *v = T::Reg128::load(c);
     }
     hybrid_merge_sorted_regs(&mut regs[..]);
-    for (c, v) in out.chunks_exact_mut(W).zip(&regs) {
+    for (c, v) in out.chunks_exact_mut(w).zip(&regs) {
         v.store(c);
     }
 }

@@ -58,6 +58,24 @@ impl MergeWidth {
     pub fn regs_at(self, vector: crate::simd::VectorWidth) -> usize {
         self.k() / vector.lanes()
     }
+    /// The widest kernel this width folds to for a lane of `bytes`
+    /// bytes: the [`hybrid::MAX_K_BYTES`] budget caps 8-byte elements
+    /// (u64, `KeyValue`) at K = 32, so `K64` folds to `K32` there —
+    /// the same fold the runtime dispatch applies, exposed so configs
+    /// and sweeps can reason about the effective width.
+    pub fn clamp_for_bytes(self, bytes: usize) -> MergeWidth {
+        let cap = hybrid::MAX_K_BYTES / bytes.max(1);
+        if self.k() <= cap {
+            return self;
+        }
+        let mut best = MergeWidth::K4;
+        for w in MergeWidth::all() {
+            if w.k() <= cap && w.k() > best.k() {
+                best = w;
+            }
+        }
+        best
+    }
     /// All widths, for sweeps.
     pub fn all() -> [MergeWidth; 5] {
         [MergeWidth::K4, MergeWidth::K8, MergeWidth::K16, MergeWidth::K32, MergeWidth::K64]

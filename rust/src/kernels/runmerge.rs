@@ -34,7 +34,7 @@ use super::bitonic::merge_sorted_regs;
 use super::hybrid::{hybrid_merge_sorted_regs, RegsFitMaxK, MAX_K};
 use super::serial::merge_scalar;
 use super::{MergeImpl, MergeWidth};
-use crate::simd::{Lane, Vector, VectorWidth, V128, V256};
+use crate::simd::{Lane, Vector, VectorWidth};
 
 /// Alloc-free 3-way merge of sorted `x`, `y`, `z` into `out` — the
 /// streaming merge's drain step (flight block + both input tails).
@@ -90,11 +90,21 @@ impl RunMerger {
     }
 
     /// The register width this merger actually instantiates kernels
-    /// at: the configured [`RunMerger::vector`], except that `K4`
-    /// needs registers of at most 4 lanes and therefore always runs
-    /// at [`VectorWidth::V128`].
+    /// at for 32-bit lanes: the configured [`RunMerger::vector`],
+    /// except that `K4` needs registers of at most 4 lanes and
+    /// therefore always runs at [`VectorWidth::V128`]. The per-element
+    /// generalization is [`RunMerger::effective_vector_for`].
     pub fn effective_vector(&self) -> VectorWidth {
-        if self.width.k() < self.vector.lanes() {
+        self.effective_vector_for::<u32>()
+    }
+
+    /// The register width kernels are instantiated at for lane type
+    /// `T`: the configured [`RunMerger::vector`], folded down to
+    /// [`VectorWidth::V128`] whenever the (byte-clamped) K is smaller
+    /// than one wide register's lane count — a register must never
+    /// hold more than one K-run per side.
+    pub fn effective_vector_for<T: Lane>(&self) -> VectorWidth {
+        if self.width.clamp_for_bytes(T::BYTES).k() < self.vector.lanes_for::<T>() {
             VectorWidth::V128
         } else {
             self.vector
@@ -103,51 +113,41 @@ impl RunMerger {
 
     /// Merge sorted `a` and `b` into `out` (`out.len() = a.len() +
     /// b.len()`). Dispatches to the serial path when either run is
-    /// shorter than one kernel block.
+    /// shorter than one kernel block. The configured K is clamped to
+    /// the [`super::hybrid::MAX_K_BYTES`] budget for `T`'s byte width
+    /// (`K64` folds to `K32` for 8-byte lanes) before dispatch, so one
+    /// `RunMerger` serves every element type.
     pub fn merge<T: Lane>(&self, a: &[T], b: &[T], out: &mut [T]) {
         assert_eq!(out.len(), a.len() + b.len());
         if self.imp == MergeImpl::Serial {
             return merge_scalar(a, b, out);
         }
-        let k = self.width.k();
+        let k = self.width.clamp_for_bytes(T::BYTES).k();
         if a.len() < k || b.len() < k {
             return merge_scalar(a, b, out);
         }
         // Monomorphize on (vector type, register count N = 2K/W) so
         // every kernel loop bound is a compile-time constant and
         // unrolls (§Perf iteration 2: runtime-length kernel loops
-        // left ~3× on the table vs the Table 3 microbenches).
-        match (self.effective_vector(), self.width) {
-            (VectorWidth::V128, MergeWidth::K4) => {
-                self.merge_vectorized::<T, V128<T>, 2>(a, b, out, k)
-            }
-            (VectorWidth::V128, MergeWidth::K8) => {
-                self.merge_vectorized::<T, V128<T>, 4>(a, b, out, k)
-            }
-            (VectorWidth::V128, MergeWidth::K16) => {
-                self.merge_vectorized::<T, V128<T>, 8>(a, b, out, k)
-            }
-            (VectorWidth::V128, MergeWidth::K32) => {
-                self.merge_vectorized::<T, V128<T>, 16>(a, b, out, k)
-            }
-            (VectorWidth::V128, MergeWidth::K64) => {
-                self.merge_vectorized::<T, V128<T>, 32>(a, b, out, k)
-            }
-            (VectorWidth::V256, MergeWidth::K4) => {
-                unreachable!("effective_vector() folds K4/V256 to V128")
-            }
-            (VectorWidth::V256, MergeWidth::K8) => {
-                self.merge_vectorized::<T, V256<T>, 2>(a, b, out, k)
-            }
-            (VectorWidth::V256, MergeWidth::K16) => {
-                self.merge_vectorized::<T, V256<T>, 4>(a, b, out, k)
-            }
-            (VectorWidth::V256, MergeWidth::K32) => {
-                self.merge_vectorized::<T, V256<T>, 8>(a, b, out, k)
-            }
-            (VectorWidth::V256, MergeWidth::K64) => {
-                self.merge_vectorized::<T, V256<T>, 16>(a, b, out, k)
-            }
+        // left ~3× on the table vs the Table 3 microbenches). The
+        // dispatch is on the *register count* N, not MergeWidth, so
+        // the same arms serve 4- and 8-byte lanes; every arm below is
+        // provably inside the byte budget for every `Lane` type
+        // (`RegsFitMaxK` fires at monomorphization, so an over-budget
+        // arm would break the build even if unreachable at runtime).
+        let eff = self.effective_vector_for::<T>();
+        let n = 2 * k / eff.lanes_for::<T>();
+        match (eff, n) {
+            (VectorWidth::V128, 2) => self.merge_vectorized::<T, T::Reg128, 2>(a, b, out, k),
+            (VectorWidth::V128, 4) => self.merge_vectorized::<T, T::Reg128, 4>(a, b, out, k),
+            (VectorWidth::V128, 8) => self.merge_vectorized::<T, T::Reg128, 8>(a, b, out, k),
+            (VectorWidth::V128, 16) => self.merge_vectorized::<T, T::Reg128, 16>(a, b, out, k),
+            (VectorWidth::V128, 32) => self.merge_vectorized::<T, T::Reg128, 32>(a, b, out, k),
+            (VectorWidth::V256, 2) => self.merge_vectorized::<T, T::Reg256, 2>(a, b, out, k),
+            (VectorWidth::V256, 4) => self.merge_vectorized::<T, T::Reg256, 4>(a, b, out, k),
+            (VectorWidth::V256, 8) => self.merge_vectorized::<T, T::Reg256, 8>(a, b, out, k),
+            (VectorWidth::V256, 16) => self.merge_vectorized::<T, T::Reg256, 16>(a, b, out, k),
+            _ => unreachable!("clamped K {k} at {eff:?} yields no kernel ({n} registers)"),
         }
     }
 
@@ -166,7 +166,6 @@ impl RunMerger {
         let w = V::LANES;
         let kr = N / 2;
         debug_assert_eq!(kr * w, k);
-        debug_assert_eq!(kr, self.width.regs_at(self.effective_vector()));
         debug_assert!(k <= MAX_K, "K={k} exceeds MAX_K={MAX_K}");
         // In-flight block: 2K elements in N registers; lower K is
         // emitted each round, upper K stays. Stack-resident — the

@@ -549,3 +549,339 @@ fn runmerge_short_runs_fall_back_to_serial() {
     m.merge(&a, &b, &mut out);
     assert_eq!(out, vec![1, 2, 3, 4, 9]);
 }
+
+// ---- Element-generic kernels: u64 and KeyValue on the 64-bit regs ----
+
+use crate::simd::{KeyValue, Lane};
+
+fn sorted_pair_u64(rng: &mut Rng, k: usize, modv: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut a: Vec<u64> = (0..k).map(|_| rng.next_u64() % modv).collect();
+    let mut b: Vec<u64> = (0..k).map(|_| rng.next_u64() % modv).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    (a, b)
+}
+
+/// Key–payload pairs with dup-prone keys and *distinct* payloads, so
+/// the payload half of the packed comparison decides ties and any
+/// ordering divergence is observable.
+fn kv_run(rng: &mut Rng, len: usize, key_mod: u32, tag: u32) -> Vec<KeyValue> {
+    let mut v: Vec<KeyValue> =
+        (0..len).map(|i| KeyValue::new(rng.next_u32() % key_mod, tag + i as u32)).collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn merge_width_clamps_to_byte_budget() {
+    // The byte-denominated budget: 8-byte elements cap at K = 32.
+    assert_eq!(MergeWidth::K64.clamp_for_bytes(8), MergeWidth::K32);
+    assert_eq!(MergeWidth::K32.clamp_for_bytes(8), MergeWidth::K32);
+    assert_eq!(MergeWidth::K64.clamp_for_bytes(4), MergeWidth::K64);
+    for w in MergeWidth::all() {
+        assert_eq!(w.clamp_for_bytes(4), w, "4-byte lanes never clamp");
+    }
+}
+
+#[test]
+fn effective_vector_is_per_element_width() {
+    // K4 folds to V128 for u32 (4 < 8 lanes) but NOT for u64 (a V256D
+    // holds exactly one 4-element run per side), and the K64 → K32
+    // clamp happens before the fold decision.
+    let m = RunMerger { width: MergeWidth::K4, imp: MergeImpl::Hybrid, vector: VectorWidth::V256 };
+    assert_eq!(m.effective_vector_for::<u32>(), VectorWidth::V128);
+    assert_eq!(m.effective_vector_for::<u64>(), VectorWidth::V256);
+    assert_eq!(m.effective_vector_for::<KeyValue>(), VectorWidth::V256);
+    let m = RunMerger { width: MergeWidth::K64, imp: MergeImpl::Hybrid, vector: VectorWidth::V256 };
+    assert_eq!(m.effective_vector_for::<u64>(), VectorWidth::V256);
+}
+
+#[test]
+fn merge_slices_u64_all_budgeted_widths() {
+    // Both register kernels on V128D, every K inside the 256-byte
+    // budget (2 × 32 u64 = the full budget; K=64 would not compile).
+    forall(200, |rng| {
+        for k in [2usize, 4, 8, 16, 32] {
+            let (a, b) = sorted_pair_u64(rng, k, 1 << 40);
+            let mut expect = [a.clone(), b.clone()].concat();
+            expect.sort_unstable();
+            let mut out = vec![0u64; 2 * k];
+            bitonic::merge_slices(&a, &b, &mut out);
+            assert_eq!(out, expect, "vectorized u64 2x{k}");
+            let mut out = vec![0u64; 2 * k];
+            hybrid::merge_slices(&a, &b, &mut out);
+            assert_eq!(out, expect, "hybrid u64 2x{k}");
+        }
+    });
+}
+
+#[test]
+fn merge_slices_zero_one_u64_exhaustive() {
+    // Zero-one principle on the 2-lane register kernels: every
+    // (ones_a, ones_b) grid point for both impls at every budgeted K.
+    for k in [2usize, 4, 8, 16, 32] {
+        for ones_a in 0..=k {
+            for ones_b in 0..=k {
+                let a: Vec<u64> = (0..k).map(|i| u64::from(i >= k - ones_a)).collect();
+                let b: Vec<u64> = (0..k).map(|i| u64::from(i >= k - ones_b)).collect();
+                let mut expect = [a.clone(), b.clone()].concat();
+                expect.sort_unstable();
+                let mut out = vec![9u64; 2 * k];
+                bitonic::merge_slices(&a, &b, &mut out);
+                assert_eq!(out, expect, "vectorized 2x{k} ones=({ones_a},{ones_b})");
+                let mut out = vec![9u64; 2 * k];
+                hybrid::merge_slices(&a, &b, &mut out);
+                assert_eq!(out, expect, "hybrid 2x{k} ones=({ones_a},{ones_b})");
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_equals_vectorized_equals_scalar_u64_and_pairs() {
+    forall(200, |rng| {
+        let k = [2usize, 4, 8, 16, 32][rng.below(5)];
+        let (a, b) = sorted_pair_u64(rng, k, 64); // dup-heavy
+        let mut o1 = vec![0u64; 2 * k];
+        let mut o2 = vec![0u64; 2 * k];
+        let mut o3 = vec![0u64; 2 * k];
+        bitonic::merge_slices(&a, &b, &mut o1);
+        hybrid::merge_slices(&a, &b, &mut o2);
+        serial::merge_scalar(&a, &b, &mut o3);
+        assert_eq!(o1, o2);
+        assert_eq!(o2, o3);
+        let (a, b) = (kv_run(rng, k, 4, 0), kv_run(rng, k, 4, 1000));
+        let mut o1 = vec![KeyValue::MIN_VALUE; 2 * k];
+        let mut o2 = vec![KeyValue::MIN_VALUE; 2 * k];
+        let mut o3 = vec![KeyValue::MIN_VALUE; 2 * k];
+        bitonic::merge_slices(&a, &b, &mut o1);
+        hybrid::merge_slices(&a, &b, &mut o2);
+        serial::merge_scalar(&a, &b, &mut o3);
+        assert_eq!(o1, o2);
+        assert_eq!(o2, o3);
+    });
+}
+
+#[test]
+fn inregister_block_sort_u64_both_widths() {
+    // The generic in-register sort at W=2 (V128D) and W=4 (V256D):
+    // every Table 2 config at V128D; R ∈ {8,16,32} at V256D.
+    for (label, sorter) in table2_configs() {
+        forall(40, |rng| {
+            let mut block = rng.vec_u64(sorter.block_len_for::<u64>());
+            let mut expect = block.clone();
+            expect.sort_unstable();
+            sorter.sort_block(&mut block);
+            assert_eq!(block, expect, "{label} u64 V128D");
+        });
+    }
+    for r in [8usize, 16, 32] {
+        let sorter = InRegisterSorter::new(r, ColumnNetwork::OddEven)
+            .with_vector(VectorWidth::V256);
+        assert_eq!(sorter.block_len_for::<u64>(), 4 * r);
+        forall(40, |rng| {
+            let mut block = rng.vec_u64(sorter.block_len_for::<u64>());
+            let mut expect = block.clone();
+            expect.sort_unstable();
+            sorter.sort_block(&mut block);
+            assert_eq!(block, expect, "R={r} u64 V256D");
+        });
+    }
+}
+
+#[test]
+fn inregister_block_sort_u64_zero_one_sampled() {
+    // Zero-one sampling for the full W=2 block pipeline (column sort +
+    // transpose2 tiles + row merges): random 0/1 blocks, high volume.
+    let sorter = InRegisterSorter::paper_default();
+    let bl = sorter.block_len_for::<u64>();
+    assert_eq!(bl, 32, "R=16 × 2 lanes");
+    forall(500, |rng| {
+        let mut block: Vec<u64> = (0..bl).map(|_| rng.next_u64() & 1).collect();
+        let ones: usize = block.iter().map(|&b| b as usize).sum();
+        sorter.sort_block(&mut block);
+        let expect: Vec<u64> = (0..bl).map(|i| u64::from(i >= bl - ones)).collect();
+        assert_eq!(block, expect);
+    });
+}
+
+#[test]
+fn inregister_runs_and_tail_u64_pairs() {
+    // sort_runs at 8-byte widths: runs are block_len_for::<T> (32 at
+    // V128D, 64 at V256D), tails pad with MAX_VALUE and come back.
+    for (vector, want_run) in [(VectorWidth::V128, 32usize), (VectorWidth::V256, 64)] {
+        let sorter = InRegisterSorter::paper_default().with_vector(vector);
+        forall_indexed(60, |case, rng| {
+            let len = case * 5 + rng.below(9);
+            let mut data: Vec<KeyValue> = (0..len)
+                .map(|i| KeyValue::new(rng.next_u32() % 50, i as u32))
+                .collect();
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            let run = sorter.sort_runs(&mut data);
+            assert_eq!(run, want_run);
+            for (ri, chunk) in data.chunks(run).enumerate() {
+                assert_sorted(chunk, &format!("{vector:?} pair run {ri} len {len}"));
+            }
+            data.sort_unstable();
+            assert_eq!(data, expect, "{vector:?} len {len}: multiset changed");
+        });
+    }
+}
+
+#[test]
+fn inregister_x_sweep_u64_v256d() {
+    // Run-length targets at W=4 on 8-byte lanes: X ∈ {R, 2R, 4R}.
+    let sorter = InRegisterSorter::new(16, ColumnNetwork::Best).with_vector(VectorWidth::V256);
+    for x in [16usize, 32, 64] {
+        forall(30, |rng| {
+            let mut block = rng.vec_u64(sorter.block_len_for::<u64>());
+            let mut expect = block.clone();
+            expect.sort_unstable();
+            sorter.sort_block_to_runs(&mut block, x);
+            for (ri, run) in block.chunks(x).enumerate() {
+                assert_sorted(run, &format!("u64 V256D X={x} run {ri}"));
+            }
+            block.sort_unstable();
+            assert_eq!(block, expect, "X={x}: multiset changed");
+        });
+    }
+}
+
+#[test]
+fn runmerge_u64_property_all_combos_match_scalar_oracle() {
+    // Every MergeWidth × MergeImpl × VectorWidth on u64 runs, same
+    // edge shapes as the u32 sweep, vs merge_scalar. K64 exercises the
+    // clamp-to-K32 dispatch at both vector widths.
+    for vector in VectorWidth::all() {
+        let w = vector.lanes_for::<u64>();
+        for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                let k = width.clamp_for_bytes(8).k();
+                forall_indexed(80, |case, rng| {
+                    let (la, lb) = match case % 5 {
+                        0 => (rng.below(k), k + rng.below(3 * k)),
+                        1 => (
+                            k * (1 + rng.below(4)) + 1 + rng.below(w.max(2) - 1),
+                            k * (1 + rng.below(4)) + 1 + rng.below(w.max(2) - 1),
+                        ),
+                        2 => (k, k),
+                        3 => (k + rng.below(w), k + rng.below(w)),
+                        _ => (4 * k + rng.below(k), 4 * k + rng.below(k)),
+                    };
+                    let modv = if case % 2 == 0 { 4 } else { 1 << 45 };
+                    let mut a: Vec<u64> = (0..la).map(|_| rng.next_u64() % modv).collect();
+                    let mut b: Vec<u64> = (0..lb).map(|_| rng.next_u64() % modv).collect();
+                    a.sort_unstable();
+                    b.sort_unstable();
+                    let mut got = vec![0u64; la + lb];
+                    m.merge(&a, &b, &mut got);
+                    let mut expect = vec![0u64; la + lb];
+                    serial::merge_scalar(&a, &b, &mut expect);
+                    assert_eq!(
+                        got,
+                        expect,
+                        "{} {imp:?} 2x{} u64 la={la} lb={lb} mod={modv}",
+                        vector.name(),
+                        width.k()
+                    );
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn runmerge_zero_one_u64_all_combos() {
+    // Zero-one for the streaming merge at 8-byte lanes, every
+    // vector × width × impl, two kernel blocks per side.
+    for vector in VectorWidth::all() {
+        for (_, imp) in super::runmerge::table3_impls() {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                let n = 2 * width.clamp_for_bytes(8).k();
+                let stride = if n > 32 { 5 } else { 1 };
+                let mut marks: Vec<usize> = (0..=n).step_by(stride).collect();
+                if *marks.last().unwrap() != n {
+                    marks.push(n);
+                }
+                for &ones_a in &marks {
+                    for &ones_b in &marks {
+                        let a: Vec<u64> = (0..n).map(|i| u64::from(i >= n - ones_a)).collect();
+                        let b: Vec<u64> = (0..n).map(|i| u64::from(i >= n - ones_b)).collect();
+                        let mut got = vec![9u64; 2 * n];
+                        m.merge(&a, &b, &mut got);
+                        let mut expect = [a, b].concat();
+                        expect.sort_unstable();
+                        assert_eq!(
+                            got,
+                            expect,
+                            "{} {imp:?} 2x{} u64 ones=({ones_a},{ones_b})",
+                            vector.name(),
+                            width.k()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn runmerge_pairs_tie_break_pinned() {
+    // Tie-break determinism, pinned: equal keys throughout, payloads
+    // distinct. KeyValue's order is total (key, then payload), so
+    // every merger implementation must produce the *identical*
+    // payload-ascending sequence within each key group — the property
+    // the database index build (rowid order within key) relies on.
+    let a: Vec<KeyValue> = (0..32).map(|i| KeyValue::new(i / 8, 2 * i)).collect();
+    let b: Vec<KeyValue> = (0..32).map(|i| KeyValue::new(i / 8, 2 * i + 1)).collect();
+    let mut expect = [a.clone(), b.clone()].concat();
+    expect.sort_unstable();
+    // Pin the shape: within each of the 4 key groups, payloads strictly
+    // ascend and interleave a (even) with b (odd).
+    for group in expect.chunks(16) {
+        assert!(group.windows(2).all(|w| w[0].key() == w[1].key()));
+        assert!(group.windows(2).all(|w| w[0].payload() < w[1].payload()));
+    }
+    for vector in VectorWidth::all() {
+        for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
+            for width in MergeWidth::all() {
+                let m = RunMerger { width, imp, vector };
+                let mut got = vec![KeyValue::MIN_VALUE; 64];
+                m.merge(&a, &b, &mut got);
+                assert_eq!(
+                    got,
+                    expect,
+                    "{} {imp:?} 2x{}: tie-break order diverged",
+                    vector.name(),
+                    width.k()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn runmerge_pairs_property_vs_scalar() {
+    // Random key–payload runs through every combo vs merge_scalar.
+    for vector in VectorWidth::all() {
+        for (_, imp) in super::runmerge::table3_impls() {
+            for width in [MergeWidth::K4, MergeWidth::K16, MergeWidth::K64] {
+                let m = RunMerger { width, imp, vector };
+                forall(60, |rng| {
+                    let la = rng.below(200) + 1;
+                    let lb = rng.below(200) + 1;
+                    let a = kv_run(rng, la, 8, 0);
+                    let b = kv_run(rng, lb, 8, 100_000);
+                    let mut got = vec![KeyValue::MIN_VALUE; la + lb];
+                    m.merge(&a, &b, &mut got);
+                    let mut expect = vec![KeyValue::MIN_VALUE; la + lb];
+                    serial::merge_scalar(&a, &b, &mut expect);
+                    assert_eq!(got, expect, "{} {imp:?} 2x{}", vector.name(), width.k());
+                });
+            }
+        }
+    }
+}

@@ -322,7 +322,7 @@ fn cmd_serve(flags: &Flags) {
             t.name,
             t.weight,
             t.share,
-            t.credit_elems,
+            t.credit_bytes,
             t.accepted,
             t.shed,
             t.shed_over_share,

@@ -1,13 +1,30 @@
-//! Lane-element trait: the 32-bit scalar types the paper sorts.
+//! Lane-element trait: the scalar types the paper sorts — 32-bit
+//! lanes (`u32`/`i32`/`f32`) and, since the element-width refactor,
+//! 64-bit lanes (`u64`) and packed key–payload pairs ([`KeyValue`]).
+//!
+//! Every `Lane` knows its byte width ([`Lane::BYTES`]) and names the
+//! concrete 128/256-bit register types that carry it
+//! ([`Lane::Reg128`] / [`Lane::Reg256`]): 4-byte lanes ride
+//! [`super::V128`]/[`super::V256`] (W = 4/8), 8-byte lanes ride
+//! [`super::V128D`]/[`super::V256D`] (W = 2/4). Kernels dispatch on
+//! these associated types, so the same comparator networks, bitonic
+//! mergers, and K-flight run merges serve every element width.
 
-/// A 32-bit scalar that can live in one lane of a [`super::V128`].
+use super::v128::V128;
+use super::v128d::V128D;
+use super::v256::V256;
+use super::v256d::V256D;
+use super::vector::Vector;
+
+/// A scalar that can live in one lane of a SIMD register.
 ///
 /// The paper evaluates 32-bit integers; we additionally support `u32`
 /// and `f32` (NEON's `vminq_f32`/`vmaxq_f32` exist and the algorithm is
-/// type-agnostic). All comparator logic is expressed through
-/// [`Lane::lane_min`]/[`Lane::lane_max`] so that kernels stay branchless:
-/// for integers these become `pminsd`/`pmaxsd`-class instructions, for
-/// `f32` `minps`/`maxps`.
+/// type-agnostic), plus 8-byte lanes — `u64` and [`KeyValue`] — for
+/// the database `(key, rowid)` scenario. All comparator logic is
+/// expressed through [`Lane::lane_min`]/[`Lane::lane_max`] so that
+/// kernels stay branchless: for integers these become
+/// `pminsd`/`pmaxsd`-class instructions, for `f32` `minps`/`maxps`.
 ///
 /// `f32` note: like NEON's `vminq_f32`, ordering is IEEE `<`; sorting
 /// slices containing NaN is unsupported (same contract as
@@ -17,6 +34,16 @@ pub trait Lane: Copy + PartialOrd + core::fmt::Debug + Send + Sync + 'static {
     const MIN_VALUE: Self;
     /// Largest representable value (identity for `min`, used for padding).
     const MAX_VALUE: Self;
+    /// Lane width in bytes (4 or 8). Lanes-per-register follows as
+    /// `register_bits / (8 * BYTES)`: a 128-bit register holds four
+    /// 4-byte lanes or two 8-byte lanes.
+    const BYTES: usize;
+    /// The 128-bit register type carrying this element width
+    /// ([`super::V128`] for 4-byte lanes, [`super::V128D`] for 8-byte).
+    type Reg128: Vector<Self>;
+    /// The 256-bit register type carrying this element width
+    /// ([`super::V256`] for 4-byte lanes, [`super::V256D`] for 8-byte).
+    type Reg256: Vector<Self>;
 
     /// Branchless minimum of two lanes.
     fn lane_min(self, other: Self) -> Self;
@@ -30,8 +57,8 @@ pub trait Lane: Copy + PartialOrd + core::fmt::Debug + Send + Sync + 'static {
     /// branch, so no misprediction penalty in the serial merge path.
     #[inline(always)]
     fn select_le<T: Copy>(self, other: Self, a: T, b: T) -> T {
-        // `PartialOrd` on the three concrete Lane types is total for
-        // the values we admit (no NaN), and LLVM turns this into cmov.
+        // `PartialOrd` on the concrete Lane types is total for the
+        // values we admit (no NaN), and LLVM turns this into cmov.
         if self <= other {
             a
         } else {
@@ -43,6 +70,9 @@ pub trait Lane: Copy + PartialOrd + core::fmt::Debug + Send + Sync + 'static {
 impl Lane for i32 {
     const MIN_VALUE: Self = i32::MIN;
     const MAX_VALUE: Self = i32::MAX;
+    const BYTES: usize = 4;
+    type Reg128 = V128<i32>;
+    type Reg256 = V256<i32>;
     #[inline(always)]
     fn lane_min(self, other: Self) -> Self {
         Ord::min(self, other)
@@ -56,6 +86,9 @@ impl Lane for i32 {
 impl Lane for u32 {
     const MIN_VALUE: Self = u32::MIN;
     const MAX_VALUE: Self = u32::MAX;
+    const BYTES: usize = 4;
+    type Reg128 = V128<u32>;
+    type Reg256 = V256<u32>;
     #[inline(always)]
     fn lane_min(self, other: Self) -> Self {
         Ord::min(self, other)
@@ -69,6 +102,9 @@ impl Lane for u32 {
 impl Lane for f32 {
     const MIN_VALUE: Self = f32::NEG_INFINITY;
     const MAX_VALUE: Self = f32::INFINITY;
+    const BYTES: usize = 4;
+    type Reg128 = V128<f32>;
+    type Reg256 = V256<f32>;
     #[inline(always)]
     fn lane_min(self, other: Self) -> Self {
         // NEON vminq_f32 semantics for non-NaN inputs; branchless minps.
@@ -88,9 +124,90 @@ impl Lane for f32 {
     }
 }
 
-/// Sort key packing for the (key, payload) examples: pack a `u32` key
-/// and a `u32` row id into one `u64` so the SIMD path sorts pairs too
-/// (the paper's database-retrieval motivation, examples/database_keys).
+impl Lane for u64 {
+    const MIN_VALUE: Self = u64::MIN;
+    const MAX_VALUE: Self = u64::MAX;
+    const BYTES: usize = 8;
+    type Reg128 = V128D<u64>;
+    type Reg256 = V256D<u64>;
+    #[inline(always)]
+    fn lane_min(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    #[inline(always)]
+    fn lane_max(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+}
+
+/// A packed `(key, payload)` pair — the paper's database motivation
+/// (§1: retrieving `(key, rowid)` tuples) as a first-class lane type.
+///
+/// The pair is one `u64` lane: key in the high 32 bits, payload in the
+/// low 32 (the [`pack_key_rowid`] layout). A single unsigned 64-bit
+/// comparison therefore orders by key first, with the payload breaking
+/// key ties deterministically (ascending payload) — so every kernel
+/// from the comparator networks to the K-flight run merge sorts pairs
+/// without knowing they are pairs, and equal-key runs come out in a
+/// pinned, reproducible payload order.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+#[repr(transparent)]
+pub struct KeyValue(u64);
+
+impl KeyValue {
+    /// Pack a key and payload into one lane.
+    #[inline(always)]
+    pub fn new(key: u32, payload: u32) -> Self {
+        KeyValue(pack_key_rowid(key, payload))
+    }
+
+    /// The sort key (high 32 bits).
+    #[inline(always)]
+    pub fn key(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+
+    /// The carried payload (low 32 bits).
+    #[inline(always)]
+    pub fn payload(self) -> u32 {
+        self.0 as u32
+    }
+
+    /// The raw packed representation.
+    #[inline(always)]
+    pub fn packed(self) -> u64 {
+        self.0
+    }
+
+    /// Wrap an already-packed `u64` (inverse of [`KeyValue::packed`]).
+    #[inline(always)]
+    pub fn from_packed(p: u64) -> Self {
+        KeyValue(p)
+    }
+}
+
+impl Lane for KeyValue {
+    const MIN_VALUE: Self = KeyValue(u64::MIN);
+    const MAX_VALUE: Self = KeyValue(u64::MAX);
+    const BYTES: usize = 8;
+    type Reg128 = V128D<KeyValue>;
+    type Reg256 = V256D<KeyValue>;
+    #[inline(always)]
+    fn lane_min(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    #[inline(always)]
+    fn lane_max(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+}
+
+/// Pack a `(key, rowid)` pair into one sortable `u64` — the paper's
+/// database-retrieval representation (§1). Sorting the packed values
+/// orders by key with rowid as a deterministic tie-break, and the
+/// SIMD path sorts them natively: `u64` (and the typed [`KeyValue`]
+/// wrapper) are `Lane`s carried two-per-register by
+/// [`super::V128D`].
 #[inline(always)]
 pub fn pack_key_rowid(key: u32, rowid: u32) -> u64 {
     ((key as u64) << 32) | rowid as u64

@@ -18,7 +18,15 @@
 //! * [`V128`] — `W = 4`, the paper's geometry (and the default);
 //! * [`V256`] — `W = 8`, paired q-registers / SVE-256, each op
 //!   lowering to two `V128` ops on this host (see `v256.rs` for the
-//!   exact cost accounting).
+//!   exact cost accounting);
+//! * [`V128D`] / [`V256D`] — the same two register widths at 64-bit
+//!   element width (`W = 2` / `W = 4`), carrying `u64` keys and
+//!   packed [`KeyValue`] pairs for the database `(key, rowid)` path.
+//!
+//! Element width is a first-class axis: every [`Lane`] names its byte
+//! width and its concrete register types ([`Lane::BYTES`],
+//! [`Lane::Reg128`], [`Lane::Reg256`]), and kernels dispatch through
+//! those instead of hard-wiring `V128`/`V256`.
 //!
 //! [`VectorWidth`] is the runtime selector configs carry;
 //! [`Lanes`] is the `Lane`-free width marker const guards use.
@@ -27,12 +35,16 @@
 
 mod lane;
 mod v128;
+mod v128d;
 mod v256;
+mod v256d;
 mod vector;
 
-pub use lane::{pack_key_rowid, unpack_key_rowid, Lane};
+pub use lane::{pack_key_rowid, unpack_key_rowid, KeyValue, Lane};
 pub use v128::{transpose4, transpose_rx4, V128};
+pub use v128d::{transpose2, V128D};
 pub use v256::{transpose8, V256};
+pub use v256d::{transpose4d, V256D};
 pub use vector::{Lanes, Vector, VectorWidth};
 
 /// Number of 32-bit lanes per 128-bit base register — the paper's `W`

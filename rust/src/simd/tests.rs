@@ -258,3 +258,213 @@ fn vector_width_lanes_and_names() {
     assert_eq!(VectorWidth::V256.lanes(), 8);
     assert_eq!(VectorWidth::all().map(|w| w.name()), ["V128", "V256"]);
 }
+
+#[test]
+fn vector_width_lanes_for_element_bytes() {
+    assert_eq!(VectorWidth::V128.lanes_for::<u32>(), 4);
+    assert_eq!(VectorWidth::V256.lanes_for::<u32>(), 8);
+    assert_eq!(VectorWidth::V128.lanes_for::<u64>(), 2);
+    assert_eq!(VectorWidth::V256.lanes_for::<u64>(), 4);
+    assert_eq!(VectorWidth::V128.lanes_for::<KeyValue>(), 2);
+    assert_eq!(VectorWidth::V256.lanes_for::<KeyValue>(), 4);
+}
+
+// ---- V128D / V256D: the 64-bit-lane register types ----
+
+fn d(a: u64, b: u64) -> V128D<u64> {
+    V128D([a, b])
+}
+
+#[test]
+fn v128d_splat_load_store_lane_roundtrip() {
+    let x = V128D::<u64>::splat(7);
+    assert_eq!(x.to_array(), [7, 7]);
+    // Values above u32::MAX: the lanes are genuinely 64-bit.
+    let src = [u64::MAX - 1, 1 << 40, 3];
+    let r = V128D::load(&src);
+    let mut dst = [0u64; 2];
+    r.store(&mut dst);
+    assert_eq!(dst, [u64::MAX - 1, 1 << 40]);
+    assert_eq!(r.lane(1), 1 << 40);
+    assert_eq!(<V128D<u64> as Lanes>::LANES, 2);
+    assert_eq!(<V128D<u64> as Lanes>::LANE_BYTES, 8);
+}
+
+#[test]
+fn v128d_min_max_cmpswap_shuffles() {
+    let a = d(1 << 35, 2);
+    let b = d(5, u64::MAX);
+    assert_eq!(a.min(b).to_array(), [5, 2]);
+    assert_eq!(a.max(b).to_array(), [1 << 35, u64::MAX]);
+    let (lo, hi) = a.cmpswap(b);
+    assert_eq!(lo, a.min(b));
+    assert_eq!(hi, a.max(b));
+    assert_eq!(a.trn1(b).to_array(), [1 << 35, 5]);
+    assert_eq!(a.trn2(b).to_array(), [2, u64::MAX]);
+    assert_eq!(a.swap_halves().to_array(), [2, 1 << 35]);
+    // At two 64-bit lanes the half-swap IS the full reversal.
+    assert_eq!(a.reverse(), a.swap_halves());
+}
+
+#[test]
+fn v128d_sort_and_merge_lanes_exhaustive() {
+    // Two lanes: every ordering is bitonic, so both the sorter and the
+    // single-stage merge must sort every input.
+    for vals in [[0u64, 1], [1, 0], [3, 3], [u64::MAX, 0]] {
+        let mut expect = vals;
+        expect.sort_unstable();
+        assert_eq!(Vector::sort_lanes(V128D(vals)).to_array(), expect, "{vals:?}");
+        assert_eq!(Vector::bitonic_merge_lanes(V128D(vals)).to_array(), expect);
+    }
+}
+
+#[test]
+fn transpose2_is_matrix_transpose() {
+    let m = [d(0, 1), d(10, 11)];
+    let t = transpose2(m);
+    for i in 0..2 {
+        for j in 0..2 {
+            assert_eq!(t[i].lane(j), m[j].lane(i), "t[{i}][{j}]");
+        }
+    }
+    assert_eq!(transpose2(t), m); // involution
+    let mut tile = m.to_vec();
+    V128D::transpose_tile(&mut tile);
+    assert_eq!(tile.as_slice(), &t[..]);
+}
+
+fn d4(vals: [u64; 4]) -> V256D<u64> {
+    V256D::load(&vals)
+}
+
+#[test]
+fn v256d_splat_load_store_lane_roundtrip() {
+    let x = V256D::<u64>::splat(9);
+    assert_eq!(x.to_array(), [9; 4]);
+    let src: Vec<u64> = (1..=6).map(|i| i << 33).collect();
+    let r = V256D::load(&src);
+    assert_eq!(r.to_array(), [1 << 33, 2 << 33, 3 << 33, 4 << 33]);
+    let mut dst = [0u64; 5];
+    Vector::store(r, &mut dst);
+    assert_eq!(&dst[..4], &[1 << 33, 2 << 33, 3 << 33, 4 << 33]);
+    assert_eq!(dst[4], 0, "store writes exactly LANES elements");
+    for i in 0..4 {
+        assert_eq!(Vector::lane(r, i), ((i + 1) as u64) << 33);
+    }
+    assert_eq!(<V256D<u64> as Lanes>::LANES, 4);
+    assert_eq!(<V256D<u64> as Lanes>::LANE_BYTES, 8);
+}
+
+#[test]
+fn v256d_min_max_reverse_lower_to_v128d_pairs() {
+    let a = d4([1, 9 << 40, 3, 4]);
+    let b = d4([2, 5, 7 << 40, 4]);
+    assert_eq!(Vector::min(a, b).0[0], a.0[0].min(b.0[0]));
+    assert_eq!(Vector::min(a, b).0[1], a.0[1].min(b.0[1]));
+    assert_eq!(Vector::max(a, b).0[0], a.0[0].max(b.0[0]));
+    assert_eq!(Vector::max(a, b).0[1], a.0[1].max(b.0[1]));
+    assert_eq!(Vector::min(a, b).to_array(), [1, 5, 3, 4]);
+    assert_eq!(Vector::max(a, b).to_array(), [2, 9 << 40, 7 << 40, 4]);
+    assert_eq!(Vector::reverse(d4([0, 1, 2, 3])).to_array(), [3, 2, 1, 0]);
+}
+
+#[test]
+fn v256d_bitonic_merge_lanes_sorts_all_bitonic_01() {
+    // Zero-one principle over every ascending⌢descending 0/1 pattern
+    // of 4 lanes.
+    for rise in 0..=4usize {
+        for fall in rise..=4 {
+            let mut arr = [0u64; 4];
+            for v in arr.iter_mut().take(fall).skip(rise) {
+                *v = 1;
+            }
+            let mut expect = arr;
+            expect.sort_unstable();
+            let got = Vector::bitonic_merge_lanes(d4(arr)).to_array();
+            assert_eq!(got, expect, "rise={rise} fall={fall}");
+        }
+    }
+}
+
+#[test]
+fn v256d_sort_lanes_random_and_dups() {
+    let mut rng = crate::testutil::Rng::new(23);
+    for _ in 0..500 {
+        let mut vals = [0u64; 4];
+        for v in vals.iter_mut() {
+            // Heavy duplicates, high bits set: both comparison halves
+            // of the 64-bit lane matter.
+            *v = (rng.next_u64() % 4) << 40 | rng.next_u64() % 4;
+        }
+        let mut expect = vals;
+        expect.sort_unstable();
+        assert_eq!(Vector::sort_lanes(d4(vals)).to_array(), expect, "{vals:?}");
+    }
+}
+
+#[test]
+fn transpose4d_is_matrix_transpose() {
+    let m: Vec<V256D<u64>> =
+        (0..4).map(|i| d4(std::array::from_fn(|j| (10 * i + j) as u64))).collect();
+    let t = transpose4d([m[0], m[1], m[2], m[3]]);
+    for i in 0..4 {
+        for j in 0..4 {
+            assert_eq!(Vector::lane(t[i], j), Vector::lane(m[j], i), "t[{i}][{j}]");
+        }
+    }
+    // Involution.
+    let tt = transpose4d(t);
+    for (a, b) in tt.iter().zip(&m) {
+        assert_eq!(a, b);
+    }
+    // The Vector trait tile entry point agrees.
+    let mut tile = m.clone();
+    V256D::transpose_tile(&mut tile);
+    assert_eq!(tile.as_slice(), &t[..]);
+}
+
+// ---- KeyValue: the packed key–payload pair ----
+
+#[test]
+fn keyvalue_accessors_and_packed_roundtrip() {
+    let kv = KeyValue::new(0xDEAD_BEEF, 42);
+    assert_eq!(kv.key(), 0xDEAD_BEEF);
+    assert_eq!(kv.payload(), 42);
+    assert_eq!(KeyValue::from_packed(kv.packed()), kv);
+    // Same layout as the scalar baseline's packing helper.
+    assert_eq!(kv.packed(), pack_key_rowid(0xDEAD_BEEF, 42));
+}
+
+#[test]
+fn keyvalue_order_is_key_major_payload_tiebreak() {
+    let lo_key = KeyValue::new(5, u32::MAX);
+    let hi_key = KeyValue::new(6, 0);
+    assert!(lo_key < hi_key, "key dominates payload");
+    let tie_a = KeyValue::new(7, 1);
+    let tie_b = KeyValue::new(7, 2);
+    assert!(tie_a < tie_b, "equal keys break ties by payload");
+    // Derived Ord == packed u64 order, exhaustively sampled.
+    let mut rng = crate::testutil::Rng::new(29);
+    for _ in 0..1000 {
+        let a = KeyValue::new(rng.next_u32() % 8, rng.next_u32() % 8);
+        let b = KeyValue::new(rng.next_u32() % 8, rng.next_u32() % 8);
+        assert_eq!(a.cmp(&b), a.packed().cmp(&b.packed()), "{a:?} vs {b:?}");
+    }
+}
+
+#[test]
+fn keyvalue_is_a_lane() {
+    assert_eq!(KeyValue::BYTES, 8);
+    assert_eq!(KeyValue::MIN_VALUE, KeyValue::new(0, 0));
+    assert_eq!(KeyValue::MAX_VALUE, KeyValue::new(u32::MAX, u32::MAX));
+    let a = KeyValue::new(3, 9);
+    let b = KeyValue::new(3, 1);
+    assert_eq!(a.lane_min(b), b);
+    assert_eq!(a.lane_max(b), a);
+    // Pairs ride the 64-bit registers.
+    let r = V128D::load(&[KeyValue::new(2, 0), KeyValue::new(1, 5)]);
+    assert_eq!(
+        Vector::sort_lanes(r).to_array(),
+        [KeyValue::new(1, 5), KeyValue::new(2, 0)]
+    );
+}

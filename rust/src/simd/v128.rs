@@ -162,6 +162,7 @@ impl<T: Lane> V128<T> {
 
 impl<T: Lane> Lanes for V128<T> {
     const LANES: usize = W;
+    const LANE_BYTES: usize = 4;
 }
 
 impl<T: Lane> Vector<T> for V128<T> {

@@ -1,0 +1,173 @@
+//! The 128-bit, 2-lane (64-bit element) vector register type.
+
+use super::lane::Lane;
+use super::vector::{Lanes, Vector};
+
+/// Lanes per [`V128D`] register — the paper's `W` replayed at 64-bit
+/// element width: a 128-bit register holds two 8-byte lanes.
+pub const W64: usize = 2;
+
+/// A NEON `q`-register stand-in at 64-bit element width: two lanes,
+/// 16-byte aligned — the register the database `(key, rowid)` path
+/// sorts on (`u64` keys, packed [`super::KeyValue`] pairs).
+///
+/// Same instruction vocabulary as [`super::V128`], one element size
+/// up: the shuffles model the `_u64` forms (`vtrn1q_u64`,
+/// `vzip1q_u64`, `vextq_u64 #8`). With only two lanes the shuffle
+/// algebra collapses — `rev64`'s within-half reversal is the identity
+/// at 64-bit granularity, so full reversal is the single `vextq`
+/// half-swap, and the intra-register bitonic merge is one comparator
+/// stage instead of [`super::V128`]'s two.
+#[derive(Clone, Copy, PartialEq, Debug)]
+#[repr(C, align(16))]
+pub struct V128D<T: Lane>(pub [T; W64]);
+
+impl<T: Lane> V128D<T> {
+    /// Broadcast one scalar to both lanes (`vdupq_n_u64`).
+    #[inline(always)]
+    pub fn splat(v: T) -> Self {
+        V128D([v; W64])
+    }
+
+    /// Load two contiguous lanes from `src` (`vld1q_u64`). Panics if
+    /// `src.len() < 2` — kernels guarantee whole-vector access.
+    #[inline(always)]
+    pub fn load(src: &[T]) -> Self {
+        V128D([src[0], src[1]])
+    }
+
+    /// Store both lanes to `dst` (`vst1q_u64`).
+    #[inline(always)]
+    pub fn store(self, dst: &mut [T]) {
+        dst[..W64].copy_from_slice(&self.0);
+    }
+
+    /// Lane accessor (`vgetq_lane_u64`).
+    #[inline(always)]
+    pub fn lane(self, i: usize) -> T {
+        self.0[i]
+    }
+
+    /// Lane-wise minimum — one half of a vector comparator. (AArch64
+    /// has no `vminq_u64`; hardware lowers this to `cmhi` + `bsl`,
+    /// still branchless.)
+    #[inline(always)]
+    pub fn min(self, o: Self) -> Self {
+        V128D([self.0[0].lane_min(o.0[0]), self.0[1].lane_min(o.0[1])])
+    }
+
+    /// Lane-wise maximum — the other half of a comparator.
+    #[inline(always)]
+    pub fn max(self, o: Self) -> Self {
+        V128D([self.0[0].lane_max(o.0[0]), self.0[1].lane_max(o.0[1])])
+    }
+
+    /// Vector comparator: `(min, max)` lane-wise.
+    #[inline(always)]
+    pub fn cmpswap(self, o: Self) -> (Self, Self) {
+        (self.min(o), self.max(o))
+    }
+
+    /// Transpose even lanes (`vtrn1q_u64` = `vzip1q_u64`): `[a0,b0]`.
+    #[inline(always)]
+    pub fn trn1(self, o: Self) -> Self {
+        V128D([self.0[0], o.0[0]])
+    }
+
+    /// Transpose odd lanes (`vtrn2q_u64` = `vzip2q_u64`): `[a1,b1]`.
+    #[inline(always)]
+    pub fn trn2(self, o: Self) -> Self {
+        V128D([self.0[1], o.0[1]])
+    }
+
+    /// Swap the two 64-bit lanes (`vextq_u64 #8`): `[a1,a0]` — at two
+    /// lanes this *is* the full reversal.
+    #[inline(always)]
+    pub fn swap_halves(self) -> Self {
+        V128D([self.0[1], self.0[0]])
+    }
+
+    /// Full lane reversal `[a1,a0]`.
+    #[inline(always)]
+    pub fn reverse(self) -> Self {
+        self.swap_halves()
+    }
+
+    /// Materialize as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [T; W64] {
+        self.0
+    }
+}
+
+impl<T: Lane> Lanes for V128D<T> {
+    const LANES: usize = W64;
+    const LANE_BYTES: usize = 8;
+}
+
+impl<T: Lane> Vector<T> for V128D<T> {
+    #[inline(always)]
+    fn splat(v: T) -> Self {
+        V128D::splat(v)
+    }
+
+    #[inline(always)]
+    fn load(src: &[T]) -> Self {
+        V128D::load(src)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [T]) {
+        V128D::store(self, dst)
+    }
+
+    #[inline(always)]
+    fn lane(self, i: usize) -> T {
+        V128D::lane(self, i)
+    }
+
+    #[inline(always)]
+    fn min(self, o: Self) -> Self {
+        V128D::min(self, o)
+    }
+
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        V128D::max(self, o)
+    }
+
+    #[inline(always)]
+    fn reverse(self) -> Self {
+        V128D::reverse(self)
+    }
+
+    /// `log2(2) = 1` half-cleaner stage: one comparator between the
+    /// two lanes sorts any bitonic (here: any) 2-lane sequence.
+    #[inline(always)]
+    fn bitonic_merge_lanes(self) -> Self {
+        V128D([self.0[0].lane_min(self.0[1]), self.0[0].lane_max(self.0[1])])
+    }
+
+    /// One comparator sorts two lanes — the degenerate bitonic sorter.
+    #[inline(always)]
+    fn sort_lanes(self) -> Self {
+        self.bitonic_merge_lanes()
+    }
+
+    #[inline(always)]
+    fn transpose_tile(tile: &mut [Self]) {
+        assert_eq!(tile.len(), W64, "V128D tile is 2x2");
+        let t = transpose2([tile[0], tile[1]]);
+        tile.copy_from_slice(&t);
+    }
+}
+
+/// 2×2 in-register matrix transpose — the base matrix transpose at
+/// 64-bit element width: one `vtrn1q_u64` + one `vtrn2q_u64`, no
+/// memory traffic. An `R×2` transpose decomposes into `R/2` of these,
+/// exactly as the 32-bit path decomposes `R×4` into `transpose4`
+/// tiles.
+#[inline(always)]
+pub fn transpose2<T: Lane>(r: [V128D<T>; 2]) -> [V128D<T>; 2] {
+    [r[0].trn1(r[1]), r[0].trn2(r[1])]
+}

@@ -57,6 +57,7 @@ impl<T: Lane> V256<T> {
 
 impl<T: Lane> Lanes for V256<T> {
     const LANES: usize = 2 * W;
+    const LANE_BYTES: usize = 4;
 }
 
 impl<T: Lane> Vector<T> for V256<T> {

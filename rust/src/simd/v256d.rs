@@ -1,0 +1,140 @@
+//! The 256-bit, 4-lane (64-bit element) vector register type: paired
+//! `q`-registers at 8-byte lane width.
+//!
+//! The 64-bit sibling of [`super::V256`]: models SVE-256 / paired
+//! NEON `q`-registers carrying `u64` keys or packed
+//! [`super::KeyValue`] pairs, four lanes per logical register. Every
+//! op lowers to exactly two [`V128D`] ops on this host, keeping the
+//! cost model honest at this width too.
+
+use super::lane::Lane;
+use super::v128d::{transpose2, V128D, W64};
+use super::vector::{Lanes, Vector};
+
+/// Four 64-bit lanes as a pair of [`V128D`] halves: lane `i` lives in
+/// half `i / 2`, lane `i % 2`. Lane 0 is the lowest-addressed element
+/// on load, matching the `V128D` convention.
+#[derive(Clone, Copy, PartialEq, Debug)]
+#[repr(C, align(32))]
+pub struct V256D<T: Lane>(pub [V128D<T>; 2]);
+
+impl<T: Lane> V256D<T> {
+    /// Lanes per register.
+    pub const LANES: usize = 2 * W64;
+
+    /// Broadcast one scalar to all four lanes.
+    #[inline(always)]
+    pub fn splat(v: T) -> Self {
+        V256D([V128D::splat(v), V128D::splat(v)])
+    }
+
+    /// Load four contiguous lanes from `src` (`vld1q_u64_x2` / SVE
+    /// `ld1d`). Panics if `src.len() < 4`.
+    #[inline(always)]
+    pub fn load(src: &[T]) -> Self {
+        V256D([V128D::load(&src[..W64]), V128D::load(&src[W64..2 * W64])])
+    }
+
+    /// Store four lanes to `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [T]) {
+        self.0[0].store(&mut dst[..W64]);
+        self.0[1].store(&mut dst[W64..2 * W64]);
+    }
+
+    /// Materialize as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [T; 4] {
+        let (a, b) = (self.0[0].to_array(), self.0[1].to_array());
+        [a[0], a[1], b[0], b[1]]
+    }
+}
+
+impl<T: Lane> Lanes for V256D<T> {
+    const LANES: usize = 2 * W64;
+    const LANE_BYTES: usize = 8;
+}
+
+impl<T: Lane> Vector<T> for V256D<T> {
+    #[inline(always)]
+    fn splat(v: T) -> Self {
+        V256D::splat(v)
+    }
+
+    #[inline(always)]
+    fn load(src: &[T]) -> Self {
+        V256D::load(src)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [T]) {
+        V256D::store(self, dst)
+    }
+
+    #[inline(always)]
+    fn lane(self, i: usize) -> T {
+        self.0[i / W64].lane(i % W64)
+    }
+
+    /// Two lane-wise mins — the paired-register lowering.
+    #[inline(always)]
+    fn min(self, o: Self) -> Self {
+        V256D([self.0[0].min(o.0[0]), self.0[1].min(o.0[1])])
+    }
+
+    /// Two lane-wise maxes.
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        V256D([self.0[0].max(o.0[0]), self.0[1].max(o.0[1])])
+    }
+
+    /// Reverse all four lanes: reverse each half and swap the pair.
+    #[inline(always)]
+    fn reverse(self) -> Self {
+        V256D([self.0[1].reverse(), self.0[0].reverse()])
+    }
+
+    /// Two half-cleaner stages (distances 2, 1). The distance-2 stage
+    /// is the pair boundary: one `cmpswap` *between* the two halves
+    /// (no shuffle — the paired-register payoff); the distance-1
+    /// stage is each half's single-comparator merge.
+    #[inline(always)]
+    fn bitonic_merge_lanes(self) -> Self {
+        let (lo, hi) = self.0[0].cmpswap(self.0[1]);
+        V256D([Vector::bitonic_merge_lanes(lo), Vector::bitonic_merge_lanes(hi)])
+    }
+
+    /// Sort both halves, reverse the upper to form a bitonic
+    /// sequence, then merge — the 4-lane bitonic sorter.
+    #[inline(always)]
+    fn sort_lanes(self) -> Self {
+        let lo = Vector::sort_lanes(self.0[0]);
+        let hi = V128D::reverse(Vector::sort_lanes(self.0[1]));
+        Vector::bitonic_merge_lanes(V256D([lo, hi]))
+    }
+
+    #[inline(always)]
+    fn transpose_tile(tile: &mut [Self]) {
+        assert_eq!(tile.len(), 2 * W64, "V256D tile is 4x4");
+        let t = transpose4d([tile[0], tile[1], tile[2], tile[3]]);
+        tile.copy_from_slice(&t);
+    }
+}
+
+/// 4×4 in-register matrix transpose over [`V256D`] registers, built
+/// from four 2×2 [`transpose2`] base transposes — the 2×2 block
+/// decomposition `[[A, B], [C, D]]ᵀ = [[Aᵀ, Cᵀ], [Bᵀ, Dᵀ]]`, where
+/// each letter is the 2×2 tile one `V128D` half-column contributes.
+#[inline(always)]
+pub fn transpose4d<T: Lane>(r: [V256D<T>; 4]) -> [V256D<T>; 4] {
+    let a = transpose2([r[0].0[0], r[1].0[0]]);
+    let b = transpose2([r[0].0[1], r[1].0[1]]);
+    let c = transpose2([r[2].0[0], r[3].0[0]]);
+    let d = transpose2([r[2].0[1], r[3].0[1]]);
+    [
+        V256D([a[0], c[0]]),
+        V256D([a[1], c[1]]),
+        V256D([b[0], d[0]]),
+        V256D([b[1], d[1]]),
+    ]
+}

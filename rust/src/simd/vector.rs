@@ -5,11 +5,16 @@
 //! paper motivates (§2.2: throughput is governed by vector width ×
 //! register budget) needs the *same* kernels at other widths, so the
 //! kernel layer is generic over [`Vector`] instead of hard-wired to
-//! [`super::V128`]. Two implementations exist:
+//! [`super::V128`]. Four implementations exist, spanning both the
+//! register-width and the element-width axis:
 //!
-//! * [`super::V128`] — `W = 4`, the paper's NEON `q`-register;
-//! * [`super::V256`] — `W = 8`, modeling paired `q`-registers /
-//!   SVE-256, lowering every op to two `V128` ops on this host.
+//! * [`super::V128`] — `W = 4` × 32-bit, the paper's NEON `q`-register;
+//! * [`super::V256`] — `W = 8` × 32-bit, modeling paired `q`-registers /
+//!   SVE-256, lowering every op to two `V128` ops on this host;
+//! * [`super::V128D`] — `W = 2` × 64-bit (NEON `vmovq_n_u64` geometry),
+//!   carrying `u64` keys and packed [`super::KeyValue`] pairs;
+//! * [`super::V256D`] — `W = 4` × 64-bit, the paired-register double
+//!   of `V128D`.
 //!
 //! Only the operations the kernels actually consume are on the trait;
 //! width-specific shuffles (`zip`/`uzp`/`trn`, `rev64`, the blends)
@@ -27,11 +32,16 @@ use super::lane::Lane;
 /// type's width in a `const` context without dragging the `Lane`
 /// parameter into const generics.
 pub trait Lanes {
-    /// 32-bit lanes per register — the paper's `W`.
+    /// Lanes per register — the paper's `W` (4/8 for 32-bit lanes at
+    /// 128/256 bits, 2/4 for 64-bit lanes).
     const LANES: usize;
+    /// Bytes per lane (4 or 8). `LANES * LANE_BYTES` is the register
+    /// width in bytes, which is what the [`crate::kernels::hybrid::RegsFitMaxK`]
+    /// budget is denominated in.
+    const LANE_BYTES: usize;
 }
 
-/// A SIMD register of [`Lanes::LANES`] 32-bit lanes over element type
+/// A SIMD register of [`Lanes::LANES`] lanes over element type
 /// `T` — everything the sort kernels need from a vector ISA.
 ///
 /// Contract shared by all implementations:
@@ -107,12 +117,29 @@ pub enum VectorWidth {
 }
 
 impl VectorWidth {
-    /// Lanes per register at this width (the paper's `W`).
+    /// Register width in bits.
+    pub fn bits(self) -> usize {
+        match self {
+            VectorWidth::V128 => 128,
+            VectorWidth::V256 => 256,
+        }
+    }
+
+    /// Lanes per register at this width for 32-bit elements (the
+    /// paper's `W`). Element-width-aware callers should use
+    /// [`VectorWidth::lanes_for`].
     pub fn lanes(self) -> usize {
         match self {
             VectorWidth::V128 => 4,
             VectorWidth::V256 => 8,
         }
+    }
+
+    /// Lanes per register for element type `T`: `bits / (8 ·
+    /// T::BYTES)` — 4-byte lanes get the paper's W = 4/8, 8-byte
+    /// lanes (u64, [`super::KeyValue`]) get W = 2/4.
+    pub fn lanes_for<T: Lane>(self) -> usize {
+        self.bits() / (8 * T::BYTES)
     }
 
     /// Both widths, for sweeps.

@@ -186,7 +186,7 @@ impl NeonMergeSort {
         if n <= 1 {
             return;
         }
-        if n < self.inreg.block_len() {
+        if n < self.inreg.block_len_for::<T>() {
             crate::kernels::serial::insertion_sort(data);
             return;
         }

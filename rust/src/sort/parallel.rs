@@ -241,7 +241,7 @@ impl ParallelNeonMergeSort {
             return self.single.sort_with_scratch(data, scratch);
         }
         // ---- Phase 1: local sorts on contiguous chunks ----
-        let block = self.single.inregister().block_len();
+        let block = self.single.inregister().block_len_for::<T>();
         let chunk = (n / t / block).max(1) * block;
         let mut bounds: Vec<usize> = (0..t).map(|i| (i * chunk).min(n)).collect();
         bounds.push(n);

@@ -232,18 +232,94 @@ fn sorts_i32_and_f32() {
 #[test]
 fn sorts_u64_packed_pairs() {
     use crate::simd::{pack_key_rowid, unpack_key_rowid};
-    // The database example path: (key, rowid) packed into u64 sorts by
-    // key with rowid tiebreak — via the scalar path (u64 is not a SIMD
-    // lane; NeonMergeSort is Lane-generic so this documents the
-    // boundary: pairs go through sort_pairs in examples).
+    // The database example path: (key, rowid) packed into u64 runs on
+    // the real 64-bit SIMD lanes (`V128D`, two lanes per register) and
+    // sorts by key with rowid tiebreak.
     let mut rng = Rng::new(11);
     let mut pairs: Vec<(u32, u32)> =
         (0..1000).map(|i| (rng.next_u32() % 100, i)).collect();
     let mut packed: Vec<u64> = pairs.iter().map(|&(k, r)| pack_key_rowid(k, r)).collect();
-    packed.sort_unstable();
+    NeonMergeSort::paper_default().sort(&mut packed);
     pairs.sort();
     let unpacked: Vec<(u32, u32)> = packed.iter().map(|&p| unpack_key_rowid(p)).collect();
     assert_eq!(unpacked, pairs);
+}
+
+#[test]
+fn sorts_u64_both_widths_match_oracle() {
+    // Full sort on 8-byte lanes at both register widths: block_len is
+    // half the u32 one (32 at V128, 64 at V256), K64 clamps to K32,
+    // and output must equal sort_unstable exactly (total order).
+    for vw in VectorWidth::all() {
+        for width in [MergeWidth::K4, MergeWidth::K16, MergeWidth::K64] {
+            let s = NeonMergeSort::new(SortConfig {
+                merge_width: width,
+                vector_width: vw,
+                ..Default::default()
+            });
+            forall_indexed(20, |case, rng| {
+                let base = [0usize, 1, 31, 32, 33, 63, 64, 65, 4096][case % 9];
+                let len = base + rng.below(3);
+                let data = rng.vec_u64(len);
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                let mut got = data;
+                s.sort(&mut got);
+                assert_eq!(got, expect, "{} 2x{} u64 len={len}", vw.name(), width.k());
+            });
+        }
+    }
+}
+
+#[test]
+fn sorts_key_value_pairs_with_payload_tiebreak() {
+    use crate::simd::KeyValue;
+    // Key–payload pairs end-to-end: dup-heavy keys, distinct payloads,
+    // so the packed comparison's payload half decides every tie. The
+    // pair order is total, so the SIMD result must equal the std
+    // oracle byte-for-byte at both widths and through scratch reuse.
+    let mut scratch = SortScratch::new();
+    for vw in VectorWidth::all() {
+        let s = NeonMergeSort::new(SortConfig { vector_width: vw, ..Default::default() });
+        forall_indexed(20, |case, rng| {
+            let len = [0usize, 1, 33, 64, 1000, 5000][case % 6] + rng.below(3);
+            let data: Vec<KeyValue> =
+                (0..len).map(|i| KeyValue::new(rng.next_u32() % 16, i as u32)).collect();
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            let mut got = data.clone();
+            s.sort(&mut got);
+            assert_eq!(got, expect, "{} pair len={len}", vw.name());
+            let mut via = data;
+            s.sort_with_scratch(&mut via, &mut scratch);
+            assert_eq!(via, expect, "{} pair scratch len={len}", vw.name());
+        });
+    }
+}
+
+#[test]
+fn parallel_sorts_u64_and_pairs() {
+    use crate::simd::KeyValue;
+    // The shard/merge parallel path on 8-byte elements: above the
+    // parallel threshold, odd thread counts, vs the std oracle.
+    forall(8, |rng| {
+        let len = 4096 + rng.below(20_000);
+        let data = rng.vec_u64(len);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for t in [2usize, 3, 8] {
+            let mut v = data.clone();
+            ParallelNeonMergeSort::with_threads(t).sort(&mut v);
+            assert_eq!(v, expect, "u64 T={t} len={len}");
+        }
+        let pairs: Vec<KeyValue> =
+            (0..len).map(|i| KeyValue::new(rng.next_u32() % 100, i as u32)).collect();
+        let mut expect = pairs.clone();
+        expect.sort_unstable();
+        let mut v = pairs;
+        ParallelNeonMergeSort::with_threads(4).sort(&mut v);
+        assert_eq!(v, expect, "pairs len={len}");
+    });
 }
 
 #[test]

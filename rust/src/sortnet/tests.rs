@@ -241,3 +241,65 @@ fn bose_nelson_any_n_sorts() {
         assert!(gen::bose_nelson(n).verify_zero_one(), "bose-nelson-{n}");
     }
 }
+
+#[test]
+fn apply_columns_sorts_each_lane_w2_64bit() {
+    // Column application at W = 2 (V128D / V256D): the network's
+    // comparator stream is lane-count-agnostic, so the same code must
+    // sort two 64-bit columns (or four, at V256D) independently —
+    // property-checked against the apply_slice scalar oracle.
+    use crate::simd::{V128D, V256D};
+    forall(200, |rng: &mut Rng| {
+        let r = [4usize, 8, 16][rng.below(3)];
+        let net = gen::best(r);
+        let mut regs: Vec<V128D<u64>> =
+            (0..r).map(|_| V128D([rng.next_u64() % 100, rng.next_u64() % 100])).collect();
+        let mut lanes: Vec<Vec<u64>> =
+            (0..2).map(|l| regs.iter().map(|v| v.lane(l)).collect()).collect();
+        net.apply_columns(&mut regs);
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            net.apply_slice(lane);
+            let got: Vec<u64> = regs.iter().map(|v| v.lane(l)).collect();
+            assert_eq!(&got, lane, "V128D column {l} of best-{r}");
+        }
+    });
+    forall(100, |rng: &mut Rng| {
+        let r = [8usize, 16][rng.below(2)];
+        let net = gen::best(r);
+        let mut regs: Vec<V256D<u64>> = (0..r)
+            .map(|_| {
+                let vals: [u64; 4] = std::array::from_fn(|_| rng.next_u64() % 100);
+                V256D::load(&vals)
+            })
+            .collect();
+        let mut lanes: Vec<Vec<u64>> =
+            (0..4).map(|l| regs.iter().map(|v| Vector::lane(*v, l)).collect()).collect();
+        net.apply_columns(&mut regs);
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            net.apply_slice(lane);
+            let got: Vec<u64> = regs.iter().map(|v| Vector::lane(*v, l)).collect();
+            assert_eq!(&got, lane, "V256D column {l} of best-{r}");
+        }
+    });
+}
+
+#[test]
+fn apply_columns_zero_one_w2() {
+    // Zero-one principle per 64-bit column: every 0/1 pattern of both
+    // columns of an R=4 register file, exhaustively (16 × 16 grids).
+    use crate::simd::V128D;
+    let net = gen::best(4);
+    for bits0 in 0..16u64 {
+        for bits1 in 0..16u64 {
+            let mut regs: Vec<V128D<u64>> =
+                (0..4).map(|i| V128D([(bits0 >> i) & 1, (bits1 >> i) & 1])).collect();
+            net.apply_columns(&mut regs);
+            for l in 0..2 {
+                let col: Vec<u64> = regs.iter().map(|v| v.lane(l)).collect();
+                let mut expect = col.clone();
+                expect.sort_unstable();
+                assert_eq!(col, expect, "bits=({bits0:04b},{bits1:04b}) col {l}");
+            }
+        }
+    }
+}

@@ -89,6 +89,12 @@ impl Rng {
         (0..len).map(|_| self.next_i32()).collect()
     }
 
+    /// A vector of `len` uniform `u64`s (full 64-bit range, so the
+    /// 8-byte sort paths see high and low halves both varying).
+    pub fn vec_u64(&mut self, len: usize) -> Vec<u64> {
+        (0..len).map(|_| self.next_u64()).collect()
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, data: &mut [T]) {
         for i in (1..data.len()).rev() {
