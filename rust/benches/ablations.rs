@@ -17,12 +17,11 @@
 //! * `NEONMS_BENCH_ELEM_OUT` — where to write the element-width JSON
 //!   (default `../BENCH_elem_width.json`).
 
+use neonms::bench::report;
+
 fn main() {
-    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
-    let reps = std::env::var("NEONMS_BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(if smoke { 2 } else { 10 });
+    let smoke = report::smoke_from_env();
+    let reps = report::reps_from_env(if smoke { 2 } else { 10 });
     let n = if smoke { 1 << 16 } else { 1 << 20 };
 
     if !smoke {
@@ -38,24 +37,14 @@ fn main() {
         println!();
     }
 
+    let source = report::source_label(smoke);
     let (table, points) = neonms::bench::tables::width_sweep(n, reps);
     print!("{table}");
-    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
-    let json = neonms::bench::tables::width_sweep_json(&points, n, reps, source);
-    let out = std::env::var("NEONMS_BENCH_OUT")
-        .unwrap_or_else(|_| "../BENCH_width_sweep.json".to_string());
-    match std::fs::write(&out, &json) {
-        Ok(()) => println!("width sweep recorded to {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
-    }
+    let sweep = neonms::bench::tables::width_sweep_report(&points, n, reps, source, smoke);
+    report::write_report(&sweep, "NEONMS_BENCH_OUT", "../BENCH_width_sweep.json");
 
     let (table, points) = neonms::bench::tables::elem_width_sweep(n, reps);
     print!("{table}");
-    let json = neonms::bench::tables::elem_width_json(&points, n, reps, source);
-    let out = std::env::var("NEONMS_BENCH_ELEM_OUT")
-        .unwrap_or_else(|_| "../BENCH_elem_width.json".to_string());
-    match std::fs::write(&out, &json) {
-        Ok(()) => println!("element-width sweep recorded to {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
-    }
+    let elem = neonms::bench::tables::elem_width_report(&points, n, reps, source, smoke);
+    report::write_report(&elem, "NEONMS_BENCH_ELEM_OUT", "../BENCH_elem_width.json");
 }

@@ -5,24 +5,43 @@
 //! Size range: the paper sweeps 512K–128M on a 64-core FT2000+; this
 //! single-core VM caps at 16M by default (override with
 //! NEONMS_BENCH_MAXN). Speedup *ratios* are the reproduction target.
+//!
+//! Env knobs (shared bench conventions):
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode: one 64K size, 2 reps,
+//!   T=2 only.
+//! * `NEONMS_BENCH_REPS` — repetitions per point (default 3, smoke 2).
+//! * `NEONMS_BENCH_MAXN` — largest size in the sweep.
+//! * `NEONMS_BENCH_OUT` — [`BenchReport`] artifact path (default
+//!   `../BENCH_fig5_overall.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::bench::report::{self, slug, BenchReport, Better, SourceKind};
 
 fn main() {
+    let smoke = report::smoke_from_env();
     let max_n: usize = std::env::var("NEONMS_BENCH_MAXN")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(16 << 20);
-    let reps = std::env::var("NEONMS_BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
+        .unwrap_or(if smoke { 1 << 16 } else { 16 << 20 });
+    let reps = report::reps_from_env(if smoke { 2 } else { 3 });
     let mut sizes = Vec::new();
-    let mut n = 512 * 1024;
+    let mut n = if smoke { 1 << 16 } else { 512 * 1024 };
     while n <= max_n {
         sizes.push(n);
         n *= 2;
     }
-    let (text, rows) = neonms::bench::tables::fig5(&sizes, &[2, 4], reps);
+    let threads: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let (text, rows) = neonms::bench::tables::fig5(&sizes, threads, reps);
     print!("{text}");
+
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("fig5_overall", source, SourceKind::Native, smoke);
+    r.param("reps", reps as f64).param("max_n", *sizes.last().unwrap_or(&0) as f64);
+    for (name, n, v) in &rows {
+        let key = format!("me_per_s/{}/n{n}", slug(name));
+        r.metric(key, report::round_dp(*v, 3), "ME/s", Better::Higher);
+    }
+
     // Headline ratios (paper: 3.8× vs std::sort, 2.1× vs block_sort).
     println!("\nspeedup of NEON-MS (single-thread) per size:");
     for &n in &sizes {
@@ -32,10 +51,18 @@ fn main() {
                 .map(|(_, _, v)| *v)
                 .unwrap_or(f64::NAN)
         };
-        println!(
-            "  n={n:9}: {:.2}x vs std::sort, {:.2}x vs block_sort",
-            get("NEON-MS") / get("std::sort (introsort)"),
-            get("NEON-MS") / get("boost::block_sort"),
-        );
+        let vs_std = get("NEON-MS") / get("std::sort (introsort)");
+        let vs_block = get("NEON-MS") / get("boost::block_sort");
+        println!("  n={n:9}: {vs_std:.2}x vs std::sort, {vs_block:.2}x vs block_sort");
+        // Ratios are host-shape facts, recorded but not rate-gated.
+        if vs_std.is_finite() {
+            let key = format!("speedup_vs_introsort/n{n}");
+            r.metric(key, report::round_dp(vs_std, 3), "ratio", Better::Info);
+        }
+        if vs_block.is_finite() {
+            let key = format!("speedup_vs_blocksort/n{n}");
+            r.metric(key, report::round_dp(vs_block, 3), "ratio", Better::Info);
+        }
     }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_fig5_overall.json");
 }

@@ -38,6 +38,7 @@
 //!   `../BENCH_qos_fairness.json`, the repo root when run via
 //!   `cargo bench` from `rust/`).
 
+use neonms::bench::report::{self, BenchReport, Better, SourceKind};
 use neonms::coordinator::{
     BusyReason, ClientConfig, CoordinatorConfig, QosPolicy, SortService, TenantSnapshot,
 };
@@ -174,7 +175,7 @@ fn run_contended(qos: QosPolicy, jobs: usize) -> Contended {
 }
 
 fn main() {
-    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let smoke = report::smoke_from_env();
     let jobs: usize = std::env::var("NEONMS_BENCH_JOBS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -218,40 +219,48 @@ fn main() {
         );
     }
 
-    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
-    let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"qos_fairness\",\n");
-    json.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
-    json.push_str(&format!("  \"smoke\": {smoke},\n"));
-    json.push_str(&format!("  \"source\": \"{source}\",\n"));
-    json.push_str(&format!("  \"job_len\": {JOB_LEN},\n"));
-    json.push_str(&format!("  \"victim_window\": {VICTIM_WINDOW},\n"));
-    json.push_str(&format!("  \"aggressor_factor\": {AGGRESSOR_FACTOR},\n"));
-    json.push_str(&format!("  \"victim_jobs\": {jobs},\n"));
-    json.push_str(&format!("  \"victim_isolated_jobs_per_s\": {isolated:.1},\n"));
-    json.push_str("  \"scenarios\": [\n");
-    for (i, (qos, c, retention)) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{\"policy\": \"{qos:?}\", \"victim_jobs_per_s\": {:.1}, \
-             \"victim_retention\": {retention:.3}, \"victim_shed\": {}, \
-             \"aggressor_completed\": {}, \"aggressor_shed\": {}, \
-             \"aggressor_shed_over_share\": {}, \"aggressor_evicted\": {}, \
-             \"evictions_total\": {}}}{}\n",
-            c.victim_jobs_per_s,
-            c.victim.shed,
-            c.aggressor.completed,
-            c.aggressor.shed,
-            c.aggressor.shed_over_share,
-            c.aggressor.evicted,
-            c.evictions,
-            if i + 1 < rows.len() { "," } else { "" },
-        ));
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("qos_fairness", source, SourceKind::Native, smoke);
+    r.param("job_len", JOB_LEN as f64)
+        .param("victim_window", VICTIM_WINDOW as f64)
+        .param("aggressor_factor", AGGRESSOR_FACTOR as f64)
+        .param("victim_jobs", jobs as f64);
+    r.metric("victim_isolated_jobs_per_s", report::round_dp(isolated, 1), "jobs/s", Better::Higher);
+    for (qos, c, retention) in &rows {
+        let p = format!("{qos:?}");
+        // Only the fair-share victim numbers are gateable claims;
+        // FIFO collapse depth and aggressor counters are context.
+        let fair = *qos == QosPolicy::FairShare;
+        let gate = |g: Better| if fair { g } else { Better::Info };
+        r.metric(
+            format!("victim_jobs_per_s/{p}"),
+            report::round_dp(c.victim_jobs_per_s, 1),
+            "jobs/s",
+            gate(Better::Higher),
+        );
+        r.metric(
+            format!("victim_retention/{p}"),
+            report::round_dp(*retention, 3),
+            "ratio",
+            gate(Better::Higher),
+        );
+        r.metric(format!("victim_shed/{p}"), c.victim.shed as f64, "count", gate(Better::Lower));
+        let context = [
+            ("aggressor_completed", c.aggressor.completed),
+            ("aggressor_shed", c.aggressor.shed),
+            ("aggressor_shed_over_share", c.aggressor.shed_over_share),
+            ("aggressor_evicted", c.aggressor.evicted),
+            ("evictions_total", c.evictions),
+        ];
+        for (what, value) in context {
+            r.metric(format!("{what}/{p}"), value as f64, "count", Better::Info);
+        }
     }
-    json.push_str("  ]\n}\n");
-    let out = std::env::var("NEONMS_BENCH_OUT")
-        .unwrap_or_else(|_| "../BENCH_qos_fairness.json".to_string());
-    match std::fs::write(&out, &json) {
-        Ok(()) => println!("fairness results recorded to {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
+    if let Some((_, c, _)) = rows.iter().find(|(q, _, _)| *q == QosPolicy::FairShare) {
+        // The headline structural claim: fair share never sheds the
+        // within-burst victim.
+        let held = if c.victim.shed == 0 { "true" } else { "false" };
+        r.mark("victim_shed_zero_under_fair_share", held);
     }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_qos_fairness.json");
 }

@@ -26,6 +26,7 @@
 //!   `../BENCH_routing_adaptive.json`, the repo root when run via
 //!   `cargo bench` from `rust/`).
 
+use neonms::bench::report::{self, BenchReport, Better, SourceKind};
 use neonms::coordinator::{
     AdaptivePolicy, CoordinatorConfig, Decision, RoutingBounds, RoutingSnapshot, SortService,
 };
@@ -176,60 +177,76 @@ fn run_scenario(sc: &Scenario) -> ScenarioReport {
     }
 }
 
-fn snapshot_json(s: &RoutingSnapshot) -> String {
-    format!(
-        "{{\"tiny_cutoff\": {}, \"fuse_cutoff\": {}, \"parallel_cutoff\": {}, \"batch_max\": {}}}",
-        s.tiny_cutoff, s.fuse_cutoff, s.parallel_cutoff, s.batch_max
-    )
+/// Direction of a cutoff between two snapshots ("up"/"down"/"hold").
+fn direction(from: usize, to: usize) -> &'static str {
+    match to.cmp(&from) {
+        std::cmp::Ordering::Greater => "up",
+        std::cmp::Ordering::Less => "down",
+        std::cmp::Ordering::Equal => "hold",
+    }
 }
 
-fn report_json(reports: &[ScenarioReport], smoke: bool, source: &str) -> String {
-    let mut out = String::from("{\n");
-    out.push_str("  \"bench\": \"routing_adaptive\",\n");
-    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
-    out.push_str(&format!("  \"smoke\": {smoke},\n"));
-    out.push_str(&format!("  \"source\": \"{source}\",\n"));
-    out.push_str("  \"scenarios\": [\n");
-    for (i, r) in reports.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"jobs\": {}, \"static_jobs_per_s\": {:.1}, \
-             \"adaptive_jobs_per_s\": {:.1},\n     \"initial\": {},\n     \"final\": {},\n",
-            r.name,
-            r.jobs,
-            r.static_jobs_per_s,
-            r.adaptive_jobs_per_s,
-            snapshot_json(&r.initial),
-            snapshot_json(&r.fin),
-        ));
-        out.push_str("     \"decisions\": [");
-        for (j, d) in r.decisions.iter().enumerate() {
-            out.push_str(&format!(
-                "{}{{\"epoch\": {}, \"param\": \"{}\", \"from\": {}, \"to\": {}, \
-                 \"lo_elems_per_us\": {:.2}, \"hi_elems_per_us\": {:.2}}}",
-                if j == 0 { "" } else { ", " },
-                d.epoch,
-                d.param,
-                d.from,
-                d.to,
-                d.lo_elems_per_us,
-                d.hi_elems_per_us
-            ));
-        }
-        out.push_str("],\n     \"routes\": [");
-        for (j, (tier, jobs, eu)) in r.routes.iter().enumerate() {
-            out.push_str(&format!(
-                "{}{{\"tier\": \"{tier}\", \"jobs\": {jobs}, \"elems_per_us\": {eu:.2}}}",
-                if j == 0 { "" } else { ", " },
-            ));
-        }
-        out.push_str(&format!("]}}{}\n", if i + 1 < reports.len() { "," } else { "" }));
+/// Build the unified `BenchReport`: per scenario, throughput metrics
+/// (gated on native baselines), the final cutoffs and decision count
+/// as info, the learned *directions* as structural marks (the
+/// surrogate baseline pins those — e.g. `burst_tiny` must move or
+/// hold its tiny cutoff upward, never down), and the full decision
+/// trace + route tallies as notes.
+fn build_report(reports: &[ScenarioReport], smoke: bool, source: &str) -> BenchReport {
+    let mut r = BenchReport::new("routing_adaptive", source, SourceKind::Native, smoke);
+    for sc in reports {
+        r.param(format!("jobs/{}", sc.name), sc.jobs as f64);
     }
-    out.push_str("  ]\n}\n");
-    out
+    for sc in reports {
+        let n = sc.name;
+        r.metric(
+            format!("static_jobs_per_s/{n}"),
+            report::round_dp(sc.static_jobs_per_s, 1),
+            "jobs/s",
+            Better::Higher,
+        );
+        r.metric(
+            format!("adaptive_jobs_per_s/{n}"),
+            report::round_dp(sc.adaptive_jobs_per_s, 1),
+            "jobs/s",
+            Better::Higher,
+        );
+        r.metric(format!("decisions/{n}"), sc.decisions.len() as f64, "count", Better::Info);
+        let cutoffs = [
+            ("final_tiny_cutoff", sc.fin.tiny_cutoff, "elements"),
+            ("final_fuse_cutoff", sc.fin.fuse_cutoff, "elements"),
+            ("final_parallel_cutoff", sc.fin.parallel_cutoff, "elements"),
+            ("final_batch_max", sc.fin.batch_max, "jobs"),
+        ];
+        for (what, value, unit) in cutoffs {
+            r.metric(format!("{what}/{n}"), value as f64, unit, Better::Info);
+        }
+        let moves = [
+            ("tiny_direction", sc.initial.tiny_cutoff, sc.fin.tiny_cutoff),
+            ("fuse_direction", sc.initial.fuse_cutoff, sc.fin.fuse_cutoff),
+            ("parallel_direction", sc.initial.parallel_cutoff, sc.fin.parallel_cutoff),
+            ("batch_direction", sc.initial.batch_max, sc.fin.batch_max),
+        ];
+        for (what, from, to) in moves {
+            r.mark(format!("{what}/{n}"), direction(from, to));
+        }
+        for d in &sc.decisions {
+            r.note(format!(
+                "{n}: epoch {}: {} {} -> {} ({:.2} vs {:.2} elems/us)",
+                d.epoch, d.param, d.from, d.to, d.lo_elems_per_us, d.hi_elems_per_us
+            ));
+        }
+        for (tier, jobs, eu) in &sc.routes {
+            if *jobs > 0 {
+                r.note(format!("{n}: route {tier}: {jobs} jobs at {eu:.2} elems/us"));
+            }
+        }
+    }
+    r
 }
 
 fn main() {
-    let smoke = std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let smoke = report::smoke_from_env();
     let jobs_override =
         std::env::var("NEONMS_BENCH_JOBS").ok().and_then(|v| v.parse().ok());
 
@@ -269,12 +286,7 @@ fn main() {
         }
     );
 
-    let source = if smoke { "cargo bench (smoke mode)" } else { "cargo bench" };
-    let json = report_json(&reports, smoke, source);
-    let out = std::env::var("NEONMS_BENCH_OUT")
-        .unwrap_or_else(|_| "../BENCH_routing_adaptive.json".to_string());
-    match std::fs::write(&out, &json) {
-        Ok(()) => println!("routing decision trace recorded to {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
-    }
+    let source = report::source_label(smoke);
+    let artifact = build_report(&reports, smoke, source);
+    report::write_report(&artifact, "NEONMS_BENCH_OUT", "../BENCH_routing_adaptive.json");
 }

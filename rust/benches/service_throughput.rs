@@ -8,8 +8,17 @@
 //! config, and sweeps the tenant count at a fixed service config.
 //! Run via `cargo bench --bench service_throughput`.
 //!
+//! Env knobs (shared bench conventions):
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (fewer jobs and reps).
+//! * `NEONMS_BENCH_JOBS` / `NEONMS_BENCH_JOBLEN` /
+//!   `NEONMS_BENCH_TENANTS` / `NEONMS_BENCH_REPS` — workload shape.
+//! * `NEONMS_BENCH_OUT` — `BenchReport` artifact path (default
+//!   `../BENCH_service_throughput.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+//!
 //! [`SortClient`]: neonms::coordinator::SortClient
 
+use neonms::bench::report::{self, slug, BenchReport, Better, SourceKind};
 use neonms::bench::{bench, BenchResult};
 use neonms::coordinator::{AdaptivePolicy, CoordinatorConfig, SortService};
 use neonms::testutil::Rng;
@@ -33,6 +42,14 @@ fn drive(svc: &SortService, tenants: usize, jobs: usize, len: usize, seed: u64) 
     });
 }
 
+/// Measured row: config label, jobs/s, and the batcher/steal context.
+struct Row {
+    name: String,
+    jobs_per_s: f64,
+    occupancy: f64,
+    steals: u64,
+}
+
 fn run_config(
     name: &str,
     cfg: CoordinatorConfig,
@@ -40,7 +57,7 @@ fn run_config(
     jobs: usize,
     len: usize,
     reps: usize,
-) {
+) -> Row {
     let svc = SortService::start(cfg, None).expect("service start");
     let res: BenchResult = bench(
         name,
@@ -59,21 +76,25 @@ fn run_config(
         m.p99_us
     );
     svc.shutdown();
+    Row {
+        name: name.to_string(),
+        jobs_per_s: res.per_sec(),
+        occupancy: m.batch_occupancy,
+        steals: m.steals,
+    }
 }
 
 fn main() {
+    let smoke = report::smoke_from_env();
     let jobs: usize = std::env::var("NEONMS_BENCH_JOBS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(4000);
+        .unwrap_or(if smoke { 400 } else { 4000 });
     let len: usize = std::env::var("NEONMS_BENCH_JOBLEN")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let reps: usize = std::env::var("NEONMS_BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(5);
+    let reps = report::reps_from_env(if smoke { 2 } else { 5 });
     let tenants: usize = std::env::var("NEONMS_BENCH_TENANTS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -81,12 +102,13 @@ fn main() {
 
     println!(
         "service throughput: {jobs} requests × {len} u32 per repetition, \
-         {tenants} tenants, {reps} reps"
+         {tenants} tenants, {reps} reps (smoke={smoke})"
     );
+    let mut rows = Vec::new();
     println!("-- batching ablation (2 workers, 2 shards, {tenants} tenants) --");
     for (name, batch_max) in [("unbatched (batch_max=1)", 1usize), ("batched (batch_max=32)", 32)] {
         let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max, ..Default::default() };
-        run_config(name, cfg, tenants, jobs, len, reps);
+        rows.push(run_config(name, cfg, tenants, jobs, len, reps));
     }
     println!("-- shard sweep (batched, workers = shards, {tenants} tenants) --");
     for shards in [1usize, 2, 4, 8] {
@@ -96,12 +118,12 @@ fn main() {
             batch_max: 32,
             ..Default::default()
         };
-        run_config(&format!("shards={shards}"), cfg, tenants, jobs, len, reps);
+        rows.push(run_config(&format!("shards={shards}"), cfg, tenants, jobs, len, reps));
     }
     println!("-- tenant sweep (2 workers, 2 shards, batched) --");
     for t in [1usize, 2, 4, 8] {
         let cfg = CoordinatorConfig { workers: 2, shards: 2, batch_max: 32, ..Default::default() };
-        run_config(&format!("tenants={t}"), cfg, t, jobs, len, reps);
+        rows.push(run_config(&format!("tenants={t}"), cfg, t, jobs, len, reps));
     }
     println!("-- adaptive routing (2 workers, 2 shards, batched, {tenants} tenants) --");
     for (name, adaptive) in
@@ -114,6 +136,30 @@ fn main() {
             adaptive,
             ..Default::default()
         };
-        run_config(name, cfg, tenants, jobs, len, reps);
+        rows.push(run_config(name, cfg, tenants, jobs, len, reps));
     }
+
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("service_throughput", source, SourceKind::Native, smoke);
+    r.param("jobs", jobs as f64)
+        .param("job_len", len as f64)
+        .param("reps", reps as f64)
+        .param("tenants", tenants as f64);
+    for row in &rows {
+        let key = slug(&row.name);
+        r.metric(
+            format!("jobs_per_s/{key}"),
+            report::round_dp(row.jobs_per_s, 1),
+            "jobs/s",
+            Better::Higher,
+        );
+        r.metric(
+            format!("batch_occupancy/{key}"),
+            report::round_dp(row.occupancy, 2),
+            "jobs/batch",
+            Better::Info,
+        );
+        r.metric(format!("steals/{key}"), row.steals as f64, "count", Better::Info);
+    }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_service_throughput.json");
 }

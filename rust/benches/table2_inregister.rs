@@ -4,14 +4,38 @@
 //!
 //! Protocol follows §3: 64K random u32 per repetition; we report the
 //! median of 100 repetitions (the paper averages 100 iterations).
+//!
+//! Env knobs (shared bench conventions):
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (5 reps).
+//! * `NEONMS_BENCH_REPS` — repetitions (default 100, smoke 5).
+//! * `NEONMS_BENCH_OUT` — `BenchReport` artifact path (default
+//!   `../BENCH_table2_inregister.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::bench::report::{self, BenchReport, Better, SourceKind};
 
 fn main() {
-    let reps = std::env::var("NEONMS_BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(100);
-    let (text, _rows) = neonms::bench::tables::table2_measured(reps);
+    let smoke = report::smoke_from_env();
+    let reps = report::reps_from_env(if smoke { 5 } else { 100 });
+    let (text, rows) = neonms::bench::tables::table2_measured(reps);
     print!("{text}");
     println!();
     print!("{}", neonms::bench::tables::table2_model());
+
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("table2_inregister", source, SourceKind::Native, smoke);
+    r.param("n", neonms::bench::tables::TABLE2_N as f64).param("reps", reps as f64);
+    // Raw config labels ("R=16", "R=16*") are kept verbatim in metric
+    // names — slugging would collide the starred and plain variants.
+    for (label, x, us) in &rows {
+        let key = format!("inreg_us/{label}/x{x}");
+        r.metric(key, report::round_dp(*us, 1), "us", Better::Lower);
+    }
+    // The cost model is deterministic; record it as info so artifact
+    // diffs surface model changes without rate-gating them.
+    for (label, x, rep) in neonms::regmachine::model_table2(32) {
+        r.metric(format!("model_cycles/{label}/x{x}"), rep.cycles as f64, "cycles", Better::Info);
+        r.metric(format!("model_spills/{label}/x{x}"), rep.spills as f64, "count", Better::Info);
+    }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_table2_inregister.json");
 }

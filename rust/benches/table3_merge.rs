@@ -1,20 +1,46 @@
 //! Bench: paper Table 3 — merging speed (elements/µs) of the
 //! vectorized vs hybrid bitonic mergers at 2×{8,16,32}.
 //! Run via `cargo bench --bench table3_merge`.
+//!
+//! Env knobs (shared bench conventions):
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (5 reps).
+//! * `NEONMS_BENCH_REPS` — repetitions (default 50, smoke 5).
+//! * `NEONMS_BENCH_OUT` — `BenchReport` artifact path (default
+//!   `../BENCH_table3_merge.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::bench::report::{self, slug, BenchReport, Better, SourceKind};
 
 fn main() {
-    let reps = std::env::var("NEONMS_BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(50);
+    let smoke = report::smoke_from_env();
+    let reps = report::reps_from_env(if smoke { 5 } else { 50 });
     let (text, rows) = neonms::bench::tables::table3(reps);
     print!("{text}");
+
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("table3_merge", source, SourceKind::Native, smoke);
+    r.param("reps", reps as f64);
+    for (name, k, v) in &rows {
+        let key = format!("elems_per_us/{}/k{k}", slug(name));
+        r.metric(key, report::round_dp(*v, 1), "elems/us", Better::Higher);
+    }
+
     // Paper shape check: report the hybrid/vectorized ratio per width.
     println!("\nhybrid / vectorized speed ratio (paper: >1 at 8 and 16, <1 at 32):");
     for k in [8usize, 16, 32] {
         let get = |name: &str| {
             rows.iter().find(|(n, kk, _)| n == name && *kk == k).map(|(_, _, v)| *v).unwrap()
         };
-        println!("  2x{k:2}: {:.3}", get("Hybrid Bitonic") / get("Vectorized Bitonic"));
+        let ratio = get("Hybrid Bitonic") / get("Vectorized Bitonic");
+        println!("  2x{k:2}: {ratio:.3}");
+        // The sign of (ratio - 1) is the paper's claim; the magnitude
+        // is host noise, so the ratio rides as info.
+        r.metric(
+            format!("hybrid_over_vectorized/k{k}"),
+            report::round_dp(ratio, 3),
+            "ratio",
+            Better::Info,
+        );
     }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_table3_merge.json");
 }

@@ -1,0 +1,507 @@
+//! Baseline comparison for [`BenchReport`] artifacts — the logic
+//! behind the `bench-compare` binary and the CI regression gates.
+//!
+//! Two comparison modes, chosen from provenance:
+//!
+//! * **Rates** — both reports are [`SourceKind::Native`], same
+//!   `arch`, same `smoke` flag, and every baseline param matches.
+//!   Gateable metrics get a relative tolerance band around the
+//!   baseline value (per-metric `tol` or the configured default);
+//!   [`Better::Higher`] metrics fail on drops below the band,
+//!   [`Better::Lower`] on rises above it, [`Better::Info`] never.
+//! * **Structural** — anything else (the committed Python-surrogate
+//!   baselines, cross-arch runs, param mismatches). Absolute rates
+//!   mean nothing across those boundaries, so only structure is
+//!   gated: every baseline metric must exist in the candidate with
+//!   the same unit, and every baseline mark must hold (a baseline
+//!   mark may be a `|`-separated set of acceptable values —
+//!   `"up|hold"` — and a candidate value must be the full set or a
+//!   member of it).
+//!
+//! Structural checks also run in Rates mode; a rate band on a metric
+//! the candidate no longer emits would otherwise vacuously pass.
+
+use super::report::{BenchReport, Better, SourceKind};
+use std::fmt::Write as _;
+
+/// Comparator knobs.
+#[derive(Clone, Debug)]
+pub struct CompareConfig {
+    /// Relative tolerance for metrics without their own `tol` —
+    /// 0.20 means a Higher-is-better metric fails below 80% of the
+    /// baseline. Wide by default: smoke-mode VMs are noisy, and the
+    /// gate is for real regressions (≥30%), not jitter.
+    pub default_tol: f64,
+}
+
+impl Default for CompareConfig {
+    fn default() -> CompareConfig {
+        CompareConfig { default_tol: 0.20 }
+    }
+}
+
+/// Which comparison the provenance admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Native vs native, comparable run: tolerance-band rate gating.
+    Rates,
+    /// Structure and ordering only.
+    Structural,
+}
+
+/// How much a finding matters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Gate failure (nonzero exit).
+    Fail,
+    /// Surprising but not gating (e.g. a mode downgrade).
+    Warn,
+    /// Context (skipped zero baselines, large improvements).
+    Note,
+}
+
+/// One comparison observation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Gate impact.
+    pub severity: Severity,
+    /// Operator-readable description.
+    pub message: String,
+}
+
+/// The full result of one baseline/candidate diff.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// The mode provenance admitted.
+    pub mode: Mode,
+    /// Everything observed, in check order.
+    pub findings: Vec<Finding>,
+    /// Metrics that got a tolerance band applied.
+    pub rate_checked: usize,
+    /// Structural presence/unit/mark checks performed.
+    pub structural_checked: usize,
+}
+
+impl Comparison {
+    /// Number of gate failures.
+    pub fn failures(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Fail).count()
+    }
+
+    /// True when the candidate passes the gate.
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    /// Multi-line operator summary (what `bench-compare` prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "mode: {} ({} rate-banded, {} structural checks)",
+            match self.mode {
+                Mode::Rates => "rates",
+                Mode::Structural => "structural",
+            },
+            self.rate_checked,
+            self.structural_checked
+        );
+        for f in &self.findings {
+            let tag = match f.severity {
+                Severity::Fail => "FAIL",
+                Severity::Warn => "warn",
+                Severity::Note => "note",
+            };
+            let _ = writeln!(out, "  {tag}: {}", f.message);
+        }
+        let _ = writeln!(
+            out,
+            "verdict: {}",
+            if self.passed() {
+                "PASS".to_string()
+            } else {
+                format!("FAIL ({} finding(s))", self.failures())
+            }
+        );
+        out
+    }
+}
+
+fn finding(severity: Severity, message: String) -> Finding {
+    Finding { severity, message }
+}
+
+/// Does a candidate mark satisfy a baseline mark spec? The spec may
+/// be a `|`-separated alternation; identity always satisfies (so a
+/// baseline compared against itself passes).
+fn mark_ok(spec: &str, value: &str) -> bool {
+    spec == value || spec.split('|').any(|alt| alt == value)
+}
+
+/// Diff `cand` against `base`. Never panics; the result carries the
+/// gate verdict.
+pub fn compare(base: &BenchReport, cand: &BenchReport, cfg: &CompareConfig) -> Comparison {
+    let mut findings = Vec::new();
+    if base.bench != cand.bench {
+        findings.push(finding(
+            Severity::Fail,
+            format!(
+                "bench mismatch: baseline is \"{}\", candidate is \"{}\"",
+                base.bench, cand.bench
+            ),
+        ));
+        return Comparison {
+            mode: Mode::Structural,
+            findings,
+            rate_checked: 0,
+            structural_checked: 0,
+        };
+    }
+
+    // Provenance → mode.
+    let mut mode = Mode::Rates;
+    if base.source_kind != SourceKind::Native || cand.source_kind != SourceKind::Native {
+        mode = Mode::Structural;
+        findings.push(finding(
+            Severity::Note,
+            format!(
+                "provenance {}/{} (baseline/candidate): comparing structure only, not rates",
+                base.source_kind.name(),
+                cand.source_kind.name()
+            ),
+        ));
+    } else {
+        if base.arch != cand.arch {
+            mode = Mode::Structural;
+            findings.push(finding(
+                Severity::Warn,
+                format!(
+                    "arch mismatch ({} vs {}): rates not comparable, structural mode",
+                    base.arch, cand.arch
+                ),
+            ));
+        }
+        if base.smoke != cand.smoke {
+            mode = Mode::Structural;
+            findings.push(finding(
+                Severity::Warn,
+                format!(
+                    "smoke mismatch (baseline {} vs candidate {}): structural mode",
+                    base.smoke, cand.smoke
+                ),
+            ));
+        }
+        for (name, bval) in &base.params {
+            match cand.get_param(name) {
+                Some(cval) if cval == *bval => {}
+                Some(cval) => {
+                    mode = Mode::Structural;
+                    findings.push(finding(
+                        Severity::Warn,
+                        format!("param \"{name}\" differs ({bval} vs {cval}): structural mode"),
+                    ));
+                }
+                None => {
+                    mode = Mode::Structural;
+                    findings.push(finding(
+                        Severity::Warn,
+                        format!("param \"{name}\" missing from candidate: structural mode"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Structural checks (both modes): baseline metrics must survive
+    // with their units, baseline marks must hold.
+    let mut structural_checked = 0;
+    for m in &base.metrics {
+        structural_checked += 1;
+        match cand.get_metric(&m.name) {
+            None => findings.push(finding(
+                Severity::Fail,
+                format!("metric \"{}\" missing from candidate", m.name),
+            )),
+            Some(c) if c.unit != m.unit => findings.push(finding(
+                Severity::Fail,
+                format!("metric \"{}\": unit changed \"{}\" -> \"{}\"", m.name, m.unit, c.unit),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (name, spec) in &base.marks {
+        structural_checked += 1;
+        match cand.get_mark(name) {
+            None => findings.push(finding(
+                Severity::Fail,
+                format!("mark \"{name}\" missing from candidate"),
+            )),
+            Some(v) if !mark_ok(spec, v) => findings.push(finding(
+                Severity::Fail,
+                format!("mark \"{name}\": candidate \"{v}\" not in baseline's set \"{spec}\""),
+            )),
+            Some(_) => {}
+        }
+    }
+
+    // Rate bands (Rates mode only).
+    let mut rate_checked = 0;
+    if mode == Mode::Rates {
+        for m in &base.metrics {
+            if m.better == Better::Info {
+                continue;
+            }
+            let Some(c) = cand.get_metric(&m.name) else {
+                continue; // already a structural failure
+            };
+            if m.value == 0.0 {
+                findings.push(finding(
+                    Severity::Note,
+                    format!("metric \"{}\": baseline is 0, no relative band", m.name),
+                ));
+                continue;
+            }
+            rate_checked += 1;
+            let tol = m.tol.unwrap_or(cfg.default_tol);
+            let rel = (c.value - m.value) / m.value.abs();
+            let regressed = match m.better {
+                Better::Higher => rel < -tol,
+                Better::Lower => rel > tol,
+                Better::Info => false,
+            };
+            if regressed {
+                findings.push(finding(
+                    Severity::Fail,
+                    format!(
+                        "{}: {} -> {} {} ({:+.1}% vs the {:.0}% band, {})",
+                        m.name,
+                        m.value,
+                        c.value,
+                        m.unit,
+                        rel * 100.0,
+                        tol * 100.0,
+                        match m.better {
+                            Better::Higher => "higher is better",
+                            _ => "lower is better",
+                        }
+                    ),
+                ));
+            } else if rel.abs() > tol {
+                findings.push(finding(
+                    Severity::Note,
+                    format!(
+                        "{}: improved {:+.1}% ({} -> {} {})",
+                        m.name,
+                        rel * 100.0,
+                        m.value,
+                        c.value,
+                        m.unit
+                    ),
+                ));
+            }
+        }
+    }
+
+    Comparison { mode, findings, rate_checked, structural_checked }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::{BenchReport, Better, SourceKind};
+
+    fn native(bench: &str) -> BenchReport {
+        let mut r = BenchReport::new(bench, "unit-test native run", SourceKind::Native, true);
+        r.param("n", 16384.0).param("reps", 2.0);
+        r
+    }
+
+    fn cfg() -> CompareConfig {
+        CompareConfig::default()
+    }
+
+    #[test]
+    fn self_comparison_passes_in_rates_mode() {
+        let mut r = native("demo");
+        r.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        r.metric("lat/b", 50.0, "us", Better::Lower);
+        r.mark("best", "V128/k16/Hybrid");
+        let cmp = compare(&r, &r.clone(), &cfg());
+        assert_eq!(cmp.mode, Mode::Rates);
+        assert!(cmp.passed(), "{}", cmp.render());
+        assert_eq!(cmp.rate_checked, 2);
+    }
+
+    #[test]
+    fn thirty_percent_regression_fails_both_directions() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        base.metric("lat/b", 100.0, "us", Better::Lower);
+
+        let mut cand = native("demo");
+        cand.metric("rate/a", 70.0, "ME/s", Better::Higher); // -30% on higher-is-better
+        cand.metric("lat/b", 100.0, "us", Better::Lower);
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.failures(), 1, "{}", cmp.render());
+
+        let mut cand = native("demo");
+        cand.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        cand.metric("lat/b", 130.0, "us", Better::Lower); // +30% on lower-is-better
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.failures(), 1, "{}", cmp.render());
+    }
+
+    #[test]
+    fn within_band_jitter_passes() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        base.metric("lat/b", 100.0, "us", Better::Lower);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 95.0, "ME/s", Better::Higher); // -5%
+        cand.metric("lat/b", 105.0, "us", Better::Lower); // +5%
+        let cmp = compare(&base, &cand, &cfg());
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+
+    #[test]
+    fn improvements_pass_with_a_note() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 150.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand, &cfg());
+        assert!(cmp.passed());
+        assert!(cmp.findings.iter().any(|f| f.message.contains("improved")));
+    }
+
+    #[test]
+    fn per_metric_tolerance_overrides_default() {
+        // Tight band: 5% jitter fails at tol 0.01.
+        let mut base = native("demo");
+        base.metric_tol("rate/a", 100.0, "ME/s", Better::Higher, 0.01);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 95.0, "ME/s", Better::Higher);
+        assert_eq!(compare(&base, &cand, &cfg()).failures(), 1);
+
+        // Loose band: a 30% drop passes at tol 0.5.
+        let mut base = native("demo");
+        base.metric_tol("rate/a", 100.0, "ME/s", Better::Higher, 0.5);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 70.0, "ME/s", Better::Higher);
+        assert!(compare(&base, &cand, &cfg()).passed());
+    }
+
+    #[test]
+    fn info_metrics_never_gate() {
+        let mut base = native("demo");
+        base.metric("decisions", 10.0, "count", Better::Info);
+        let mut cand = native("demo");
+        cand.metric("decisions", 1.0, "count", Better::Info);
+        let cmp = compare(&base, &cand, &cfg());
+        assert!(cmp.passed(), "{}", cmp.render());
+        assert_eq!(cmp.rate_checked, 0);
+    }
+
+    #[test]
+    fn surrogate_baseline_downgrades_to_structural() {
+        // The committed-baseline shape: Python-surrogate numbers vs a
+        // native candidate 10× off — ordering is checked, rates are not.
+        let mut base =
+            BenchReport::new("demo", "python structural-port", SourceKind::Surrogate, false);
+        base.metric("rate/a", 0.016, "ME/s", Better::Higher);
+        base.mark("best_fullsort", "V128/k8/Hybrid|V128/k16/Hybrid");
+
+        let mut cand = native("demo");
+        cand.metric("rate/a", 45.0, "ME/s", Better::Higher); // ~2800× the surrogate
+        cand.mark("best_fullsort", "V128/k16/Hybrid");
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+
+        // Structure still gates: a dropped metric fails...
+        let mut missing = native("demo");
+        missing.mark("best_fullsort", "V128/k16/Hybrid");
+        assert!(!compare(&base, &missing, &cfg()).passed());
+
+        // ...and a mark outside the alternation set fails.
+        let mut wrong = native("demo");
+        wrong.metric("rate/a", 45.0, "ME/s", Better::Higher);
+        wrong.mark("best_fullsort", "V256/k32/Vectorized");
+        assert!(!compare(&base, &wrong, &cfg()).passed());
+    }
+
+    #[test]
+    fn surrogate_baseline_self_comparison_passes() {
+        // `bench-compare --baseline X --candidate X` on a committed
+        // surrogate, including an alternation-set mark: the candidate
+        // carries the full set, which satisfies by identity.
+        let mut base =
+            BenchReport::new("demo", "python structural-port", SourceKind::Surrogate, false);
+        base.metric("rate/a", 0.016, "ME/s", Better::Higher);
+        base.mark("direction", "up|hold");
+        let cmp = compare(&base, &base.clone(), &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+
+    #[test]
+    fn native_arch_or_param_mismatch_downgrades() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+
+        let mut cand = native("demo");
+        cand.arch = "fictional_isa".to_string();
+        cand.metric("rate/a", 10.0, "ME/s", Better::Higher); // -90%, but cross-arch
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+
+        let mut cand = native("demo");
+        cand.params[0].1 = 32768.0; // different n
+        cand.metric("rate/a", 10.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+
+    #[test]
+    fn bench_name_mismatch_fails_immediately() {
+        let base = native("demo");
+        let cand = native("other");
+        let cmp = compare(&base, &cand, &cfg());
+        assert!(!cmp.passed());
+        assert_eq!(cmp.structural_checked, 0);
+    }
+
+    #[test]
+    fn unit_change_fails_even_in_rates_mode() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 100.0, "MB/s", Better::Higher);
+        assert!(!compare(&base, &cand, &cfg()).passed());
+    }
+
+    #[test]
+    fn zero_baseline_is_skipped_with_a_note() {
+        let mut base = native("demo");
+        base.metric("rate/a", 0.0, "ME/s", Better::Higher);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 5.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand, &cfg());
+        assert!(cmp.passed());
+        assert_eq!(cmp.rate_checked, 0);
+        assert!(cmp.findings.iter().any(|f| f.message.contains("baseline is 0")));
+    }
+
+    #[test]
+    fn candidate_may_emit_extra_metrics_and_marks() {
+        let mut base = native("demo");
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        let mut cand = native("demo");
+        cand.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        cand.metric("rate/new", 7.0, "ME/s", Better::Higher);
+        cand.mark("extra", "whatever");
+        assert!(compare(&base, &cand, &cfg()).passed());
+    }
+}

@@ -3,10 +3,16 @@
 //! workload generators matching the paper's §3 protocol, and table
 //! builders that print every table/figure of the evaluation in the
 //! paper's own units — shared by `cargo bench` targets and the CLI.
+//! The [`report`] module is the unified artifact schema every bench
+//! emits, and [`compare`] is the tolerance-band regression gate the
+//! `bench-compare` binary and CI run over those artifacts.
 
+pub mod compare;
 pub mod harness;
+pub mod report;
 pub mod tables;
 pub mod workloads;
 
 pub use harness::{bench, BenchResult, Stats};
+pub use report::{BenchReport, Better, SourceKind};
 pub use workloads::Workload;

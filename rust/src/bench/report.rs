@@ -1,0 +1,935 @@
+//! Unified benchmark report schema — the one JSON shape every bench
+//! target emits and every committed `BENCH_*.json` baseline uses.
+//!
+//! Before this module each bench hand-rolled its own JSON (three
+//! different writers, and the paper-table benches wrote none), so the
+//! artifacts CI uploaded could not be *compared* to anything. A
+//! [`BenchReport`] normalizes all of them: provenance (`source`,
+//! [`SourceKind`], `arch`, `smoke`), the run parameters that make two
+//! reports comparable, gateable `metrics` with units and a
+//! better-direction, string-valued `marks` for structural claims
+//! ("the best full-sort config is hybrid 2×16"), and free-form
+//! `notes` that are preserved but never gated (decision traces,
+//! per-tier route tallies).
+//!
+//! serde is not in the offline vendor set, so the module carries its
+//! own minimal JSON reader/writer ([`Json`]). The writer emits the
+//! exact subset the reader accepts, and committed baselines are
+//! round-tripped by a tier-1 test, so a truncated or hand-mangled
+//! baseline fails `cargo test`, not just the CI gate.
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+
+/// Version stamp for the on-disk schema; bump only with a migration
+/// note in OPERATIONS.md.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + parser (no serde offline).
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Object fields keep their file order so a
+/// parse → serialize round trip is stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (always held as `f64`).
+    Num(f64),
+    /// A string, with escapes decoded.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object; field order preserved.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(p.err("trailing characters after the JSON document"));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` for non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The element slice, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// The field slice, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.pos)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected character '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(fields)),
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        // Committed baselines carry non-ASCII (em
+                        // dashes) as \uXXXX, and surrogate pairs are
+                        // legal JSON — decode both.
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired UTF-16 surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        match char::from_u32(code) {
+                            Some(c) => out.push(c),
+                            None => return Err(self.err("invalid \\u escape")),
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(c) if c < 0x20 => return Err(self.err("unescaped control character")),
+                Some(_) => {
+                    // Plain run: copy whole UTF-8 sequences untouched.
+                    // The scan only stops at ASCII bytes, which never
+                    // occur inside a multi-byte sequence.
+                    let start = self.pos - 1;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let run = std::str::from_utf8(&self.b[start..self.pos])
+                        .expect("input &str slice split at ASCII boundaries");
+                    out.push_str(run);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char).to_digit(16).ok_or_else(|| self.err("invalid hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii number bytes");
+        s.parse::<f64>().map(Json::Num).map_err(|_| self.err("invalid number"))
+    }
+}
+
+/// Escape a string into `out` as JSON string *contents* (no quotes).
+pub fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Format an `f64` the way the schema stores it: `Display` (shortest
+/// round-trip), which never loses precision on re-parse.
+fn fmt_num(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Round to `dp` decimal places — for report builders that want the
+/// committed-artifact readability of the old writers (the comparator
+/// works on any precision).
+pub fn round_dp(v: f64, dp: i32) -> f64 {
+    let m = 10f64.powi(dp);
+    (v * m).round() / m
+}
+
+// ---------------------------------------------------------------------------
+// The report schema.
+// ---------------------------------------------------------------------------
+
+/// How a report's numbers were produced — the provenance axis the
+/// comparator keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceKind {
+    /// Measured by the Rust benches on real hardware; rates are
+    /// comparable to other native runs on the same `arch`/params.
+    Native,
+    /// Produced by a structural mirror or model (e.g. the Python
+    /// ports the committed baselines come from); only structure and
+    /// ordering are meaningful, never absolute rates.
+    Surrogate,
+}
+
+impl SourceKind {
+    /// The on-disk spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SourceKind::Native => "native",
+            SourceKind::Surrogate => "surrogate",
+        }
+    }
+
+    /// Parse the on-disk spelling.
+    pub fn parse(s: &str) -> Result<SourceKind, String> {
+        match s {
+            "native" => Ok(SourceKind::Native),
+            "surrogate" => Ok(SourceKind::Surrogate),
+            other => Err(format!("unknown source_kind \"{other}\" (native|surrogate)")),
+        }
+    }
+}
+
+/// Which direction is an improvement for a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    /// Bigger is better (rates); regression = drop beyond tolerance.
+    Higher,
+    /// Smaller is better (latency); regression = rise beyond tolerance.
+    Lower,
+    /// Informational only — recorded and structure-checked, never
+    /// rate-gated (counts, ratios whose "good" direction is contextual).
+    Info,
+}
+
+impl Better {
+    /// The on-disk spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Better::Higher => "higher",
+            Better::Lower => "lower",
+            Better::Info => "info",
+        }
+    }
+
+    /// Parse the on-disk spelling.
+    pub fn parse(s: &str) -> Result<Better, String> {
+        match s {
+            "higher" => Ok(Better::Higher),
+            "lower" => Ok(Better::Lower),
+            "info" => Ok(Better::Info),
+            other => Err(format!("unknown better \"{other}\" (higher|lower|info)")),
+        }
+    }
+}
+
+/// One gateable measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// Stable identity across runs, e.g. `fullsort_me_per_s/V128/k16/Hybrid`.
+    pub name: String,
+    /// The measured value (finite).
+    pub value: f64,
+    /// Unit label; a unit change across runs is a schema break.
+    pub unit: String,
+    /// Gate direction.
+    pub better: Better,
+    /// Optional per-metric relative tolerance overriding the
+    /// comparator default (e.g. `0.05` = ±5%).
+    pub tol: Option<f64>,
+}
+
+/// The unified bench artifact: provenance + params + metrics + marks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// Bench identity (`width_sweep`, `fig5_overall`, ...).
+    pub bench: String,
+    /// `std::env::consts::ARCH` of the producing host.
+    pub arch: String,
+    /// Free-text provenance (how/where the numbers were produced).
+    pub source: String,
+    /// Machine-readable provenance class.
+    pub source_kind: SourceKind,
+    /// Whether the run used CI smoke-mode workloads.
+    pub smoke: bool,
+    /// Unix seconds of the last `bench-compare --refresh`, if any.
+    pub refreshed_unix: Option<u64>,
+    /// Run parameters that must match for rates to be comparable
+    /// (n, reps, job counts, ...). Order preserved.
+    pub params: Vec<(String, f64)>,
+    /// Structural claims as strings. A baseline mark may be a
+    /// `|`-separated set of acceptable values ("up|hold"); candidates
+    /// emit a single value.
+    pub marks: Vec<(String, String)>,
+    /// The gateable measurements.
+    pub metrics: Vec<Metric>,
+    /// Free-form context lines (decision traces, route tallies) —
+    /// preserved, surfaced, never compared.
+    pub notes: Vec<String>,
+}
+
+impl BenchReport {
+    /// A new report for `bench` on this host's arch.
+    pub fn new(bench: &str, source: &str, source_kind: SourceKind, smoke: bool) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            source: source.to_string(),
+            source_kind,
+            smoke,
+            refreshed_unix: None,
+            params: Vec::new(),
+            marks: Vec::new(),
+            metrics: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Record a comparability parameter.
+    pub fn param(&mut self, name: impl Into<String>, value: f64) -> &mut BenchReport {
+        self.params.push((name.into(), value));
+        self
+    }
+
+    /// Record a structural mark.
+    pub fn mark(&mut self, name: impl Into<String>, value: impl Into<String>) -> &mut BenchReport {
+        self.marks.push((name.into(), value.into()));
+        self
+    }
+
+    /// Record a metric with the comparator's default tolerance.
+    pub fn metric(
+        &mut self,
+        name: impl Into<String>,
+        value: f64,
+        unit: &str,
+        better: Better,
+    ) -> &mut BenchReport {
+        self.metrics.push(Metric {
+            name: name.into(),
+            value,
+            unit: unit.to_string(),
+            better,
+            tol: None,
+        });
+        self
+    }
+
+    /// Record a metric with a per-metric relative tolerance.
+    pub fn metric_tol(
+        &mut self,
+        name: impl Into<String>,
+        value: f64,
+        unit: &str,
+        better: Better,
+        tol: f64,
+    ) -> &mut BenchReport {
+        self.metrics.push(Metric {
+            name: name.into(),
+            value,
+            unit: unit.to_string(),
+            better,
+            tol: Some(tol),
+        });
+        self
+    }
+
+    /// Record a free-form note line.
+    pub fn note(&mut self, line: impl Into<String>) -> &mut BenchReport {
+        self.notes.push(line.into());
+        self
+    }
+
+    /// Look up a metric by name.
+    pub fn get_metric(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Look up a mark by name.
+    pub fn get_mark(&self, name: &str) -> Option<&str> {
+        self.marks.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Look up a param by name.
+    pub fn get_param(&self, name: &str) -> Option<f64> {
+        self.params.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Schema invariants the gate (and tier-1) rely on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bench.is_empty() {
+            return Err("empty bench name".into());
+        }
+        if self.arch.is_empty() {
+            return Err("empty arch".into());
+        }
+        if self.source.is_empty() {
+            return Err("empty source provenance".into());
+        }
+        let mut names = HashSet::new();
+        for m in &self.metrics {
+            if m.name.is_empty() {
+                return Err("metric with an empty name".into());
+            }
+            if !names.insert(m.name.as_str()) {
+                return Err(format!("duplicate metric name \"{}\"", m.name));
+            }
+            if !m.value.is_finite() {
+                return Err(format!("metric \"{}\" has a non-finite value", m.name));
+            }
+            if let Some(t) = m.tol {
+                if !t.is_finite() || t <= 0.0 {
+                    return Err(format!("metric \"{}\" has a non-positive tolerance", m.name));
+                }
+            }
+        }
+        let mut keys = HashSet::new();
+        for (k, v) in &self.params {
+            if k.is_empty() || !keys.insert(k.as_str()) {
+                return Err(format!("empty or duplicate param name \"{k}\""));
+            }
+            if !v.is_finite() {
+                return Err(format!("param \"{k}\" has a non-finite value"));
+            }
+        }
+        let mut keys = HashSet::new();
+        for (k, v) in &self.marks {
+            if k.is_empty() || !keys.insert(k.as_str()) {
+                return Err(format!("empty or duplicate mark name \"{k}\""));
+            }
+            if v.is_empty() {
+                return Err(format!("mark \"{k}\" has an empty value"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the on-disk schema (2-space indent, field order
+    /// fixed, metrics/params/marks in insertion order).
+    pub fn to_json(&self) -> String {
+        let mut o = String::from("{\n");
+        let _ = writeln!(o, "  \"schema_version\": {SCHEMA_VERSION},");
+        push_str_field(&mut o, "bench", &self.bench);
+        push_str_field(&mut o, "arch", &self.arch);
+        push_str_field(&mut o, "source", &self.source);
+        push_str_field(&mut o, "source_kind", self.source_kind.name());
+        let _ = writeln!(o, "  \"smoke\": {},", self.smoke);
+        if let Some(t) = self.refreshed_unix {
+            let _ = writeln!(o, "  \"refreshed_unix\": {t},");
+        }
+        o.push_str("  \"params\": {");
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            let sep = if i == 0 { "" } else { ", " };
+            let _ = write!(o, "{sep}\"{}\": {}", escaped(k), fmt_num(*v));
+        }
+        o.push_str("},\n");
+        o.push_str("  \"marks\": {");
+        for (i, (k, v)) in self.marks.iter().enumerate() {
+            let sep = if i == 0 { "" } else { ", " };
+            let _ = write!(o, "{sep}\"{}\": \"{}\"", escaped(k), escaped(v));
+        }
+        o.push_str("},\n");
+        o.push_str("  \"metrics\": [");
+        for (i, m) in self.metrics.iter().enumerate() {
+            o.push_str(if i == 0 { "\n" } else { ",\n" });
+            let _ = write!(
+                o,
+                "    {{\"name\": \"{}\", \"value\": {}, \"unit\": \"{}\", \"better\": \"{}\"",
+                escaped(&m.name),
+                fmt_num(m.value),
+                escaped(&m.unit),
+                m.better.name()
+            );
+            if let Some(t) = m.tol {
+                let _ = write!(o, ", \"tol\": {}", fmt_num(t));
+            }
+            o.push('}');
+        }
+        o.push_str(if self.metrics.is_empty() { "],\n" } else { "\n  ],\n" });
+        o.push_str("  \"notes\": [");
+        for (i, n) in self.notes.iter().enumerate() {
+            o.push_str(if i == 0 { "\n" } else { ",\n" });
+            let _ = write!(o, "    \"{}\"", escaped(n));
+        }
+        o.push_str(if self.notes.is_empty() { "]\n" } else { "\n  ]\n" });
+        o.push_str("}\n");
+        o
+    }
+
+    /// Parse and validate a report from its on-disk form.
+    pub fn from_json(text: &str) -> Result<BenchReport, String> {
+        let root = Json::parse(text)?;
+        if root.as_obj().is_none() {
+            return Err("report root must be a JSON object".into());
+        }
+        let version = req(&root, "schema_version")?
+            .as_f64()
+            .ok_or("schema_version must be a number")?;
+        if version != SCHEMA_VERSION as f64 {
+            return Err(format!("unsupported schema_version {version} (want {SCHEMA_VERSION})"));
+        }
+        let report = BenchReport {
+            bench: req_str(&root, "bench")?,
+            arch: req_str(&root, "arch")?,
+            source: req_str(&root, "source")?,
+            source_kind: SourceKind::parse(&req_str(&root, "source_kind")?)?,
+            smoke: req(&root, "smoke")?.as_bool().ok_or("smoke must be a boolean")?,
+            refreshed_unix: match root.get("refreshed_unix") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or("refreshed_unix must be a number")? as u64),
+            },
+            params: req(&root, "params")?
+                .as_obj()
+                .ok_or("params must be an object")?
+                .iter()
+                .map(|(k, v)| {
+                    let v =
+                        v.as_f64().ok_or_else(|| format!("param \"{k}\" must be a number"))?;
+                    Ok((k.clone(), v))
+                })
+                .collect::<Result<_, String>>()?,
+            marks: req(&root, "marks")?
+                .as_obj()
+                .ok_or("marks must be an object")?
+                .iter()
+                .map(|(k, v)| {
+                    let v =
+                        v.as_str().ok_or_else(|| format!("mark \"{k}\" must be a string"))?;
+                    Ok((k.clone(), v.to_string()))
+                })
+                .collect::<Result<_, String>>()?,
+            metrics: req(&root, "metrics")?
+                .as_arr()
+                .ok_or("metrics must be an array")?
+                .iter()
+                .map(parse_metric)
+                .collect::<Result<_, String>>()?,
+            notes: match root.get("notes") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or("notes must be an array")?
+                    .iter()
+                    .map(|n| {
+                        n.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| "notes must be strings".to_string())
+                    })
+                    .collect::<Result<_, String>>()?,
+            },
+        };
+        report.validate()?;
+        Ok(report)
+    }
+}
+
+fn escaped(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_json(s, &mut out);
+    out
+}
+
+fn push_str_field(o: &mut String, key: &str, val: &str) {
+    let _ = writeln!(o, "  \"{key}\": \"{}\",", escaped(val));
+}
+
+fn req<'a>(root: &'a Json, key: &str) -> Result<&'a Json, String> {
+    root.get(key).ok_or_else(|| format!("missing required field \"{key}\""))
+}
+
+fn req_str(root: &Json, key: &str) -> Result<String, String> {
+    req(root, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("field \"{key}\" must be a string"))
+}
+
+fn parse_metric(v: &Json) -> Result<Metric, String> {
+    let name = req_str(v, "name")?;
+    let value = req(v, "value")?
+        .as_f64()
+        .ok_or_else(|| format!("metric \"{name}\" value must be a number"))?;
+    let unit = req_str(v, "unit")?;
+    let better = Better::parse(&req_str(v, "better")?)?;
+    let tol = match v.get("tol") {
+        None | Some(Json::Null) => None,
+        Some(t) => {
+            Some(t.as_f64().ok_or_else(|| format!("metric \"{name}\" tol must be a number"))?)
+        }
+    };
+    Ok(Metric { name, value, unit, better, tol })
+}
+
+// ---------------------------------------------------------------------------
+// Shared bench-binary conventions (env knobs, artifact writing).
+// ---------------------------------------------------------------------------
+
+/// The shared `NEONMS_BENCH_SMOKE=1` convention.
+pub fn smoke_from_env() -> bool {
+    std::env::var("NEONMS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The shared `NEONMS_BENCH_REPS` convention.
+pub fn reps_from_env(default: usize) -> usize {
+    std::env::var("NEONMS_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The `source` string every native bench run stamps.
+pub fn source_label(smoke: bool) -> &'static str {
+    if smoke {
+        "cargo bench (smoke mode)"
+    } else {
+        "cargo bench"
+    }
+}
+
+/// Metric-name slug: lowercase alphanumerics, runs of everything else
+/// collapsed to a single `_` (`"NEON-MS T=2"` → `"neon_ms_t_2"`).
+pub fn slug(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut gap = false;
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() {
+            if gap && !out.is_empty() {
+                out.push('_');
+            }
+            gap = false;
+            out.push(c.to_ascii_lowercase());
+        } else {
+            gap = true;
+        }
+    }
+    out
+}
+
+/// Write a validated report to `$env_var` (or `default_path`), with
+/// the writers' shared stdout/stderr conventions. Panics on an
+/// invalid report (a bench-builder bug, not an I/O condition).
+pub fn write_report(report: &BenchReport, env_var: &str, default_path: &str) {
+    if let Err(e) = report.validate() {
+        panic!("bench {} built an invalid report: {e}", report.bench);
+    }
+    let out = std::env::var(env_var).unwrap_or_else(|_| default_path.to_string());
+    match std::fs::write(&out, report.to_json()) {
+        Ok(()) => println!("{} report recorded to {out}", report.bench),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rich_report() -> BenchReport {
+        let source = "unit-test fixture \u{2014} em-dash provenance";
+        let mut r = BenchReport::new("demo_bench", source, SourceKind::Native, true);
+        r.param("n", 16384.0).param("reps", 2.0);
+        r.mark("best_fullsort", "V128/k16/Hybrid");
+        r.mark("direction", "up|hold");
+        r.metric("rate/a", 123.25, "ME/s", Better::Higher);
+        r.metric_tol("lat/\"quoted\"", 0.125, "us", Better::Lower, 0.05);
+        r.metric("count/x", 42.0, "count", Better::Info);
+        r.note("line one\nline two\ttabbed");
+        r.refreshed_unix = Some(1_754_000_000);
+        r
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let r = rich_report();
+        let text = r.to_json();
+        let back = BenchReport::from_json(&text).expect("round trip");
+        assert_eq!(r, back);
+        // And the serialization itself is stable.
+        assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn parser_decodes_unicode_escapes_and_surrogate_pairs() {
+        // \uXXXX escape (how committed baselines spell their em dash).
+        let v = Json::parse(r#""a \u2014 b""#).unwrap();
+        assert_eq!(v.as_str(), Some("a \u{2014} b"));
+        // Literal multi-byte UTF-8 passes through untouched.
+        let v = Json::parse("\"a \u{2014} b\"").unwrap();
+        assert_eq!(v.as_str(), Some("a \u{2014} b"));
+        // Surrogate pair escape decodes to one astral char.
+        let v = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        assert!(Json::parse(r#""\uD83D""#).is_err()); // unpaired high surrogate
+        let v = Json::parse(r#""q\"w\\e\n\t""#).unwrap();
+        assert_eq!(v.as_str(), Some("q\"w\\e\n\t"));
+    }
+
+    #[test]
+    fn parser_handles_numbers_and_structure() {
+        let v = Json::parse(r#"{"a": [1, -2.5, 1e3, 2.5E-2], "b": {"c": true, "d": null}}"#)
+            .unwrap();
+        let a = v.get("a").and_then(Json::as_arr).unwrap();
+        let vals: Vec<f64> = a.iter().map(|x| x.as_f64().unwrap()).collect();
+        assert_eq!(vals, vec![1.0, -2.5, 1000.0, 0.025]);
+        assert_eq!(v.get("b").and_then(|b| b.get("c")).and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn truncated_and_trailing_input_fail() {
+        assert!(Json::parse("{\"a\": 1").is_err());
+        assert!(Json::parse("{\"a\": 1} trailing").is_err());
+        assert!(Json::parse("").is_err());
+        let full = rich_report().to_json();
+        let cut = &full[..full.len() / 2];
+        assert!(BenchReport::from_json(cut).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_schema_breaks() {
+        let mut r = rich_report();
+        r.metric("rate/a", 1.0, "ME/s", Better::Higher); // duplicate name
+        assert!(r.validate().unwrap_err().contains("duplicate metric"));
+
+        let mut r = rich_report();
+        r.metrics[0].value = f64::NAN;
+        assert!(r.validate().unwrap_err().contains("non-finite"));
+
+        let mut r = rich_report();
+        r.source.clear();
+        assert!(r.validate().unwrap_err().contains("source"));
+
+        let text = rich_report().to_json().replace("\"schema_version\": 1", "\"schema_version\": 9");
+        assert!(BenchReport::from_json(&text).unwrap_err().contains("schema_version"));
+
+        let text = rich_report().to_json().replace("\"better\": \"higher\"", "\"better\": \"up\"");
+        assert!(BenchReport::from_json(&text).unwrap_err().contains("better"));
+
+        let text = rich_report().to_json().replace("  \"source_kind\": \"native\",\n", "");
+        assert!(BenchReport::from_json(&text).unwrap_err().contains("source_kind"));
+    }
+
+    #[test]
+    fn slug_flattens_labels() {
+        assert_eq!(slug("NEON-MS T=2"), "neon_ms_t_2");
+        assert_eq!(slug("unbatched (batch_max=1)"), "unbatched_batch_max_1");
+        assert_eq!(slug("Hybrid Bitonic (stream)"), "hybrid_bitonic_stream");
+        assert_eq!(slug("std::sort (introsort)"), "std_sort_introsort");
+    }
+
+    /// The committed baselines at the repo root must parse, validate,
+    /// and round-trip through this reader — a hand-edited or
+    /// truncated baseline fails tier-1, not just the CI gate.
+    #[test]
+    fn committed_baselines_parse_validate_and_round_trip() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let mut seen = Vec::new();
+        for entry in std::fs::read_dir(&root).expect("repo root") {
+            let path = entry.expect("dir entry").path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).expect("baseline readable");
+            let report = BenchReport::from_json(&text)
+                .unwrap_or_else(|e| panic!("{name} is not a valid BenchReport: {e}"));
+            assert!(!report.metrics.is_empty(), "{name} has no metrics");
+            let back = BenchReport::from_json(&report.to_json())
+                .unwrap_or_else(|e| panic!("{name} does not round-trip: {e}"));
+            assert_eq!(report, back, "{name} round-trip drift");
+            seen.push(name);
+        }
+        for required in [
+            "BENCH_width_sweep.json",
+            "BENCH_elem_width.json",
+            "BENCH_routing_adaptive.json",
+            "BENCH_qos_fairness.json",
+        ] {
+            assert!(seen.iter().any(|n| n == required), "missing committed baseline {required}");
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! the raw numbers so EXPERIMENTS.md can quote both.
 
 use super::harness::{bench, BenchResult};
+use super::report::{round_dp, BenchReport, Better, SourceKind};
 use super::workloads::Workload;
 use crate::baselines::{blocksort, introsort};
 use crate::kernels::inregister::{table2_configs, ColumnNetwork, InRegisterSorter};
@@ -343,40 +344,42 @@ pub fn width_sweep(n: usize, reps: usize) -> (String, Vec<WidthSweepPoint>) {
     (out, rows)
 }
 
-/// Serialize a width sweep to the `BENCH_width_sweep.json` schema
-/// (hand-rolled — no serde offline). `source` records how the numbers
-/// were produced so CI artifacts and locally recorded baselines are
-/// distinguishable.
-pub fn width_sweep_json(points: &[WidthSweepPoint], n: usize, reps: usize, source: &str) -> String {
-    let mut out = String::from("{\n");
-    out.push_str("  \"bench\": \"width_sweep\",\n");
-    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
-    out.push_str(&format!("  \"n\": {n},\n  \"reps\": {reps},\n"));
-    out.push_str(&format!("  \"source\": \"{source}\",\n"));
+/// Build the `BENCH_width_sweep.json` [`BenchReport`]: every sweep
+/// point as two metrics (streaming merge in elements/µs, full sort in
+/// ME/s) plus the `best_fullsort` structural mark the docs quote.
+/// Native runs stamp [`SourceKind::Native`]; the committed surrogate
+/// baseline carries `Surrogate` and is compared structurally.
+pub fn width_sweep_report(
+    points: &[WidthSweepPoint],
+    n: usize,
+    reps: usize,
+    source: &str,
+    smoke: bool,
+) -> BenchReport {
+    let mut r = BenchReport::new("width_sweep", source, SourceKind::Native, smoke);
+    r.param("n", n as f64).param("reps", reps as f64);
     let best = points
         .iter()
         .max_by(|a, b| a.fullsort_me_per_s.partial_cmp(&b.fullsort_me_per_s).unwrap());
     if let Some(b) = best {
-        out.push_str(&format!(
-            "  \"best_fullsort\": {{\"vector\": \"{}\", \"k\": {}, \"impl\": \"{}\"}},\n",
-            b.vector, b.k, b.imp
-        ));
+        r.mark("best_fullsort", format!("{}/k{}/{}", b.vector, b.k, b.imp));
     }
-    out.push_str("  \"results\": [\n");
-    for (i, p) in points.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"vector\": \"{}\", \"k\": {}, \"impl\": \"{}\", \
-             \"stream_elems_per_us\": {:.2}, \"fullsort_me_per_s\": {:.3}}}{}\n",
-            p.vector,
-            p.k,
-            p.imp,
-            p.stream_elems_per_us,
-            p.fullsort_me_per_s,
-            if i + 1 < points.len() { "," } else { "" }
-        ));
+    for p in points {
+        let key = format!("{}/k{}/{}", p.vector, p.k, p.imp);
+        r.metric(
+            format!("stream_elems_per_us/{key}"),
+            round_dp(p.stream_elems_per_us, 2),
+            "elems/us",
+            Better::Higher,
+        );
+        r.metric(
+            format!("fullsort_me_per_s/{key}"),
+            round_dp(p.fullsort_me_per_s, 3),
+            "ME/s",
+            Better::Higher,
+        );
     }
-    out.push_str("  ]\n}\n");
-    out
+    r
 }
 
 /// One measured point of the element-width sweep (element type ×
@@ -466,46 +469,46 @@ pub fn elem_width_sweep(n: usize, reps: usize) -> (String, Vec<ElemWidthPoint>) 
     (out, rows)
 }
 
-/// Serialize an element-width sweep to the `BENCH_elem_width.json`
-/// schema (hand-rolled — no serde offline). `source` records how the
-/// numbers were produced so CI artifacts, locally recorded baselines,
-/// and model-derived surrogates are distinguishable.
-pub fn elem_width_json(points: &[ElemWidthPoint], n: usize, reps: usize, source: &str) -> String {
-    let mut out = String::from("{\n");
-    out.push_str("  \"bench\": \"elem_width\",\n");
-    out.push_str(&format!("  \"arch\": \"{}\",\n", std::env::consts::ARCH));
-    out.push_str(&format!("  \"n\": {n},\n  \"reps\": {reps},\n"));
-    out.push_str(&format!("  \"source\": \"{source}\",\n"));
-    // Per element type, the best (vector, K) by bytes/s — the number
-    // the docs' element-width story quotes.
+/// Build the `BENCH_elem_width.json` [`BenchReport`]: per point the
+/// ME/s and cross-width-comparable MB/s full-sort rates, plus
+/// per-element `best_{elem}` / `best_{elem}_vector` marks — the
+/// latter is the structural claim the docs' element-width story
+/// rests on (wider registers win for 8-byte elements).
+pub fn elem_width_report(
+    points: &[ElemWidthPoint],
+    n: usize,
+    reps: usize,
+    source: &str,
+    smoke: bool,
+) -> BenchReport {
+    let mut r = BenchReport::new("elem_width", source, SourceKind::Native, smoke);
+    r.param("n", n as f64).param("reps", reps as f64);
     for elem in ["u32", "u64", "pair"] {
         if let Some(b) = points
             .iter()
             .filter(|p| p.elem == elem)
             .max_by(|a, b| a.fullsort_mb_per_s.partial_cmp(&b.fullsort_mb_per_s).unwrap())
         {
-            out.push_str(&format!(
-                "  \"best_{elem}\": {{\"vector\": \"{}\", \"k\": {}, \"mb_per_s\": {:.1}}},\n",
-                b.vector, b.k, b.fullsort_mb_per_s
-            ));
+            r.mark(format!("best_{elem}"), format!("{}/k{}", b.vector, b.k));
+            r.mark(format!("best_{elem}_vector"), b.vector);
         }
     }
-    out.push_str("  \"results\": [\n");
-    for (i, p) in points.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"vector\": \"{}\", \"elem\": \"{}\", \"elem_bytes\": {}, \"k\": {}, \
-             \"fullsort_me_per_s\": {:.3}, \"fullsort_mb_per_s\": {:.2}}}{}\n",
-            p.vector,
-            p.elem,
-            p.elem_bytes,
-            p.k,
-            p.fullsort_me_per_s,
-            p.fullsort_mb_per_s,
-            if i + 1 < points.len() { "," } else { "" }
-        ));
+    for p in points {
+        let key = format!("{}/{}/k{}", p.vector, p.elem, p.k);
+        r.metric(
+            format!("fullsort_me_per_s/{key}"),
+            round_dp(p.fullsort_me_per_s, 3),
+            "ME/s",
+            Better::Higher,
+        );
+        r.metric(
+            format!("fullsort_mb_per_s/{key}"),
+            round_dp(p.fullsort_mb_per_s, 2),
+            "MB/s",
+            Better::Higher,
+        );
     }
-    out.push_str("  ]\n}\n");
-    out
+    r
 }
 
 /// Ablation: merge-path cooperative parallel merge vs one-thread-per-

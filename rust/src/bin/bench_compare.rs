@@ -1,0 +1,146 @@
+//! `bench-compare` — validate a bench artifact and gate it against a
+//! committed baseline.
+//!
+//! ```text
+//! bench_compare --candidate fresh.json                     # validate only
+//! bench_compare --baseline BENCH_x.json --candidate fresh.json
+//! bench_compare --baseline BENCH_x.json --candidate fresh.json --tol 0.1
+//! bench_compare --baseline BENCH_x.json --candidate fresh.json --refresh
+//! ```
+//!
+//! Exit codes: `0` pass (or refresh written), `1` regression /
+//! structural break, `2` bad usage, unreadable file, or schema error.
+//!
+//! `--refresh` rewrites the baseline path with the candidate report,
+//! stamped with `refreshed_unix` — the workflow for recording a new
+//! native baseline once a host with cargo has run the bench (see
+//! OPERATIONS.md "Benchmark gates").
+
+use neonms::bench::compare::{compare, CompareConfig};
+use neonms::bench::report::{BenchReport, SourceKind};
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: bench_compare --candidate <report.json> \
+                     [--baseline <report.json>] [--tol <rel>] [--refresh]";
+
+struct Args {
+    baseline: Option<String>,
+    candidate: Option<String>,
+    tol: Option<f64>,
+    refresh: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { baseline: None, candidate: None, tol: None, refresh: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--baseline" => args.baseline = Some(it.next().ok_or("--baseline needs a path")?),
+            "--candidate" => args.candidate = Some(it.next().ok_or("--candidate needs a path")?),
+            "--tol" => {
+                let raw = it.next().ok_or("--tol needs a value")?;
+                let v: f64 = raw.parse().map_err(|_| format!("bad --tol \"{raw}\""))?;
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!("--tol must be positive, got {raw}"));
+                }
+                args.tol = Some(v);
+            }
+            "--refresh" => args.refresh = true,
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag \"{other}\"\n{USAGE}")),
+        }
+    }
+    if args.candidate.is_none() {
+        return Err(format!("--candidate is required\n{USAGE}"));
+    }
+    if args.refresh && args.baseline.is_none() {
+        return Err("--refresh needs --baseline (the path to rewrite)".to_string());
+    }
+    Ok(args)
+}
+
+fn load(path: &str) -> Result<BenchReport, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    BenchReport::from_json(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let cand_path = args.candidate.as_deref().expect("checked in parse_args");
+    let cand = match load(cand_path) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    println!(
+        "candidate {cand_path}: bench \"{}\", {} on {}, {} metric(s), {} mark(s)",
+        cand.bench,
+        cand.source_kind.name(),
+        cand.arch,
+        cand.metrics.len(),
+        cand.marks.len()
+    );
+
+    let Some(base_path) = args.baseline.as_deref() else {
+        println!("no --baseline: schema validation only, PASS");
+        return ExitCode::SUCCESS;
+    };
+    let base = match load(base_path) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut cfg = CompareConfig::default();
+    if let Some(t) = args.tol {
+        cfg.default_tol = t;
+    }
+    let cmp = compare(&base, &cand, &cfg);
+    print!("{}", cmp.render());
+
+    if args.refresh {
+        let mut refreshed = cand.clone();
+        refreshed.refreshed_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .ok()
+            .map(|d| d.as_secs());
+        if refreshed.source_kind == SourceKind::Surrogate {
+            eprintln!(
+                "warning: refreshing {base_path} from a SURROGATE candidate \
+                 (rates will stay structural-only)"
+            );
+        }
+        return match std::fs::write(base_path, refreshed.to_json()) {
+            Ok(()) => {
+                println!(
+                    "baseline {base_path} refreshed from {cand_path} \
+                     (source_kind {}, arch {})",
+                    refreshed.source_kind.name(),
+                    refreshed.arch
+                );
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("cannot write {base_path}: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    if cmp.passed() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

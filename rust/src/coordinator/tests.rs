@@ -1148,3 +1148,138 @@ fn typed_try_submits_shed_with_typed_payloads() {
     drop((h64, hp));
     svc.shutdown();
 }
+
+#[test]
+fn mixed_kind_storm_accounting_survives_shutdown_race() {
+    // The PR-6 element-kind axis meets the PR-4/5 invariants: a
+    // randomized storm of u32 / u64 / key-value submits races dropped
+    // handles, fair-share eviction (tiny queue, tiny bursts, uneven
+    // weights), and a shutdown() issued from the main thread while
+    // the submitters are still running. Per tenant, once quiet:
+    // accepted == completed + cancelled, and the QoS occupancy gauges
+    // (in-flight bytes, queued jobs) drain to exactly zero — no
+    // element kind may leak accounting on any cancellation path.
+    for seed in 0..3u64 {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            shards: 2,
+            batch_max: 8,
+            queue_capacity: 8, // small: sheds and evictions are real
+            qos: QosPolicy::FairShare,
+            ..Default::default()
+        };
+        let svc = SortService::start(cfg, None).unwrap();
+        // Uneven weights and small bursts so over-share shedding and
+        // eviction both fire during the storm.
+        let clients: Vec<_> = (0..3)
+            .map(|t| {
+                let cfg = ClientConfig { weight: 1 + t as u32, burst: (4 + t as usize) << 10 };
+                svc.client_with(&format!("storm-{t}"), cfg)
+            })
+            .collect();
+        let joins: Vec<_> = clients
+            .iter()
+            .enumerate()
+            .map(|(t, client)| {
+                let client = client.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(9_000 * seed + t as u64);
+                    let mut kept_u32 = Vec::new();
+                    let mut kept_u64 = Vec::new();
+                    let mut kept_pairs = Vec::new();
+                    for i in 0..150usize {
+                        let len = 8 + rng.below(600);
+                        let keep = i % 2 == 0;
+                        // One of the three element kinds per
+                        // iteration; ~half the handles are dropped on
+                        // the floor immediately (the storm).
+                        let shut = match rng.below(3) {
+                            0 => match client.try_submit(rng.vec_u32(len)) {
+                                Ok(h) => {
+                                    if keep {
+                                        kept_u32.push(h);
+                                    }
+                                    false
+                                }
+                                Err(b) => b.reason == BusyReason::Shutdown,
+                            },
+                            1 => match client.try_submit_u64(rng.vec_u64(len)) {
+                                Ok(h) => {
+                                    if keep {
+                                        kept_u64.push(h);
+                                    }
+                                    false
+                                }
+                                Err(b) => b.reason == BusyReason::Shutdown,
+                            },
+                            _ => {
+                                // Narrow keys force duplicate-key
+                                // payload tie-breaks inside the sort.
+                                let data: Vec<KeyValue> = (0..len)
+                                    .map(|j| KeyValue::new(rng.next_u32() % 257, j as u32))
+                                    .collect();
+                                match client.try_submit_pairs(data) {
+                                    Ok(h) => {
+                                        if keep {
+                                            kept_pairs.push(h);
+                                        }
+                                        false
+                                    }
+                                    Err(b) => b.reason == BusyReason::Shutdown,
+                                }
+                            }
+                        };
+                        if shut {
+                            break; // shutdown won the race: permanent
+                        }
+                        // Drain a few mid-storm so completions
+                        // interleave with fresh submits instead of
+                        // queueing behind the whole storm.
+                        if i % 16 == 15 {
+                            if let Some(h) = kept_u32.pop() {
+                                let _ = h.wait();
+                            }
+                        }
+                    }
+                    // Every kept handle must resolve — a result, an
+                    // eviction, or a shutdown error — never park.
+                    for h in kept_u32 {
+                        let _ = h.wait();
+                    }
+                    for h in kept_u64 {
+                        let _ = h.wait();
+                    }
+                    for h in kept_pairs {
+                        let _ = h.wait();
+                    }
+                })
+            })
+            .collect();
+        // Let the storm build, then shut down while submitters are
+        // still racing (seed-staggered so the flag lands at a
+        // different phase of the storm each run).
+        std::thread::sleep(std::time::Duration::from_millis(2 + 3 * seed));
+        svc.shutdown();
+        for j in joins {
+            j.join().unwrap();
+        }
+        for client in &clients {
+            let t = client.tenant_metrics();
+            assert_eq!(
+                t.accepted,
+                t.completed + t.cancelled,
+                "seed {seed} tenant {}: accepted ({}) != completed ({}) + cancelled ({})",
+                t.name,
+                t.accepted,
+                t.completed,
+                t.cancelled
+            );
+            assert_eq!(
+                t.in_flight_bytes, 0,
+                "seed {seed} tenant {}: residual in-flight gauge",
+                t.name
+            );
+            assert_eq!(t.queued_jobs, 0, "seed {seed} tenant {}: residual queue gauge", t.name);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Schema lint for the committed ``BENCH_*.json`` baselines.
+
+Verifies, for every ``BENCH_*.json`` at the repo root, the unified
+``BenchReport`` schema (v1) that ``rust/src/bench/report.rs`` defines
+and ``bench-compare`` consumes:
+
+* ``schema_version`` is the integer 1;
+* ``bench``, ``arch`` and — the provenance field this lint exists to
+  enforce — ``source`` are present, non-empty strings;
+* ``source_kind`` is ``"native"`` or ``"surrogate"`` and ``smoke`` is
+  a boolean (a committed baseline should not be a smoke run, warned
+  but not fatal);
+* ``params`` is an object of finite numbers, ``marks`` an object of
+  non-empty strings;
+* ``metrics`` is a non-empty array of objects with unique non-empty
+  ``name``, finite ``value``, string ``unit``, ``better`` in
+  ``higher``/``lower``/``info``, and (optional) positive finite
+  ``tol``;
+* ``notes``, when present, is an array of strings.
+
+This is a structural lint only — value drift is ``bench-compare``'s
+job. Exit code 1 with a findings list when anything is malformed; 0
+otherwise.
+
+Usage: ``python3 tools/check_bench_schema.py [repo_root]``
+"""
+import json
+import math
+import os
+import sys
+
+BETTER = {"higher", "lower", "info"}
+SOURCE_KINDS = {"native", "surrogate"}
+REQUIRED_STRINGS = ("bench", "arch", "source")
+
+
+def is_finite_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def check_report(name, data, findings):
+    if not isinstance(data, dict):
+        findings.append(f"{name}: root is not a JSON object")
+        return
+    if data.get("schema_version") != 1:
+        findings.append(
+            f"{name}: schema_version is {data.get('schema_version')!r}, "
+            f"want 1")
+    for key in REQUIRED_STRINGS:
+        v = data.get(key)
+        if not isinstance(v, str) or not v.strip():
+            what = "missing" if key not in data else "empty or non-string"
+            findings.append(
+                f"{name}: {what} \"{key}\" field"
+                + (" — every baseline must carry provenance"
+                   if key == "source" else ""))
+    kind = data.get("source_kind")
+    if kind not in SOURCE_KINDS:
+        findings.append(
+            f"{name}: source_kind is {kind!r}, want one of "
+            f"{sorted(SOURCE_KINDS)}")
+    if not isinstance(data.get("smoke"), bool):
+        findings.append(f"{name}: smoke must be a boolean")
+    elif data["smoke"]:
+        print(f"  note: {name} is a smoke-mode artifact — committed "
+              f"baselines should come from full runs")
+    params = data.get("params")
+    if not isinstance(params, dict):
+        findings.append(f"{name}: params must be an object")
+    else:
+        for k, v in params.items():
+            if not is_finite_number(v):
+                findings.append(
+                    f"{name}: param \"{k}\" is not a finite number")
+    marks = data.get("marks")
+    if not isinstance(marks, dict):
+        findings.append(f"{name}: marks must be an object")
+    else:
+        for k, v in marks.items():
+            if not isinstance(v, str) or not v:
+                findings.append(f"{name}: mark \"{k}\" is not a string")
+    metrics = data.get("metrics")
+    if not isinstance(metrics, list) or not metrics:
+        findings.append(f"{name}: metrics must be a non-empty array")
+        metrics = []
+    seen = set()
+    for i, m in enumerate(metrics):
+        where = f"{name}: metrics[{i}]"
+        if not isinstance(m, dict):
+            findings.append(f"{where}: not an object")
+            continue
+        metric_name = m.get("name")
+        if not isinstance(metric_name, str) or not metric_name:
+            findings.append(f"{where}: missing metric name")
+        elif metric_name in seen:
+            findings.append(f"{where}: duplicate metric \"{metric_name}\"")
+        else:
+            seen.add(metric_name)
+        if not is_finite_number(m.get("value")):
+            findings.append(f"{where}: value is not a finite number")
+        if not isinstance(m.get("unit"), str):
+            findings.append(f"{where}: unit is not a string")
+        if m.get("better") not in BETTER:
+            findings.append(
+                f"{where}: better is {m.get('better')!r}, want one of "
+                f"{sorted(BETTER)}")
+        if "tol" in m and not (is_finite_number(m["tol"]) and m["tol"] > 0):
+            findings.append(f"{where}: tol must be a positive finite number")
+    notes = data.get("notes", [])
+    if not isinstance(notes, list) or any(
+            not isinstance(n, str) for n in notes):
+        findings.append(f"{name}: notes must be an array of strings")
+
+
+def main():
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    names = sorted(
+        f for f in os.listdir(root)
+        if f.startswith("BENCH_") and f.endswith(".json"))
+    findings = []
+    for name in names:
+        try:
+            with open(os.path.join(root, name), encoding="utf-8") as fh:
+                data = json.load(fh)
+        except (OSError, ValueError) as e:
+            findings.append(f"{name}: unreadable or invalid JSON ({e})")
+            continue
+        check_report(name, data, findings)
+    if not names:
+        findings.append("no BENCH_*.json baselines found at the repo root")
+    if findings:
+        print(f"bench schema check FAILED: {len(findings)} finding(s) "
+              f"across {len(names)} baseline(s)")
+        for f in findings:
+            print(f"  {f}")
+        return 1
+    print(f"bench schema check OK: {len(names)} baseline(s) conform to "
+          f"BenchReport schema v1 with provenance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
