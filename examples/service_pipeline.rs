@@ -91,8 +91,8 @@ fn run_tenant(client: &SortClient, plan: &TenantPlan, seed: u64) -> (usize, usiz
                     // service's own back-off hint; a Shutdown reason
                     // would mean retrying can never succeed.
                     let backoff = match busy.reason {
-                        BusyReason::QueueFull => Duration::from_micros(200),
-                        BusyReason::OverShare { retry_after_hint } => retry_after_hint,
+                        BusyReason::QueueFull { retry_after_hint }
+                        | BusyReason::OverShare { retry_after_hint } => retry_after_hint,
                         BusyReason::Shutdown => panic!("service shut down mid-run"),
                     };
                     sheds += 1;
@@ -150,25 +150,25 @@ fn main() {
             name: "facet-frontend",
             base: 16,
             count: 600,
-            qos: ClientConfig { weight: 1, burst: 1 << 16 },
+            qos: ClientConfig { weight: 1, burst: 1 << 16, ..Default::default() },
         },
         TenantPlan {
             name: "page-backend",
             base: 2_000,
             count: 250,
-            qos: ClientConfig { weight: 2, burst: 1 << 20 },
+            qos: ClientConfig { weight: 2, burst: 1 << 20, ..Default::default() },
         },
         TenantPlan {
             name: "shard-analytics",
             base: 16_384,
             count: 120,
-            qos: ClientConfig { weight: 2, burst: 4 << 20 },
+            qos: ClientConfig { weight: 2, burst: 4 << 20, ..Default::default() },
         },
         TenantPlan {
             name: "report-builder",
             base: 3 << 20,
             count: 4,
-            qos: ClientConfig { weight: 4, burst: 32 << 20 },
+            qos: ClientConfig { weight: 4, burst: 32 << 20, ..Default::default() },
         },
     ];
     println!("{} tenants submitting concurrently, zero blocking submits", plans.len());

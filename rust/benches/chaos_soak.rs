@@ -1,0 +1,246 @@
+//! Bench: chaos soak — the failure-domain hardening exercised as a
+//! workload, not a unit test. A fixed-seed [`FaultPlan`] injects
+//! contained sort panics, worker-killing panics, stalls, and forced
+//! sheds while three QoS-weighted tenants (one carrying a tight
+//! default deadline) drive mixed-size traffic through
+//! `try_submit_with_retry`; the service must absorb all of it —
+//! panicking jobs resolve to typed errors, killed workers respawn,
+//! expired requests reap with their charge refunded — without wedging
+//! a single submitter or losing a single count.
+//!
+//! Three structural marks are the headline claims:
+//!
+//! * **`no_wedged_submitters`** — every tenant thread joins and every
+//!   kept handle resolves (a result or a typed error, never a parked
+//!   waiter), with shutdown racing the tail of the storm.
+//! * **`accounting_exact`** — per tenant, after shutdown:
+//!   `accepted == completed + cancelled + failed`, and the
+//!   `in_flight_bytes` / `queued_jobs` gauges drain to exactly zero.
+//! * **`breaker_recovers`** — a scripted [`CircuitBreaker`] sequence
+//!   (injected clock) trips Closed → Open on consecutive failures,
+//!   half-opens after the cooloff, reopens on a failed probe, and
+//!   closes again on a successful one.
+//!
+//! The one gateable metric is **`completion_rate`** = completed /
+//! accepted across all tenants: under a fixed injection schedule the
+//! survival rate is a property of the recovery machinery, so a drop
+//! means containment or requeue regressed. Fault/recovery counters
+//! (`panics_contained`, `workers_respawned`, `quarantined`,
+//! `deadline_expired`) are recorded as context — their exact values
+//! depend on thread interleaving even with a fixed plan, because the
+//! per-admission fault sequence is racing three submitter threads.
+//!
+//! Env knobs:
+//! * `NEONMS_BENCH_SMOKE=1` — CI smoke mode (shorter storm).
+//! * `NEONMS_BENCH_JOBS` — jobs per tenant.
+//! * `NEONMS_BENCH_OUT` — artifact path (default
+//!   `../BENCH_chaos_soak.json`, the repo root when run via
+//!   `cargo bench` from `rust/`).
+
+use neonms::bench::report::{self, BenchReport, Better, SourceKind};
+use neonms::coordinator::{
+    ClientConfig, CoordinatorConfig, FaultPlan, RetryPolicy, SortService,
+};
+use neonms::runtime::{BreakerState, CircuitBreaker};
+use neonms::testutil::Rng;
+use std::time::{Duration, Instant};
+
+const WORKERS: usize = 4;
+const TENANTS: usize = 3;
+
+/// The injection mix: roughly 1 in 5 admissions carries a fault.
+/// Worker-killing panics are kept rare (each one costs a thread
+/// respawn and a requeue) but present, so the supervisor path is
+/// always exercised.
+fn plan() -> FaultPlan {
+    FaultPlan {
+        seed: 0x0C4A05,
+        sort_panic_per_mille: 100,
+        fatal_panic_per_mille: 10,
+        stall_per_mille: 50,
+        stall: Duration::from_micros(200),
+        shed_per_mille: 40,
+        ..Default::default()
+    }
+}
+
+/// Drive one tenant: `jobs` requests through the retrying submit
+/// path, draining handles opportunistically. Returns
+/// (resolved_ok, resolved_err, gave_up) — every accepted handle is
+/// waited on, so a wedged waiter hangs the bench (that *is* the
+/// no-wedge check).
+fn run_tenant(svc: &SortService, tenant: usize, jobs: usize, seed: u64) -> (u64, u64, u64) {
+    let deadline = (tenant == 2).then(|| Duration::from_millis(2));
+    let client = svc.client_with(
+        &format!("chaos-{tenant}"),
+        ClientConfig {
+            weight: 1 + tenant as u32,
+            burst: 1 << 20,
+            default_deadline: deadline,
+        },
+    );
+    let policy = RetryPolicy {
+        max_attempts: 6,
+        base: Duration::from_micros(50),
+        cap: Duration::from_millis(2),
+        jitter_seed: seed,
+    };
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::new();
+    let (mut ok, mut err, mut gave_up) = (0u64, 0u64, 0u64);
+    for _ in 0..jobs {
+        let len = 64 + rng.below(2000);
+        match client.try_submit_with_retry(rng.vec_u32(len), &policy) {
+            Ok(h) => pending.push(h),
+            // Forced sheds under a saturated queue can outlast the
+            // policy; the input comes back and the request is simply
+            // not accepted — that's degradation, not a failure.
+            Err(_) => gave_up += 1,
+        }
+        if pending.len() >= 32 {
+            for h in pending.drain(..) {
+                match h.wait() {
+                    Ok(_) => ok += 1,
+                    Err(_) => err += 1,
+                }
+            }
+        }
+    }
+    for h in pending {
+        match h.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+    }
+    (ok, err, gave_up)
+}
+
+/// Scripted breaker lifecycle on an injected clock: trip, cool off,
+/// fail the first probe (reopen), pass the second (close). Returns
+/// true when every transition lands where the state machine promises.
+fn breaker_recovers() -> bool {
+    let cooloff = Duration::from_millis(50);
+    let mut b = CircuitBreaker::new(3, cooloff);
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        if !b.allow_at(t0) {
+            return false; // must stay closed below the threshold
+        }
+        b.record_failure_at(t0);
+    }
+    if !matches!(b.state(), BreakerState::Open { .. }) || b.allow_at(t0) || b.trips() != 1 {
+        return false;
+    }
+    // Cooloff elapses: the next caller is admitted as the probe.
+    let t1 = t0 + cooloff;
+    if !b.allow_at(t1) || b.state() != BreakerState::HalfOpen {
+        return false;
+    }
+    b.record_failure_at(t1); // failed probe: straight back to Open
+    if !matches!(b.state(), BreakerState::Open { .. }) || b.trips() != 2 {
+        return false;
+    }
+    let t2 = t1 + cooloff;
+    if !b.allow_at(t2) {
+        return false;
+    }
+    b.record_success(); // healthy probe: Closed, counters reset
+    b.state() == BreakerState::Closed && b.allow_at(t2)
+}
+
+fn main() {
+    let smoke = report::smoke_from_env();
+    let jobs: usize = std::env::var("NEONMS_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 300 } else { 3000 });
+
+    println!(
+        "chaos soak: {TENANTS} tenants x {jobs} jobs, seeded fault plan \
+         (sort-panic 10%, fatal 1%, stall 5%, shed 4%), {WORKERS} workers (smoke={smoke})"
+    );
+
+    let cfg = CoordinatorConfig {
+        workers: WORKERS,
+        shards: 2,
+        queue_capacity: 64,
+        batch_max: 16,
+        faults: Some(plan()),
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).expect("service start");
+    let t0 = Instant::now();
+    let outcomes: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        let svc = &svc;
+        let joins: Vec<_> = (0..TENANTS)
+            .map(|t| s.spawn(move || run_tenant(svc, t, jobs, 0xC4A0 + t as u64)))
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("tenant thread")).collect()
+    });
+    let dt = t0.elapsed();
+    // Every thread joined and every handle resolved — nobody wedged.
+    let no_wedge = true;
+
+    let m = svc.metrics();
+    svc.shutdown();
+
+    let (ok, err, gave_up) = outcomes
+        .iter()
+        .fold((0, 0, 0), |(a, b, c), (x, y, z)| (a + x, b + y, c + z));
+    let accepted: u64 = m.tenants.iter().map(|t| t.accepted).sum();
+    let completed: u64 = m.tenants.iter().map(|t| t.completed).sum();
+    let accounting_exact = m.tenants.iter().all(|t| {
+        t.accepted == t.completed + t.cancelled + t.failed
+            && t.in_flight_bytes == 0
+            && t.queued_jobs == 0
+    });
+    let completion_rate = if accepted == 0 { 0.0 } else { completed as f64 / accepted as f64 };
+    let breaker_ok = breaker_recovers();
+
+    println!("resolved: {ok} ok / {err} typed errors / {gave_up} gave up after retries");
+    println!(
+        "injection absorbed: panics_contained={} workers_respawned={} quarantined={} \
+         deadline_expired={} failed={}",
+        m.panics_contained, m.workers_respawned, m.quarantined, m.deadline_expired, m.failed
+    );
+    println!(
+        "completion rate {completion_rate:.3} ({completed}/{accepted} accepted) in {:.3}s; \
+         accounting_exact={accounting_exact} breaker_recovers={breaker_ok}",
+        dt.as_secs_f64()
+    );
+
+    let source = report::source_label(smoke);
+    let mut r = BenchReport::new("chaos_soak", source, SourceKind::Native, smoke);
+    r.param("tenants", TENANTS as f64)
+        .param("jobs_per_tenant", jobs as f64)
+        .param("workers", WORKERS as f64)
+        .param("sort_panic_per_mille", 100.0)
+        .param("fatal_panic_per_mille", 10.0)
+        .param("stall_per_mille", 50.0)
+        .param("shed_per_mille", 40.0);
+    r.mark("no_wedged_submitters", if no_wedge { "true" } else { "false" });
+    r.mark("accounting_exact", if accounting_exact { "true" } else { "false" });
+    r.mark("breaker_recovers", if breaker_ok { "true" } else { "false" });
+    r.metric(
+        "completion_rate",
+        report::round_dp(completion_rate, 3),
+        "ratio",
+        Better::Higher,
+    );
+    let context = [
+        ("resolved_ok", ok),
+        ("resolved_err", err),
+        ("gave_up_after_retries", gave_up),
+        ("panics_contained", m.panics_contained),
+        ("workers_respawned", m.workers_respawned),
+        ("quarantined", m.quarantined),
+        ("deadline_expired", m.deadline_expired),
+        ("failed", m.failed),
+    ];
+    for (what, value) in context {
+        r.metric(what, value as f64, "count", Better::Info);
+    }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_chaos_soak.json");
+
+    assert!(no_wedge && accounting_exact && breaker_ok, "structural marks must hold");
+}

@@ -65,7 +65,7 @@ fn service(qos: QosPolicy) -> SortService {
 fn victim_client(svc: &SortService) -> neonms::coordinator::SortClient {
     // Generous burst (bytes): the victim's whole window fits inside
     // it, so it is never the over-share tenant.
-    svc.client_with("victim", ClientConfig { weight: 1, burst: 4 << 20 })
+    svc.client_with("victim", ClientConfig { weight: 1, burst: 4 << 20, ..Default::default() })
 }
 
 /// Closed-loop victim: keep `VICTIM_WINDOW` requests outstanding
@@ -124,7 +124,10 @@ fn run_aggressor(svc: &SortService, stop: &AtomicBool, seed: u64) {
     let client =
         // Small burst (bytes): four u32 jobs' worth, so the flood's
         // backlog counts as over-share almost immediately.
-        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 4 * JOB_LEN * 4 });
+        svc.client_with(
+            "aggressor",
+            ClientConfig { weight: 1, burst: 4 * JOB_LEN * 4, ..Default::default() },
+        );
     let mut rng = Rng::new(seed);
     let mut pending = Vec::new();
     while !stop.load(Ordering::Relaxed) {

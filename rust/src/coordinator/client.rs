@@ -1,6 +1,7 @@
 //! Client-side completion primitives: the per-request [`Slot`] that
-//! shard workers signal through, and the non-blocking [`SortHandle`]
-//! callers hold.
+//! shard workers signal through, the non-blocking [`SortHandle`]
+//! callers hold, the typed [`SortError`] unsuccessful requests
+//! resolve to, and the [`RetryPolicy`] backoff helper.
 //!
 //! A submitted request no longer owns a channel endpoint; submitter
 //! and worker share one heap slot. The worker stores the sorted
@@ -17,15 +18,86 @@
 //! — while the handle is typed: `SortHandle<T>` resolves to the
 //! `Vec<T>` the caller submitted (`T` defaults to `u32`, the original
 //! API, so pre-element-generic code compiles unchanged).
+//!
+//! A request that does not complete resolves its handle to a
+//! [`SortError`] naming exactly what happened — shutdown, fair-share
+//! eviction, a contained panic, a missed deadline, or quarantine —
+//! so callers can branch on the failure domain instead of parsing a
+//! message (see [`SortHandle::wait`] for the taxonomy).
 
 use super::elem::{ElemBuf, SortElem};
-use anyhow::Result;
 use std::future::Future;
 use std::marker::PhantomData;
 use std::pin::Pin;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::task::{Context, Poll, Waker};
+use std::time::Duration;
+
+/// Why a request resolved without a sorted result. Returned by every
+/// consuming path of a [`SortHandle`] ([`SortHandle::try_take`],
+/// [`SortHandle::wait`], `.await`), carried by the slot's closed
+/// state, and convertible into `anyhow::Error` via `?` (it implements
+/// [`std::error::Error`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SortError {
+    /// The service shut down (or the request was abandoned) before a
+    /// worker completed it. The request counts as shed/cancelled;
+    /// resubmitting against a *new* service instance is the only
+    /// retry that can succeed.
+    Shutdown,
+    /// Fair-share QoS displaced this queued request to make room for
+    /// a tenant further under its share (see
+    /// [`super::BusyReason::OverShare`]). The tenant was over its
+    /// burst allowance; back off and resubmit.
+    Evicted,
+    /// The sort panicked mid-request. The panic was contained: the
+    /// worker (or a respawned replacement) keeps serving other jobs,
+    /// and only this request fails. Counted under `failed` and
+    /// `panics_contained`; a resubmit of different data is fine, a
+    /// resubmit of the *same* data will likely panic again.
+    JobPanicked,
+    /// The request's deadline ([`super::ClientConfig::default_deadline`]
+    /// or [`super::SortClient::submit_with_deadline`]) expired before
+    /// a worker started sorting it. The QoS charge was refunded (the
+    /// request consumed no service); resubmit with a larger deadline
+    /// or at lower load.
+    DeadlineExceeded,
+    /// This request killed a worker thread twice and was quarantined
+    /// rather than retried a third time — the supervisor's poison-job
+    /// stop rule. Do **not** resubmit the same payload.
+    Quarantined,
+    /// The handle was consumed again after its result was already
+    /// taken (API misuse, not a service failure).
+    AlreadyTaken,
+}
+
+impl std::fmt::Display for SortError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SortError::Shutdown => {
+                "sort service dropped the request before completing it"
+            }
+            SortError::Evicted => {
+                "request evicted: tenant exceeded its fair share while the service was full"
+            }
+            SortError::JobPanicked => {
+                "sort panicked mid-request; the panic was contained and the worker recovered"
+            }
+            SortError::DeadlineExceeded => {
+                "request deadline expired before a worker completed it"
+            }
+            SortError::Quarantined => {
+                "request quarantined: it killed two workers and will not be retried"
+            }
+            SortError::AlreadyTaken => {
+                "sort handle used after its result was already taken"
+            }
+        })
+    }
+}
+
+impl std::error::Error for SortError {}
 
 /// What a slot currently holds.
 enum State {
@@ -33,10 +105,9 @@ enum State {
     Pending,
     /// Sorted result parked by a worker, not yet taken by the handle.
     Done(ElemBuf),
-    /// The service dropped the request without completing it; the
-    /// handle resolves to an error carrying the recorded reason
-    /// (shutdown raced the submit, or fair-share QoS evicted it).
-    Closed(&'static str),
+    /// The service resolved the request *without* a result; the
+    /// handle resolves to the recorded [`SortError`].
+    Closed(SortError),
     /// The handle already took the result.
     Taken,
 }
@@ -86,23 +157,25 @@ impl Slot {
         }
     }
 
-    /// Worker side: resolve the slot *without* a result — the request
-    /// was dropped un-sorted (service shut down, or the job was
-    /// abandoned after its handle was cancelled). Idempotent.
+    /// Worker side: resolve the slot *without* a result under the
+    /// default [`SortError::Shutdown`] — the request was dropped
+    /// un-sorted (service shut down, or the job was abandoned after
+    /// its handle was cancelled). Idempotent.
     pub(super) fn close(&self) {
-        self.close_with(CLOSED_MSG);
+        self.close_with(SortError::Shutdown);
     }
 
-    /// [`Slot::close`] with an explicit reason — the fair-share
-    /// eviction path uses this so a displaced tenant's handle error
-    /// says *why*. Idempotent; the first close (or completion) wins.
-    pub(super) fn close_with(&self, msg: &'static str) {
+    /// [`Slot::close`] with an explicit [`SortError`] — eviction,
+    /// contained panic, deadline expiry, and quarantine all record
+    /// *why* here so the handle error names the failure domain.
+    /// Idempotent; the first close (or completion) wins.
+    pub(super) fn close_with(&self, err: SortError) {
         let waker = {
             let mut inner = self.inner.lock().unwrap();
             if !matches!(inner.state, State::Pending) {
                 return;
             }
-            inner.state = State::Closed(msg);
+            inner.state = State::Closed(err);
             inner.waker.take()
         };
         self.cv.notify_all();
@@ -123,15 +196,13 @@ impl Slot {
 
     /// Non-blocking take. `None` while pending; registers `waker` (if
     /// given) to be woken exactly when the state next changes.
-    fn poll_take(&self, waker: Option<&Waker>) -> Option<Result<ElemBuf>> {
+    fn poll_take(&self, waker: Option<&Waker>) -> Option<Result<ElemBuf, SortError>> {
         let mut inner = self.inner.lock().unwrap();
         match std::mem::replace(&mut inner.state, State::Taken) {
             State::Done(data) => Some(Ok(data)),
-            State::Closed(msg) => Some(Err(anyhow::anyhow!(msg))),
+            State::Closed(err) => Some(Err(err)),
             // `replace` already left `Taken` in place.
-            State::Taken => {
-                Some(Err(anyhow::anyhow!("sort handle polled after completion")))
-            }
+            State::Taken => Some(Err(SortError::AlreadyTaken)),
             State::Pending => {
                 inner.state = State::Pending;
                 if let Some(w) = waker {
@@ -145,15 +216,13 @@ impl Slot {
     }
 
     /// Blocking take: park on the condvar until the slot resolves.
-    fn wait_take(&self) -> Result<ElemBuf> {
+    fn wait_take(&self) -> Result<ElemBuf, SortError> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             match std::mem::replace(&mut inner.state, State::Taken) {
                 State::Done(data) => return Ok(data),
-                State::Closed(msg) => return Err(anyhow::anyhow!(msg)),
-                State::Taken => {
-                    return Err(anyhow::anyhow!("sort handle waited after completion"))
-                }
+                State::Closed(err) => return Err(err),
+                State::Taken => return Err(SortError::AlreadyTaken),
                 State::Pending => {
                     inner.state = State::Pending;
                     inner = self.cv.wait(inner).unwrap();
@@ -163,16 +232,19 @@ impl Slot {
     }
 }
 
-/// Default [`Slot::close`] reason (shutdown / abandoned request).
-const CLOSED_MSG: &str = "sort service dropped the request before completing it";
-
 /// Why a [`super::SortClient::try_submit`] was shed.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum BusyReason {
     /// Every shard was at capacity and no tenant was further over its
     /// fair share than this one — transient backpressure; a retry
-    /// after draining some handles can succeed.
-    QueueFull,
+    /// after draining some handles can succeed. `retry_after_hint`
+    /// estimates how long one median queue-to-completion latency
+    /// takes — by then a popped slot has likely freed (a hint, not a
+    /// promise; same derivation as [`BusyReason::OverShare`]'s).
+    QueueFull {
+        /// Suggested back-off before the next `try_submit`.
+        retry_after_hint: Duration,
+    },
     /// Every shard was at capacity and **this tenant** was the one
     /// most over its fair share ([`super::ClientConfig`] weight/burst)
     /// — the fair-share analog of `QueueFull`, telling the tenant the
@@ -182,10 +254,24 @@ pub enum BusyReason {
     /// latency — a hint, not a promise).
     OverShare {
         /// Suggested back-off before the next `try_submit`.
-        retry_after_hint: std::time::Duration,
+        retry_after_hint: Duration,
     },
     /// The service has shut down — permanent; stop retrying.
     Shutdown,
+}
+
+impl BusyReason {
+    /// The back-off hint, if the shed is retryable: `Some` for both
+    /// transient reasons (full queues / over share), `None` for
+    /// [`BusyReason::Shutdown`] — exactly the shape a retry loop
+    /// wants to match on. [`RetryPolicy::backoff`] consumes it.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            BusyReason::QueueFull { retry_after_hint }
+            | BusyReason::OverShare { retry_after_hint } => Some(*retry_after_hint),
+            BusyReason::Shutdown => None,
+        }
+    }
 }
 
 /// The input handed back by [`super::SortClient::try_submit`] when
@@ -198,19 +284,15 @@ pub enum BusyReason {
 ///
 /// # Examples
 ///
-/// A QoS-aware retry loop distinguishes the three reasons — retry
-/// soon, back off by the hint, or stop:
+/// A QoS-aware retry loop distinguishes the reasons — back off by the
+/// hint both transient sheds carry, or stop on shutdown:
 ///
 /// ```
 /// use neonms::coordinator::{Busy, BusyReason};
 /// use std::time::Duration;
 ///
 /// fn backoff(busy: &Busy) -> Option<Duration> {
-///     match busy.reason {
-///         BusyReason::QueueFull => Some(Duration::from_micros(100)),
-///         BusyReason::OverShare { retry_after_hint } => Some(retry_after_hint),
-///         BusyReason::Shutdown => None, // retrying can never succeed
-///     }
+///     busy.reason.retry_after() // None ⇔ Shutdown: retrying can never succeed
 /// }
 ///
 /// let shed = Busy {
@@ -219,6 +301,10 @@ pub enum BusyReason {
 /// };
 /// assert_eq!(backoff(&shed), Some(Duration::from_micros(250)));
 /// assert_eq!(shed.data, vec![3, 1, 2]);
+/// assert_eq!(
+///     Busy { data: shed.data, reason: BusyReason::Shutdown }.reason.retry_after(),
+///     None,
+/// );
 /// ```
 #[derive(Debug)]
 pub struct Busy<T: SortElem = u32> {
@@ -227,6 +313,87 @@ pub struct Busy<T: SortElem = u32> {
     /// Transient overload ([`BusyReason::QueueFull`] /
     /// [`BusyReason::OverShare`]) or permanent shutdown.
     pub reason: BusyReason,
+}
+
+/// Bounded exponential backoff with deterministic jitter for
+/// [`super::SortClient::try_submit_with_retry`] (or hand-rolled retry
+/// loops via [`RetryPolicy::backoff`]).
+///
+/// Attempt `k` sleeps a jittered duration in `[base·2ᵏ/2, base·2ᵏ]`
+/// (capped at `cap`), floored at the shed's `retry_after_hint` when
+/// one was given — the service's own drain estimate always wins over
+/// a smaller exponential step. Jitter is **deterministic** (splitmix
+/// over `jitter_seed ⊕ attempt`), so a fixed-seed policy produces a
+/// reproducible schedule — the same property the fault injector
+/// guarantees, and for the same reason: replayable tests.
+///
+/// # Examples
+///
+/// ```
+/// use neonms::coordinator::RetryPolicy;
+/// use std::time::Duration;
+///
+/// let policy = RetryPolicy::default();
+/// // Deterministic: the same attempt always maps to the same sleep.
+/// assert_eq!(policy.backoff(0, None), policy.backoff(0, None));
+/// // The service's hint floors the exponential step.
+/// let hint = Duration::from_millis(5);
+/// assert!(policy.backoff(0, Some(hint)).unwrap() >= hint);
+/// // Attempts exhaust: `None` means give up.
+/// assert_eq!(policy.backoff(policy.max_attempts, None), None);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Backoffs granted before [`RetryPolicy::backoff`] returns
+    /// `None` (so a submit is attempted at most `max_attempts + 1`
+    /// times: the initial try plus one per granted backoff).
+    pub max_attempts: u32,
+    /// First attempt's full backoff window.
+    pub base: Duration,
+    /// Ceiling on any single backoff (pre-hint; a larger
+    /// `retry_after_hint` still wins).
+    pub cap: Duration,
+    /// Seed for the deterministic jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    /// 5 retries from a 100 µs base capped at 50 ms — tuned to the
+    /// service's own `retry_after_hint` clamp (50 µs .. 1 s), so the
+    /// default policy and the service's drain estimates are on the
+    /// same scale.
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base: Duration::from_micros(100),
+            cap: Duration::from_millis(50),
+            jitter_seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (0-based), or `None`
+    /// when the policy is exhausted. `hint` is the shed's
+    /// `retry_after_hint` ([`BusyReason::retry_after`]); when given
+    /// it floors the result — backing off *less* than the service's
+    /// own drain estimate just burns admissions.
+    pub fn backoff(&self, attempt: u32, hint: Option<Duration>) -> Option<Duration> {
+        if attempt >= self.max_attempts {
+            return None;
+        }
+        let exp = self.base.saturating_mul(1u32 << attempt.min(20)).min(self.cap);
+        // Jitter into [exp/2, exp]: decorrelates retry storms without
+        // ever collapsing the backoff to zero.
+        let ns = exp.as_nanos().min(u64::MAX as u128) as u64;
+        let r = super::faults::splitmix64(self.jitter_seed ^ u64::from(attempt));
+        let jittered = ns / 2 + if ns <= 1 { 0 } else { r % (ns / 2 + 1) };
+        let d = Duration::from_nanos(jittered.max(1));
+        Some(match hint {
+            Some(h) => d.max(h),
+            None => d,
+        })
+    }
 }
 
 /// Non-blocking handle to a submitted sort request for element type
@@ -262,7 +429,7 @@ impl<T: SortElem> SortHandle<T> {
         SortHandle { slot, resolved: false, _elem: PhantomData }
     }
 
-    /// True once a result (or a shutdown error) is waiting; never
+    /// True once a result (or a [`SortError`]) is waiting; never
     /// blocks. Before the result is taken, a `true` here makes the
     /// next [`SortHandle::try_take`] return `Some`; after the take it
     /// stays `true` (the handle is resolved, not pending again).
@@ -272,8 +439,9 @@ impl<T: SortElem> SortHandle<T> {
 
     /// Non-blocking take: `None` while the request is still in
     /// flight, `Some(result)` exactly once when it resolves, and
-    /// `None` again on any call after the result was taken.
-    pub fn try_take(&mut self) -> Option<Result<Vec<T>>> {
+    /// `None` again on any call after the result was taken. The
+    /// `Err` cases are [`SortHandle::wait`]'s taxonomy.
+    pub fn try_take(&mut self) -> Option<Result<Vec<T>, SortError>> {
         if self.resolved {
             return None;
         }
@@ -284,16 +452,40 @@ impl<T: SortElem> SortHandle<T> {
         out.map(|r| r.map(T::unwrap))
     }
 
-    /// Block the calling thread until the result arrives (parked on
+    /// Block the calling thread until the request resolves (parked on
     /// the slot's condvar; woken directly by the completing worker).
-    pub fn wait(mut self) -> Result<Vec<T>> {
+    ///
+    /// # Errors
+    ///
+    /// Resolving to `Err` means the service gave up on the request;
+    /// the variant says which failure domain:
+    ///
+    /// * [`SortError::Shutdown`] — the service shut down before a
+    ///   worker completed it.
+    /// * [`SortError::Evicted`] — fair-share QoS displaced it while
+    ///   this tenant was over its burst (see
+    ///   [`super::SortClient::submit`]).
+    /// * [`SortError::JobPanicked`] — the sort panicked; the panic
+    ///   was contained to this request.
+    /// * [`SortError::DeadlineExceeded`] — its deadline expired while
+    ///   it was still queued.
+    /// * [`SortError::Quarantined`] — it killed two workers and was
+    ///   refused a third run.
+    ///
+    /// `wait().unwrap()` is therefore sound only for a well-behaved
+    /// tenant (within its burst, no deadline, against a live service)
+    /// sorting payloads that cannot panic the kernel — tests and
+    /// examples qualify; production callers should match on the
+    /// variant (retry, resubmit elsewhere, or drop) instead of
+    /// unwrapping.
+    pub fn wait(mut self) -> Result<Vec<T>, SortError> {
         self.resolved = true;
         self.slot.wait_take().map(T::unwrap)
     }
 }
 
 impl<T: SortElem> Future for SortHandle<T> {
-    type Output = Result<Vec<T>>;
+    type Output = Result<Vec<T>, SortError>;
 
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
         let this = self.get_mut();

@@ -93,6 +93,12 @@ pub struct CoordinatorConfig {
     /// allowances ride on [`super::ClientConfig`] via
     /// [`super::SortService::client_with`].
     pub qos: QosPolicy,
+    /// Deterministic fault injection for tests and benches
+    /// ([`super::FaultPlan`]): seeded per-job decisions to panic,
+    /// stall, fail XLA dispatches, or shed at admission. `None` (the
+    /// default, and the only sane production setting) costs one
+    /// `Option` check per admission.
+    pub faults: Option<super::faults::FaultPlan>,
 }
 
 impl Default for CoordinatorConfig {
@@ -110,6 +116,7 @@ impl Default for CoordinatorConfig {
             sort: SortConfig::default(),
             adaptive: AdaptivePolicy::Off,
             qos: QosPolicy::default(),
+            faults: None,
         }
     }
 }

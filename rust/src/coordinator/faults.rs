@@ -1,0 +1,232 @@
+//! Deterministic fault injection for the failure-domain tests and
+//! benches: a seeded [`FaultPlan`] threaded through
+//! [`super::CoordinatorConfig::faults`] that decides, per admitted
+//! job, whether to inject a contained sort panic, a fatal (worker-
+//! killing) panic, a sort stall, a forced XLA error, or a forced
+//! admission shed.
+//!
+//! The plan is **deterministic**: every admitted job draws a
+//! monotonically increasing sequence number, and
+//! [`FaultPlan::decide`] hashes `seed ⊕ seq` through splitmix64 —
+//! identical seeds therefore produce identical injection schedules
+//! regardless of thread interleaving, which is what makes chaos
+//! tests replayable and the chaos bench comparable across runs. No
+//! wall clock, no global RNG state.
+//!
+//! Injection sites (all no-ops when the plan is absent or a rate is
+//! zero):
+//!
+//! * [`FaultDecision::SortPanic`] — the worker panics *inside* the
+//!   `catch_unwind` envelope around the sort, exercising panic
+//!   containment (`SortError::JobPanicked`, `panics_contained`).
+//! * [`FaultDecision::FatalPanic`] — the worker parks every job it
+//!   holds and panics *outside* per-job containment, killing the
+//!   thread: exercises the supervisor (respawn, requeue,
+//!   `workers_respawned`) and double-kill quarantine
+//!   (`SortError::Quarantined`).
+//! * [`FaultDecision::Stall`] — the worker sleeps before sorting,
+//!   exercising deadline reaping (`SortError::DeadlineExceeded`).
+//! * [`FaultDecision::XlaError`] — the XLA executor records a
+//!   dispatch failure without touching PJRT, exercising the circuit
+//!   breaker and CPU fallback.
+//! * [`FaultDecision::Shed`] — `try_submit` refuses the request as
+//!   if every shard were full, exercising retry/backoff paths.
+//!
+//! This module is wired for tests and benches only: production
+//! configurations leave [`super::CoordinatorConfig::faults`] at
+//! `None`, which costs one `Option` check per admission.
+
+use std::time::Duration;
+
+/// SplitMix64: the finalizer used both for fault rolls and for
+/// [`super::RetryPolicy`]'s deterministic jitter. Full-period,
+/// stateless, and good enough avalanche that consecutive sequence
+/// numbers produce uncorrelated rolls.
+pub(super) fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A seeded, per-mille-rated fault schedule. All rates are
+/// **per-mille** (0..=1000) and drawn from disjoint bands of one
+/// roll, so their sum must stay ≤ 1000 — [`FaultPlan::decide`]
+/// saturates gracefully (later bands are squeezed out) but tests
+/// should keep the sum in range for the rates to mean what they say.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the deterministic roll stream. Two plans with equal
+    /// seeds and rates produce identical injection schedules.
+    pub seed: u64,
+    /// Per-mille of admitted jobs whose sort panics inside the
+    /// containment envelope (`SortError::JobPanicked`).
+    pub sort_panic_per_mille: u16,
+    /// Per-mille of admitted jobs that kill their worker thread
+    /// outright (supervisor respawn; second kill → quarantine).
+    pub fatal_panic_per_mille: u16,
+    /// Per-mille of admitted jobs stalled by [`FaultPlan::stall`]
+    /// before sorting (drives deadline expiry).
+    pub stall_per_mille: u16,
+    /// How long a stalled job sleeps.
+    pub stall: Duration,
+    /// Per-mille of XLA-routed jobs whose dispatch is failed without
+    /// touching PJRT (drives the circuit breaker).
+    pub xla_error_per_mille: u16,
+    /// Per-mille of `try_submit` admissions refused as if the queues
+    /// were full (`BusyReason::QueueFull`).
+    pub shed_per_mille: u16,
+}
+
+impl Default for FaultPlan {
+    /// All rates zero — an inert plan (useful as a `..Default::default()`
+    /// base). `stall` defaults to 1 ms so enabling `stall_per_mille`
+    /// alone already produces an observable delay.
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            sort_panic_per_mille: 0,
+            fatal_panic_per_mille: 0,
+            stall_per_mille: 0,
+            stall: Duration::from_millis(1),
+            xla_error_per_mille: 0,
+            shed_per_mille: 0,
+        }
+    }
+}
+
+/// What, if anything, to inject for one job. Stamped onto the job at
+/// admission ([`FaultPlan::decide`]) and honored at the matching
+/// site; decisions that never reach their site (e.g. `XlaError` on a
+/// job the router sends to a CPU tier) are inert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDecision {
+    /// No fault for this job (always the case without a plan).
+    None,
+    /// Panic inside the sort's containment envelope.
+    SortPanic,
+    /// Kill the worker thread processing this job.
+    FatalPanic,
+    /// Sleep this long before sorting.
+    Stall(Duration),
+    /// Fail the XLA dispatch without calling PJRT.
+    XlaError,
+    /// Refuse this `try_submit` as if every shard were full.
+    Shed,
+}
+
+impl FaultPlan {
+    /// The deterministic decision for admission sequence number
+    /// `seq`: one splitmix64 roll in `0..1000`, carved into disjoint
+    /// bands in a fixed order (shed, sort panic, fatal panic, stall,
+    /// XLA error). Pure — same `(plan, seq)` always returns the same
+    /// decision.
+    pub fn decide(&self, seq: u64) -> FaultDecision {
+        let roll = (splitmix64(self.seed ^ seq.wrapping_mul(0xA24B_AED4_963E_E407)) % 1000) as u16;
+        let mut edge = self.shed_per_mille;
+        if roll < edge {
+            return FaultDecision::Shed;
+        }
+        edge = edge.saturating_add(self.sort_panic_per_mille);
+        if roll < edge {
+            return FaultDecision::SortPanic;
+        }
+        edge = edge.saturating_add(self.fatal_panic_per_mille);
+        if roll < edge {
+            return FaultDecision::FatalPanic;
+        }
+        edge = edge.saturating_add(self.stall_per_mille);
+        if roll < edge {
+            return FaultDecision::Stall(self.stall);
+        }
+        edge = edge.saturating_add(self.xla_error_per_mille);
+        if roll < edge {
+            return FaultDecision::XlaError;
+        }
+        FaultDecision::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_seeds_produce_identical_schedules() {
+        let a = FaultPlan {
+            seed: 42,
+            sort_panic_per_mille: 100,
+            fatal_panic_per_mille: 50,
+            stall_per_mille: 75,
+            xla_error_per_mille: 25,
+            shed_per_mille: 125,
+            ..Default::default()
+        };
+        let b = a;
+        let schedule_a: Vec<FaultDecision> = (0..4096).map(|s| a.decide(s)).collect();
+        let schedule_b: Vec<FaultDecision> = (0..4096).map(|s| b.decide(s)).collect();
+        assert_eq!(schedule_a, schedule_b, "same seed+rates ⇒ same schedule");
+        // And re-evaluating the same plan is stable (pure function).
+        assert_eq!(schedule_a, (0..4096).map(|s| a.decide(s)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mk = |seed| FaultPlan { seed, sort_panic_per_mille: 500, ..Default::default() };
+        let a: Vec<FaultDecision> = (0..256).map(|s| mk(1).decide(s)).collect();
+        let b: Vec<FaultDecision> = (0..256).map(|s| mk(2).decide(s)).collect();
+        assert_ne!(a, b, "256 draws at 50% should not collide across seeds");
+    }
+
+    #[test]
+    fn rates_are_approximately_honored() {
+        let plan = FaultPlan {
+            seed: 7,
+            sort_panic_per_mille: 200,
+            shed_per_mille: 100,
+            ..Default::default()
+        };
+        let n = 100_000u64;
+        let mut panics = 0u64;
+        let mut sheds = 0u64;
+        let mut none = 0u64;
+        for s in 0..n {
+            match plan.decide(s) {
+                FaultDecision::SortPanic => panics += 1,
+                FaultDecision::Shed => sheds += 1,
+                FaultDecision::None => none += 1,
+                other => panic!("rate-zero decision {other:?} injected"),
+            }
+        }
+        // 20% ± 1.5pp and 10% ± 1.5pp over 100k draws.
+        assert!((panics as i64 - 20_000).unsigned_abs() < 1_500, "panics={panics}");
+        assert!((sheds as i64 - 10_000).unsigned_abs() < 1_500, "sheds={sheds}");
+        assert_eq!(none, n - panics - sheds);
+    }
+
+    #[test]
+    fn inert_plan_never_injects() {
+        let plan = FaultPlan::default();
+        assert!((0..10_000).all(|s| plan.decide(s) == FaultDecision::None));
+    }
+
+    #[test]
+    fn stall_decision_carries_the_configured_duration() {
+        let plan = FaultPlan {
+            seed: 3,
+            stall_per_mille: 1000,
+            stall: Duration::from_millis(7),
+            ..Default::default()
+        };
+        assert_eq!(plan.decide(0), FaultDecision::Stall(Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn splitmix_is_not_identity_and_spreads_low_bits() {
+        // Sanity on the mixer: consecutive inputs land in different
+        // per-mille buckets often enough to be usable as rolls.
+        let buckets: std::collections::HashSet<u64> =
+            (0..1000u64).map(|x| splitmix64(x) % 1000).collect();
+        assert!(buckets.len() > 600, "only {} distinct rolls in 1000", buckets.len());
+    }
+}

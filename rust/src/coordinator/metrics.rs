@@ -312,9 +312,19 @@ pub struct TenantMetrics {
     pub completed: AtomicU64,
     /// Requests that were admitted but never sorted: the handle was
     /// dropped before a worker started them, or they were still
-    /// queued when the service shut down. Always
-    /// `accepted == completed + cancelled` once the service is quiet.
+    /// queued when the service shut down. Together with `failed` this
+    /// closes the admission ledger: always
+    /// `accepted == completed + cancelled + failed` once the service
+    /// is quiet.
     pub cancelled: AtomicU64,
+    /// Requests that were admitted but resolved to a
+    /// [`super::SortError`] instead of a result: contained panics,
+    /// expired deadlines, and quarantines.
+    pub failed: AtomicU64,
+    /// The subset of `failed` reaped because the request's deadline
+    /// expired before a worker started it (the QoS charge was
+    /// refunded).
+    pub deadline_expired: AtomicU64,
     /// Queue-to-completion latency, this tenant's requests only.
     pub latency: LatencyHistogram,
     /// Live fair-share scheduling state (weight/burst config plus the
@@ -333,6 +343,8 @@ impl TenantMetrics {
             evicted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             latency: LatencyHistogram::default(),
             qos: QosState::new(ClientConfig::default()),
         }
@@ -358,6 +370,8 @@ impl TenantMetrics {
             evicted: self.evicted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             weight: cfg.weight,
             burst: cfg.burst as u64,
             in_flight_bytes: self.qos.in_flight(),
@@ -386,6 +400,12 @@ pub struct TenantSnapshot {
     pub evicted: u64,
     pub completed: u64,
     pub cancelled: u64,
+    /// Requests resolved to a [`super::SortError`] (contained panic,
+    /// deadline, quarantine). The quiet-service ledger reads
+    /// `accepted == completed + cancelled + failed`.
+    pub failed: u64,
+    /// `failed` subset reaped for deadline expiry (charge refunded).
+    pub deadline_expired: u64,
     /// Fair-share weight in force ([`super::ClientConfig::weight`]).
     pub weight: u32,
     /// Burst allowance in bytes ([`super::ClientConfig::burst`]).
@@ -438,6 +458,27 @@ pub struct Metrics {
     /// was dropped before a worker reached them, or they were still
     /// queued at shutdown.
     pub cancelled: AtomicU64,
+    /// Requests admitted but resolved to a [`super::SortError`]
+    /// (contained panic, expired deadline, quarantine) — summed over
+    /// tenants.
+    pub failed: AtomicU64,
+    /// `failed` subset reaped for deadline expiry.
+    pub deadline_expired: AtomicU64,
+    /// Panics caught by the per-job `catch_unwind` envelope (the
+    /// worker survived; only the panicking request failed).
+    pub panics_contained: AtomicU64,
+    /// Worker threads the supervisor respawned after a fatal
+    /// (uncontained) panic killed them.
+    pub workers_respawned: AtomicU64,
+    /// Jobs quarantined after killing a worker twice (resolved
+    /// [`super::SortError::Quarantined`] instead of a third retry).
+    pub quarantined: AtomicU64,
+    /// XLA circuit-breaker state gauge, mirrored by the executor after
+    /// every dispatch: 0 closed, 1 open, 2 half-open
+    /// ([`crate::runtime::CircuitBreaker::state_code`]).
+    pub breaker_state: AtomicU64,
+    /// Times the XLA circuit breaker tripped open.
+    pub breaker_trips: AtomicU64,
     pub elements: AtomicU64,
     pub route_tiny: AtomicU64,
     pub route_single: AtomicU64,
@@ -482,6 +523,24 @@ pub struct MetricsSnapshot {
     /// Requests admitted but never sorted (handle dropped, or still
     /// queued at shutdown).
     pub cancelled: u64,
+    /// Requests resolved to a [`super::SortError`] (contained panic,
+    /// expired deadline, quarantine); the quiet-service ledger is
+    /// `Σ tenants.accepted == completed + cancelled + failed`.
+    pub failed: u64,
+    /// `failed` subset reaped for deadline expiry (charge refunded).
+    pub deadline_expired: u64,
+    /// Panics contained by the per-job envelope (worker survived).
+    pub panics_contained: u64,
+    /// Workers the supervisor respawned after fatal panics.
+    pub workers_respawned: u64,
+    /// Jobs quarantined after killing a worker twice.
+    pub quarantined: u64,
+    /// XLA circuit-breaker state at snapshot time: `"closed"`,
+    /// `"open"`, or `"half-open"` (always `"closed"` when no XLA
+    /// executor is running).
+    pub breaker_state: &'static str,
+    /// Times the XLA circuit breaker tripped open.
+    pub breaker_trips: u64,
     pub elements: u64,
     pub route_tiny: u64,
     pub route_single: u64,
@@ -510,6 +569,16 @@ pub struct MetricsSnapshot {
     pub routes: Vec<RouteSnapshot>,
 }
 
+/// Decode the breaker gauge code mirrored by the XLA executor
+/// ([`crate::runtime::CircuitBreaker::state_code`]).
+fn breaker_state_label(code: u64) -> &'static str {
+    match code {
+        1 => "open",
+        2 => "half-open",
+        _ => "closed",
+    }
+}
+
 impl Metrics {
     /// Capture a service-wide snapshot (no shard data; see
     /// [`Metrics::snapshot_with_shards`]).
@@ -520,6 +589,13 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            panics_contained: self.panics_contained.load(Ordering::Relaxed),
+            workers_respawned: self.workers_respawned.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            breaker_state: breaker_state_label(self.breaker_state.load(Ordering::Relaxed)),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             route_tiny: self.route_tiny.load(Ordering::Relaxed),
             route_single: self.route_single.load(Ordering::Relaxed),
@@ -633,7 +709,7 @@ mod tests {
     #[test]
     fn tenant_share_and_credit_gauges() {
         let t = TenantMetrics::new("gold");
-        t.qos.configure(ClientConfig { weight: 4, burst: 0 });
+        t.qos.configure(ClientConfig { weight: 4, burst: 0, ..Default::default() });
         let gv = AtomicU64::new(0);
         t.qos.charge(100, &gv);
         // Bare snapshot: relative gauges unset.
@@ -730,6 +806,31 @@ mod tests {
         obs.record_segments(&[0], Duration::from_micros(1));
         obs.record_segments(&[0, 0], Duration::from_micros(1));
         assert_eq!(obs.jobs(), 3);
+    }
+
+    #[test]
+    fn failure_counters_round_trip_and_breaker_decodes() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().breaker_state, "closed", "gauge defaults closed");
+        m.failed.fetch_add(3, Ordering::Relaxed);
+        m.deadline_expired.fetch_add(2, Ordering::Relaxed);
+        m.panics_contained.fetch_add(1, Ordering::Relaxed);
+        m.workers_respawned.fetch_add(4, Ordering::Relaxed);
+        m.quarantined.fetch_add(1, Ordering::Relaxed);
+        m.breaker_state.store(1, Ordering::Relaxed);
+        m.breaker_trips.store(7, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.failed, s.deadline_expired), (3, 2));
+        assert_eq!((s.panics_contained, s.workers_respawned, s.quarantined), (1, 4, 1));
+        assert_eq!((s.breaker_state, s.breaker_trips), ("open", 7));
+        m.breaker_state.store(2, Ordering::Relaxed);
+        assert_eq!(m.snapshot().breaker_state, "half-open");
+        // Tenant side: failed/deadline_expired land in the snapshot.
+        let t = TenantMetrics::new("acme");
+        t.failed.fetch_add(2, Ordering::Relaxed);
+        t.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let ts = t.snapshot();
+        assert_eq!((ts.failed, ts.deadline_expired), (2, 1));
     }
 
     #[test]

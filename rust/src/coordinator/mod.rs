@@ -45,6 +45,19 @@
 //! [`MetricsSnapshot::tenants`]; [`QosPolicy::Fifo`] restores the
 //! pre-QoS global FIFO behavior.
 //!
+//! **Failure domains are hardened**: every solo sort runs inside a
+//! panic-containment envelope (a panicking job resolves its handle to
+//! [`SortError::JobPanicked`]; the worker survives), a supervisor
+//! respawns workers killed by uncontained panics and quarantines jobs
+//! that kill twice, requests may carry deadlines
+//! ([`ClientConfig::default_deadline`] /
+//! [`SortClient::submit_with_deadline`]) reaped lazily as
+//! [`SortError::DeadlineExceeded`], the XLA executor degrades through
+//! a circuit breaker to the CPU fallback, clients can wrap submits in
+//! a deterministic [`RetryPolicy`] backoff, and a seeded [`FaultPlan`]
+//! ([`CoordinatorConfig::faults`]) injects all of it reproducibly in
+//! tests — see the "Failure domains" section in `service.rs`.
+//!
 //! The routing cutoffs can be **learned online**: with
 //! [`AdaptivePolicy::Adaptive`] the service observes each tier's
 //! throughput per request-size class ([`MetricsSnapshot::routes`])
@@ -58,12 +71,14 @@
 mod client;
 mod config;
 mod elem;
+mod faults;
 mod metrics;
 mod qos;
 mod service;
 mod tuner;
 
-pub use client::{Busy, BusyReason, SortHandle};
+pub use client::{Busy, BusyReason, RetryPolicy, SortError, SortHandle};
+pub use faults::{FaultDecision, FaultPlan};
 pub use config::{CoordinatorConfig, QosPolicy, Route};
 pub use elem::{ElemBuf, ElemKind, SortElem};
 pub use metrics::{

@@ -93,6 +93,12 @@ pub(super) fn job_cost(byte_len: usize) -> u64 {
 ///   denomination when sizing for wide elements: a `u64` or
 ///   key–payload request consumes its burst at 8 bytes per element,
 ///   twice the `u32` rate.
+/// * `default_deadline` — when set, every submit from this tenant
+///   carries a deadline of *now + default_deadline* unless the
+///   per-call [`super::SortClient::submit_with_deadline`] overrides
+///   it. A job whose deadline expires while still queued is reaped
+///   (handle resolves [`super::SortError::DeadlineExceeded`], QoS
+///   charge refunded). `None` (the default) means no deadline.
 ///
 /// # Examples
 ///
@@ -126,6 +132,11 @@ pub struct ClientConfig {
     /// or 16K `u64`/pair elements) or ~128 queued requests, whichever
     /// a tenant's traffic hits first.
     pub burst: usize,
+    /// Deadline applied to every submit that does not carry its own
+    /// (see [`super::SortClient::submit_with_deadline`]). Expired
+    /// jobs are lazily reaped at dequeue with their QoS charge
+    /// refunded. `None` disables per-tenant deadlines.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ClientConfig {
@@ -134,8 +145,23 @@ impl Default for ClientConfig {
         // element width: enough that small interactive tenants never
         // trip the over-share machinery, small enough that a flood
         // does.
-        ClientConfig { weight: 1, burst: 128 * 1024 }
+        ClientConfig { weight: 1, burst: 128 * 1024, default_deadline: None }
     }
+}
+
+/// `Option<Duration>` packed into one atomic for [`QosState`]:
+/// `u64::MAX` is `None`, anything else is nanoseconds (saturating —
+/// a ~584-year deadline and an infinite one are indistinguishable,
+/// acceptably).
+fn encode_deadline(d: Option<Duration>) -> u64 {
+    match d {
+        None => u64::MAX,
+        Some(d) => d.as_nanos().min(u64::MAX as u128 - 1) as u64,
+    }
+}
+
+fn decode_deadline(ns: u64) -> Option<Duration> {
+    (ns != u64::MAX).then(|| Duration::from_nanos(ns))
 }
 
 /// One tenant's live QoS state: configuration plus the in-flight /
@@ -153,6 +179,10 @@ pub(super) struct QosState {
     /// Virtual finish time of this tenant's last enqueued job
     /// ([`VT_SCALE`] units).
     vtime: AtomicU64,
+    /// [`ClientConfig::default_deadline`], packed via
+    /// [`encode_deadline`]. Jobs snapshot it at admission; queued
+    /// jobs keep the deadline they were admitted under.
+    deadline_ns: AtomicU64,
 }
 
 impl QosState {
@@ -163,6 +193,7 @@ impl QosState {
             in_flight: AtomicU64::new(0),
             queued: AtomicU64::new(0),
             vtime: AtomicU64::new(0),
+            deadline_ns: AtomicU64::new(encode_deadline(cfg.default_deadline)),
         }
     }
 
@@ -172,13 +203,20 @@ impl QosState {
     pub(super) fn configure(&self, cfg: ClientConfig) {
         self.weight.store(cfg.weight.max(1), Ordering::Relaxed);
         self.burst.store(cfg.burst as u64, Ordering::Relaxed);
+        self.deadline_ns.store(encode_deadline(cfg.default_deadline), Ordering::Relaxed);
     }
 
     pub(super) fn config(&self) -> ClientConfig {
         ClientConfig {
             weight: self.weight.load(Ordering::Relaxed),
             burst: self.burst.load(Ordering::Relaxed) as usize,
+            default_deadline: decode_deadline(self.deadline_ns.load(Ordering::Relaxed)),
         }
+    }
+
+    /// The tenant's current default deadline (admission snapshot).
+    pub(super) fn default_deadline(&self) -> Option<Duration> {
+        decode_deadline(self.deadline_ns.load(Ordering::Relaxed))
     }
 
     pub(super) fn in_flight(&self) -> u64 {
@@ -298,7 +336,7 @@ mod tests {
     use super::*;
 
     fn state(weight: u32, burst: usize) -> QosState {
-        QosState::new(ClientConfig { weight, burst })
+        QosState::new(ClientConfig { weight, burst, ..Default::default() })
     }
 
     #[test]
@@ -312,7 +350,7 @@ mod tests {
     fn zero_weight_clamps_to_one() {
         let s = state(0, 0);
         assert_eq!(s.weight(), 1);
-        s.configure(ClientConfig { weight: 0, burst: 8 });
+        s.configure(ClientConfig { weight: 0, burst: 8, ..Default::default() });
         assert_eq!(s.weight(), 1);
         assert_eq!(s.config().burst, 8);
     }
@@ -407,6 +445,25 @@ mod tests {
         );
         assert_eq!(pick_victim(6, [(5, true), (9, true)].into_iter()), Some(1));
         assert_eq!(pick_victim(0, std::iter::empty()), None);
+    }
+
+    #[test]
+    fn default_deadline_round_trips_through_the_packed_atomic() {
+        let s = state(1, 0);
+        assert_eq!(s.default_deadline(), None);
+        s.configure(ClientConfig { default_deadline: Some(Duration::ZERO), ..Default::default() });
+        assert_eq!(
+            s.default_deadline(),
+            Some(Duration::ZERO),
+            "ZERO is a real (instantly expiring) deadline, not None"
+        );
+        s.configure(ClientConfig {
+            default_deadline: Some(Duration::from_millis(5)),
+            ..Default::default()
+        });
+        assert_eq!(s.config().default_deadline, Some(Duration::from_millis(5)));
+        s.configure(ClientConfig::default());
+        assert_eq!(s.default_deadline(), None);
     }
 
     #[test]

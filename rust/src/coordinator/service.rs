@@ -179,26 +179,68 @@
 //! the flag under the queue lock so a submit racing the drain either
 //! lands before it (and is dropped with its slot closed) or is
 //! refused — never parked forever.
+//!
+//! # Failure domains
+//!
+//! Every admitted request ends in exactly one terminal ledger —
+//! `completed`, `cancelled`, or `failed` — so the quiet-service
+//! identity is `accepted == completed + cancelled + failed` per
+//! tenant (admission-time sheds never count as accepted at all):
+//!
+//! * **Panic containment.** Each solo CPU sort runs inside a
+//!   `catch_unwind` envelope: a panicking job resolves its handle to
+//!   [`SortError::JobPanicked`] (counted `failed` +
+//!   `panics_contained`) and the worker keeps serving. A fused batch
+//!   that panics fails only the segments still unfinished — requests
+//!   whose segments already completed keep their results.
+//! * **Supervision.** Each worker owns a recovery cell; a worker
+//!   about to die from an uncontained panic parks every job it holds
+//!   there, and a supervisor thread joins the corpse, requeues the
+//!   recovered jobs, and respawns the thread (`workers_respawned`).
+//!   A job that has killed a worker twice is **quarantined**
+//!   ([`SortError::Quarantined`], counted `quarantined`) instead of
+//!   being retried forever.
+//! * **Deadlines.** Requests carry an optional deadline
+//!   ([`ClientConfig::default_deadline`], or per call via
+//!   [`SortClient::submit_with_deadline`] /
+//!   [`SortClient::try_submit_with_deadline`]); expired jobs are
+//!   lazily reaped at dequeue and in the batcher — the handle
+//!   resolves [`SortError::DeadlineExceeded`] and the QoS byte charge
+//!   is *refunded* (uncharge, exactly like an eviction) so virtual
+//!   time cannot drift from work that consumed no service.
+//! * **Degradation.** The XLA executor guards every dispatch with a
+//!   [`CircuitBreaker`]: consecutive PJRT failures trip it open and
+//!   jobs take the CPU fallback immediately (no doomed calls), with
+//!   timed half-open probes to recover. Its state and trip count are
+//!   mirrored into [`MetricsSnapshot::breaker_state`] /
+//!   `breaker_trips`.
+//! * **Fault injection.** [`CoordinatorConfig::faults`] threads a
+//!   seeded deterministic [`super::FaultPlan`] through admission for
+//!   tests and benches: identical seeds produce identical injection
+//!   schedules. Production leaves it `None` (one `Option` check per
+//!   admission).
 
-use super::client::{Busy, BusyReason, Slot, SortHandle};
+use super::client::{Busy, BusyReason, RetryPolicy, Slot, SortError, SortHandle};
 use super::config::{CoordinatorConfig, QosPolicy, Route};
 use super::elem::{ElemBuf, ElemKind, SortElem};
+use super::faults::FaultDecision;
 use super::metrics::{
     Metrics, MetricsSnapshot, ShardMetrics, TenantMetrics, TenantSnapshot, Tier,
 };
 use super::qos::{self, ClientConfig};
 use super::tuner::{AdaptivePolicy, Decision, RoutingSnapshot, RoutingState, Tuner};
 use crate::kernels::serial::insertion_sort;
-use crate::runtime::{ArtifactRegistry, BlockSorter, PjrtRuntime};
+use crate::runtime::{ArtifactRegistry, BlockSorter, CircuitBreaker, PjrtRuntime};
 use crate::simd::KeyValue;
 use crate::sort::{NeonMergeSort, ParallelNeonMergeSort, SortScratch};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One queued request. The drop guard closes the completion slot, so
 /// a job discarded anywhere (queue cleared at shutdown, channel to a
@@ -224,6 +266,19 @@ struct Job {
     /// evicted tenant under churn — see `QosState::release`).
     vdelta: u64,
     enqueued: Instant,
+    /// Reap-by time: the per-call deadline, else the tenant's
+    /// [`ClientConfig::default_deadline`], resolved to an absolute
+    /// instant at admission. `None` = no deadline. Checked lazily at
+    /// dequeue/batch time (`expired`), never by a timer thread.
+    deadline: Option<Instant>,
+    /// The fault-injection decision stamped at admission
+    /// ([`CoordinatorConfig::faults`]); always
+    /// [`FaultDecision::None`] without a plan.
+    fault: FaultDecision,
+    /// Workers this job's processing has killed so far (fatal
+    /// injected panics). At two the supervisor quarantines it instead
+    /// of requeueing — the poison-job stop rule.
+    deaths: u8,
     slot: Arc<Slot>,
     /// Tenant attribution for completion/cancellation accounting and
     /// QoS cost release. Service-level [`SortService::submit`]
@@ -292,6 +347,10 @@ struct Shared {
     /// (routing + batch eligibility check once per pop); cleared when
     /// shutdown revokes the sender.
     xla_on: AtomicBool,
+    /// Monotone admission sequence feeding
+    /// [`super::FaultPlan::decide`] — the per-job roll index that
+    /// makes injection schedules independent of thread interleaving.
+    fault_seq: AtomicU64,
 }
 
 impl Shared {
@@ -498,9 +557,7 @@ impl Shared {
         if !self.is_anon(&t) {
             t.evicted.fetch_add(1, Ordering::Relaxed);
         }
-        job.slot.close_with(
-            "request evicted: tenant exceeded its fair share while the service was full",
-        );
+        job.slot.close_with(SortError::Evicted);
         // Job's drop guard would close anyway; the explicit close
         // above wins the race with it and records the reason.
     }
@@ -545,26 +602,52 @@ impl Shared {
     /// for it (rolled back via `uncharge` if admission sheds — the
     /// job carries its own `vdelta` for that). The cost is the
     /// payload's **byte** size, so the charge is width-honest.
+    /// `deadline` is the per-call override; absent, the tenant's
+    /// [`ClientConfig::default_deadline`] applies. Both resolve to an
+    /// absolute reap-by instant here, at admission.
     fn make_job<T: SortElem>(
         &self,
         tenant: &Arc<TenantMetrics>,
         data: Vec<T>,
+        deadline: Option<Duration>,
     ) -> (Job, SortHandle<T>) {
         let slot = Slot::new();
         let handle = SortHandle::new(Arc::clone(&slot));
         let data = T::wrap(data);
         let cost = qos::job_cost(data.byte_len());
         let (vtag, vdelta) = tenant.qos.charge(cost, &self.vclock);
+        let now = Instant::now();
+        // checked_add: a deadline too far out to represent is no
+        // deadline at all, not a panic.
+        let deadline = deadline
+            .or_else(|| tenant.qos.default_deadline())
+            .and_then(|d| now.checked_add(d));
+        let fault = match &self.cfg.faults {
+            Some(plan) => plan.decide(self.fault_seq.fetch_add(1, Ordering::Relaxed)),
+            None => FaultDecision::None,
+        };
         let job = Job {
             data,
             cost,
             vtag,
             vdelta,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline,
+            fault,
+            deaths: 0,
             slot,
             tenant: Arc::clone(tenant),
         };
         (job, handle)
+    }
+
+    /// The back-off hint attached to both transient [`BusyReason`]s:
+    /// roughly one median queue-to-completion latency — by then a
+    /// queue slot has likely freed (QueueFull) or some of the
+    /// tenant's in-flight cost has drained (OverShare). One
+    /// derivation for both, so clients can back off uniformly.
+    fn busy_hint(&self) -> Duration {
+        qos::retry_after_hint(self.metrics.latency.quantile_us(0.5))
     }
 
     /// Backpressuring admission: park while every shard is full (and
@@ -576,8 +659,9 @@ impl Shared {
         &self,
         tenant: &Arc<TenantMetrics>,
         data: Vec<T>,
+        deadline: Option<Duration>,
     ) -> SortHandle<T> {
-        let (job, handle) = self.make_job(tenant, data);
+        let (job, handle) = self.make_job(tenant, data, deadline);
         self.count_admit(tenant);
         let shed = |job: Job| {
             self.count_shed(tenant, true, false);
@@ -632,6 +716,7 @@ impl Shared {
         &self,
         tenant: &Arc<TenantMetrics>,
         data: Vec<T>,
+        deadline: Option<Duration>,
     ) -> std::result::Result<SortHandle<T>, Busy<T>> {
         if self.shutdown.load(Ordering::SeqCst) {
             self.count_shed(tenant, false, false);
@@ -639,8 +724,19 @@ impl Shared {
         }
         // Pre-count + pre-charge, rolled back on rejection (see
         // count_admit).
-        let (job, handle) = self.make_job(tenant, data);
+        let (mut job, handle) = self.make_job(tenant, data, deadline);
         self.count_admit(tenant);
+        // Injected admission shed (tests/benches only): refuse as if
+        // every shard were full, through the normal shed bookkeeping
+        // so the forced path and the real one can never diverge.
+        if job.fault == FaultDecision::Shed {
+            self.count_shed(tenant, true, false);
+            tenant.qos.uncharge(job.cost, job.vdelta);
+            return Err(Busy {
+                data: T::unwrap(std::mem::take(&mut job.data)),
+                reason: BusyReason::QueueFull { retry_after_hint: self.busy_hint() },
+            });
+        }
         match self.place(job) {
             Ok(()) => {
                 self.signal_work();
@@ -654,13 +750,9 @@ impl Shared {
                 let reason = if self.shutdown.load(Ordering::SeqCst) {
                     BusyReason::Shutdown
                 } else if over_share {
-                    BusyReason::OverShare {
-                        retry_after_hint: qos::retry_after_hint(
-                            self.metrics.latency.quantile_us(0.5),
-                        ),
-                    }
+                    BusyReason::OverShare { retry_after_hint: self.busy_hint() }
                 } else {
-                    BusyReason::QueueFull
+                    BusyReason::QueueFull { retry_after_hint: self.busy_hint() }
                 };
                 Err(Busy { data: T::unwrap(std::mem::take(&mut job.data)), reason })
             }
@@ -697,7 +789,9 @@ impl Shared {
 /// The coordinator service.
 pub struct SortService {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    /// The supervisor owns the worker thread handles (it joins and
+    /// respawns them); `None` when `cfg.workers == 0`.
+    supervisor: Option<JoinHandle<()>>,
     xla_thread: Option<JoinHandle<()>>,
 }
 
@@ -755,18 +849,40 @@ impl SortClient {
     /// displace), then returns a [`SortHandle`] that resolves when a
     /// shard worker completes the request.
     ///
-    /// The handle resolves to an **error** in two cases: the service
-    /// shut down first (the request counts as shed), or — fair-share
-    /// only — this request was **evicted** after placement because
-    /// this tenant was the one most over its share while the service
-    /// was full (the error message names the eviction; counted under
-    /// `shed`/`shed_over_share`/`evicted`). A tenant operating within
-    /// its [`ClientConfig::burst`] allowance can never hit the
-    /// eviction case, which is why `wait().unwrap()` stays sound for
-    /// well-behaved tenants; a tenant that deliberately runs over its
-    /// share should treat an eviction error as "resubmit later".
+    /// The handle resolves to a [`SortError`] instead of a result
+    /// when the service gives up on the request: the service shut
+    /// down first ([`SortError::Shutdown`]; counts as shed), the
+    /// request was **evicted** under fair-share pressure
+    /// ([`SortError::Evicted`]; counted
+    /// `shed`/`shed_over_share`/`evicted`), the sort panicked
+    /// ([`SortError::JobPanicked`]), a deadline expired
+    /// ([`SortError::DeadlineExceeded`] — only possible when this
+    /// tenant sets [`ClientConfig::default_deadline`] or the call
+    /// came through [`SortClient::submit_with_deadline`]), or the job
+    /// was quarantined after killing workers
+    /// ([`SortError::Quarantined`]). A tenant operating within its
+    /// [`ClientConfig::burst`] allowance, without deadlines, against
+    /// a live service can only hit the panic cases, which is why
+    /// `wait().unwrap()` stays sound for well-behaved tenants in
+    /// tests; production callers should match on the variant.
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
-        self.shared.admit_blocking(&self.tenant, data)
+        self.shared.admit_blocking(&self.tenant, data, None)
+    }
+
+    /// [`SortClient::submit`] with an explicit per-request deadline,
+    /// overriding any [`ClientConfig::default_deadline`]: if no
+    /// worker has *started* the request within `deadline` of
+    /// admission it is reaped — the handle resolves
+    /// [`SortError::DeadlineExceeded`], the tenant's QoS byte charge
+    /// is refunded (the request consumed no service), and it counts
+    /// under `failed`/`deadline_expired`. Reaping is lazy (checked at
+    /// dequeue and in the batcher), so an expired job sitting in an
+    /// idle queue resolves when a worker next looks, not on a timer.
+    ///
+    /// A deadline of [`Duration::ZERO`] expires immediately — useful
+    /// in tests as a deterministic reap.
+    pub fn submit_with_deadline(&self, data: Vec<u32>, deadline: Duration) -> SortHandle {
+        self.shared.admit_blocking(&self.tenant, data, Some(deadline))
     }
 
     /// Non-blocking submit: returns [`Busy`] — handing the input
@@ -777,7 +893,52 @@ impl SortClient {
     /// service has shut down ([`BusyReason::Shutdown`], stop
     /// retrying). Never parks, never spins.
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Busy> {
-        self.shared.admit_try(&self.tenant, data)
+        self.shared.admit_try(&self.tenant, data, None)
+    }
+
+    /// [`SortClient::try_submit`] with an explicit per-request
+    /// deadline (see [`SortClient::submit_with_deadline`] for the
+    /// reaping semantics).
+    pub fn try_submit_with_deadline(
+        &self,
+        data: Vec<u32>,
+        deadline: Duration,
+    ) -> std::result::Result<SortHandle, Busy> {
+        self.shared.admit_try(&self.tenant, data, Some(deadline))
+    }
+
+    /// [`SortClient::try_submit`] wrapped in a [`RetryPolicy`]
+    /// backoff loop: on a transient shed ([`BusyReason::QueueFull`] /
+    /// [`BusyReason::OverShare`]) the calling thread sleeps the
+    /// policy's jittered backoff — floored at the shed's
+    /// `retry_after_hint` — and resubmits. Returns the final [`Busy`]
+    /// when the policy's attempts are exhausted, or immediately on
+    /// [`BusyReason::Shutdown`] (retrying a dead service cannot
+    /// succeed). The backoff schedule is deterministic per policy
+    /// seed; only the service's own hint varies with load.
+    pub fn try_submit_with_retry(
+        &self,
+        data: Vec<u32>,
+        policy: &RetryPolicy,
+    ) -> std::result::Result<SortHandle, Busy> {
+        let mut data = data;
+        let mut attempt = 0u32;
+        loop {
+            match self.try_submit(data) {
+                Ok(handle) => return Ok(handle),
+                Err(busy) => match busy.reason.retry_after() {
+                    Some(hint) => match policy.backoff(attempt, Some(hint)) {
+                        Some(delay) => {
+                            std::thread::sleep(delay);
+                            attempt += 1;
+                            data = busy.data;
+                        }
+                        None => return Err(busy), // policy exhausted
+                    },
+                    None => return Err(busy), // shutdown: permanent
+                },
+            }
+        }
     }
 
     /// [`SortClient::submit`] for 8-byte keys: the request sorts on
@@ -786,7 +947,7 @@ impl SortClient {
     /// CPU-tier routed (never XLA-offloaded), and never fused with
     /// jobs of another element type.
     pub fn submit_u64(&self, data: Vec<u64>) -> SortHandle<u64> {
-        self.shared.admit_blocking(&self.tenant, data)
+        self.shared.admit_blocking(&self.tenant, data, None)
     }
 
     /// [`SortClient::try_submit`] for 8-byte keys (see
@@ -796,7 +957,7 @@ impl SortClient {
         &self,
         data: Vec<u64>,
     ) -> std::result::Result<SortHandle<u64>, Busy<u64>> {
-        self.shared.admit_try(&self.tenant, data)
+        self.shared.admit_try(&self.tenant, data, None)
     }
 
     /// [`SortClient::submit`] for packed key–payload pairs
@@ -804,7 +965,7 @@ impl SortClient {
     /// tie-break, on the 8-byte-lane register types. Same QoS/routing
     /// treatment as [`SortClient::submit_u64`].
     pub fn submit_pairs(&self, data: Vec<KeyValue>) -> SortHandle<KeyValue> {
-        self.shared.admit_blocking(&self.tenant, data)
+        self.shared.admit_blocking(&self.tenant, data, None)
     }
 
     /// [`SortClient::try_submit`] for key–payload pairs (see
@@ -813,7 +974,7 @@ impl SortClient {
         &self,
         data: Vec<KeyValue>,
     ) -> std::result::Result<SortHandle<KeyValue>, Busy<KeyValue>> {
-        self.shared.admit_try(&self.tenant, data)
+        self.shared.admit_try(&self.tenant, data, None)
     }
 
     /// Point-in-time copy of this tenant's counters and QoS gauges
@@ -908,20 +1069,44 @@ impl SortService {
             tenants: Mutex::new(Vec::new()),
             xla_on: AtomicBool::new(xla_tx.is_some()),
             xla_tx: Mutex::new(xla_tx),
+            fault_seq: AtomicU64::new(0),
         });
 
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
-            let shared = Arc::clone(&shared);
-            let home = w % cfg.shards;
-            workers.push(
+        // Workers are owned by a supervisor thread, not the service
+        // struct: the supervisor joins any worker that dies from an
+        // uncontained panic, recovers the jobs it parked, and
+        // respawns the thread (see supervisor_loop).
+        let supervisor = if cfg.workers > 0 {
+            let (notice_tx, notice_rx) = mpsc::channel::<WorkerNotice>();
+            let mut workers = Vec::with_capacity(cfg.workers);
+            let mut homes = Vec::with_capacity(cfg.workers);
+            let mut cells = Vec::with_capacity(cfg.workers);
+            for w in 0..cfg.workers {
+                let home = w % cfg.shards;
+                let cell: RecoveryCell = Arc::new(Mutex::new(Vec::new()));
+                workers.push(Some(spawn_worker(
+                    &shared,
+                    w,
+                    home,
+                    Arc::clone(&cell),
+                    notice_tx.clone(),
+                )?));
+                homes.push(home);
+                cells.push(cell);
+            }
+            let sup = Arc::clone(&shared);
+            Some(
                 std::thread::Builder::new()
-                    .name(format!("sort-worker-{w}"))
-                    .spawn(move || worker_loop(&shared, home))
-                    .context("spawning worker")?,
-            );
-        }
-        Ok(SortService { shared, workers, xla_thread })
+                    .name("sort-supervisor".into())
+                    .spawn(move || {
+                        supervisor_loop(&sup, workers, &homes, &cells, &notice_tx, &notice_rx)
+                    })
+                    .context("spawning supervisor")?,
+            )
+        } else {
+            None
+        };
+        Ok(SortService { shared, supervisor, xla_thread })
     }
 
     /// Start with defaults and no XLA offload.
@@ -978,7 +1163,7 @@ impl SortService {
     /// multi-tenant.
     pub fn submit(&self, data: Vec<u32>) -> SortHandle {
         let anon = Arc::clone(&self.shared.anon);
-        self.shared.admit_blocking(&anon, data)
+        self.shared.admit_blocking(&anon, data, None)
     }
 
     /// Non-blocking submit without tenant attribution; `Err(data)`
@@ -987,7 +1172,7 @@ impl SortService {
     /// additionally reports *why* via [`Busy`].
     pub fn try_submit(&self, data: Vec<u32>) -> std::result::Result<SortHandle, Vec<u32>> {
         let anon = Arc::clone(&self.shared.anon);
-        self.shared.admit_try(&anon, data).map_err(|b| b.data)
+        self.shared.admit_try(&anon, data, None).map_err(|b| b.data)
     }
 
     /// The routing parameters currently in force: the configured
@@ -1021,19 +1206,22 @@ impl SortService {
     /// [`SortClient`]s may outlive the call: their submits are shed
     /// from then on (see the module docs, "Shutdown").
     pub fn shutdown(self) {
-        let SortService { shared, workers, xla_thread } = self;
+        let SortService { shared, supervisor, xla_thread } = self;
         shared.shutdown.store(true, Ordering::SeqCst);
         drop(shared.hub.lock().unwrap());
         shared.work_cv.notify_all();
         shared.space_cv.notify_all();
-        for w in workers {
-            let _ = w.join();
+        // The supervisor joins every worker (draining queues first)
+        // and exits once the last one is down.
+        if let Some(s) = supervisor {
+            let _ = s.join();
         }
         // Stragglers that raced the flag into a queue after the
         // workers drained it: abandon them now — counted like any
         // other never-started job, slots closed — so their waiters
         // error out instead of parking forever and the accounting
-        // identity `accepted = completed + cancelled` still holds.
+        // identity `accepted = completed + cancelled + failed` still
+        // holds.
         for shard in &shared.shards {
             let drained: Vec<Job> = shard.queue.lock().unwrap().drain(..).collect();
             for job in drained {
@@ -1189,7 +1377,133 @@ fn take_batch(shared: &Shared, s: usize) -> Option<Vec<Job>> {
     Some(batch)
 }
 
-fn worker_loop(shared: &Shared, home: usize) {
+/// One worker's job-recovery cell: where the worker parks every job
+/// it holds when it is about to die from an (injected) fatal panic,
+/// and where the supervisor recovers them from after joining the
+/// corpse. Plain `Vec` under a mutex — touched only on the death
+/// path, never per job.
+type RecoveryCell = Arc<Mutex<Vec<Job>>>;
+
+/// How a worker thread ended, reported to the supervisor.
+enum WorkerNotice {
+    /// Clean exit (shutdown drain finished).
+    Exited(usize),
+    /// Killed by an uncontained panic; its recovery cell may hold
+    /// parked jobs.
+    Died(usize),
+}
+
+/// Spawn worker `idx` homed on `home`. The top-level `catch_unwind`
+/// is the death detector: a panic that escapes `worker_loop` (the
+/// per-job containment never lets a *sort* panic out; this catches
+/// injected fatal panics and genuine bugs) reports
+/// [`WorkerNotice::Died`] so the supervisor can join + respawn
+/// instead of the service silently losing a worker.
+fn spawn_worker(
+    shared: &Arc<Shared>,
+    idx: usize,
+    home: usize,
+    cell: RecoveryCell,
+    notice: mpsc::Sender<WorkerNotice>,
+) -> Result<JoinHandle<()>> {
+    let shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("sort-worker-{idx}"))
+        .spawn(move || {
+            let outcome = catch_unwind(AssertUnwindSafe(|| worker_loop(&shared, home, &cell)));
+            let _ = notice.send(match outcome {
+                Ok(()) => WorkerNotice::Exited(idx),
+                Err(_) => WorkerNotice::Died(idx),
+            });
+        })
+        .context("spawning worker")
+}
+
+/// The supervisor: joins workers as they end, and for a death —
+/// recover the jobs the worker parked, quarantine any that have now
+/// killed two workers, requeue the rest, and respawn the thread
+/// (unless the service is shutting down, in which case the pool is
+/// allowed to drain). Exits when the last worker is down; the
+/// service's `shutdown` joins *this* thread instead of the workers.
+fn supervisor_loop(
+    shared: &Arc<Shared>,
+    mut workers: Vec<Option<JoinHandle<()>>>,
+    homes: &[usize],
+    cells: &[RecoveryCell],
+    notice_tx: &mpsc::Sender<WorkerNotice>,
+    notice_rx: &mpsc::Receiver<WorkerNotice>,
+) {
+    let mut live = workers.iter().filter(|w| w.is_some()).count();
+    while live > 0 {
+        let Ok(notice) = notice_rx.recv() else {
+            return; // unreachable while we hold a sender; defensive
+        };
+        match notice {
+            WorkerNotice::Exited(idx) => {
+                if let Some(h) = workers[idx].take() {
+                    let _ = h.join();
+                }
+                live -= 1;
+            }
+            WorkerNotice::Died(idx) => {
+                if let Some(h) = workers[idx].take() {
+                    let _ = h.join();
+                }
+                let held = std::mem::take(
+                    // The dying worker may have poisoned its cell;
+                    // the parked Vec is still intact.
+                    &mut *cells[idx].lock().unwrap_or_else(|e| e.into_inner()),
+                );
+                recover_jobs(shared, held);
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    live -= 1; // shutting down: let the pool drain
+                } else {
+                    shared.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
+                    match spawn_worker(
+                        shared,
+                        idx,
+                        homes[idx],
+                        Arc::clone(&cells[idx]),
+                        notice_tx.clone(),
+                    ) {
+                        Ok(h) => workers[idx] = Some(h),
+                        Err(_) => live -= 1, // spawn failed: degrade
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Re-dispatch the jobs a dead worker parked: cancelled ones are
+/// abandoned, a fatally-flagged job that has now killed two workers
+/// is quarantined, everything else goes back into a queue untouched
+/// (same tag, same charge — the requeue is invisible to QoS). A
+/// requeue that fails (shutdown, or queues full) resolves the handle
+/// to [`SortError::JobPanicked`] rather than leaving a waiter parked.
+fn recover_jobs(shared: &Arc<Shared>, held: Vec<Job>) {
+    let m = &shared.metrics;
+    for mut job in held {
+        if job.slot.is_cancelled() {
+            abandon(m, job);
+            continue;
+        }
+        if job.fault == FaultDecision::FatalPanic {
+            job.deaths = job.deaths.saturating_add(1);
+            if job.deaths >= 2 {
+                m.quarantined.fetch_add(1, Ordering::Relaxed);
+                fail(m, job, SortError::Quarantined);
+                continue;
+            }
+        }
+        match shared.try_place(job) {
+            Ok(()) => shared.signal_work(),
+            Err(job) => fail(m, job, SortError::JobPanicked),
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, home: usize, cell: &RecoveryCell) {
     let n = shared.shards.len();
     // Sorters + reusable buffers, owned by this worker for its
     // lifetime (see WorkerCtx).
@@ -1197,7 +1511,7 @@ fn worker_loop(shared: &Shared, home: usize) {
     loop {
         // Own shard first, then steal round-robin from the others.
         if let Some(batch) = take_batch(shared, home) {
-            process_batch(shared, home, batch, &mut ctx);
+            process_batch(shared, home, batch, cell, &mut ctx);
             tick_tuner(shared);
             continue;
         }
@@ -1211,7 +1525,7 @@ fn worker_loop(shared: &Shared, home: usize) {
             }
         }
         if let Some((victim, batch)) = found {
-            process_batch(shared, victim, batch, &mut ctx);
+            process_batch(shared, victim, batch, cell, &mut ctx);
             tick_tuner(shared);
             continue;
         }
@@ -1257,19 +1571,76 @@ fn abandon(m: &Metrics, job: Job) {
     job.tenant.qos.release(job.cost);
 }
 
+/// Fail a job the service gave up on (contained panic, quarantine,
+/// failed requeue): count it `failed`, release the tenant's in-flight
+/// cost — the charge is *spent*, not refunded, because a worker did
+/// burn time on this job — and resolve the handle with `err`.
+fn fail(m: &Metrics, job: Job, err: SortError) {
+    m.failed.fetch_add(1, Ordering::Relaxed);
+    job.tenant.failed.fetch_add(1, Ordering::Relaxed);
+    job.tenant.qos.release(job.cost);
+    job.slot.close_with(err);
+}
+
+/// Reap a deadline-expired job: `failed` + `deadline_expired`, QoS
+/// charge *refunded* (uncharge — in-flight and virtual time, exactly
+/// like an eviction: the request consumed no service, so its tenant
+/// must not be penalized in the fair-share ordering for it), handle
+/// resolved to [`SortError::DeadlineExceeded`].
+fn reap(m: &Metrics, job: Job) {
+    m.failed.fetch_add(1, Ordering::Relaxed);
+    m.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    job.tenant.failed.fetch_add(1, Ordering::Relaxed);
+    job.tenant.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    job.tenant.qos.uncharge(job.cost, job.vdelta);
+    job.slot.close_with(SortError::DeadlineExceeded);
+}
+
+/// Whether a job's reap-by instant has passed. `>=`, not `>`, so a
+/// [`Duration::ZERO`] deadline expires deterministically.
+fn expired(job: &Job) -> bool {
+    job.deadline.is_some_and(|d| Instant::now() >= d)
+}
+
 /// Execute one dynamic batch taken from shard `src`: single jobs go
 /// through the size-tiered router; multi-job batches take the fused
 /// path — concatenate into one buffer with recorded offsets, sort all
 /// segments in a single [`ParallelNeonMergeSort::sort_segments_with`]
 /// pass, and complete each request's slot the moment its own segment
 /// is sorted.
-fn process_batch(shared: &Shared, src: usize, batch: Vec<Job>, ctx: &mut WorkerCtx) {
+fn process_batch(
+    shared: &Shared,
+    src: usize,
+    batch: Vec<Job>,
+    cell: &RecoveryCell,
+    ctx: &mut WorkerCtx,
+) {
     let m = &shared.metrics;
-    // Shed cancelled jobs before paying for any sorting.
+    // Injected *fatal* panic (tests only): park the whole batch in
+    // the recovery cell first, then kill the worker. Parking before
+    // panicking is the invariant that keeps the accounting identity
+    // alive — an unwinding drop of these jobs would close their slots
+    // as generic shutdowns with no terminal counter. The supervisor
+    // drains the cell, quarantines the killer if it strikes twice,
+    // and requeues the innocent bystanders.
+    if shared.cfg.faults.is_some()
+        && batch.iter().any(|j| j.fault == FaultDecision::FatalPanic)
+    {
+        cell.lock().unwrap_or_else(|e| e.into_inner()).extend(batch);
+        panic!("injected fatal worker panic");
+    }
+    // Shed cancelled jobs and reap expired ones before paying for any
+    // sorting; divert fault-flagged jobs to the solo router so the
+    // fused path stays injection-free (a mid-batch panic would
+    // otherwise fail innocent segments).
     let mut live: Vec<Job> = Vec::with_capacity(batch.len());
     for job in batch {
         if job.slot.is_cancelled() {
             abandon(m, job);
+        } else if expired(&job) {
+            reap(m, job);
+        } else if job.fault != FaultDecision::None {
+            process(shared, job, ctx);
         } else {
             live.push(job);
         }
@@ -1376,22 +1747,55 @@ fn fused_sort<T: SortElem>(
     // practice — the per-segment lock is the completion hand-off).
     let cells: Vec<Mutex<Option<Job>>> = live.into_iter().map(|j| Mutex::new(Some(j))).collect();
     let t0 = Instant::now();
-    parallel.sort_segments_with_scratch(fused, bounds, scratch, |k, seg: &[T]| {
-        if let Some(mut job) = cells[k].lock().unwrap().take() {
-            T::slice_mut(&mut job.data).copy_from_slice(seg);
-            finish(m, job);
+    // Containment for the fused pass: a panic mid-batch fails only
+    // the segments not yet completed — their cells are still `Some` —
+    // while requests whose segments already finished keep their
+    // results (their slots were completed inside the callback). The
+    // per-segment lock uses poison recovery because a panic on one
+    // batch-sort thread poisons the cells its unwinding touched.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        parallel.sort_segments_with_scratch(fused, bounds, scratch, |k, seg: &[T]| {
+            if let Some(mut job) = cells[k].lock().unwrap_or_else(|e| e.into_inner()).take() {
+                T::slice_mut(&mut job.data).copy_from_slice(seg);
+                finish(m, job);
+            }
+        });
+    }));
+    match outcome {
+        Ok(()) => {
+            // One fused observation for the whole pass; each segment's
+            // size class is charged its proportional share (see
+            // RouteObs), so the tuner can compare fused against solo
+            // execution per class.
+            m.routes.get(Tier::Fused).record_segments(bounds, t0.elapsed());
         }
-    });
-    // One fused observation for the whole pass; each segment's size
-    // class is charged its proportional share (see RouteObs), so the
-    // tuner can compare fused against solo execution per class.
-    m.routes.get(Tier::Fused).record_segments(bounds, t0.elapsed());
+        Err(_) => {
+            m.panics_contained.fetch_add(1, Ordering::Relaxed);
+            for cell in &cells {
+                if let Some(job) = cell.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                    fail(m, job, SortError::JobPanicked);
+                }
+            }
+        }
+    }
 }
 
 fn process(shared: &Shared, mut job: Job, ctx: &mut WorkerCtx) {
     let m = &shared.metrics;
     if job.slot.is_cancelled() {
         return abandon(m, job);
+    }
+    if expired(&job) {
+        return reap(m, job);
+    }
+    // Injected stall (tests only): burn wall-clock before sorting —
+    // the deterministic way to drive a real deadline past expiry —
+    // then re-check, since the stall may have consumed the budget.
+    if let FaultDecision::Stall(d) = job.fault {
+        std::thread::sleep(d);
+        if expired(&job) {
+            return reap(m, job);
+        }
     }
     // Live routing state, with boundary probing when adaptive: a
     // small fraction of jobs near a cutoff run on the neighbor tier
@@ -1444,28 +1848,48 @@ fn process_cpu<T: SortElem>(
     let m = &shared.metrics;
     let len = job.data.len();
     let t0 = Instant::now();
-    let tier = match route {
-        Route::Tiny => {
-            m.route_tiny.fetch_add(1, Ordering::Relaxed);
-            insertion_sort(T::slice_mut(&mut job.data));
-            Tier::Tiny
+    // Panic containment: the sort runs inside a `catch_unwind`
+    // envelope, so a panicking kernel (or the injected SortPanic)
+    // fails *this* job — handle resolved, counters bumped — and the
+    // worker moves on. AssertUnwindSafe is sound here: on unwind the
+    // job's payload is simply discarded along with the job, and the
+    // worker scratch's only invariant is its length, which every sort
+    // re-establishes on entry.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if job.fault == FaultDecision::SortPanic {
+            panic!("injected sort panic");
         }
-        Route::SingleThread => {
-            m.route_single.fetch_add(1, Ordering::Relaxed);
-            // Worker-owned sorter + scratch: zero allocation once the
-            // scratch has grown to the tier's largest request.
-            single.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
-            Tier::Single
+        match route {
+            Route::Tiny => {
+                m.route_tiny.fetch_add(1, Ordering::Relaxed);
+                insertion_sort(T::slice_mut(&mut job.data));
+                Tier::Tiny
+            }
+            Route::SingleThread => {
+                m.route_single.fetch_add(1, Ordering::Relaxed);
+                // Worker-owned sorter + scratch: zero allocation once the
+                // scratch has grown to the tier's largest request.
+                single.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
+                Tier::Single
+            }
+            Route::Parallel => {
+                m.route_parallel.fetch_add(1, Ordering::Relaxed);
+                parallel.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
+                Tier::Parallel
+            }
+            Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
         }
-        Route::Parallel => {
-            m.route_parallel.fetch_add(1, Ordering::Relaxed);
-            parallel.sort_with_scratch(T::slice_mut(&mut job.data), scratch);
-            Tier::Parallel
+    }));
+    match outcome {
+        Ok(tier) => {
+            m.routes.get(tier).record(len, t0.elapsed());
+            finish(m, job);
         }
-        Route::Xla => unreachable!("route(len, xla_available=false) never returns Xla"),
-    };
-    m.routes.get(tier).record(len, t0.elapsed());
-    finish(m, job);
+        Err(_) => {
+            m.panics_contained.fetch_add(1, Ordering::Relaxed);
+            fail(m, job, SortError::JobPanicked);
+        }
+    }
 }
 
 /// Complete one job: record the metrics and release the tenant's
@@ -1500,6 +1924,48 @@ fn wide_fallback(fallback: &NeonMergeSort, job: &mut Job) {
     }
 }
 
+/// Consecutive PJRT dispatch failures that trip the XLA breaker open.
+const XLA_BREAKER_THRESHOLD: u32 = 3;
+/// Open period before the breaker admits a half-open probe dispatch.
+const XLA_BREAKER_COOLOFF: Duration = Duration::from_millis(50);
+
+/// Mirror the executor-owned breaker into the lock-free metrics
+/// gauges after every recorded outcome (the breaker itself is plain
+/// mutable state on the executor thread; this is its only escape).
+fn publish_breaker(m: &Metrics, b: &CircuitBreaker) {
+    m.breaker_state.store(b.state_code(), Ordering::Relaxed);
+    m.breaker_trips.store(b.trips(), Ordering::Relaxed);
+}
+
+/// One breaker-guarded accelerator dispatch. Returns whether the
+/// accelerator sorted the payload; `false` — breaker open (the call
+/// was never made), injected failure, or a real PJRT error — means
+/// the caller must run the CPU fallback. `forced_fail` is the
+/// [`FaultDecision::XlaError`] injection: counted as a failure
+/// without paying for a dispatch, so tests can trip the breaker
+/// deterministically.
+fn xla_dispatch(
+    breaker: &mut CircuitBreaker,
+    metrics: &Metrics,
+    forced_fail: bool,
+    run: impl FnOnce() -> bool,
+) -> bool {
+    let ok = if !breaker.allow() {
+        false
+    } else if forced_fail {
+        breaker.record_failure();
+        false
+    } else if run() {
+        breaker.record_success();
+        true
+    } else {
+        breaker.record_failure();
+        false
+    };
+    publish_breaker(metrics, breaker);
+    ok
+}
+
 /// Dedicated thread owning the (!Send) PJRT client + executables.
 fn xla_executor(
     reg: ArtifactRegistry,
@@ -1528,9 +1994,18 @@ fn xla_executor(
     // construction or aux allocation — nor silently switch kernels.
     let fallback = NeonMergeSort::new(sort_cfg);
     let mut fb_scratch = SortScratch::new();
+    // Degradation guard: consecutive PJRT failures trip this open and
+    // every job takes the CPU fallback without paying for a doomed
+    // dispatch; timed half-open probes recover (see runtime::breaker).
+    let mut breaker = CircuitBreaker::new(XLA_BREAKER_THRESHOLD, XLA_BREAKER_COOLOFF);
+    publish_breaker(&metrics, &breaker);
     while let Ok(mut job) = rx.recv() {
         if job.slot.is_cancelled() {
             abandon(&metrics, job);
+            continue;
+        }
+        if expired(&job) {
+            reap(&metrics, job);
             continue;
         }
         // Count the route here, after the cancellation check, so
@@ -1558,6 +2033,7 @@ fn xla_executor(
                 while group.len() < batch {
                     match rx.try_recv() {
                         Ok(j) if j.slot.is_cancelled() => abandon(&metrics, j),
+                        Ok(j) if expired(&j) => reap(&metrics, j),
                         // Same defensive non-u32 backstop as the
                         // outer loop: CPU-sort it, never batch it.
                         Ok(mut j) if j.data.kind() != ElemKind::U32 => {
@@ -1593,9 +2069,15 @@ fn xla_executor(
                         offsets.push(*offsets.last().unwrap() + j.data.len());
                     }
                     let t0 = Instant::now();
+                    // One forced-fault roll anywhere in the group fails
+                    // the whole dispatch — PJRT errors are per call,
+                    // not per row.
+                    let forced = group.iter().any(|j| j.fault == FaultDecision::XlaError);
                     let mut rows: Vec<&mut [u32]> =
                         group.iter_mut().map(|j| u32::slice_mut(&mut j.data)).collect();
-                    if sorter.sort_batch_u32(&mut rows).is_err() {
+                    if !xla_dispatch(&mut breaker, &metrics, forced, || {
+                        sorter.sort_batch_u32(&mut rows).is_ok()
+                    }) {
                         for j in group.iter_mut() {
                             fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                         }
@@ -1607,7 +2089,10 @@ fn xla_executor(
                 } else {
                     for mut j in group {
                         let t0 = Instant::now();
-                        if sorter.sort_u32(u32::slice_mut(&mut j.data)).is_err() {
+                        let forced = j.fault == FaultDecision::XlaError;
+                        if !xla_dispatch(&mut breaker, &metrics, forced, || {
+                            sorter.sort_u32(u32::slice_mut(&mut j.data)).is_ok()
+                        }) {
                             fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                         }
                         metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
@@ -1624,9 +2109,16 @@ fn xla_executor(
                         abandon(&metrics, j);
                         continue;
                     }
+                    if expired(&j) {
+                        reap(&metrics, j);
+                        continue;
+                    }
                     metrics.route_xla.fetch_add(1, Ordering::Relaxed);
                     let t0 = Instant::now();
-                    if sorter.sort_u32(u32::slice_mut(&mut j.data)).is_err() {
+                    let forced = j.fault == FaultDecision::XlaError;
+                    if !xla_dispatch(&mut breaker, &metrics, forced, || {
+                        sorter.sort_u32(u32::slice_mut(&mut j.data)).is_ok()
+                    }) {
                         fallback.sort_with_scratch(u32::slice_mut(&mut j.data), &mut fb_scratch);
                     }
                     metrics.routes.get(Tier::Xla).record(j.data.len(), t0.elapsed());
@@ -1636,7 +2128,10 @@ fn xla_executor(
             }
         }
         let t0 = Instant::now();
-        if sorter.sort_u32(u32::slice_mut(&mut job.data)).is_err() {
+        let forced = job.fault == FaultDecision::XlaError;
+        if !xla_dispatch(&mut breaker, &metrics, forced, || {
+            sorter.sort_u32(u32::slice_mut(&mut job.data)).is_ok()
+        }) {
             // Fall back to the CPU path rather than dropping the job.
             fallback.sort_with_scratch(u32::slice_mut(&mut job.data), &mut fb_scratch);
         }

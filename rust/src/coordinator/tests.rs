@@ -9,6 +9,7 @@
 use super::*;
 use crate::simd::KeyValue;
 use crate::testutil::{assert_sorted, Rng};
+use std::time::Duration;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -427,7 +428,11 @@ fn try_submit_sheds_per_tenant() {
             Ok(h) => handles.push(h),
             Err(busy) => {
                 assert_eq!(busy.data, vec![3, 1, 2], "shed hands the input back");
-                assert_eq!(busy.reason, BusyReason::QueueFull, "overload, not shutdown");
+                assert!(
+                    matches!(busy.reason, BusyReason::QueueFull { .. }),
+                    "overload, not shutdown: {:?}",
+                    busy.reason
+                );
                 shed += 1;
             }
         }
@@ -772,7 +777,7 @@ fn fair_share_completed_elements_converge_to_weights() {
         .map(|&w| {
             svc.client_with(
                 &format!("w{w}"),
-                ClientConfig { weight: w, burst: 2048 },
+                ClientConfig { weight: w, burst: 2048, ..Default::default() },
             )
         })
         .collect();
@@ -857,9 +862,10 @@ fn within_burst_victim_never_shed_while_aggressor_over_share() {
         ..Default::default()
     };
     let svc = SortService::start(cfg, None).unwrap();
-    let aggressor =
-        svc.client_with("aggressor", ClientConfig { weight: 1, burst: 1024 });
-    let victim = svc.client_with("victim", ClientConfig { weight: 1, burst: 1 << 16 });
+    let aggressor = svc
+        .client_with("aggressor", ClientConfig { weight: 1, burst: 1024, ..Default::default() });
+    let victim = svc
+        .client_with("victim", ClientConfig { weight: 1, burst: 1 << 16, ..Default::default() });
     let mut rng = Rng::new(55);
     // Pin the worker with a big anonymous job, then wait until it has
     // been popped so it does not occupy a queue slot.
@@ -981,15 +987,16 @@ fn fifo_policy_restores_legacy_shedding() {
         ..Default::default()
     };
     let svc = SortService::start(cfg, None).unwrap();
-    let greedy = svc.client_with("greedy", ClientConfig { weight: 1, burst: 0 });
+    let greedy =
+        svc.client_with("greedy", ClientConfig { weight: 1, burst: 0, ..Default::default() });
     let mut handles = Vec::new();
     for _ in 0..10 {
         match greedy.try_submit(vec![3, 1, 2]) {
             Ok(h) => handles.push(h),
-            Err(busy) => assert_eq!(
-                busy.reason,
-                BusyReason::QueueFull,
-                "FIFO never reports OverShare"
+            Err(busy) => assert!(
+                matches!(busy.reason, BusyReason::QueueFull { .. }),
+                "FIFO never reports OverShare, got {:?}",
+                busy.reason
             ),
         }
     }
@@ -1006,7 +1013,8 @@ fn fifo_policy_restores_legacy_shedding() {
 fn qos_gauges_track_occupancy_and_drain_at_shutdown() {
     let cfg = CoordinatorConfig { workers: 0, queue_capacity: 4, ..Default::default() };
     let svc = SortService::start(cfg, None).unwrap();
-    let client = svc.client_with("gauged", ClientConfig { weight: 2, burst: 0 });
+    let client =
+        svc.client_with("gauged", ClientConfig { weight: 2, burst: 0, ..Default::default() });
     let handles: Vec<_> =
         (0..3).map(|_| client.try_submit(vec![7; 1000]).expect("room")).collect();
     let t = client.tenant_metrics();
@@ -1027,13 +1035,15 @@ fn qos_gauges_track_occupancy_and_drain_at_shutdown() {
 #[test]
 fn client_with_reconfigures_but_plain_client_does_not() {
     let svc = SortService::start_default().unwrap();
-    let a = svc.client_with("acme", ClientConfig { weight: 8, burst: 64 });
-    assert_eq!(a.config(), ClientConfig { weight: 8, burst: 64 });
+    let a =
+        svc.client_with("acme", ClientConfig { weight: 8, burst: 64, ..Default::default() });
+    assert_eq!(a.config(), ClientConfig { weight: 8, burst: 64, ..Default::default() });
     // A default client joining the same tenant must not reset it.
     let b = svc.client("acme");
     assert_eq!(b.config().weight, 8, "client() preserves the explicit config");
     // The last explicit configuration wins.
-    let c = svc.client_with("acme", ClientConfig { weight: 3, burst: 128 });
+    let c =
+        svc.client_with("acme", ClientConfig { weight: 3, burst: 128, ..Default::default() });
     assert_eq!(a.config().weight, 3, "clones observe the reconfiguration");
     drop((b, c));
     svc.shutdown();
@@ -1173,7 +1183,11 @@ fn mixed_kind_storm_accounting_survives_shutdown_race() {
         // eviction both fire during the storm.
         let clients: Vec<_> = (0..3)
             .map(|t| {
-                let cfg = ClientConfig { weight: 1 + t as u32, burst: (4 + t as usize) << 10 };
+                let cfg = ClientConfig {
+                    weight: 1 + t as u32,
+                    burst: (4 + t as usize) << 10,
+                    ..Default::default()
+                };
                 svc.client_with(&format!("storm-{t}"), cfg)
             })
             .collect();
@@ -1273,6 +1287,334 @@ fn mixed_kind_storm_accounting_survives_shutdown_race() {
                 t.accepted,
                 t.completed,
                 t.cancelled
+            );
+            assert_eq!(
+                t.in_flight_bytes, 0,
+                "seed {seed} tenant {}: residual in-flight gauge",
+                t.name
+            );
+            assert_eq!(t.queued_jobs, 0, "seed {seed} tenant {}: residual queue gauge", t.name);
+        }
+    }
+}
+
+#[test]
+fn injected_sort_panics_are_contained_and_worker_survives() {
+    // ~half the jobs panic inside the containment envelope: each must
+    // resolve its handle to JobPanicked (counted failed +
+    // panics_contained), the rest must complete normally on the same
+    // workers, and the terminal ledger must balance exactly.
+    let plan = FaultPlan { seed: 0xC0FFEE, sort_panic_per_mille: 500, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        shards: 2,
+        batch_max: 8,
+        faults: Some(plan),
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("panicky");
+    let mut rng = Rng::new(61);
+    let mut pending = Vec::new();
+    for _ in 0..60usize {
+        let data = rng.vec_u32(64 + rng.below(500));
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        pending.push((client.submit(data), expect));
+    }
+    let mut completed = 0u64;
+    let mut panicked = 0u64;
+    for (h, expect) in pending {
+        match h.wait() {
+            Ok(sorted) => {
+                assert_eq!(sorted, expect, "surviving jobs still match the oracle");
+                completed += 1;
+            }
+            Err(err) => {
+                assert_eq!(err, SortError::JobPanicked, "only the injected panic fails jobs");
+                panicked += 1;
+            }
+        }
+    }
+    assert!(completed > 0, "some jobs must survive at 500 per-mille");
+    assert!(panicked > 0, "some jobs must panic at 500 per-mille");
+    let m = svc.metrics();
+    assert_eq!(m.failed, panicked);
+    assert_eq!(m.panics_contained, panicked, "every failure here is a contained panic");
+    assert_eq!(m.workers_respawned, 0, "contained panics never kill workers");
+    let t = &m.tenants[0];
+    assert_eq!(t.accepted, 60);
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed, "terminal ledger balances");
+    assert_eq!(t.failed, panicked);
+    svc.shutdown();
+    assert_eq!(client.tenant_metrics().in_flight_bytes, 0, "failed jobs release their charge");
+}
+
+#[test]
+fn fatal_panic_respawns_worker_and_double_kill_quarantines() {
+    // Every admitted job is flagged fatal: the single worker parks the
+    // job and dies, the supervisor recovers + requeues it (death #1)
+    // and respawns the worker, which dies again on the same job —
+    // death #2 quarantines it instead of retrying forever.
+    let plan = FaultPlan { seed: 7, fatal_panic_per_mille: 1000, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        faults: Some(plan),
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("killer");
+    let h = client.submit(vec![3u32, 1, 2]);
+    assert_eq!(h.wait(), Err(SortError::Quarantined), "second kill quarantines the job");
+    let m = svc.metrics();
+    assert_eq!(m.workers_respawned, 2, "one respawn per death");
+    assert_eq!(m.quarantined, 1);
+    assert_eq!(m.failed, 1);
+    let t = &m.tenants[0];
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed);
+    assert_eq!(t.failed, 1);
+    // The respawned worker is healthy: shutdown drains cleanly.
+    svc.shutdown();
+    assert_eq!(client.tenant_metrics().in_flight_bytes, 0);
+}
+
+#[test]
+fn deadlines_reap_lazily_with_refund() {
+    // A zero deadline expires deterministically: the worker reaps it
+    // at dequeue, the handle resolves DeadlineExceeded, and the QoS
+    // charge is refunded (in-flight drains without a completion).
+    let svc = SortService::start(
+        CoordinatorConfig { workers: 1, shards: 1, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let client = svc.client("deadliner");
+    let doomed = client.submit_with_deadline(vec![5u32, 4, 3], Duration::ZERO);
+    assert_eq!(doomed.wait(), Err(SortError::DeadlineExceeded));
+    // A per-call deadline long enough to never fire: completes.
+    let fine = client.submit_with_deadline(vec![2u32, 1], Duration::from_secs(60));
+    assert_eq!(fine.wait().unwrap(), vec![1, 2]);
+    let t = client.tenant_metrics();
+    assert_eq!(t.failed, 1);
+    assert_eq!(t.deadline_expired, 1);
+    assert_eq!(t.completed, 1);
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed);
+    assert_eq!(t.in_flight_bytes, 0, "reaped charge is refunded");
+    let m = svc.metrics();
+    assert_eq!(m.deadline_expired, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn tenant_default_deadline_applies_without_per_call_override() {
+    // ClientConfig::default_deadline covers plain submit(); ZERO makes
+    // every request expire at first dequeue.
+    let svc = SortService::start(
+        CoordinatorConfig { workers: 1, shards: 1, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let strict = svc.client_with(
+        "strict",
+        ClientConfig { default_deadline: Some(Duration::ZERO), ..Default::default() },
+    );
+    assert_eq!(strict.submit(vec![9u32, 8]).wait(), Err(SortError::DeadlineExceeded));
+    // try_submit honors the tenant default too.
+    let h = strict.try_submit(vec![7u32, 6]).expect("room");
+    assert_eq!(h.wait(), Err(SortError::DeadlineExceeded));
+    let t = strict.tenant_metrics();
+    assert_eq!(t.deadline_expired, 2);
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed);
+    svc.shutdown();
+}
+
+#[test]
+fn retry_policy_exhausts_against_a_full_queue() {
+    // workers=0 keeps the queue full forever, so the retry loop must
+    // sleep through its bounded schedule and hand the input back.
+    let cfg = CoordinatorConfig { workers: 0, queue_capacity: 2, ..Default::default() };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("retrier");
+    let _a = client.try_submit(vec![1u32]).expect("room");
+    let _b = client.try_submit(vec![2u32]).expect("room");
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base: Duration::from_micros(50),
+        cap: Duration::from_millis(1),
+        jitter_seed: 42,
+    };
+    let busy = match client.try_submit_with_retry(vec![9u32, 9], &policy) {
+        Ok(_) => panic!("queue can never drain"),
+        Err(busy) => busy,
+    };
+    assert_eq!(busy.data, vec![9, 9], "input handed back after exhaustion");
+    assert!(busy.reason.retry_after().is_some(), "transient shed, not shutdown");
+    // 1 initial + 3 retries, all shed.
+    assert_eq!(client.tenant_metrics().shed, 4);
+    svc.shutdown();
+}
+
+#[test]
+fn identical_fault_seeds_produce_identical_schedules() {
+    // Acceptance: the injection schedule is a pure function of the
+    // plan — two services with equal plans make identical decisions
+    // for the same admission sequence, a different seed diverges.
+    let plan = FaultPlan {
+        seed: 1234,
+        sort_panic_per_mille: 200,
+        fatal_panic_per_mille: 50,
+        stall_per_mille: 100,
+        shed_per_mille: 100,
+        ..Default::default()
+    };
+    let a: Vec<FaultDecision> = (0..256).map(|s| plan.decide(s)).collect();
+    let b: Vec<FaultDecision> = (0..256).map(|s| plan.decide(s)).collect();
+    assert_eq!(a, b);
+    let other = FaultPlan { seed: 4321, ..plan };
+    let c: Vec<FaultDecision> = (0..256).map(|s| other.decide(s)).collect();
+    assert_ne!(a, c, "different seed, different schedule");
+}
+
+#[test]
+fn chaos_soak_accounting_identity_across_seeds() {
+    // Satellite: 3-seed chaos soak. Randomized fault plan (contained
+    // panics, worker-killing panics, stalls, forced sheds) x 3
+    // tenants x mixed element kinds x dropped handles x a deadline'd
+    // tenant, with shutdown racing the storm. Afterwards, per tenant:
+    // accepted == completed + cancelled + failed, zero residual
+    // gauges, and no handle may park forever.
+    for seed in 0..3u64 {
+        let mut prng = Rng::new(0xBAD5EED + seed);
+        let plan = FaultPlan {
+            seed: 0x50AC + seed,
+            sort_panic_per_mille: (50 + prng.below(150)) as u16,
+            fatal_panic_per_mille: (5 + prng.below(20)) as u16,
+            stall_per_mille: (20 + prng.below(80)) as u16,
+            stall: Duration::from_micros(200),
+            shed_per_mille: (30 + prng.below(100)) as u16,
+            ..Default::default()
+        };
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            shards: 2,
+            batch_max: 8,
+            queue_capacity: 16, // small: real sheds and evictions too
+            faults: Some(plan),
+            ..Default::default()
+        };
+        let svc = SortService::start(cfg, None).unwrap();
+        let clients: Vec<SortClient> = (0..3)
+            .map(|t| {
+                // Tenant 2 runs with a tight default deadline so the
+                // stall injection drives real DeadlineExceeded reaps.
+                let deadline = (t == 2).then(|| Duration::from_millis(1));
+                svc.client_with(
+                    &format!("chaos-{t}"),
+                    ClientConfig {
+                        weight: 1 + t as u32,
+                        burst: 8 << 10,
+                        default_deadline: deadline,
+                    },
+                )
+            })
+            .collect();
+        let joins: Vec<_> = clients
+            .iter()
+            .enumerate()
+            .map(|(t, client)| {
+                let client = client.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(777 * seed + t as u64);
+                    let mut kept = Vec::new();
+                    let mut kept_u64 = Vec::new();
+                    let mut kept_pairs = Vec::new();
+                    for i in 0..120usize {
+                        let len = 8 + rng.below(400);
+                        let shut = match rng.below(4) {
+                            0 => match client.try_submit(rng.vec_u32(len)) {
+                                Ok(h) => {
+                                    if i % 2 == 0 {
+                                        kept.push(h);
+                                    }
+                                    false
+                                }
+                                Err(b) => b.reason == BusyReason::Shutdown,
+                            },
+                            1 => match client.try_submit_u64(rng.vec_u64(len)) {
+                                Ok(h) => {
+                                    if i % 2 == 0 {
+                                        kept_u64.push(h);
+                                    }
+                                    false
+                                }
+                                Err(b) => b.reason == BusyReason::Shutdown,
+                            },
+                            2 => {
+                                let data: Vec<KeyValue> = (0..len)
+                                    .map(|j| KeyValue::new(rng.next_u32() % 509, j as u32))
+                                    .collect();
+                                match client.try_submit_pairs(data) {
+                                    Ok(h) => {
+                                        if i % 2 == 0 {
+                                            kept_pairs.push(h);
+                                        }
+                                        false
+                                    }
+                                    Err(b) => b.reason == BusyReason::Shutdown,
+                                }
+                            }
+                            _ => {
+                                // Blocking submit interleaved: parks
+                                // under pressure, must still resolve
+                                // (post-shutdown it sheds and the
+                                // handle errors instead of wedging).
+                                let h = client.submit(rng.vec_u32(len));
+                                if i % 2 == 0 {
+                                    kept.push(h);
+                                }
+                                false
+                            }
+                        };
+                        if shut {
+                            break;
+                        }
+                        if i % 16 == 15 {
+                            if let Some(h) = kept.pop() {
+                                let _ = h.wait();
+                            }
+                        }
+                    }
+                    // Every kept handle resolves: a result or a typed
+                    // error — never a wedged waiter.
+                    for h in kept {
+                        let _ = h.wait();
+                    }
+                    for h in kept_u64 {
+                        let _ = h.wait();
+                    }
+                    for h in kept_pairs {
+                        let _ = h.wait();
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(2 + 3 * seed));
+        svc.shutdown(); // races the storm
+        for j in joins {
+            j.join().unwrap();
+        }
+        for client in &clients {
+            let t = client.tenant_metrics();
+            assert_eq!(
+                t.accepted,
+                t.completed + t.cancelled + t.failed,
+                "seed {seed} tenant {}: accepted ({}) != completed ({}) + cancelled ({}) + failed ({})",
+                t.name,
+                t.accepted,
+                t.completed,
+                t.cancelled,
+                t.failed
             );
             assert_eq!(
                 t.in_flight_bytes, 0,

@@ -1,0 +1,231 @@
+//! Circuit breaker for the XLA executor: after a run of consecutive
+//! dispatch failures the breaker trips **open** and the executor
+//! stops paying for doomed PJRT calls — every job takes the CPU
+//! fallback immediately. After a cool-off period the breaker lets
+//! exactly one probe through (**half-open**); a success closes it, a
+//! failure re-opens it for another cool-off.
+//!
+//! The breaker is owned by the single executor thread, so it is plain
+//! mutable state — no atomics, no locks. Time is injected
+//! ([`CircuitBreaker::allow_at`] / [`CircuitBreaker::record_failure_at`])
+//! so the open → half-open transition is unit-testable without
+//! sleeping; the executor uses the `Instant::now()` convenience
+//! wrappers. The executor mirrors [`CircuitBreaker::state_code`] and
+//! [`CircuitBreaker::trips`] into the service metrics after every
+//! transition, which is how `MetricsSnapshot::breaker_state` stays
+//! a lock-free gauge.
+
+use std::time::{Duration, Instant};
+
+/// The three classic breaker states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation: dispatches flow, consecutive failures are
+    /// counted.
+    Closed,
+    /// Tripped: no dispatches until `until`; callers take the
+    /// fallback path without paying for the doomed call.
+    Open {
+        /// When the cool-off ends and a half-open probe is allowed.
+        until: Instant,
+    },
+    /// Cool-off expired: one probe is in flight; its outcome decides
+    /// between [`BreakerState::Closed`] and another open period.
+    HalfOpen,
+}
+
+/// Consecutive-failure circuit breaker (see module docs).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    /// Consecutive failures that trip the breaker open.
+    threshold: u32,
+    /// How long an open period lasts before a half-open probe.
+    cooloff: Duration,
+    /// Consecutive failures observed while closed.
+    consecutive: u32,
+    state: BreakerState,
+    /// Times the breaker has tripped closed → open (re-opens from
+    /// half-open count too: every trip is a distinct degradation
+    /// event worth counting).
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    /// A closed breaker tripping after `threshold` consecutive
+    /// failures and probing again `cooloff` after each trip.
+    /// `threshold` is clamped to ≥ 1.
+    pub fn new(threshold: u32, cooloff: Duration) -> Self {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooloff,
+            consecutive: 0,
+            state: BreakerState::Closed,
+            trips: 0,
+        }
+    }
+
+    /// Whether a dispatch may proceed at time `now`. Open → false
+    /// until the cool-off elapses, at which point the breaker moves
+    /// to half-open and admits exactly this caller as the probe.
+    pub fn allow_at(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if now >= until {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// [`CircuitBreaker::allow_at`] at `Instant::now()`.
+    pub fn allow(&mut self) -> bool {
+        self.allow_at(Instant::now())
+    }
+
+    /// Record a successful dispatch: closes the breaker (half-open
+    /// probe succeeded) and clears the failure run.
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// Record a failed dispatch at time `now`: extends the failure
+    /// run and trips open (for `cooloff` from `now`) when the run
+    /// reaches the threshold — immediately, when the failure was a
+    /// half-open probe.
+    pub fn record_failure_at(&mut self, now: Instant) {
+        match self.state {
+            BreakerState::HalfOpen => {
+                // Probe failed: straight back to open, no grace run.
+                self.state = BreakerState::Open { until: now + self.cooloff };
+                self.trips += 1;
+            }
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= self.threshold {
+                    self.consecutive = 0;
+                    self.state = BreakerState::Open { until: now + self.cooloff };
+                    self.trips += 1;
+                }
+            }
+            // Failures reported while open (e.g. a forced-fault roll
+            // on a job that never dispatched) don't extend the
+            // cool-off: the breaker is already doing its job.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// [`CircuitBreaker::record_failure_at`] at `Instant::now()`.
+    pub fn record_failure(&mut self) {
+        self.record_failure_at(Instant::now())
+    }
+
+    /// The current state (open periods are *not* auto-expired here;
+    /// expiry happens on the next [`CircuitBreaker::allow_at`]).
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Dense code for the metrics gauge: 0 closed, 1 open,
+    /// 2 half-open. Matches `MetricsSnapshot::breaker_state`'s
+    /// decoding.
+    pub fn state_code(&self) -> u64 {
+        match self.state {
+            BreakerState::Closed => 0,
+            BreakerState::Open { .. } => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+
+    /// Closed/half-open → open transitions so far.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let now = t0();
+        let mut b = CircuitBreaker::new(3, Duration::from_millis(100));
+        assert!(b.allow_at(now));
+        b.record_failure_at(now);
+        b.record_failure_at(now);
+        assert!(b.allow_at(now), "below threshold: still closed");
+        b.record_failure_at(now);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow_at(now), "third consecutive failure trips open");
+        assert_eq!(b.state_code(), 1);
+    }
+
+    #[test]
+    fn success_resets_the_failure_run() {
+        let now = t0();
+        let mut b = CircuitBreaker::new(2, Duration::from_millis(100));
+        b.record_failure_at(now);
+        b.record_success();
+        b.record_failure_at(now);
+        assert!(b.allow_at(now), "run was reset; one failure is below threshold");
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn half_open_probe_success_closes() {
+        let now = t0();
+        let cooloff = Duration::from_millis(50);
+        let mut b = CircuitBreaker::new(1, cooloff);
+        b.record_failure_at(now);
+        assert!(!b.allow_at(now), "open");
+        assert!(!b.allow_at(now + cooloff / 2), "still cooling off");
+        assert!(b.allow_at(now + cooloff), "cool-off elapsed: probe admitted");
+        assert_eq!(b.state_code(), 2, "half-open while the probe is out");
+        b.record_success();
+        assert_eq!(b.state_code(), 0, "probe success closes");
+        assert!(b.allow_at(now + cooloff));
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens() {
+        let now = t0();
+        let cooloff = Duration::from_millis(50);
+        let mut b = CircuitBreaker::new(1, cooloff);
+        b.record_failure_at(now);
+        assert!(b.allow_at(now + cooloff));
+        b.record_failure_at(now + cooloff);
+        assert_eq!(b.trips(), 2, "probe failure is a second trip");
+        assert!(!b.allow_at(now + cooloff + cooloff / 2), "re-opened for a fresh cool-off");
+        assert!(b.allow_at(now + cooloff + cooloff), "…then probes again");
+    }
+
+    #[test]
+    fn failures_while_open_do_not_extend_the_cooloff() {
+        let now = t0();
+        let cooloff = Duration::from_millis(50);
+        let mut b = CircuitBreaker::new(1, cooloff);
+        b.record_failure_at(now);
+        // Forced-fault rolls keep reporting while open; the probe
+        // time must not creep.
+        b.record_failure_at(now + Duration::from_millis(40));
+        assert!(b.allow_at(now + cooloff), "original cool-off still governs");
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn zero_threshold_clamps_to_one() {
+        let now = t0();
+        let mut b = CircuitBreaker::new(0, Duration::from_millis(10));
+        b.record_failure_at(now);
+        assert!(!b.allow_at(now), "clamped threshold 1 trips on the first failure");
+    }
+}

@@ -9,10 +9,12 @@
 //! paper's split between in-register sort and the outer merge.
 
 mod blocksorter;
+mod breaker;
 mod pjrt;
 mod registry;
 
 pub use blocksorter::BlockSorter;
+pub use breaker::{BreakerState, CircuitBreaker};
 pub use pjrt::{Executable, PjrtRuntime};
 pub use registry::{ArtifactRegistry, ArtifactVariant};
 
