@@ -67,10 +67,11 @@ fn main() {
     svc.shutdown();
 
     println!(
-        "index build over {n} (key,rowid) pairs:\n\
+        "index build over {n} (key,rowid) pairs (SIMD backend {}):\n\
          pack-and-sort (u64 scalar baseline):   {:.3}s ({:.1} ME/s)\n\
          NEON-MS pair sort (8-byte lanes):      {:.3}s ({:.1} ME/s)\n\
          service submit_pairs round-trip:       {:.3}s ({:.1} ME/s)",
+        neonms::simd::backend::active().name(),
         t_scalar.as_secs_f64(),
         n as f64 / t_scalar.as_secs_f64() / 1e6,
         t_simd.as_secs_f64(),

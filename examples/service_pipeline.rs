@@ -138,7 +138,8 @@ fn main() {
     };
     let svc = SortService::start(cfg, have_artifacts.then_some(artifacts)).expect("start service");
     println!(
-        "service up: 2 workers over 2 shards, fair-share QoS, XLA offload {}",
+        "service up: 2 workers over 2 shards, fair-share QoS, SIMD backend {}, XLA offload {}",
+        svc.metrics().simd_backend,
         if svc.xla_enabled() { "ENABLED (≥4096-element requests)" } else { "disabled" }
     );
 

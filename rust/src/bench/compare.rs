@@ -4,7 +4,8 @@
 //! Two comparison modes, chosen from provenance:
 //!
 //! * **Rates** — both reports are [`SourceKind::Native`], same
-//!   `arch`, same `smoke` flag, and every baseline param matches.
+//!   `arch`, same SIMD `backend` stamp, same `smoke` flag, and every
+//!   baseline param matches.
 //!   Gateable metrics get a relative tolerance band around the
 //!   baseline value (per-metric `tol` or the configured default);
 //!   [`Better::Higher`] metrics fail on drops below the band,
@@ -178,6 +179,21 @@ pub fn compare(base: &BenchReport, cand: &BenchReport, cfg: &CompareConfig) -> C
                 format!(
                     "arch mismatch ({} vs {}): rates not comparable, structural mode",
                     base.arch, cand.arch
+                ),
+            ));
+        }
+        if base.backend != cand.backend {
+            // A scalar run vs an avx2 run on the same host differ by
+            // integer factors; rates across that line mean nothing.
+            // An unrecorded side (pre-backend artifact) is treated as
+            // unknown, which is also not "known equal".
+            mode = Mode::Structural;
+            findings.push(finding(
+                Severity::Warn,
+                format!(
+                    "SIMD backend mismatch ({} vs {}): rates not comparable, structural mode",
+                    base.backend.as_deref().unwrap_or("unrecorded"),
+                    cand.backend.as_deref().unwrap_or("unrecorded")
                 ),
             ));
         }
@@ -461,6 +477,62 @@ mod tests {
         cand.metric("rate/a", 10.0, "ME/s", Better::Higher);
         let cmp = compare(&base, &cand, &cfg());
         assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+    }
+
+    #[test]
+    fn backend_mismatch_downgrades_to_structural_both_ways() {
+        // A scalar baseline must never be rate-compared against a
+        // SIMD candidate — a 4× "regression" would just be the lane
+        // count — and vice versa.
+        let mut base = native("demo");
+        base.backend = Some("scalar".to_string());
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+
+        let mut cand = native("demo");
+        cand.backend = Some("avx2".to_string());
+        cand.metric("rate/a", 10.0, "ME/s", Better::Higher); // -90%, cross-backend
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert_eq!(cmp.rate_checked, 0);
+        assert!(cmp.passed(), "{}", cmp.render());
+        assert!(cmp.findings.iter().any(|f| f.message.contains("backend mismatch")));
+
+        // The reverse direction downgrades identically (an avx2
+        // baseline against a scalar candidate is not a regression).
+        let cmp = compare(&cand, &base, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.passed(), "{}", cmp.render());
+
+        // Same stamp on both sides stays in Rates mode and gates.
+        let mut cand2 = native("demo");
+        cand2.backend = Some("scalar".to_string());
+        cand2.metric("rate/a", 10.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand2, &cfg());
+        assert_eq!(cmp.mode, Mode::Rates);
+        assert_eq!(cmp.failures(), 1, "{}", cmp.render());
+    }
+
+    #[test]
+    fn unrecorded_backend_is_not_known_equal() {
+        // Pre-backend artifact vs a stamped run: unknown is not
+        // "known same backend", so rates are off the table...
+        let mut base = native("demo");
+        base.backend = None;
+        base.metric("rate/a", 100.0, "ME/s", Better::Higher);
+        let mut cand = native("demo");
+        cand.backend = Some("neon".to_string());
+        cand.metric("rate/a", 10.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Structural);
+        assert!(cmp.findings.iter().any(|f| f.message.contains("unrecorded")));
+
+        // ...but two pre-backend artifacts compare as before.
+        let mut cand = native("demo");
+        cand.backend = None;
+        cand.metric("rate/a", 95.0, "ME/s", Better::Higher);
+        let cmp = compare(&base, &cand, &cfg());
+        assert_eq!(cmp.mode, Mode::Rates);
         assert!(cmp.passed(), "{}", cmp.render());
     }
 

@@ -435,6 +435,13 @@ pub struct BenchReport {
     pub bench: String,
     /// `std::env::consts::ARCH` of the producing host.
     pub arch: String,
+    /// The active SIMD backend the run's kernels lowered on
+    /// (`"scalar"` / `"neon"` / `"sse4.2"` / `"avx2"`), stamped
+    /// automatically by [`BenchReport::new`]. `None` only for
+    /// pre-backend artifacts; the comparator treats two reports from
+    /// different backends as rate-incomparable (see
+    /// [`super::compare`]).
+    pub backend: Option<String>,
     /// Free-text provenance (how/where the numbers were produced).
     pub source: String,
     /// Machine-readable provenance class.
@@ -463,6 +470,7 @@ impl BenchReport {
         BenchReport {
             bench: bench.to_string(),
             arch: std::env::consts::ARCH.to_string(),
+            backend: Some(crate::simd::backend::active().name().to_string()),
             source: source.to_string(),
             source_kind,
             smoke,
@@ -552,6 +560,11 @@ impl BenchReport {
         if self.arch.is_empty() {
             return Err("empty arch".into());
         }
+        if let Some(b) = &self.backend {
+            if b.is_empty() {
+                return Err("empty backend (omit the field instead)".into());
+            }
+        }
         if self.source.is_empty() {
             return Err("empty source provenance".into());
         }
@@ -600,6 +613,9 @@ impl BenchReport {
         let _ = writeln!(o, "  \"schema_version\": {SCHEMA_VERSION},");
         push_str_field(&mut o, "bench", &self.bench);
         push_str_field(&mut o, "arch", &self.arch);
+        if let Some(b) = &self.backend {
+            push_str_field(&mut o, "backend", b);
+        }
         push_str_field(&mut o, "source", &self.source);
         push_str_field(&mut o, "source_kind", self.source_kind.name());
         let _ = writeln!(o, "  \"smoke\": {},", self.smoke);
@@ -660,6 +676,12 @@ impl BenchReport {
         let report = BenchReport {
             bench: req_str(&root, "bench")?,
             arch: req_str(&root, "arch")?,
+            backend: match root.get("backend") {
+                None | Some(Json::Null) => None,
+                Some(v) => {
+                    Some(v.as_str().ok_or("backend must be a string")?.to_string())
+                }
+            },
             source: req_str(&root, "source")?,
             source_kind: SourceKind::parse(&req_str(&root, "source_kind")?)?,
             smoke: req(&root, "smoke")?.as_bool().ok_or("smoke must be a boolean")?,
@@ -831,6 +853,36 @@ mod tests {
         assert_eq!(r, back);
         // And the serialization itself is stable.
         assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn backend_stamp_round_trips_and_absent_field_stays_none() {
+        let r = rich_report();
+        // `new` stamps the process's active SIMD backend.
+        let name = crate::simd::backend::active().name();
+        assert_eq!(r.backend.as_deref(), Some(name));
+        let text = r.to_json();
+        let line = format!("  \"backend\": \"{name}\",\n");
+        assert!(text.contains(&line), "backend line missing from:\n{text}");
+        assert_eq!(BenchReport::from_json(&text).unwrap().backend, r.backend);
+
+        // Pre-backend artifacts omit the field: parses to None and
+        // re-serialization keeps it omitted (no round-trip drift).
+        let legacy = text.replace(&line, "");
+        let back = BenchReport::from_json(&legacy).unwrap();
+        assert_eq!(back.backend, None);
+        assert!(!back.to_json().contains("\"backend\""));
+
+        // An explicit null means the same as absent.
+        let nulled = text.replace(&line, "  \"backend\": null,\n");
+        assert_eq!(BenchReport::from_json(&nulled).unwrap().backend, None);
+
+        // Present-but-empty is a schema break, as is a non-string.
+        let mut r = rich_report();
+        r.backend = Some(String::new());
+        assert!(r.validate().unwrap_err().contains("backend"));
+        let bad = text.replace(&line, "  \"backend\": 7,\n");
+        assert!(BenchReport::from_json(&bad).unwrap_err().contains("backend"));
     }
 
     #[test]

@@ -99,6 +99,22 @@ pub struct CoordinatorConfig {
     /// default, and the only sane production setting) costs one
     /// `Option` check per admission.
     pub faults: Option<super::faults::FaultPlan>,
+    /// Consecutive PJRT dispatch failures that trip the XLA circuit
+    /// breaker open (jobs then take the CPU fallback without paying
+    /// for a doomed dispatch). Must be ≥ 1; the default of 3 tolerates
+    /// isolated transient errors without flapping.
+    pub breaker_threshold: u32,
+    /// How long the tripped XLA breaker stays open before admitting a
+    /// half-open probe dispatch. Shorter recovers faster from
+    /// transient accelerator faults; longer sheds less latency onto a
+    /// persistently broken one.
+    pub breaker_cooloff: std::time::Duration,
+    /// Worker deaths a single fatally-flagged job may cause before the
+    /// supervisor quarantines it ([`super::SortError::Quarantined`])
+    /// instead of requeueing. Must be ≥ 1; the default of 2 gives a
+    /// job one legitimate retry while still bounding how many workers
+    /// a poison payload can take down.
+    pub quarantine_deaths: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +133,9 @@ impl Default for CoordinatorConfig {
             adaptive: AdaptivePolicy::Off,
             qos: QosPolicy::default(),
             faults: None,
+            breaker_threshold: 3,
+            breaker_cooloff: std::time::Duration::from_millis(50),
+            quarantine_deaths: 2,
         }
     }
 }
@@ -189,6 +208,16 @@ mod tests {
             let total: usize = (0..shards).map(|s| cfg.shard_capacity(s)).sum();
             assert_eq!(total, cap, "cap={cap} shards={shards}");
         }
+    }
+
+    #[test]
+    fn failure_knob_defaults_preserve_hardwired_values() {
+        // PR 8 shipped these as consts; the knobs must default to the
+        // same values so existing deployments see no behavior change.
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.breaker_threshold, 3);
+        assert_eq!(cfg.breaker_cooloff, std::time::Duration::from_millis(50));
+        assert_eq!(cfg.quarantine_deaths, 2);
     }
 
     #[test]

@@ -539,6 +539,10 @@ pub struct MetricsSnapshot {
     /// `"open"`, or `"half-open"` (always `"closed"` when no XLA
     /// executor is running).
     pub breaker_state: &'static str,
+    /// The process-wide active SIMD backend every CPU sort lowers on
+    /// ([`crate::simd::backend::active`]): `"scalar"`, `"neon"`,
+    /// `"sse4.2"`, or `"avx2"`.
+    pub simd_backend: &'static str,
     /// Times the XLA circuit breaker tripped open.
     pub breaker_trips: u64,
     pub elements: u64,
@@ -595,6 +599,7 @@ impl Metrics {
             workers_respawned: self.workers_respawned.load(Ordering::Relaxed),
             quarantined: self.quarantined.load(Ordering::Relaxed),
             breaker_state: breaker_state_label(self.breaker_state.load(Ordering::Relaxed)),
+            simd_backend: crate::simd::backend::active().name(),
             breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             route_tiny: self.route_tiny.load(Ordering::Relaxed),

@@ -197,9 +197,9 @@
 //!   about to die from an uncontained panic parks every job it holds
 //!   there, and a supervisor thread joins the corpse, requeues the
 //!   recovered jobs, and respawns the thread (`workers_respawned`).
-//!   A job that has killed a worker twice is **quarantined**
-//!   ([`SortError::Quarantined`], counted `quarantined`) instead of
-//!   being retried forever.
+//!   A job whose kills reach [`CoordinatorConfig::quarantine_deaths`]
+//!   (default 2) is **quarantined** ([`SortError::Quarantined`],
+//!   counted `quarantined`) instead of being retried forever.
 //! * **Deadlines.** Requests carry an optional deadline
 //!   ([`ClientConfig::default_deadline`], or per call via
 //!   [`SortClient::submit_with_deadline`] /
@@ -209,9 +209,10 @@
 //!   is *refunded* (uncharge, exactly like an eviction) so virtual
 //!   time cannot drift from work that consumed no service.
 //! * **Degradation.** The XLA executor guards every dispatch with a
-//!   [`CircuitBreaker`]: consecutive PJRT failures trip it open and
-//!   jobs take the CPU fallback immediately (no doomed calls), with
-//!   timed half-open probes to recover. Its state and trip count are
+//!   [`CircuitBreaker`]: [`CoordinatorConfig::breaker_threshold`]
+//!   consecutive PJRT failures trip it open and jobs take the CPU
+//!   fallback immediately (no doomed calls), with timed half-open
+//!   probes after [`CoordinatorConfig::breaker_cooloff`] to recover. Its state and trip count are
 //!   mirrored into [`MetricsSnapshot::breaker_state`] /
 //!   `breaker_trips`.
 //! * **Fault injection.** [`CoordinatorConfig::faults`] threads a
@@ -276,8 +277,9 @@ struct Job {
     /// [`FaultDecision::None`] without a plan.
     fault: FaultDecision,
     /// Workers this job's processing has killed so far (fatal
-    /// injected panics). At two the supervisor quarantines it instead
-    /// of requeueing — the poison-job stop rule.
+    /// injected panics). At [`CoordinatorConfig::quarantine_deaths`]
+    /// the supervisor quarantines it instead of requeueing — the
+    /// poison-job stop rule.
     deaths: u8,
     slot: Arc<Slot>,
     /// Tenant attribution for completion/cancellation accounting and
@@ -1006,6 +1008,19 @@ impl SortService {
             cfg.sort.r,
             cfg.sort.vector_width.lanes()
         );
+        // The sorter constructor panics on an unavailable backend; the
+        // service pre-validates so misconfiguration surfaces as an
+        // error here instead of a panic on a worker thread.
+        if let Some(backend) = cfg.sort.backend {
+            anyhow::ensure!(
+                backend.available(),
+                "sort config: SIMD backend `{backend}` is not available on this machine \
+                 (target {}); `scalar` always is",
+                std::env::consts::ARCH
+            );
+        }
+        anyhow::ensure!(cfg.breaker_threshold >= 1, "breaker_threshold must be ≥ 1");
+        anyhow::ensure!(cfg.quarantine_deaths >= 1, "quarantine_deaths must be ≥ 1");
         let adaptive_params = match &cfg.adaptive {
             AdaptivePolicy::Off => None,
             AdaptivePolicy::Adaptive { epoch_jobs, bounds } => {
@@ -1026,11 +1041,11 @@ impl SortService {
                     let (tx, rx) = mpsc::channel::<Job>();
                     // Handshake so startup failures surface in start().
                     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-                    let sort_cfg = cfg.sort.clone();
+                    let xla_cfg = cfg.clone();
                     let xm = Arc::clone(&metrics);
                     let handle = std::thread::Builder::new()
                         .name("xla-executor".into())
-                        .spawn(move || xla_executor(reg, rx, ready_tx, xm, sort_cfg))
+                        .spawn(move || xla_executor(reg, rx, ready_tx, xm, xla_cfg))
                         .context("spawning xla executor")?;
                     ready_rx.recv().context("xla executor died at startup")??;
                     (Some(tx), Some(handle))
@@ -1490,7 +1505,7 @@ fn recover_jobs(shared: &Arc<Shared>, held: Vec<Job>) {
         }
         if job.fault == FaultDecision::FatalPanic {
             job.deaths = job.deaths.saturating_add(1);
-            if job.deaths >= 2 {
+            if u32::from(job.deaths) >= shared.cfg.quarantine_deaths {
                 m.quarantined.fetch_add(1, Ordering::Relaxed);
                 fail(m, job, SortError::Quarantined);
                 continue;
@@ -1924,11 +1939,6 @@ fn wide_fallback(fallback: &NeonMergeSort, job: &mut Job) {
     }
 }
 
-/// Consecutive PJRT dispatch failures that trip the XLA breaker open.
-const XLA_BREAKER_THRESHOLD: u32 = 3;
-/// Open period before the breaker admits a half-open probe dispatch.
-const XLA_BREAKER_COOLOFF: Duration = Duration::from_millis(50);
-
 /// Mirror the executor-owned breaker into the lock-free metrics
 /// gauges after every recorded outcome (the breaker itself is plain
 /// mutable state on the executor thread; this is its only escape).
@@ -1972,7 +1982,7 @@ fn xla_executor(
     rx: mpsc::Receiver<Job>,
     ready: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
-    sort_cfg: crate::sort::SortConfig,
+    cfg: CoordinatorConfig,
 ) {
     let sorter = match PjrtRuntime::cpu()
         .map(Arc::new)
@@ -1992,12 +2002,14 @@ fn xla_executor(
     // configured kernel (CoordinatorConfig::sort governs every CPU
     // tier, fallbacks included): PJRT failures must not pay a per-job
     // construction or aux allocation — nor silently switch kernels.
-    let fallback = NeonMergeSort::new(sort_cfg);
+    let fallback = NeonMergeSort::new(cfg.sort.clone());
     let mut fb_scratch = SortScratch::new();
     // Degradation guard: consecutive PJRT failures trip this open and
     // every job takes the CPU fallback without paying for a doomed
     // dispatch; timed half-open probes recover (see runtime::breaker).
-    let mut breaker = CircuitBreaker::new(XLA_BREAKER_THRESHOLD, XLA_BREAKER_COOLOFF);
+    // Threshold and cool-off are service knobs
+    // (CoordinatorConfig::breaker_threshold / breaker_cooloff).
+    let mut breaker = CircuitBreaker::new(cfg.breaker_threshold, cfg.breaker_cooloff);
     publish_breaker(&metrics, &breaker);
     while let Ok(mut job) = rx.recv() {
         if job.slot.is_cancelled() {

@@ -1380,6 +1380,66 @@ fn fatal_panic_respawns_worker_and_double_kill_quarantines() {
 }
 
 #[test]
+fn quarantine_deaths_knob_tightens_the_stop_rule() {
+    // With quarantine_deaths = 1 the first kill quarantines: no
+    // requeue, exactly one worker respawn.
+    let plan = FaultPlan { seed: 7, fatal_panic_per_mille: 1000, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        faults: Some(plan),
+        quarantine_deaths: 1,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("killer");
+    let h = client.submit(vec![3u32, 1, 2]);
+    assert_eq!(h.wait(), Err(SortError::Quarantined), "first kill quarantines at 1");
+    let m = svc.metrics();
+    assert_eq!(m.workers_respawned, 1, "no second death, no second respawn");
+    assert_eq!(m.quarantined, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn invalid_failure_knobs_fail_startup() {
+    let zero_threshold =
+        CoordinatorConfig { breaker_threshold: 0, ..Default::default() };
+    assert!(SortService::start(zero_threshold, None).is_err(), "threshold 0 rejected");
+    let zero_quarantine =
+        CoordinatorConfig { quarantine_deaths: 0, ..Default::default() };
+    assert!(SortService::start(zero_quarantine, None).is_err(), "quarantine 0 rejected");
+}
+
+#[test]
+fn backend_override_validated_at_start_and_scalar_serves() {
+    use crate::simd::Backend;
+    use crate::sort::SortConfig;
+    // An explicitly requested unavailable backend is a start() error,
+    // not a worker-thread panic.
+    if let Some(missing) = Backend::all().into_iter().find(|k| !k.available()) {
+        let bad = CoordinatorConfig {
+            sort: SortConfig { backend: Some(missing), ..Default::default() },
+            ..Default::default()
+        };
+        assert!(SortService::start(bad, None).is_err(), "unavailable backend rejected");
+    }
+    // Forcing scalar works on every machine and serves correctly.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        sort: SortConfig { backend: Some(Backend::Scalar), ..Default::default() },
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let mut rng = Rng::new(41);
+    let h = svc.submit(rng.vec_u32(10_000));
+    assert_sorted(&h.wait().unwrap(), "scalar-backend service");
+    assert_eq!(svc.metrics().simd_backend, "scalar");
+    svc.shutdown();
+}
+
+#[test]
 fn deadlines_reap_lazily_with_refund() {
     // A zero deadline expires deterministically: the worker reaps it
     // at dequeue, the handle resolves DeadlineExceeded, and the QoS

@@ -15,20 +15,24 @@
 //!   bitonic merge as a Pallas kernel (interpret mode), validated
 //!   against a pure-jnp oracle.
 //!
-//! The paper targets ARM NEON on an FT2000+; this testbed is x86-64.
-//! The NEON register model is reproduced by the width-generic
-//! [`simd::Vector`] layer: [`simd::V128`] — a portable 128-bit,
-//! 4-lane vector type whose operations map 1:1 onto the NEON
-//! intrinsics the paper uses (`vminq_s32`, `vmaxq_s32`, `vzipq`, ...)
-//! and auto-vectorize to SSE on this host — and [`simd::V256`], its
-//! 8-lane sibling modeling paired q-registers / SVE-256. The kernels
-//! are generic over the vector type, so the §2.2 width × register
-//! budget sweep is a [`sort::SortConfig`] knob
-//! (`vector_width`/`merge_width`), recorded in
-//! `BENCH_width_sweep.json`. Register-pressure effects (the paper's
-//! Table 2 R-sweep) are additionally modeled by [`regmachine`], an
-//! abstract register-file simulator with an explicit spill cost
-//! model. See DESIGN.md §Hardware-Adaptation.
+//! The paper targets ARM NEON on an FT2000+. The NEON register model
+//! is reproduced by the width-generic [`simd::Vector`] layer:
+//! [`simd::V128`] — a 128-bit, 4-lane vector type whose operations
+//! map 1:1 onto the NEON intrinsics the paper uses (`vminq_s32`,
+//! `vmaxq_s32`, `vzipq`, ...) — and [`simd::V256`], its 8-lane
+//! sibling modeling paired q-registers / SVE-256. Each operation
+//! lowers through a pluggable [`simd::backend`]: real `core::arch`
+//! NEON intrinsics on aarch64, SSE4.2/AVX2 on x86-64, and a portable
+//! scalar reference model everywhere, selected once per process by
+//! runtime feature detection (override: `NEONMS_SIMD_BACKEND`,
+//! [`sort::SortConfig::backend`], or `--backend`). The kernels are
+//! generic over the vector type, so the §2.2 width × register budget
+//! sweep is a [`sort::SortConfig`] knob (`vector_width`/
+//! `merge_width`), recorded in `BENCH_width_sweep.json`.
+//! Register-pressure effects (the paper's Table 2 R-sweep) are
+//! additionally modeled by [`regmachine`], an abstract register-file
+//! simulator with an explicit spill cost model. See DESIGN.md
+//! §Hardware-Adaptation.
 //!
 //! # Paper → code map
 //!

@@ -5,7 +5,7 @@
 //! ```text
 //! neonms sort [--n N] [--threads T] [--workload W]
 //!             [--impl hybrid|vectorized|serial] [--width 4|8|16|32|64]
-//!             [--vector 128|256]
+//!             [--vector 128|256] [--backend auto|scalar|neon|sse4.2|avx2]
 //! neonms bench <table1|table2|table3|fig5|ablations|all> [--reps R] [--max-n N]
 //! neonms verify-networks
 //! neonms regmachine [--phys F]
@@ -13,7 +13,14 @@
 //!                   [--shards S] [--batch-max B] [--fuse-cutoff F]
 //!                   [--xla] [--adaptive] [--epoch J]
 //!                   [--tenant-weights W1,W2,...] [--qos fair|fifo]
+//!                   [--backend auto|scalar|neon|sse4.2|avx2]
 //! ```
+//!
+//! `--backend` pins the SIMD backend the kernels lower on (`auto`,
+//! the default, runs feature detection; `scalar` always works). The
+//! `NEONMS_SIMD_BACKEND` environment variable is the process-wide
+//! equivalent; the flag wins when both are set because it forces the
+//! selection explicitly.
 //!
 //! `--adaptive` turns on online routing: the service re-derives the
 //! tiny/fuse/parallel cutoffs and `batch_max` from live per-tier
@@ -97,6 +104,32 @@ impl Flags {
     }
 }
 
+/// `--backend` → [`SortConfig::backend`]. `auto` (the default) defers
+/// to detection / `NEONMS_SIMD_BACKEND`; a named backend must parse
+/// and be available on this CPU or the command exits with usage.
+fn backend_flag(flags: &Flags) -> Option<neonms::simd::Backend> {
+    let s = flags.get_str("backend", "auto");
+    if s.trim().eq_ignore_ascii_case("auto") {
+        return None;
+    }
+    match neonms::simd::Backend::parse(&s) {
+        Some(b) if b.available() => Some(b),
+        Some(b) => {
+            eprintln!(
+                "--backend {s}: `{}` is not available on this machine (target {}); \
+                 `scalar` always is",
+                b.name(),
+                std::env::consts::ARCH
+            );
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("--backend {s}: unknown SIMD backend (want auto|scalar|neon|sse4.2|avx2)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_sort(flags: &Flags) {
     use neonms::kernels::{MergeImpl, MergeWidth};
     use neonms::simd::VectorWidth;
@@ -128,6 +161,7 @@ fn cmd_sort(flags: &Flags) {
         merge_impl: imp,
         merge_width: width,
         vector_width: vector,
+        backend: backend_flag(flags),
         ..Default::default()
     };
     let mut data = workload.generate(n, 42);
@@ -140,10 +174,11 @@ fn cmd_sort(flags: &Flags) {
     let dt = t0.elapsed();
     assert!(data.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
     println!(
-        "sorted {n} {} u32 in {:.3}s ({:.2} ME/s, T={threads})",
+        "sorted {n} {} u32 in {:.3}s ({:.2} ME/s, T={threads}, backend={})",
         workload.name(),
         dt.as_secs_f64(),
-        n as f64 / dt.as_secs_f64() / 1e6
+        n as f64 / dt.as_secs_f64() / 1e6,
+        neonms::simd::backend::active().name()
     );
 }
 
@@ -247,20 +282,25 @@ fn cmd_serve(flags: &Flags) {
         xla_cutoff: flags.has("xla").then_some(4096),
         adaptive,
         qos,
+        sort: neonms::sort::SortConfig {
+            backend: backend_flag(flags),
+            ..defaults.sort.clone()
+        },
         ..defaults
     };
     let svc = SortService::start(cfg.clone(), artifacts).expect("service start");
     let initial_routing = svc.routing();
     println!(
         "service up ({} workers, {} shards, batch_max={}, xla={}, {} tenants, adaptive={}, \
-         qos={:?})",
+         qos={:?}, backend={})",
         cfg.workers,
         cfg.shards,
         cfg.batch_max,
         svc.xla_enabled(),
         tenants,
         cfg.adaptive.is_on(),
-        cfg.qos
+        cfg.qos,
+        svc.metrics().simd_backend
     );
     // One client per tenant, each submitting from its own thread
     // through the non-blocking handle API.

@@ -1,0 +1,667 @@
+//! Runtime-selected SIMD backends behind the register model.
+//!
+//! The register types ([`super::V128`], [`super::V256`],
+//! [`super::V128D`], [`super::V256D`]) keep their public shape — plain
+//! `repr(C)` arrays with value semantics — but every data-movement and
+//! comparator op now routes through this module, which lowers it on one
+//! of three backends:
+//!
+//! * **`scalar`** — the original portable reference model, compiled on
+//!   every target and always selectable. Bit-for-bit identical to the
+//!   pre-backend code: each op is the same array formula the register
+//!   types used to inline.
+//! * **`neon`** (`aarch64` builds) — `core::arch::aarch64` intrinsics.
+//!   `V128`/`V128D` map 1:1 onto q-register ops (`vminq_u32`,
+//!   `vzip1q_u32`, `vextq_u64`, ...); `V256`/`V256D` lower as *pairs*
+//!   of q-registers, matching the paper's modelling of 256-bit traffic
+//!   on a 128-bit machine.
+//! * **`sse4.2` / `avx2`** (`x86_64` builds) — `core::arch::x86_64`
+//!   intrinsics. Under `sse4.2` everything is xmm pairs; under `avx2`
+//!   the `V256`/`V256D` comparators additionally fuse into native
+//!   256-bit ymm ops (`_mm256_min_epi32`, ...).
+//!
+//! # Dispatch happens once, at the trait-impl boundary
+//!
+//! `kernels/`, `sortnet::Network::apply_columns`, `sort/`, and the
+//! coordinator are all generic over [`super::Vector`] and know nothing
+//! about backends. The register-type impls translate each op into a
+//! call here; the active backend is a process-global picked once by
+//! [`active`] (runtime feature detection, overridable via the
+//! `NEONMS_SIMD_BACKEND` environment variable or [`force`]) and read
+//! with a single relaxed atomic load per op — which branch-predicts
+//! perfectly and disappears entirely once LLVM hoists it out of the
+//! sorting-network loops.
+//!
+//! Two kinds of ops exist:
+//!
+//! * **Geometry** (zips/unzips/transposes/reverses/blends) moves lanes
+//!   without looking at them, so one lowering per *width* serves every
+//!   element type. These are the free functions on [`B128`] below.
+//! * **Comparators** (`min`/`max`) depend on the element's order, so
+//!   they dispatch per element type through the `Lane::min128`-family
+//!   hooks (see [`super::Lane`]), again landing in this module.
+//!
+//! Every dispatcher also has a `*_with(Backend, ...)` twin that takes
+//! the backend explicitly. The cross-backend equivalence suite uses
+//! those to compare lowerings without mutating process-global state.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+#[cfg(test)]
+mod tests;
+
+/// A SIMD lowering strategy for the register model.
+///
+/// All four variants exist on every target so that configs, CLI flags,
+/// and bench artifacts can always *name* any backend; availability
+/// ([`Backend::available`]) is what's target- and CPU-dependent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Backend {
+    /// Portable reference model — always available, on every target.
+    Scalar = 0,
+    /// ARM NEON q-register intrinsics (`aarch64` only).
+    Neon = 1,
+    /// SSE4.2 xmm intrinsics (`x86_64` with SSE4.1+SSE4.2).
+    Sse42 = 2,
+    /// AVX2 ymm intrinsics for 256-bit ops, xmm for 128-bit
+    /// (`x86_64` with AVX2).
+    Avx2 = 3,
+}
+
+impl Backend {
+    /// All nameable backends, portable-first.
+    pub fn all() -> [Backend; 4] {
+        [Backend::Scalar, Backend::Neon, Backend::Sse42, Backend::Avx2]
+    }
+
+    /// Stable lower-case name, used by `NEONMS_SIMD_BACKEND`, the
+    /// `--backend` CLI flag, `MetricsSnapshot`, and `BenchReport`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Neon => "neon",
+            Backend::Sse42 => "sse4.2",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a backend name as accepted by `NEONMS_SIMD_BACKEND` and
+    /// `--backend`. Case-insensitive; `"sse42"` is accepted as an
+    /// alias for `"sse4.2"`. `"auto"` is *not* a backend — callers
+    /// handle it before parsing (it means "run detection").
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Backend::Scalar),
+            "neon" => Some(Backend::Neon),
+            "sse4.2" | "sse42" => Some(Backend::Sse42),
+            "avx2" => Some(Backend::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend can run on the current target *and* CPU.
+    ///
+    /// `Scalar` is available everywhere; the intrinsic backends
+    /// require both the right `target_arch` (compile-time) and the
+    /// right CPU features (runtime detection).
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Neon => neon_available(),
+            Backend::Sse42 => sse42_available(),
+            Backend::Avx2 => avx2_available(),
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Backend> {
+        match v {
+            0 => Some(Backend::Scalar),
+            1 => Some(Backend::Neon),
+            2 => Some(Backend::Sse42),
+            3 => Some(Backend::Avx2),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn sse42_available() -> bool {
+    is_x86_feature_detected!("sse4.1") && is_x86_feature_detected!("sse4.2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn sse42_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    sse42_available() && is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Pick the best available backend for this machine: `avx2` >
+/// `sse4.2` > `scalar` on x86_64, `neon` > `scalar` on aarch64,
+/// `scalar` elsewhere.
+pub fn detect() -> Backend {
+    if Backend::Avx2.available() {
+        Backend::Avx2
+    } else if Backend::Sse42.available() {
+        Backend::Sse42
+    } else if Backend::Neon.available() {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Resolve what the `NEONMS_SIMD_BACKEND` environment variable asks
+/// for: unset/empty/`auto` means "detect", a backend name means "that
+/// backend, or fail loudly if it can't run here".
+///
+/// Split out from the global-init path so the selection policy is unit
+/// testable without touching process state.
+fn resolve_env(var: Option<&str>) -> Result<Backend, String> {
+    let v = match var {
+        None => return Ok(detect()),
+        Some(v) => v.trim(),
+    };
+    if v.is_empty() || v.eq_ignore_ascii_case("auto") {
+        return Ok(detect());
+    }
+    let k = Backend::parse(v).ok_or_else(|| {
+        format!(
+            "unknown SIMD backend {:?}; valid values: scalar, neon, sse4.2, avx2, auto",
+            v
+        )
+    })?;
+    if !k.available() {
+        return Err(format!(
+            "SIMD backend `{}` is not available on this machine (target {}); \
+             `scalar` always is",
+            k.name(),
+            std::env::consts::ARCH
+        ));
+    }
+    Ok(k)
+}
+
+/// Sentinel meaning "not initialised yet" — outside the `Backend`
+/// discriminant range.
+const UNINIT: u8 = 0xFF;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+#[cold]
+fn init_slow() -> Backend {
+    let resolved = match std::env::var("NEONMS_SIMD_BACKEND") {
+        Ok(v) => resolve_env(Some(&v)),
+        Err(_) => resolve_env(None),
+    };
+    let k = match resolved {
+        Ok(k) => k,
+        // An explicit-but-impossible request must not silently fall
+        // back — wrong-backend numbers are worse than no numbers.
+        Err(e) => panic!("NEONMS_SIMD_BACKEND: {e}"),
+    };
+    // Racing first-callers may each run detection; they all agree on
+    // the result unless one raced a `force()`, in which case the
+    // forced value wins (compare_exchange keeps whatever landed).
+    let _ = ACTIVE.compare_exchange(UNINIT, k as u8, Ordering::Relaxed, Ordering::Relaxed);
+    Backend::from_u8(ACTIVE.load(Ordering::Relaxed)).unwrap_or(Backend::Scalar)
+}
+
+/// The backend every dispatched op currently lowers on.
+///
+/// First call resolves `NEONMS_SIMD_BACKEND` (or runs detection);
+/// subsequent calls are a single relaxed atomic load.
+#[inline(always)]
+pub fn active() -> Backend {
+    match Backend::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(k) => k,
+        None => init_slow(),
+    }
+}
+
+/// Force the active backend for the whole process, overriding both
+/// detection and the environment variable. Used by
+/// [`crate::sort::SortConfig::backend`] and the CLI `--backend` flag.
+///
+/// Fails (leaving the current selection untouched) if the requested
+/// backend is unavailable on this machine; forcing
+/// [`Backend::Scalar`] always succeeds.
+pub fn force(k: Backend) -> Result<Backend, String> {
+    if !k.available() {
+        return Err(format!(
+            "SIMD backend `{}` is not available on this machine (target {}); \
+             `scalar` always is",
+            k.name(),
+            std::env::consts::ARCH
+        ));
+    }
+    ACTIVE.store(k as u8, Ordering::Relaxed);
+    Ok(k)
+}
+
+// ---------------------------------------------------------------------
+// Type-erased register bits
+// ---------------------------------------------------------------------
+
+/// The raw bits of one 128-bit register, independent of element type.
+///
+/// Geometry ops (zips, transposes, reverses, blends) move lanes
+/// without interpreting them, so they operate on `B128` and serve
+/// `V128<i32>`, `V128<u32>`, `V128<f32>`, and `V128D<u64>` alike —
+/// exactly how the hardware ops they lower to behave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(C, align(16))]
+pub struct B128(pub [u8; 16]);
+
+/// The raw bits of one 256-bit double-register ([`B128`] at 256 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(C, align(32))]
+pub struct B256(pub [u8; 32]);
+
+/// Bit-cast a 16-byte register value to its raw bits.
+#[inline(always)]
+pub(crate) fn to_b128<R: Copy>(r: R) -> B128 {
+    debug_assert_eq!(core::mem::size_of::<R>(), 16, "B128 requires a 16-byte register");
+    debug_assert!(core::mem::align_of::<R>() <= 16);
+    // SAFETY: size checked above; B128 has no invalid bit patterns.
+    unsafe { core::ptr::read(&r as *const R as *const B128) }
+}
+
+/// Bit-cast raw bits back to a 16-byte register value.
+#[inline(always)]
+pub(crate) fn from_b128<R: Copy>(b: B128) -> R {
+    debug_assert_eq!(core::mem::size_of::<R>(), 16, "B128 requires a 16-byte register");
+    debug_assert!(core::mem::align_of::<R>() <= 16);
+    // SAFETY: size checked above; register types are plain repr(C)
+    // arrays of integers/floats, valid for every bit pattern the
+    // backends produce.
+    unsafe { core::ptr::read(&b as *const B128 as *const R) }
+}
+
+/// Bit-cast a 32-byte register value to its raw bits.
+#[inline(always)]
+pub(crate) fn to_b256<R: Copy>(r: R) -> B256 {
+    debug_assert_eq!(core::mem::size_of::<R>(), 32, "B256 requires a 32-byte register");
+    debug_assert!(core::mem::align_of::<R>() <= 32);
+    // SAFETY: as `to_b128`.
+    unsafe { core::ptr::read(&r as *const R as *const B256) }
+}
+
+/// Bit-cast raw bits back to a 32-byte register value.
+#[inline(always)]
+pub(crate) fn from_b256<R: Copy>(b: B256) -> R {
+    debug_assert_eq!(core::mem::size_of::<R>(), 32, "B256 requires a 32-byte register");
+    debug_assert!(core::mem::align_of::<R>() <= 32);
+    // SAFETY: as `from_b128`.
+    unsafe { core::ptr::read(&b as *const B256 as *const R) }
+}
+
+/// Low 128-bit half of a 256-bit double-register.
+#[inline(always)]
+pub(crate) fn lo128(b: B256) -> B128 {
+    let mut o = [0u8; 16];
+    o.copy_from_slice(&b.0[..16]);
+    B128(o)
+}
+
+/// High 128-bit half of a 256-bit double-register.
+#[inline(always)]
+pub(crate) fn hi128(b: B256) -> B128 {
+    let mut o = [0u8; 16];
+    o.copy_from_slice(&b.0[16..]);
+    B128(o)
+}
+
+/// Rejoin two 128-bit halves into a 256-bit double-register.
+#[inline(always)]
+pub(crate) fn join128(lo: B128, hi: B128) -> B256 {
+    let mut o = [0u8; 32];
+    o[..16].copy_from_slice(&lo.0);
+    o[16..].copy_from_slice(&hi.0);
+    B256(o)
+}
+
+// ---------------------------------------------------------------------
+// Geometry dispatchers (element-type independent)
+// ---------------------------------------------------------------------
+
+macro_rules! geom2 {
+    ($(#[$doc:meta])* $name:ident, $with:ident) => {
+        $(#[$doc])*
+        #[inline(always)]
+        pub(crate) fn $name(a: B128, b: B128) -> B128 {
+            $with(active(), a, b)
+        }
+
+        $(#[$doc])*
+        ///
+        /// Explicit-backend twin for the equivalence suite.
+        #[inline]
+        pub(crate) fn $with(k: Backend, a: B128, b: B128) -> B128 {
+            match k {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Sse42/Avx2 only become active after runtime
+                // detection confirmed SSE4.1+SSE4.2 on this CPU.
+                Backend::Sse42 | Backend::Avx2 => unsafe { x86::$name(a, b) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: Neon only becomes active after runtime
+                // detection confirmed NEON on this CPU.
+                Backend::Neon => unsafe { neon::$name(a, b) },
+                _ => scalar::$name(a, b),
+            }
+        }
+    };
+}
+
+macro_rules! geom1 {
+    ($(#[$doc:meta])* $name:ident, $with:ident) => {
+        $(#[$doc])*
+        #[inline(always)]
+        pub(crate) fn $name(a: B128) -> B128 {
+            $with(active(), a)
+        }
+
+        $(#[$doc])*
+        ///
+        /// Explicit-backend twin for the equivalence suite.
+        #[inline]
+        pub(crate) fn $with(k: Backend, a: B128) -> B128 {
+            match k {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: see the binary-geometry dispatcher.
+                Backend::Sse42 | Backend::Avx2 => unsafe { x86::$name(a) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: see the binary-geometry dispatcher.
+                Backend::Neon => unsafe { neon::$name(a) },
+                _ => scalar::$name(a),
+            }
+        }
+    };
+}
+
+geom2!(
+    /// Interleave low 32-bit lanes: `[a0, b0, a1, b1]` (NEON `zip1`,
+    /// SSE `punpckldq`).
+    zip1_32,
+    zip1_32_with
+);
+geom2!(
+    /// Interleave high 32-bit lanes: `[a2, b2, a3, b3]` (NEON `zip2`,
+    /// SSE `punpckhdq`).
+    zip2_32,
+    zip2_32_with
+);
+geom2!(
+    /// Even 32-bit lanes of both: `[a0, a2, b0, b2]` (NEON `uzp1`,
+    /// SSE `shufps 0x88`).
+    uzp1_32,
+    uzp1_32_with
+);
+geom2!(
+    /// Odd 32-bit lanes of both: `[a1, a3, b1, b3]` (NEON `uzp2`,
+    /// SSE `shufps 0xDD`).
+    uzp2_32,
+    uzp2_32_with
+);
+geom2!(
+    /// Transpose-primary of 32-bit lanes: `[a0, b0, a2, b2]` (NEON
+    /// `trn1`).
+    trn1_32,
+    trn1_32_with
+);
+geom2!(
+    /// Transpose-secondary of 32-bit lanes: `[a1, b1, a3, b3]` (NEON
+    /// `trn2`).
+    trn2_32,
+    trn2_32_with
+);
+geom1!(
+    /// Reverse 32-bit lanes within each 64-bit half: `[a1, a0, a3,
+    /// a2]` (NEON `rev64`, SSE `pshufd 0xB1`).
+    rev64_32,
+    rev64_32_with
+);
+geom1!(
+    /// Swap the 64-bit halves: `[a2, a3, a0, a1]` (NEON `ext #8`, SSE
+    /// `pshufd 0x4E`). Also serves the two-lane register's
+    /// `reverse`/`swap_halves`.
+    swap64,
+    swap64_with
+);
+geom1!(
+    /// Fully reverse the four 32-bit lanes: `[a3, a2, a1, a0]` (NEON
+    /// `rev64` + `ext`, SSE `pshufd 0x1B`).
+    rev_32,
+    rev_32_with
+);
+geom2!(
+    /// Low 64-bit half of `lo`, high 64-bit half of `hi` (SSE
+    /// `pblendw 0xF0`, NEON `vcombine(low(lo), high(hi))`). Serves
+    /// both the 4-lane `[lo0, lo1, hi2, hi3]` blend and the 2-lane
+    /// `[lo0, hi1]` blend — same bit movement.
+    blend64_lo_hi,
+    blend64_lo_hi_with
+);
+geom2!(
+    /// Even lanes from `ev`, odd lanes from `od`: `[ev0, od1, ev2,
+    /// od3]` (SSE `pblendw 0xCC`, NEON `bsl`).
+    blend_even_odd_32,
+    blend_even_odd_32_with
+);
+geom2!(
+    /// Outer lanes from `a`, inner lanes from `b`: `[a0, b1, b2, a3]`
+    /// (SSE `pblendw 0x3C`, NEON `bsl`).
+    blend_outer_32,
+    blend_outer_32_with
+);
+geom2!(
+    /// Interleave low 64-bit lanes: `[a0, b0]` (NEON `zip1.2d`, SSE
+    /// `punpcklqdq`).
+    zip1_64,
+    zip1_64_with
+);
+geom2!(
+    /// Interleave high 64-bit lanes: `[a1, b1]` (NEON `zip2.2d`, SSE
+    /// `punpckhqdq`).
+    zip2_64,
+    zip2_64_with
+);
+
+// ---------------------------------------------------------------------
+// Comparator dispatchers (element-type dependent)
+// ---------------------------------------------------------------------
+
+macro_rules! minmax128 {
+    ($(#[$doc:meta])* $name:ident, $with:ident) => {
+        $(#[$doc])*
+        #[inline(always)]
+        pub(crate) fn $name(a: B128, b: B128) -> B128 {
+            $with(active(), a, b)
+        }
+
+        $(#[$doc])*
+        ///
+        /// Explicit-backend twin for the equivalence suite.
+        #[inline]
+        pub(crate) fn $with(k: Backend, a: B128, b: B128) -> B128 {
+            match k {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Sse42/Avx2 only become active after runtime
+                // detection confirmed SSE4.1+SSE4.2 on this CPU.
+                Backend::Sse42 | Backend::Avx2 => unsafe { x86::$name(a, b) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: Neon only becomes active after runtime
+                // detection confirmed NEON on this CPU.
+                Backend::Neon => unsafe { neon::$name(a, b) },
+                _ => scalar::$name(a, b),
+            }
+        }
+    };
+}
+
+minmax128!(
+    /// Lane-wise signed 32-bit minimum (NEON `smin`, SSE `pminsd`).
+    min128_i32,
+    min128_i32_with
+);
+minmax128!(
+    /// Lane-wise signed 32-bit maximum (NEON `smax`, SSE `pmaxsd`).
+    max128_i32,
+    max128_i32_with
+);
+minmax128!(
+    /// Lane-wise unsigned 32-bit minimum (NEON `umin`, SSE `pminud`).
+    min128_u32,
+    min128_u32_with
+);
+minmax128!(
+    /// Lane-wise unsigned 32-bit maximum (NEON `umax`, SSE `pmaxud`).
+    max128_u32,
+    max128_u32_with
+);
+minmax128!(
+    /// Lane-wise f32 minimum with `a < b ? a : b` semantics (NEON
+    /// `fmin` differs on NaN, but NaN input is out of contract — see
+    /// [`super::Lane`] on `f32`; SSE `minps` matches exactly).
+    min128_f32,
+    min128_f32_with
+);
+minmax128!(
+    /// Lane-wise f32 maximum with `a < b ? b : a` semantics.
+    max128_f32,
+    max128_f32_with
+);
+minmax128!(
+    /// Lane-wise unsigned 64-bit minimum (NEON `cmhi` + `bsl`; SSE4.2
+    /// sign-flipped `pcmpgtq` + `pblendvb` — no native `pminuq` until
+    /// AVX-512).
+    min128_u64,
+    min128_u64_with
+);
+minmax128!(
+    /// Lane-wise unsigned 64-bit maximum (see [`min128_u64`]).
+    max128_u64,
+    max128_u64_with
+);
+
+macro_rules! minmax256 {
+    ($(#[$doc:meta])* $name:ident, $with:ident, $op128_with:ident, $avx2:ident) => {
+        $(#[$doc])*
+        #[inline(always)]
+        pub(crate) fn $name(a: B256, b: B256) -> B256 {
+            $with(active(), a, b)
+        }
+
+        $(#[$doc])*
+        ///
+        /// Explicit-backend twin for the equivalence suite.
+        #[inline]
+        pub(crate) fn $with(k: Backend, a: B256, b: B256) -> B256 {
+            match k {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Avx2 only becomes active after runtime
+                // detection confirmed AVX2 on this CPU.
+                Backend::Avx2 => unsafe { x86::$avx2(a, b) },
+                // Everything below ymm width is the paired-register
+                // lowering: two 128-bit ops on the halves (scalar,
+                // NEON q-pairs, SSE xmm pairs alike).
+                _ => join128(
+                    $op128_with(k, lo128(a), lo128(b)),
+                    $op128_with(k, hi128(a), hi128(b)),
+                ),
+            }
+        }
+    };
+}
+
+minmax256!(
+    /// 256-bit signed 32-bit minimum (`vpminsd ymm` under AVX2,
+    /// paired 128-bit ops otherwise).
+    min256_i32,
+    min256_i32_with,
+    min128_i32_with,
+    min256_i32
+);
+minmax256!(
+    /// 256-bit signed 32-bit maximum.
+    max256_i32,
+    max256_i32_with,
+    max128_i32_with,
+    max256_i32
+);
+minmax256!(
+    /// 256-bit unsigned 32-bit minimum.
+    min256_u32,
+    min256_u32_with,
+    min128_u32_with,
+    min256_u32
+);
+minmax256!(
+    /// 256-bit unsigned 32-bit maximum.
+    max256_u32,
+    max256_u32_with,
+    max128_u32_with,
+    max256_u32
+);
+minmax256!(
+    /// 256-bit f32 minimum (`vminps ymm` under AVX2).
+    min256_f32,
+    min256_f32_with,
+    min128_f32_with,
+    min256_f32
+);
+minmax256!(
+    /// 256-bit f32 maximum.
+    max256_f32,
+    max256_f32_with,
+    max128_f32_with,
+    max256_f32
+);
+minmax256!(
+    /// 256-bit unsigned 64-bit minimum (`vpcmpgtq` + `vpblendvb`
+    /// under AVX2).
+    min256_u64,
+    min256_u64_with,
+    min128_u64_with,
+    min256_u64
+);
+minmax256!(
+    /// 256-bit unsigned 64-bit maximum.
+    max256_u64,
+    max256_u64_with,
+    max128_u64_with,
+    max256_u64
+);

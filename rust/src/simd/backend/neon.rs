@@ -1,0 +1,214 @@
+//! ARM NEON lowering of the register-model ops (`aarch64` builds
+//! only).
+//!
+//! This is the backend the paper actually measures: `V128`/`V128D` map
+//! 1:1 onto q-register ops, and `V256`/`V256D` lower as q-register
+//! *pairs* (NEON has no 256-bit registers — the paired lowering is the
+//! paper's own model of double-width traffic).
+//!
+//! The scalar model was written NEON-first, so the geometry ops here
+//! are the eponymous intrinsics (`vzip1q_u32`, `vuzp1q_u32`,
+//! `vrev64q_u32`, ...). Each lowering is property-tested against the
+//! scalar oracle in `backend::tests` (which runs natively under the
+//! CI `aarch64` cross-check once executed on arm hardware) and
+//! mirrored in `tools/verify_backend_lowering.py`.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+use super::B128;
+
+#[inline(always)]
+unsafe fn ld_u32(a: B128) -> uint32x4_t {
+    // NEON is baseline on aarch64 linux targets; vld1q needs no gate.
+    vld1q_u32(a.0.as_ptr() as *const u32)
+}
+
+#[inline(always)]
+unsafe fn st_u32(v: uint32x4_t) -> B128 {
+    let mut o = B128([0; 16]);
+    vst1q_u32(o.0.as_mut_ptr() as *mut u32, v);
+    o
+}
+
+#[inline(always)]
+unsafe fn ld_u64(a: B128) -> uint64x2_t {
+    vld1q_u64(a.0.as_ptr() as *const u64)
+}
+
+#[inline(always)]
+unsafe fn st_u64(v: uint64x2_t) -> B128 {
+    let mut o = B128([0; 16]);
+    vst1q_u64(o.0.as_mut_ptr() as *mut u64, v);
+    o
+}
+
+// -- geometry ---------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn zip1_32(a: B128, b: B128) -> B128 {
+    st_u32(vzip1q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn zip2_32(a: B128, b: B128) -> B128 {
+    st_u32(vzip2q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn uzp1_32(a: B128, b: B128) -> B128 {
+    st_u32(vuzp1q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn uzp2_32(a: B128, b: B128) -> B128 {
+    st_u32(vuzp2q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn trn1_32(a: B128, b: B128) -> B128 {
+    st_u32(vtrn1q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn trn2_32(a: B128, b: B128) -> B128 {
+    st_u32(vtrn2q_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn rev64_32(a: B128) -> B128 {
+    st_u32(vrev64q_u32(ld_u32(a)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn swap64(a: B128) -> B128 {
+    let v = ld_u64(a);
+    st_u64(vextq_u64::<1>(v, v))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn rev_32(a: B128) -> B128 {
+    // rev64 within halves, then swap the halves: full 4-lane reverse.
+    let r = vreinterpretq_u64_u32(vrev64q_u32(ld_u32(a)));
+    st_u64(vextq_u64::<1>(r, r))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn blend64_lo_hi(lo: B128, hi: B128) -> B128 {
+    st_u64(vcombine_u64(
+        vget_low_u64(ld_u64(lo)),
+        vget_high_u64(ld_u64(hi)),
+    ))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn blend_even_odd_32(ev: B128, od: B128) -> B128 {
+    // bsl selects the second operand where the mask bits are set.
+    let m = [u32::MAX, 0, u32::MAX, 0];
+    st_u32(vbslq_u32(vld1q_u32(m.as_ptr()), ld_u32(ev), ld_u32(od)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn blend_outer_32(a: B128, b: B128) -> B128 {
+    let m = [u32::MAX, 0, 0, u32::MAX];
+    st_u32(vbslq_u32(vld1q_u32(m.as_ptr()), ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn zip1_64(a: B128, b: B128) -> B128 {
+    st_u64(vzip1q_u64(ld_u64(a), ld_u64(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn zip2_64(a: B128, b: B128) -> B128 {
+    st_u64(vzip2q_u64(ld_u64(a), ld_u64(b)))
+}
+
+// -- comparators ------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn min128_i32(a: B128, b: B128) -> B128 {
+    let (va, vb) = (
+        vreinterpretq_s32_u32(ld_u32(a)),
+        vreinterpretq_s32_u32(ld_u32(b)),
+    );
+    st_u32(vreinterpretq_u32_s32(vminq_s32(va, vb)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max128_i32(a: B128, b: B128) -> B128 {
+    let (va, vb) = (
+        vreinterpretq_s32_u32(ld_u32(a)),
+        vreinterpretq_s32_u32(ld_u32(b)),
+    );
+    st_u32(vreinterpretq_u32_s32(vmaxq_s32(va, vb)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn min128_u32(a: B128, b: B128) -> B128 {
+    st_u32(vminq_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max128_u32(a: B128, b: B128) -> B128 {
+    st_u32(vmaxq_u32(ld_u32(a), ld_u32(b)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn min128_f32(a: B128, b: B128) -> B128 {
+    // vbsl on vclt rather than vminq: the scalar model's `a < b ? a :
+    // b` must also hold bit-for-bit for -0.0/+0.0 ties, where fmin
+    // would canonicalise to -0.0.
+    let (va, vb) = (
+        vreinterpretq_f32_u32(ld_u32(a)),
+        vreinterpretq_f32_u32(ld_u32(b)),
+    );
+    st_u32(vreinterpretq_u32_f32(vbslq_f32(vcltq_f32(va, vb), va, vb)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max128_f32(a: B128, b: B128) -> B128 {
+    // `a > b ? a : b` — ties (incl. ±0.0) take the second operand,
+    // matching both the scalar model and x86 `maxps`.
+    let (va, vb) = (
+        vreinterpretq_f32_u32(ld_u32(a)),
+        vreinterpretq_f32_u32(ld_u32(b)),
+    );
+    st_u32(vreinterpretq_u32_f32(vbslq_f32(vcgtq_f32(va, vb), va, vb)))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn min128_u64(a: B128, b: B128) -> B128 {
+    // No vminq for 64-bit lanes: compare-higher + bit-select.
+    let (va, vb) = (ld_u64(a), ld_u64(b));
+    st_u64(vbslq_u64(vcgtq_u64(va, vb), vb, va))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max128_u64(a: B128, b: B128) -> B128 {
+    let (va, vb) = (ld_u64(a), ld_u64(b));
+    st_u64(vbslq_u64(vcgtq_u64(va, vb), va, vb))
+}

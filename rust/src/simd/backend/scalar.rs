@@ -1,0 +1,195 @@
+//! Portable reference backend: every op as the plain array formula the
+//! register model has used since PR 1.
+//!
+//! This is the oracle the intrinsic backends are property-tested
+//! against, and the guaranteed fallback `NEONMS_SIMD_BACKEND=scalar`
+//! selects on any machine. The formulas here must stay bit-for-bit
+//! identical to the pre-backend register-type methods — the pinned
+//! shuffle-semantics tests in `simd::tests` and the forced-scalar test
+//! in `backend::tests` both enforce that.
+
+use super::{B128, B256};
+use crate::simd::Lane;
+
+#[inline(always)]
+fn u32x4(b: B128) -> [u32; 4] {
+    // SAFETY: B128 is a repr(C, align(16)) wrapper over [u8; 16];
+    // both types are 16 bytes with no invalid bit patterns.
+    unsafe { core::mem::transmute(b) }
+}
+
+#[inline(always)]
+fn b32(a: [u32; 4]) -> B128 {
+    // SAFETY: as `u32x4`.
+    unsafe { core::mem::transmute(a) }
+}
+
+#[inline(always)]
+fn u64x2(b: B128) -> [u64; 2] {
+    // SAFETY: as `u32x4` — 16 bytes either way.
+    unsafe { core::mem::transmute(b) }
+}
+
+#[inline(always)]
+fn b64(a: [u64; 2]) -> B128 {
+    // SAFETY: as `u32x4`.
+    unsafe { core::mem::transmute(a) }
+}
+
+// -- geometry ---------------------------------------------------------
+
+pub(crate) fn zip1_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[0], y[0], x[1], y[1]])
+}
+
+pub(crate) fn zip2_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[2], y[2], x[3], y[3]])
+}
+
+pub(crate) fn uzp1_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[0], x[2], y[0], y[2]])
+}
+
+pub(crate) fn uzp2_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[1], x[3], y[1], y[3]])
+}
+
+pub(crate) fn trn1_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[0], y[0], x[2], y[2]])
+}
+
+pub(crate) fn trn2_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[1], y[1], x[3], y[3]])
+}
+
+pub(crate) fn rev64_32(a: B128) -> B128 {
+    let x = u32x4(a);
+    b32([x[1], x[0], x[3], x[2]])
+}
+
+pub(crate) fn swap64(a: B128) -> B128 {
+    let x = u64x2(a);
+    b64([x[1], x[0]])
+}
+
+pub(crate) fn rev_32(a: B128) -> B128 {
+    let x = u32x4(a);
+    b32([x[3], x[2], x[1], x[0]])
+}
+
+pub(crate) fn blend64_lo_hi(lo: B128, hi: B128) -> B128 {
+    let (x, y) = (u64x2(lo), u64x2(hi));
+    b64([x[0], y[1]])
+}
+
+pub(crate) fn blend_even_odd_32(ev: B128, od: B128) -> B128 {
+    let (x, y) = (u32x4(ev), u32x4(od));
+    b32([x[0], y[1], x[2], y[3]])
+}
+
+pub(crate) fn blend_outer_32(a: B128, b: B128) -> B128 {
+    let (x, y) = (u32x4(a), u32x4(b));
+    b32([x[0], y[1], y[2], x[3]])
+}
+
+pub(crate) fn zip1_64(a: B128, b: B128) -> B128 {
+    let (x, y) = (u64x2(a), u64x2(b));
+    b64([x[0], y[0]])
+}
+
+pub(crate) fn zip2_64(a: B128, b: B128) -> B128 {
+    let (x, y) = (u64x2(a), u64x2(b));
+    b64([x[1], y[1]])
+}
+
+// -- comparators ------------------------------------------------------
+
+#[inline(always)]
+fn lanewise128<L: Lane>(a: B128, b: B128, f: impl Fn(L, L) -> L) -> B128 {
+    debug_assert_eq!(16 % core::mem::size_of::<L>(), 0);
+    let n = 16 / core::mem::size_of::<L>();
+    let mut out = B128([0; 16]);
+    // SAFETY: B128 is 16-byte aligned and 16 bytes long; L is a plain
+    // Copy scalar of size 4 or 8 dividing 16, so the n in-bounds
+    // reads/writes below are aligned and valid for any bit pattern.
+    unsafe {
+        let pa = a.0.as_ptr() as *const L;
+        let pb = b.0.as_ptr() as *const L;
+        let po = out.0.as_mut_ptr() as *mut L;
+        for i in 0..n {
+            po.add(i).write(f(pa.add(i).read(), pb.add(i).read()));
+        }
+    }
+    out
+}
+
+#[inline(always)]
+fn lanewise256<L: Lane>(a: B256, b: B256, f: impl Fn(L, L) -> L) -> B256 {
+    debug_assert_eq!(32 % core::mem::size_of::<L>(), 0);
+    let n = 32 / core::mem::size_of::<L>();
+    let mut out = B256([0; 32]);
+    // SAFETY: as `lanewise128`, over 32 bytes.
+    unsafe {
+        let pa = a.0.as_ptr() as *const L;
+        let pb = b.0.as_ptr() as *const L;
+        let po = out.0.as_mut_ptr() as *mut L;
+        for i in 0..n {
+            po.add(i).write(f(pa.add(i).read(), pb.add(i).read()));
+        }
+    }
+    out
+}
+
+/// Generic lane-wise minimum over the element's [`Lane::lane_min`] —
+/// the reference semantics every intrinsic comparator must match.
+pub(crate) fn min128<L: Lane>(a: B128, b: B128) -> B128 {
+    lanewise128::<L>(a, b, L::lane_min)
+}
+
+/// Generic lane-wise maximum over [`Lane::lane_max`].
+pub(crate) fn max128<L: Lane>(a: B128, b: B128) -> B128 {
+    lanewise128::<L>(a, b, L::lane_max)
+}
+
+/// 256-bit generic lane-wise minimum.
+pub(crate) fn min256<L: Lane>(a: B256, b: B256) -> B256 {
+    lanewise256::<L>(a, b, L::lane_min)
+}
+
+/// 256-bit generic lane-wise maximum.
+pub(crate) fn max256<L: Lane>(a: B256, b: B256) -> B256 {
+    lanewise256::<L>(a, b, L::lane_max)
+}
+
+// Monomorphic names so the dispatch macro can route `min128_i32` etc.
+// uniformly across backends.
+pub(crate) fn min128_i32(a: B128, b: B128) -> B128 {
+    min128::<i32>(a, b)
+}
+pub(crate) fn max128_i32(a: B128, b: B128) -> B128 {
+    max128::<i32>(a, b)
+}
+pub(crate) fn min128_u32(a: B128, b: B128) -> B128 {
+    min128::<u32>(a, b)
+}
+pub(crate) fn max128_u32(a: B128, b: B128) -> B128 {
+    max128::<u32>(a, b)
+}
+pub(crate) fn min128_f32(a: B128, b: B128) -> B128 {
+    min128::<f32>(a, b)
+}
+pub(crate) fn max128_f32(a: B128, b: B128) -> B128 {
+    max128::<f32>(a, b)
+}
+pub(crate) fn min128_u64(a: B128, b: B128) -> B128 {
+    min128::<u64>(a, b)
+}
+pub(crate) fn max128_u64(a: B128, b: B128) -> B128 {
+    max128::<u64>(a, b)
+}

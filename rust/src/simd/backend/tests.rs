@@ -1,0 +1,514 @@
+//! Cross-backend equivalence suite.
+//!
+//! Every backend compiled into this binary is property-tested against
+//! the scalar reference model: raw geometry/comparator ops through the
+//! `*_with` twins (no global state touched), then register-type ops,
+//! transposes, run mergers, and full sorts under a forced global
+//! backend (serialized by a lock). The forced-`scalar` test pins the
+//! pre-backend semantics bit-for-bit.
+
+use std::sync::Mutex;
+
+use super::*;
+use crate::kernels::runmerge::RunMerger;
+use crate::kernels::{MergeImpl, MergeWidth};
+use crate::simd::{transpose4, KeyValue, V128, V128D, Vector, VectorWidth};
+use crate::sort::{NeonMergeSort, SortConfig};
+use crate::testutil::Rng;
+
+/// Serializes the tests that mutate the process-global backend. Every
+/// backend sorts correctly, so concurrent tests elsewhere stay valid
+/// whichever backend is active while they run; the lock only keeps
+/// *these* tests from interleaving their force/restore pairs.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn available() -> Vec<Backend> {
+    Backend::all().into_iter().filter(|k| k.available()).collect()
+}
+
+/// Run `f` once per available backend with that backend forced
+/// globally, restoring the previous selection afterwards.
+fn with_each_backend(f: impl Fn(Backend)) {
+    let guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = active();
+    for k in available() {
+        force(k).unwrap();
+        f(k);
+    }
+    force(prev).unwrap();
+    drop(guard);
+}
+
+fn pack32(v: [u32; 4]) -> B128 {
+    let mut o = [0u8; 16];
+    for (i, x) in v.iter().enumerate() {
+        o[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+    }
+    B128(o)
+}
+
+fn unpack32(b: B128) -> [u32; 4] {
+    let mut v = [0u32; 4];
+    for (i, x) in v.iter_mut().enumerate() {
+        let mut w = [0u8; 4];
+        w.copy_from_slice(&b.0[4 * i..4 * i + 4]);
+        *x = u32::from_le_bytes(w);
+    }
+    v
+}
+
+fn pack64(v: [u64; 2]) -> B128 {
+    let mut o = [0u8; 16];
+    o[..8].copy_from_slice(&v[0].to_le_bytes());
+    o[8..].copy_from_slice(&v[1].to_le_bytes());
+    B128(o)
+}
+
+fn rnd128(rng: &mut Rng) -> B128 {
+    let mut o = [0u8; 16];
+    o[..8].copy_from_slice(&rng.next_u64().to_le_bytes());
+    o[8..].copy_from_slice(&rng.next_u64().to_le_bytes());
+    B128(o)
+}
+
+fn rnd256(rng: &mut Rng) -> B256 {
+    join128(rnd128(rng), rnd128(rng))
+}
+
+#[test]
+fn backend_names_parse_round_trip() {
+    for k in Backend::all() {
+        assert_eq!(Backend::parse(k.name()), Some(k), "{}", k.name());
+        assert_eq!(Backend::parse(&k.name().to_uppercase()), Some(k));
+    }
+    assert_eq!(Backend::parse("sse42"), Some(Backend::Sse42));
+    assert_eq!(Backend::parse(" neon "), Some(Backend::Neon));
+    assert_eq!(Backend::parse("avx512"), None);
+    assert_eq!(Backend::parse("auto"), None, "auto is a policy, not a backend");
+}
+
+#[test]
+fn scalar_is_always_available_and_detection_picks_available() {
+    assert!(Backend::Scalar.available());
+    assert!(detect().available());
+    // The intrinsic backends are compile-time impossible off their
+    // arch, whatever the CPU says.
+    #[cfg(not(target_arch = "aarch64"))]
+    assert!(!Backend::Neon.available());
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        assert!(!Backend::Sse42.available());
+        assert!(!Backend::Avx2.available());
+    }
+}
+
+#[test]
+fn env_resolution_policy() {
+    assert_eq!(resolve_env(None).unwrap(), detect());
+    assert_eq!(resolve_env(Some("")).unwrap(), detect());
+    assert_eq!(resolve_env(Some("auto")).unwrap(), detect());
+    assert_eq!(resolve_env(Some("AUTO")).unwrap(), detect());
+    // Forcing scalar is honored on every machine.
+    assert_eq!(resolve_env(Some("scalar")).unwrap(), Backend::Scalar);
+    let err = resolve_env(Some("sse9")).unwrap_err();
+    assert!(err.contains("unknown SIMD backend"), "{err}");
+    // An explicitly requested but unavailable backend must error, not
+    // silently fall back.
+    if let Some(missing) = Backend::all().into_iter().find(|k| !k.available()) {
+        let err = resolve_env(Some(missing.name())).unwrap_err();
+        assert!(err.contains("not available"), "{err}");
+    }
+}
+
+#[test]
+fn active_backend_is_available_and_named() {
+    let k = active();
+    assert!(k.available());
+    assert!(!k.name().is_empty());
+}
+
+#[test]
+fn forcing_unavailable_backend_errors_and_leaves_selection() {
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = active();
+    if let Some(missing) = Backend::all().into_iter().find(|k| !k.available()) {
+        assert!(force(missing).is_err());
+        assert_eq!(active(), prev, "failed force must not change the selection");
+    }
+}
+
+type Op2 = fn(Backend, B128, B128) -> B128;
+type Op1 = fn(Backend, B128) -> B128;
+
+const OPS2: [(&str, Op2); 11] = [
+    ("zip1_32", zip1_32_with),
+    ("zip2_32", zip2_32_with),
+    ("uzp1_32", uzp1_32_with),
+    ("uzp2_32", uzp2_32_with),
+    ("trn1_32", trn1_32_with),
+    ("trn2_32", trn2_32_with),
+    ("blend64_lo_hi", blend64_lo_hi_with),
+    ("blend_even_odd_32", blend_even_odd_32_with),
+    ("blend_outer_32", blend_outer_32_with),
+    ("zip1_64", zip1_64_with),
+    ("zip2_64", zip2_64_with),
+];
+
+const OPS1: [(&str, Op1); 3] =
+    [("rev64_32", rev64_32_with), ("swap64", swap64_with), ("rev_32", rev_32_with)];
+
+#[test]
+fn geometry_ops_match_scalar_on_every_backend() {
+    let mut rng = Rng::new(0x9e01);
+    for _ in 0..256 {
+        let (a, b) = (rnd128(&mut rng), rnd128(&mut rng));
+        for k in available() {
+            for (name, op) in OPS2 {
+                assert_eq!(
+                    op(k, a, b),
+                    op(Backend::Scalar, a, b),
+                    "{name} diverges on {k} for {a:?} {b:?}"
+                );
+            }
+            for (name, op) in OPS1 {
+                assert_eq!(
+                    op(k, a),
+                    op(Backend::Scalar, a),
+                    "{name} diverges on {k} for {a:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_geometry_is_the_reference_model() {
+    // Pin the scalar lowering to the literal NEON lane formulas the
+    // register types exposed before the backend refactor.
+    let a = pack32([0, 1, 2, 3]);
+    let b = pack32([10, 11, 12, 13]);
+    let cases: [(&str, Op2, [u32; 4]); 11] = [
+        ("zip1_32", zip1_32_with, [0, 10, 1, 11]),
+        ("zip2_32", zip2_32_with, [2, 12, 3, 13]),
+        ("uzp1_32", uzp1_32_with, [0, 2, 10, 12]),
+        ("uzp2_32", uzp2_32_with, [1, 3, 11, 13]),
+        ("trn1_32", trn1_32_with, [0, 10, 2, 12]),
+        ("trn2_32", trn2_32_with, [1, 11, 3, 13]),
+        ("blend64_lo_hi", blend64_lo_hi_with, [0, 1, 12, 13]),
+        ("blend_even_odd_32", blend_even_odd_32_with, [0, 11, 2, 13]),
+        ("blend_outer_32", blend_outer_32_with, [0, 11, 12, 3]),
+        ("zip1_64", zip1_64_with, [0, 1, 10, 11]),
+        ("zip2_64", zip2_64_with, [2, 3, 12, 13]),
+    ];
+    for (name, op, expect) in cases {
+        assert_eq!(unpack32(op(Backend::Scalar, a, b)), expect, "{name}");
+    }
+    assert_eq!(unpack32(rev64_32_with(Backend::Scalar, a)), [1, 0, 3, 2]);
+    assert_eq!(unpack32(swap64_with(Backend::Scalar, a)), [2, 3, 0, 1]);
+    assert_eq!(unpack32(rev_32_with(Backend::Scalar, a)), [3, 2, 1, 0]);
+}
+
+#[test]
+fn comparators_128_match_scalar_on_every_backend() {
+    let mut rng = Rng::new(0x9e02);
+    type MM = fn(Backend, B128, B128) -> B128;
+    let int_ops: [(&str, MM); 6] = [
+        ("min128_i32", min128_i32_with),
+        ("max128_i32", max128_i32_with),
+        ("min128_u32", min128_u32_with),
+        ("max128_u32", max128_u32_with),
+        ("min128_u64", min128_u64_with),
+        ("max128_u64", max128_u64_with),
+    ];
+    for _ in 0..256 {
+        let (a, b) = (rnd128(&mut rng), rnd128(&mut rng));
+        for k in available() {
+            for (name, op) in int_ops {
+                assert_eq!(
+                    op(k, a, b),
+                    op(Backend::Scalar, a, b),
+                    "{name} diverges on {k}"
+                );
+            }
+        }
+    }
+    // u64 comparators must order across the sign bit (the sign-flip
+    // trick's raison d'être).
+    let hi = pack64([u64::MAX, 1 << 63]);
+    let lo = pack64([0, (1 << 63) - 1]);
+    for k in available() {
+        assert_eq!(min128_u64_with(k, hi, lo), lo, "u64 min sign boundary on {k}");
+        assert_eq!(max128_u64_with(k, hi, lo), hi, "u64 max sign boundary on {k}");
+    }
+}
+
+#[test]
+fn f32_comparators_match_scalar_on_every_backend() {
+    // Finite floats, infinities, and both zero signs — every non-NaN
+    // shape the sort contract admits. Ties must resolve to the same
+    // *bits* on every backend (the ±0.0 cases pin operand order).
+    let pool: [f32; 10] = [
+        f32::NEG_INFINITY,
+        -3.5,
+        -1.0,
+        -0.0,
+        0.0,
+        0.25,
+        1.0,
+        3.5,
+        1e30,
+        f32::INFINITY,
+    ];
+    let mut rng = Rng::new(0x9e03);
+    let pick = |rng: &mut Rng| {
+        let v: [f32; 4] = [
+            pool[rng.below(pool.len())],
+            pool[rng.below(pool.len())],
+            pool[rng.below(pool.len())],
+            pool[rng.below(pool.len())],
+        ];
+        pack32(v.map(f32::to_bits))
+    };
+    for _ in 0..512 {
+        let (a, b) = (pick(&mut rng), pick(&mut rng));
+        for k in available() {
+            assert_eq!(
+                min128_f32_with(k, a, b),
+                min128_f32_with(Backend::Scalar, a, b),
+                "min128_f32 diverges on {k}"
+            );
+            assert_eq!(
+                max128_f32_with(k, a, b),
+                max128_f32_with(Backend::Scalar, a, b),
+                "max128_f32 diverges on {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn comparators_256_match_scalar_on_every_backend() {
+    let mut rng = Rng::new(0x9e04);
+    type MM = fn(Backend, B256, B256) -> B256;
+    let ops: [(&str, MM); 6] = [
+        ("min256_i32", min256_i32_with),
+        ("max256_i32", max256_i32_with),
+        ("min256_u32", min256_u32_with),
+        ("max256_u32", max256_u32_with),
+        ("min256_u64", min256_u64_with),
+        ("max256_u64", max256_u64_with),
+    ];
+    for _ in 0..256 {
+        let (a, b) = (rnd256(&mut rng), rnd256(&mut rng));
+        for k in available() {
+            for (name, op) in ops {
+                assert_eq!(
+                    op(k, a, b),
+                    op(Backend::Scalar, a, b),
+                    "{name} diverges on {k}"
+                );
+            }
+        }
+    }
+    // f32 over the tie-pinning pool, splatted across halves.
+    let x = pack32([(-0.0f32).to_bits(), 0.0f32.to_bits(), 1.5f32.to_bits(), (-1.5f32).to_bits()]);
+    let y = pack32([0.0f32.to_bits(), (-0.0f32).to_bits(), (-1.5f32).to_bits(), 1.5f32.to_bits()]);
+    let (a, b) = (join128(x, y), join128(y, x));
+    for k in available() {
+        assert_eq!(min256_f32_with(k, a, b), min256_f32_with(Backend::Scalar, a, b));
+        assert_eq!(max256_f32_with(k, a, b), max256_f32_with(Backend::Scalar, a, b));
+    }
+}
+
+#[test]
+fn register_sort_and_transpose_match_oracle_under_every_backend() {
+    with_each_backend(|k| {
+        // Zero-one principle: all 16 four-lane 0/1 patterns sort.
+        for pat in 0u32..16 {
+            let v = V128([pat & 1, (pat >> 1) & 1, (pat >> 2) & 1, (pat >> 3) & 1]);
+            let mut expect = v.to_array();
+            expect.sort_unstable();
+            assert_eq!(Vector::sort_lanes(v).to_array(), expect, "V128 0/1 {pat:04b} on {k}");
+        }
+        for pat in 0u64..4 {
+            let v = V128D([pat & 1, (pat >> 1) & 1]);
+            let mut expect = v.to_array();
+            expect.sort_unstable();
+            assert_eq!(Vector::sort_lanes(v).to_array(), expect, "V128D 0/1 {pat:02b} on {k}");
+        }
+        // Random lanes through sort_lanes and the 4×4 transpose.
+        let mut rng = Rng::new(0x9e05 ^ k as u64);
+        for _ in 0..64 {
+            let v = V128([rng.next_u32(), rng.next_u32(), rng.next_u32(), rng.next_u32()]);
+            let mut expect = v.to_array();
+            expect.sort_unstable();
+            assert_eq!(Vector::sort_lanes(v).to_array(), expect, "V128 sort_lanes on {k}");
+
+            let m: [[u32; 4]; 4] = core::array::from_fn(|_| core::array::from_fn(|_| rng.next_u32()));
+            let t = transpose4([V128(m[0]), V128(m[1]), V128(m[2]), V128(m[3])]);
+            for (i, row) in t.iter().enumerate() {
+                for j in 0..4 {
+                    assert_eq!(row.lane(j), m[j][i], "transpose4[{i}][{j}] on {k}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn run_mergers_match_oracle_on_every_backend() {
+    with_each_backend(|k| {
+        let mut rng = Rng::new(0x9e06 ^ k as u64);
+        for vector in VectorWidth::all() {
+            for width in MergeWidth::all() {
+                for imp in [MergeImpl::Vectorized, MergeImpl::Hybrid, MergeImpl::Serial] {
+                    let m = RunMerger { width, imp, vector };
+                    // Random sorted runs (u32), including a ragged pair.
+                    for (la, lb) in [(256usize, 256usize), (128, 320), (96, 7)] {
+                        let mut a: Vec<u32> = (0..la).map(|_| rng.next_u32()).collect();
+                        let mut b: Vec<u32> = (0..lb).map(|_| rng.next_u32()).collect();
+                        a.sort_unstable();
+                        b.sort_unstable();
+                        let mut expect = [a.clone(), b.clone()].concat();
+                        expect.sort_unstable();
+                        let mut out = vec![0u32; la + lb];
+                        m.merge(&a, &b, &mut out);
+                        assert_eq!(out, expect, "u32 merge {la}+{lb} 2x{} {imp:?} {} on {k}", width.k(), vector.name());
+                    }
+                    // Zero-one sweep: every split of 0s/1s in two runs
+                    // of 8 — the boundary cases of the merge network.
+                    for i in 0..=8usize {
+                        for j in 0..=8usize {
+                            let a: Vec<u32> = (0..8).map(|x| u32::from(x >= i)).collect();
+                            let b: Vec<u32> = (0..8).map(|x| u32::from(x >= j)).collect();
+                            let mut expect = [a.clone(), b.clone()].concat();
+                            expect.sort_unstable();
+                            let mut out = vec![0u32; 16];
+                            m.merge(&a, &b, &mut out);
+                            assert_eq!(out, expect, "0/1 merge {i}/{j} 2x{} {imp:?} {} on {k}", width.k(), vector.name());
+                        }
+                    }
+                    // 64-bit lanes ride the same merger.
+                    let mut a: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+                    let mut b: Vec<u64> = (0..120).map(|_| rng.next_u64()).collect();
+                    a.sort_unstable();
+                    b.sort_unstable();
+                    let mut expect = [a.clone(), b.clone()].concat();
+                    expect.sort_unstable();
+                    let mut out = vec![0u64; 320];
+                    m.merge(&a, &b, &mut out);
+                    assert_eq!(out, expect, "u64 merge 2x{} {imp:?} {} on {k}", width.k(), vector.name());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn full_sorts_match_oracle_on_every_backend_and_combo() {
+    with_each_backend(|k| {
+        let mut rng = Rng::new(0x9e07 ^ k as u64);
+        for vector in VectorWidth::all() {
+            for width in [MergeWidth::K4, MergeWidth::K16, MergeWidth::K64] {
+                let s = NeonMergeSort::new(SortConfig {
+                    merge_width: width,
+                    vector_width: vector,
+                    ..Default::default()
+                });
+                let n = 2048 + rng.below(512);
+
+                let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(s.sorted(&data), expect, "u32 on {k} 2x{} {}", width.k(), vector.name());
+
+                let data: Vec<i32> = (0..n).map(|_| rng.next_i32()).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(s.sorted(&data), expect, "i32 on {k}");
+
+                let data: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable_by(|x, y| x.partial_cmp(y).unwrap());
+                let got = s.sorted(&data);
+                assert!(
+                    got.iter().zip(&expect).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "f32 on {k}"
+                );
+
+                let data: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(s.sorted(&data), expect, "u64 on {k}");
+
+                let data: Vec<KeyValue> =
+                    (0..n).map(|_| KeyValue::new(rng.next_u32() % 97, rng.next_u32())).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(s.sorted(&data), expect, "KeyValue on {k}");
+
+                // Zero-one array (many equal keys, all merge paths).
+                let data: Vec<u32> = (0..n).map(|_| rng.next_u32() & 1).collect();
+                let mut expect = data.clone();
+                expect.sort_unstable();
+                assert_eq!(s.sorted(&data), expect, "0/1 u32 on {k}");
+            }
+        }
+    });
+}
+
+#[test]
+fn forced_scalar_reproduces_reference_semantics_bit_for_bit() {
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = active();
+    force(Backend::Scalar).unwrap();
+
+    // The register-type ops under a forced scalar backend are the
+    // pre-backend array formulas, verbatim.
+    let a = V128([0u32, 1, 2, 3]);
+    let b = V128([10u32, 11, 12, 13]);
+    assert_eq!(a.zip1(b).to_array(), [0, 10, 1, 11]);
+    assert_eq!(a.zip2(b).to_array(), [2, 12, 3, 13]);
+    assert_eq!(a.uzp1(b).to_array(), [0, 2, 10, 12]);
+    assert_eq!(a.uzp2(b).to_array(), [1, 3, 11, 13]);
+    assert_eq!(a.trn1(b).to_array(), [0, 10, 2, 12]);
+    assert_eq!(a.trn2(b).to_array(), [1, 11, 3, 13]);
+    assert_eq!(a.rev64().to_array(), [1, 0, 3, 2]);
+    assert_eq!(a.swap_halves().to_array(), [2, 3, 0, 1]);
+    assert_eq!(a.reverse().to_array(), [3, 2, 1, 0]);
+    assert_eq!(V128::blend_lo_hi(a, b).to_array(), [0, 1, 12, 13]);
+    assert_eq!(V128::blend_even_odd(a, b).to_array(), [0, 11, 2, 13]);
+    let d = V128D([7u64, 3]);
+    let e = V128D([9u64, 5]);
+    assert_eq!(d.trn1(e).to_array(), [7, 9]);
+    assert_eq!(d.trn2(e).to_array(), [3, 5]);
+    assert_eq!(d.reverse().to_array(), [3, 7]);
+    assert_eq!(d.min(e).to_array(), [7, 3]);
+    assert_eq!(d.max(e).to_array(), [9, 5]);
+    assert_eq!(Vector::sort_lanes(V128([3u32, 1, 4, 1])).to_array(), [1, 1, 3, 4]);
+    assert_eq!(Vector::sort_lanes(d).to_array(), [3, 7]);
+
+    // A full sort under forced scalar is byte-identical to the
+    // deterministic oracle — "today's results", pinned.
+    let mut rng = Rng::new(20240908);
+    let data: Vec<u32> = (0..100_000).map(|_| rng.next_u32()).collect();
+    let mut expect = data.clone();
+    expect.sort_unstable();
+    let s = NeonMergeSort::new(SortConfig::default());
+    assert_eq!(s.sorted(&data), expect);
+    assert_eq!(active(), Backend::Scalar, "sort must not drift the forced selection");
+
+    force(prev).unwrap();
+}
+
+#[test]
+fn sort_config_backend_override_forces_process_backend() {
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = active();
+    let s = NeonMergeSort::new(SortConfig { backend: Some(Backend::Scalar), ..Default::default() });
+    assert_eq!(active(), Backend::Scalar);
+    let mut data: Vec<u32> = (0..5000u32).rev().collect();
+    s.sort(&mut data);
+    assert_eq!(data, (0..5000).collect::<Vec<u32>>());
+    force(prev).unwrap();
+}

@@ -1,0 +1,277 @@
+//! SSE4.2 / AVX2 lowering of the register-model ops
+//! (`x86_64` builds only).
+//!
+//! Every function here is `unsafe fn` gated on the features the
+//! dispatcher verified at runtime (`#[target_feature]`); the
+//! dispatchers in [`super`] are the only callers and only reach these
+//! after `is_x86_feature_detected!` said yes.
+//!
+//! Lane-order note: the scalar model's lane `i` is byte offset `4*i`,
+//! which is exactly the x86 "low lane first" convention, so NEON-named
+//! ops map directly: `zip1` ↔ `punpckldq`, `uzp1` ↔ `shufps 0x88`,
+//! `rev64` ↔ `pshufd 0xB1`, and so on. Each mapping is property-tested
+//! against the scalar oracle in `backend::tests` and mirrored in
+//! `tools/verify_backend_lowering.py`.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::{B128, B256};
+
+#[inline(always)]
+unsafe fn ld(a: B128) -> __m128i {
+    // SSE2 is x86_64 baseline, so the unaligned load needs no gate
+    // (B128 is 16-aligned anyway).
+    _mm_loadu_si128(a.0.as_ptr() as *const __m128i)
+}
+
+#[inline(always)]
+unsafe fn st(v: __m128i) -> B128 {
+    let mut o = B128([0; 16]);
+    _mm_storeu_si128(o.0.as_mut_ptr() as *mut __m128i, v);
+    o
+}
+
+#[inline(always)]
+unsafe fn ldf(a: B128) -> __m128 {
+    _mm_castsi128_ps(ld(a))
+}
+
+#[inline(always)]
+unsafe fn stf(v: __m128) -> B128 {
+    st(_mm_castps_si128(v))
+}
+
+// -- geometry ---------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn zip1_32(a: B128, b: B128) -> B128 {
+    st(_mm_unpacklo_epi32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn zip2_32(a: B128, b: B128) -> B128 {
+    st(_mm_unpackhi_epi32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn uzp1_32(a: B128, b: B128) -> B128 {
+    // shufps imm 0x88 = lanes (2,0) of b over (2,0) of a → [a0,a2,b0,b2].
+    stf(_mm_shuffle_ps(ldf(a), ldf(b), 0x88))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn uzp2_32(a: B128, b: B128) -> B128 {
+    // shufps imm 0xDD = lanes (3,1) / (3,1) → [a1,a3,b1,b3].
+    stf(_mm_shuffle_ps(ldf(a), ldf(b), 0xDD))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn trn1_32(a: B128, b: B128) -> B128 {
+    // [a0, b0, a2, b2]: even lanes of a, with b's even lanes shifted
+    // up into the odd slots; pblendw mask 0xCC keeps a in lanes 0,2.
+    st(_mm_blend_epi16(ld(a), _mm_slli_epi64(ld(b), 32), 0xCC))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn trn2_32(a: B128, b: B128) -> B128 {
+    // [a1, b1, a3, b3]: a's odd lanes shifted down, b kept in 1,3.
+    st(_mm_blend_epi16(_mm_srli_epi64(ld(a), 32), ld(b), 0xCC))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn rev64_32(a: B128) -> B128 {
+    // pshufd imm 0xB1 = (2,3,0,1) → [a1,a0,a3,a2].
+    st(_mm_shuffle_epi32(ld(a), 0xB1))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn swap64(a: B128) -> B128 {
+    // pshufd imm 0x4E = (1,0,3,2) → [a2,a3,a0,a1].
+    st(_mm_shuffle_epi32(ld(a), 0x4E))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn rev_32(a: B128) -> B128 {
+    // pshufd imm 0x1B = (0,1,2,3) → [a3,a2,a1,a0].
+    st(_mm_shuffle_epi32(ld(a), 0x1B))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn blend64_lo_hi(lo: B128, hi: B128) -> B128 {
+    // pblendw mask 0xF0: low 4 words (64 bits) from lo, high from hi.
+    st(_mm_blend_epi16(ld(lo), ld(hi), 0xF0))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn blend_even_odd_32(ev: B128, od: B128) -> B128 {
+    // pblendw mask 0xCC: words 2,3,6,7 (= dword lanes 1,3) from od.
+    st(_mm_blend_epi16(ld(ev), ld(od), 0xCC))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn blend_outer_32(a: B128, b: B128) -> B128 {
+    // pblendw mask 0x3C: words 2..=5 (= dword lanes 1,2) from b.
+    st(_mm_blend_epi16(ld(a), ld(b), 0x3C))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn zip1_64(a: B128, b: B128) -> B128 {
+    st(_mm_unpacklo_epi64(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn zip2_64(a: B128, b: B128) -> B128 {
+    st(_mm_unpackhi_epi64(ld(a), ld(b)))
+}
+
+// -- comparators, 128-bit ---------------------------------------------
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn min128_i32(a: B128, b: B128) -> B128 {
+    st(_mm_min_epi32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn max128_i32(a: B128, b: B128) -> B128 {
+    st(_mm_max_epi32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn min128_u32(a: B128, b: B128) -> B128 {
+    st(_mm_min_epu32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn max128_u32(a: B128, b: B128) -> B128 {
+    st(_mm_max_epu32(ld(a), ld(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn min128_f32(a: B128, b: B128) -> B128 {
+    // minps returns b on equal/zero ties, i.e. `a < b ? a : b` —
+    // exactly the scalar model's select (NaN out of contract).
+    stf(_mm_min_ps(ldf(a), ldf(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn max128_f32(a: B128, b: B128) -> B128 {
+    stf(_mm_max_ps(ldf(a), ldf(b)))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn min128_u64(a: B128, b: B128) -> B128 {
+    // No pminuq below AVX-512: sign-flip to make pcmpgtq (SSE4.2)
+    // order unsigned values, then blend the smaller on top.
+    let (va, vb) = (ld(a), ld(b));
+    let flip = _mm_set1_epi64x(i64::MIN);
+    let a_gt_b = _mm_cmpgt_epi64(_mm_xor_si128(va, flip), _mm_xor_si128(vb, flip));
+    st(_mm_blendv_epi8(va, vb, a_gt_b))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.1,sse4.2")]
+pub(crate) unsafe fn max128_u64(a: B128, b: B128) -> B128 {
+    let (va, vb) = (ld(a), ld(b));
+    let flip = _mm_set1_epi64x(i64::MIN);
+    let a_gt_b = _mm_cmpgt_epi64(_mm_xor_si128(va, flip), _mm_xor_si128(vb, flip));
+    st(_mm_blendv_epi8(vb, va, a_gt_b))
+}
+
+// -- comparators, 256-bit (AVX2 only: native ymm) ---------------------
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld256(a: B256) -> __m256i {
+    _mm256_loadu_si256(a.0.as_ptr() as *const __m256i)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st256(v: __m256i) -> B256 {
+    let mut o = B256([0; 32]);
+    _mm256_storeu_si256(o.0.as_mut_ptr() as *mut __m256i, v);
+    o
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn min256_i32(a: B256, b: B256) -> B256 {
+    st256(_mm256_min_epi32(ld256(a), ld256(b)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max256_i32(a: B256, b: B256) -> B256 {
+    st256(_mm256_max_epi32(ld256(a), ld256(b)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn min256_u32(a: B256, b: B256) -> B256 {
+    st256(_mm256_min_epu32(ld256(a), ld256(b)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max256_u32(a: B256, b: B256) -> B256 {
+    st256(_mm256_max_epu32(ld256(a), ld256(b)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn min256_f32(a: B256, b: B256) -> B256 {
+    st256(_mm256_castps_si256(_mm256_min_ps(
+        _mm256_castsi256_ps(ld256(a)),
+        _mm256_castsi256_ps(ld256(b)),
+    )))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max256_f32(a: B256, b: B256) -> B256 {
+    st256(_mm256_castps_si256(_mm256_max_ps(
+        _mm256_castsi256_ps(ld256(a)),
+        _mm256_castsi256_ps(ld256(b)),
+    )))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn min256_u64(a: B256, b: B256) -> B256 {
+    let (va, vb) = (ld256(a), ld256(b));
+    let flip = _mm256_set1_epi64x(i64::MIN);
+    let a_gt_b = _mm256_cmpgt_epi64(_mm256_xor_si256(va, flip), _mm256_xor_si256(vb, flip));
+    st256(_mm256_blendv_epi8(va, vb, a_gt_b))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max256_u64(a: B256, b: B256) -> B256 {
+    let (va, vb) = (ld256(a), ld256(b));
+    let flip = _mm256_set1_epi64x(i64::MIN);
+    let a_gt_b = _mm256_cmpgt_epi64(_mm256_xor_si256(va, flip), _mm256_xor_si256(vb, flip));
+    st256(_mm256_blendv_epi8(vb, va, a_gt_b))
+}

@@ -10,6 +10,7 @@
 //! these associated types, so the same comparator networks, bitonic
 //! mergers, and K-flight run merges serve every element width.
 
+use super::backend::{self, B128, B256};
 use super::v128::V128;
 use super::v128d::V128D;
 use super::v256::V256;
@@ -50,6 +51,41 @@ pub trait Lane: Copy + PartialOrd + core::fmt::Debug + Send + Sync + 'static {
     /// Branchless maximum of two lanes.
     fn lane_max(self, other: Self) -> Self;
 
+    /// Lane-wise minimum over the raw bits of a 128-bit register of
+    /// this element type — the hook the register types route their
+    /// `min` through so the active [`super::backend`] supplies the
+    /// intrinsic. Geometry ops don't need a per-type hook (they move
+    /// bits without interpreting them); comparators do, because lane
+    /// order depends on the element.
+    ///
+    /// The default is the always-correct scalar reference lowering;
+    /// the built-in lanes override it with backend dispatch.
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::scalar::min128::<Self>(a, b)
+    }
+
+    /// Lane-wise maximum over 128-bit register bits (see
+    /// [`Lane::min128`]).
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::scalar::max128::<Self>(a, b)
+    }
+
+    /// Lane-wise minimum over 256-bit double-register bits. Native
+    /// ymm under AVX2, a pair of 128-bit ops everywhere else.
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::scalar::min256::<Self>(a, b)
+    }
+
+    /// Lane-wise maximum over 256-bit double-register bits (see
+    /// [`Lane::min256`]).
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::scalar::max256::<Self>(a, b)
+    }
+
     /// Branchless compare-select: `if self <= other { a } else { b }`.
     ///
     /// Mirrors the paper's Fig. 3b `csel` comparator: on x86-64 this
@@ -81,6 +117,22 @@ impl Lane for i32 {
     fn lane_max(self, other: Self) -> Self {
         Ord::max(self, other)
     }
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::min128_i32(a, b)
+    }
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::max128_i32(a, b)
+    }
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::min256_i32(a, b)
+    }
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::max256_i32(a, b)
+    }
 }
 
 impl Lane for u32 {
@@ -96,6 +148,22 @@ impl Lane for u32 {
     #[inline(always)]
     fn lane_max(self, other: Self) -> Self {
         Ord::max(self, other)
+    }
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::min128_u32(a, b)
+    }
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::max128_u32(a, b)
+    }
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::min256_u32(a, b)
+    }
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::max256_u32(a, b)
     }
 }
 
@@ -122,6 +190,22 @@ impl Lane for f32 {
             other
         }
     }
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::min128_f32(a, b)
+    }
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::max128_f32(a, b)
+    }
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::min256_f32(a, b)
+    }
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::max256_f32(a, b)
+    }
 }
 
 impl Lane for u64 {
@@ -137,6 +221,22 @@ impl Lane for u64 {
     #[inline(always)]
     fn lane_max(self, other: Self) -> Self {
         Ord::max(self, other)
+    }
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::min128_u64(a, b)
+    }
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::max128_u64(a, b)
+    }
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::min256_u64(a, b)
+    }
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::max256_u64(a, b)
     }
 }
 
@@ -199,6 +299,24 @@ impl Lane for KeyValue {
     #[inline(always)]
     fn lane_max(self, other: Self) -> Self {
         Ord::max(self, other)
+    }
+    // The packed order *is* unsigned 64-bit order (key-major, payload
+    // tie-break), so pairs ride the u64 comparators unchanged.
+    #[inline(always)]
+    fn min128(a: B128, b: B128) -> B128 {
+        backend::min128_u64(a, b)
+    }
+    #[inline(always)]
+    fn max128(a: B128, b: B128) -> B128 {
+        backend::max128_u64(a, b)
+    }
+    #[inline(always)]
+    fn min256(a: B256, b: B256) -> B256 {
+        backend::min256_u64(a, b)
+    }
+    #[inline(always)]
+    fn max256(a: B256, b: B256) -> B256 {
+        backend::max256_u64(a, b)
     }
 }
 

@@ -1,13 +1,18 @@
-//! NEON-like SIMD substrate, width-generic since PR 3.
+//! NEON-like SIMD substrate: width-generic since PR 3, and lowered
+//! through pluggable runtime-dispatched backends since PR 9.
 //!
 //! The paper's kernels are written against ARM NEON's `q` registers:
 //! 128 bits, four 32-bit lanes, with `vminq`/`vmaxq` comparators and
-//! `vzipq`/`vuzpq`/`vrev64q`/`vtrnq` shuffles. This testbed is x86-64,
-//! so we substitute portable register types with exactly NEON's lane
-//! semantics. Every method is a thin, `#[inline(always)]` array
-//! operation that LLVM lowers to the SSE2/SSE4.1 equivalent of the
-//! corresponding NEON instruction (`pminsd`/`pmaxsd`, `punpckl/hdq`,
-//! `pshufd`, ...), preserving the paper's cost structure: one
+//! `vzipq`/`vuzpq`/`vrev64q`/`vtrnq` shuffles. The register types here
+//! keep exactly NEON's lane semantics, but each op now dispatches — at
+//! the trait-impl boundary, never inside the algorithms — to one of
+//! the [`backend`] lowerings: the portable scalar reference model
+//! (always available), real NEON intrinsics on `aarch64`, or
+//! SSE4.2/AVX2 intrinsics on `x86_64`. The backend is picked once per
+//! process by runtime feature detection and can be forced via
+//! `NEONMS_SIMD_BACKEND`, [`crate::sort::SortConfig::backend`], or the
+//! CLI `--backend` flag; `scalar` is always a valid choice. The cost
+//! structure the paper counts is preserved on every backend: one
 //! comparator = one `vmin` + one `vmax`, one shuffle = one port-5 op.
 //!
 //! Since the width sweep (§2.2's vector width × register budget
@@ -33,6 +38,7 @@
 //!
 //! See DESIGN.md §Hardware-Adaptation.
 
+pub mod backend;
 mod lane;
 mod v128;
 mod v128d;
@@ -40,6 +46,7 @@ mod v256;
 mod v256d;
 mod vector;
 
+pub use backend::Backend;
 pub use lane::{pack_key_rowid, unpack_key_rowid, KeyValue, Lane};
 pub use v128::{transpose4, transpose_rx4, V128};
 pub use v128d::{transpose2, V128D};

@@ -1,5 +1,6 @@
 //! The 128-bit, 4-lane vector register type.
 
+use super::backend::{self, B128};
 use super::lane::Lane;
 use super::vector::{Lanes, Vector};
 use super::W;
@@ -8,25 +9,44 @@ use super::W;
 ///
 /// Lane 0 is the lowest-addressed element on load (NEON `vld1q`
 /// little-endian convention). All shuffle names follow the AArch64
-/// instruction they model so kernels read like the paper's listings:
+/// instruction they model so kernels read like the paper's listings;
+/// every op dispatches through [`super::backend`] to the active
+/// lowering — the NEON instruction itself on `aarch64`, its xmm
+/// equivalent on `x86_64`, or the scalar reference formula:
 ///
-/// | method        | NEON instruction | x86 lowering (LLVM)     |
+/// | method        | NEON instruction | x86 lowering            |
 /// |---------------|------------------|-------------------------|
 /// | [`V128::min`] | `vminq`          | `pminsd`/`pminud`/`minps` |
 /// | [`V128::max`] | `vmaxq`          | `pmaxsd`/`pmaxud`/`maxps` |
 /// | [`V128::zip1`]| `vzip1q`         | `punpckldq`             |
 /// | [`V128::zip2`]| `vzip2q`         | `punpckhdq`             |
-/// | [`V128::uzp1`]| `vuzp1q`         | `shufps`                |
-/// | [`V128::uzp2`]| `vuzp2q`         | `shufps`                |
-/// | [`V128::trn1`]| `vtrn1q`         | `shufps`                |
-/// | [`V128::trn2`]| `vtrn2q`         | `shufps`                |
-/// | [`V128::rev64`]| `vrev64q`       | `pshufd`                |
-/// | [`V128::reverse`]| `vrev64q`+`vextq` | `pshufd`           |
+/// | [`V128::uzp1`]| `vuzp1q`         | `shufps 0x88`           |
+/// | [`V128::uzp2`]| `vuzp2q`         | `shufps 0xDD`           |
+/// | [`V128::trn1`]| `vtrn1q`         | `psllq` + `pblendw`     |
+/// | [`V128::trn2`]| `vtrn2q`         | `psrlq` + `pblendw`     |
+/// | [`V128::rev64`]| `vrev64q`       | `pshufd 0xB1`           |
+/// | [`V128::reverse`]| `vrev64q`+`vextq` | `pshufd 0x1B`      |
+///
+/// Memory ops (`splat`/`load`/`store`/`lane`) stay direct array code
+/// on every backend: each is a single guaranteed 16-byte move
+/// (`ldr q` / `movups`) with no lane arithmetic to dispatch.
 #[derive(Clone, Copy, PartialEq, Debug)]
 #[repr(C, align(16))]
 pub struct V128<T: Lane>(pub [T; W]);
 
 impl<T: Lane> V128<T> {
+    /// The raw register bits, for backend dispatch.
+    #[inline(always)]
+    fn bits(self) -> B128 {
+        backend::to_b128(self)
+    }
+
+    /// Rebuild from raw register bits.
+    #[inline(always)]
+    fn of(b: B128) -> Self {
+        backend::from_b128(b)
+    }
+
     /// Broadcast one scalar to all lanes (`vdupq_n`).
     #[inline(always)]
     pub fn splat(v: T) -> Self {
@@ -55,23 +75,13 @@ impl<T: Lane> V128<T> {
     /// Lane-wise minimum (`vminq`) — one half of a vector comparator.
     #[inline(always)]
     pub fn min(self, o: Self) -> Self {
-        V128([
-            self.0[0].lane_min(o.0[0]),
-            self.0[1].lane_min(o.0[1]),
-            self.0[2].lane_min(o.0[2]),
-            self.0[3].lane_min(o.0[3]),
-        ])
+        Self::of(T::min128(self.bits(), o.bits()))
     }
 
     /// Lane-wise maximum (`vmaxq`) — the other half of a comparator.
     #[inline(always)]
     pub fn max(self, o: Self) -> Self {
-        V128([
-            self.0[0].lane_max(o.0[0]),
-            self.0[1].lane_max(o.0[1]),
-            self.0[2].lane_max(o.0[2]),
-            self.0[3].lane_max(o.0[3]),
-        ])
+        Self::of(T::max128(self.bits(), o.bits()))
     }
 
     /// Vector comparator: returns `(min, max)` lane-wise. This is the
@@ -85,57 +95,57 @@ impl<T: Lane> V128<T> {
     /// Interleave low halves (`vzip1q`): `[a0,b0,a1,b1]`.
     #[inline(always)]
     pub fn zip1(self, o: Self) -> Self {
-        V128([self.0[0], o.0[0], self.0[1], o.0[1]])
+        Self::of(backend::zip1_32(self.bits(), o.bits()))
     }
 
     /// Interleave high halves (`vzip2q`): `[a2,b2,a3,b3]`.
     #[inline(always)]
     pub fn zip2(self, o: Self) -> Self {
-        V128([self.0[2], o.0[2], self.0[3], o.0[3]])
+        Self::of(backend::zip2_32(self.bits(), o.bits()))
     }
 
     /// De-interleave even lanes (`vuzp1q`): `[a0,a2,b0,b2]`.
     #[inline(always)]
     pub fn uzp1(self, o: Self) -> Self {
-        V128([self.0[0], self.0[2], o.0[0], o.0[2]])
+        Self::of(backend::uzp1_32(self.bits(), o.bits()))
     }
 
     /// De-interleave odd lanes (`vuzp2q`): `[a1,a3,b1,b3]`.
     #[inline(always)]
     pub fn uzp2(self, o: Self) -> Self {
-        V128([self.0[1], self.0[3], o.0[1], o.0[3]])
+        Self::of(backend::uzp2_32(self.bits(), o.bits()))
     }
 
     /// Transpose even lanes (`vtrn1q`): `[a0,b0,a2,b2]`.
     #[inline(always)]
     pub fn trn1(self, o: Self) -> Self {
-        V128([self.0[0], o.0[0], self.0[2], o.0[2]])
+        Self::of(backend::trn1_32(self.bits(), o.bits()))
     }
 
     /// Transpose odd lanes (`vtrn2q`): `[a1,b1,a3,b3]`.
     #[inline(always)]
     pub fn trn2(self, o: Self) -> Self {
-        V128([self.0[1], o.0[1], self.0[3], o.0[3]])
+        Self::of(backend::trn2_32(self.bits(), o.bits()))
     }
 
     /// Reverse 32-bit lanes within each 64-bit half (`vrev64q_u32`):
     /// `[a1,a0,a3,a2]`.
     #[inline(always)]
     pub fn rev64(self) -> Self {
-        V128([self.0[1], self.0[0], self.0[3], self.0[2]])
+        Self::of(backend::rev64_32(self.bits()))
     }
 
     /// Swap the two 64-bit halves (`vextq #8`): `[a2,a3,a0,a1]`.
     #[inline(always)]
     pub fn swap_halves(self) -> Self {
-        V128([self.0[2], self.0[3], self.0[0], self.0[1]])
+        Self::of(backend::swap64(self.bits()))
     }
 
     /// Full lane reversal `[a3,a2,a1,a0]` — `vrev64q` + `vextq`, used to
     /// form the bitonic sequence before a merge network.
     #[inline(always)]
     pub fn reverse(self) -> Self {
-        self.rev64().swap_halves()
+        Self::of(backend::rev_32(self.bits()))
     }
 
     /// Materialize as a plain array.
@@ -149,14 +159,36 @@ impl<T: Lane> V128<T> {
     /// distance-2 stage of the in-register bitonic merge.
     #[inline(always)]
     pub fn blend_lo_hi(lo: Self, hi: Self) -> Self {
-        V128([lo.0[0], lo.0[1], hi.0[2], hi.0[3]])
+        Self::of(backend::blend64_lo_hi(lo.bits(), hi.bits()))
     }
 
     /// Blend even lanes of `ev` with odd lanes of `od`:
     /// `[ev0, od1, ev2, od3]` — the distance-1 stage blend.
     #[inline(always)]
     pub fn blend_even_odd(ev: Self, od: Self) -> Self {
-        V128([ev.0[0], od.0[1], ev.0[2], od.0[3]])
+        Self::of(backend::blend_even_odd_32(ev.bits(), od.bits()))
+    }
+
+    /// Blend outer lanes of `a` with inner lanes of `b`:
+    /// `[a0, b1, b2, a3]` — the ascending/descending pair stage of
+    /// the 4-lane sorter.
+    #[inline(always)]
+    pub fn blend_outer_inner(a: Self, b: Self) -> Self {
+        Self::of(backend::blend_outer_32(a.bits(), b.bits()))
+    }
+
+    /// Interleave low 64-bit halves (`vzip1q_u64`): lanes
+    /// `[a0, a1, b0, b1]` — the transpose stage-2 exchange.
+    #[inline(always)]
+    pub fn zip_lo64(self, o: Self) -> Self {
+        Self::of(backend::zip1_64(self.bits(), o.bits()))
+    }
+
+    /// Interleave high 64-bit halves (`vzip2q_u64`): lanes
+    /// `[a2, a3, b2, b3]`.
+    #[inline(always)]
+    pub fn zip_hi64(self, o: Self) -> Self {
+        Self::of(backend::zip2_64(self.bits(), o.bits()))
     }
 }
 
@@ -214,11 +246,12 @@ impl<T: Lane> Vector<T> for V128<T> {
     /// Tiny bitonic sorter: 3 stages, 6 comparator-lanes.
     #[inline(always)]
     fn sort_lanes(self) -> Self {
-        // Stage 1: (0,1),(2,3) ascending/descending → bitonic pairs.
+        // Stage 1: (0,1),(2,3) ascending/descending → bitonic pairs:
+        // keep min in the outer lanes, max in the inner.
         let s = self.rev64();
         let mn = self.min(s);
         let mx = self.max(s);
-        Vector::bitonic_merge_lanes(V128([mn.0[0], mx.0[1], mx.0[2], mn.0[3]]))
+        Vector::bitonic_merge_lanes(V128::blend_outer_inner(mn, mx))
     }
 
     #[inline(always)]
@@ -241,10 +274,10 @@ pub fn transpose4<T: Lane>(r: [V128<T>; 4]) -> [V128<T>; 4] {
     let t2 = r[2].trn1(r[3]); // [c0 d0 c2 d2]
     let t3 = r[2].trn2(r[3]); // [c1 d1 c3 d3]
     // Stage 2: 64-bit element exchange (vzip1q_u64 / vzip2q_u64).
-    let o0 = V128([t0.0[0], t0.0[1], t2.0[0], t2.0[1]]); // [a0 b0 c0 d0]
-    let o1 = V128([t1.0[0], t1.0[1], t3.0[0], t3.0[1]]); // [a1 b1 c1 d1]
-    let o2 = V128([t0.0[2], t0.0[3], t2.0[2], t2.0[3]]); // [a2 b2 c2 d2]
-    let o3 = V128([t1.0[2], t1.0[3], t3.0[2], t3.0[3]]); // [a3 b3 c3 d3]
+    let o0 = t0.zip_lo64(t2); // [a0 b0 c0 d0]
+    let o1 = t1.zip_lo64(t3); // [a1 b1 c1 d1]
+    let o2 = t0.zip_hi64(t2); // [a2 b2 c2 d2]
+    let o3 = t1.zip_hi64(t3); // [a3 b3 c3 d3]
     [o0, o1, o2, o3]
 }
 

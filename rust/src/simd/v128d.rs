@@ -1,5 +1,6 @@
 //! The 128-bit, 2-lane (64-bit element) vector register type.
 
+use super::backend::{self, B128};
 use super::lane::Lane;
 use super::vector::{Lanes, Vector};
 
@@ -23,6 +24,18 @@ pub const W64: usize = 2;
 pub struct V128D<T: Lane>(pub [T; W64]);
 
 impl<T: Lane> V128D<T> {
+    /// The raw register bits, for backend dispatch.
+    #[inline(always)]
+    fn bits(self) -> B128 {
+        backend::to_b128(self)
+    }
+
+    /// Rebuild from raw register bits.
+    #[inline(always)]
+    fn of(b: B128) -> Self {
+        backend::from_b128(b)
+    }
+
     /// Broadcast one scalar to both lanes (`vdupq_n_u64`).
     #[inline(always)]
     pub fn splat(v: T) -> Self {
@@ -49,17 +62,17 @@ impl<T: Lane> V128D<T> {
     }
 
     /// Lane-wise minimum — one half of a vector comparator. (AArch64
-    /// has no `vminq_u64`; hardware lowers this to `cmhi` + `bsl`,
-    /// still branchless.)
+    /// has no `vminq_u64`; the NEON backend lowers this to `cmhi` +
+    /// `bsl`, still branchless.)
     #[inline(always)]
     pub fn min(self, o: Self) -> Self {
-        V128D([self.0[0].lane_min(o.0[0]), self.0[1].lane_min(o.0[1])])
+        Self::of(T::min128(self.bits(), o.bits()))
     }
 
     /// Lane-wise maximum — the other half of a comparator.
     #[inline(always)]
     pub fn max(self, o: Self) -> Self {
-        V128D([self.0[0].lane_max(o.0[0]), self.0[1].lane_max(o.0[1])])
+        Self::of(T::max128(self.bits(), o.bits()))
     }
 
     /// Vector comparator: `(min, max)` lane-wise.
@@ -71,20 +84,20 @@ impl<T: Lane> V128D<T> {
     /// Transpose even lanes (`vtrn1q_u64` = `vzip1q_u64`): `[a0,b0]`.
     #[inline(always)]
     pub fn trn1(self, o: Self) -> Self {
-        V128D([self.0[0], o.0[0]])
+        Self::of(backend::zip1_64(self.bits(), o.bits()))
     }
 
     /// Transpose odd lanes (`vtrn2q_u64` = `vzip2q_u64`): `[a1,b1]`.
     #[inline(always)]
     pub fn trn2(self, o: Self) -> Self {
-        V128D([self.0[1], o.0[1]])
+        Self::of(backend::zip2_64(self.bits(), o.bits()))
     }
 
     /// Swap the two 64-bit lanes (`vextq_u64 #8`): `[a1,a0]` — at two
     /// lanes this *is* the full reversal.
     #[inline(always)]
     pub fn swap_halves(self) -> Self {
-        V128D([self.0[1], self.0[0]])
+        Self::of(backend::swap64(self.bits()))
     }
 
     /// Full lane reversal `[a1,a0]`.
@@ -142,10 +155,16 @@ impl<T: Lane> Vector<T> for V128D<T> {
     }
 
     /// `log2(2) = 1` half-cleaner stage: one comparator between the
-    /// two lanes sorts any bitonic (here: any) 2-lane sequence.
+    /// two lanes sorts any bitonic (here: any) 2-lane sequence —
+    /// lane-swap, comparator, then keep min low / max high (the same
+    /// `ext` + `cmhi`/`bsl` + blend sequence on every backend).
     #[inline(always)]
     fn bitonic_merge_lanes(self) -> Self {
-        V128D([self.0[0].lane_min(self.0[1]), self.0[0].lane_max(self.0[1])])
+        let s = self.swap_halves();
+        Self::of(backend::blend64_lo_hi(
+            self.min(s).bits(),
+            self.max(s).bits(),
+        ))
     }
 
     /// One comparator sorts two lanes — the degenerate bitonic sorter.

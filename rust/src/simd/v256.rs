@@ -3,14 +3,20 @@
 //! Models the wider geometries the paper's §2.2 width × register
 //! budget tradeoff points at — ARM SVE at a 256-bit vector length, or
 //! NEON `q`-register *pairs* scheduled as one logical register (the
-//! `vld1q_u32_x2` / LD1 multi-register idiom). On this host every op
-//! lowers to exactly two [`V128`] ops, so the cost model stays honest:
-//! a `V256` comparator is two `vmin` + two `vmax`, a `V256` shuffle is
-//! two 128-bit shuffles (plus, for stages that cross the 128-bit
-//! boundary, the pair swap that SVE would express as a single
-//! `tbl`/`ext`). Kernels written against [`Vector`] get this width for
-//! free; nothing in this module is reachable from the `V128` paths.
+//! `vld1q_u32_x2` / LD1 multi-register idiom). On the scalar and NEON
+//! backends every op lowers to exactly two [`V128`] ops, so the cost
+//! model stays honest: a `V256` comparator is two `vmin` + two `vmax`,
+//! a `V256` shuffle is two 128-bit shuffles (plus, for stages that
+//! cross the 128-bit boundary, the pair swap that SVE would express
+//! as a single `tbl`/`ext`). Under the AVX2 backend the comparators —
+//! the ops the kernels' inner loops are made of — fuse into native
+//! 256-bit ymm instructions via [`Lane::min256`]/[`Lane::max256`];
+//! the shuffle stages keep the per-half composition, which is also
+//! what they cost on a paired-register machine. Kernels written
+//! against [`Vector`] get this width for free; nothing in this module
+//! is reachable from the `V128` paths.
 
+use super::backend;
 use super::lane::Lane;
 use super::v128::{transpose4, V128};
 use super::vector::{Lanes, Vector};
@@ -81,16 +87,17 @@ impl<T: Lane> Vector<T> for V256<T> {
         self.0[i / W].lane(i % W)
     }
 
-    /// Two `vminq` — the paired-register lowering.
+    /// Two `vminq` on paired-register backends, one `vpminsd ymm`
+    /// under AVX2.
     #[inline(always)]
     fn min(self, o: Self) -> Self {
-        V256([self.0[0].min(o.0[0]), self.0[1].min(o.0[1])])
+        backend::from_b256(T::min256(backend::to_b256(self), backend::to_b256(o)))
     }
 
-    /// Two `vmaxq`.
+    /// Two `vmaxq`, or one `vpmaxsd ymm` under AVX2.
     #[inline(always)]
     fn max(self, o: Self) -> Self {
-        V256([self.0[0].max(o.0[0]), self.0[1].max(o.0[1])])
+        backend::from_b256(T::max256(backend::to_b256(self), backend::to_b256(o)))
     }
 
     /// Reverse all eight lanes: reverse each half and swap the pair.

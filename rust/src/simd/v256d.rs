@@ -3,10 +3,12 @@
 //!
 //! The 64-bit sibling of [`super::V256`]: models SVE-256 / paired
 //! NEON `q`-registers carrying `u64` keys or packed
-//! [`super::KeyValue`] pairs, four lanes per logical register. Every
-//! op lowers to exactly two [`V128D`] ops on this host, keeping the
-//! cost model honest at this width too.
+//! [`super::KeyValue`] pairs, four lanes per logical register. On the
+//! scalar and NEON backends every op lowers to exactly two [`V128D`]
+//! ops, keeping the cost model honest at this width too; under AVX2
+//! the comparators fuse into native ymm ops (see [`super::V256`]).
 
+use super::backend;
 use super::lane::Lane;
 use super::v128d::{transpose2, V128D, W64};
 use super::vector::{Lanes, Vector};
@@ -76,16 +78,17 @@ impl<T: Lane> Vector<T> for V256D<T> {
         self.0[i / W64].lane(i % W64)
     }
 
-    /// Two lane-wise mins — the paired-register lowering.
+    /// Two lane-wise mins on paired-register backends, one native ymm
+    /// op under AVX2.
     #[inline(always)]
     fn min(self, o: Self) -> Self {
-        V256D([self.0[0].min(o.0[0]), self.0[1].min(o.0[1])])
+        backend::from_b256(T::min256(backend::to_b256(self), backend::to_b256(o)))
     }
 
-    /// Two lane-wise maxes.
+    /// Two lane-wise maxes, or one ymm op under AVX2.
     #[inline(always)]
     fn max(self, o: Self) -> Self {
-        V256D([self.0[0].max(o.0[0]), self.0[1].max(o.0[1])])
+        backend::from_b256(T::max256(backend::to_b256(self), backend::to_b256(o)))
     }
 
     /// Reverse all four lanes: reverse each half and swap the pair.

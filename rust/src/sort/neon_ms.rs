@@ -4,7 +4,7 @@
 use crate::kernels::inregister::{ColumnNetwork, InRegisterSorter};
 use crate::kernels::runmerge::RunMerger;
 use crate::kernels::{MergeImpl, MergeWidth};
-use crate::simd::{Lane, VectorWidth};
+use crate::simd::{Backend, Lane, VectorWidth};
 
 /// Reusable auxiliary memory for [`NeonMergeSort::sort_with_scratch`]
 /// and [`super::ParallelNeonMergeSort::sort_with_scratch`]: the
@@ -73,8 +73,16 @@ pub struct SortConfig {
     pub merge_impl: MergeImpl,
     /// Register width both stages run at. `V256` models paired
     /// q-registers / SVE-256 (each op lowers to two `V128` ops on
-    /// this host) and requires `r % 8 == 0`.
+    /// paired-register backends) and requires `r % 8 == 0`.
     pub vector_width: VectorWidth,
+    /// SIMD backend override. `None` (the default) keeps whatever the
+    /// process already selected — runtime detection, or the
+    /// `NEONMS_SIMD_BACKEND` environment variable. `Some(backend)`
+    /// forces that lowering process-wide at sorter construction
+    /// ([`crate::simd::backend::force`]); forcing
+    /// [`Backend::Scalar`] always succeeds, forcing an unavailable
+    /// intrinsic backend panics rather than silently falling back.
+    pub backend: Option<Backend>,
 }
 
 impl Default for SortConfig {
@@ -85,6 +93,7 @@ impl Default for SortConfig {
             merge_width: MergeWidth::K16,
             merge_impl: MergeImpl::Hybrid,
             vector_width: VectorWidth::V128,
+            backend: None,
         }
     }
 }
@@ -102,7 +111,19 @@ pub struct NeonMergeSort {
 
 impl NeonMergeSort {
     /// Build from a config.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `cfg.backend` names a SIMD backend unavailable on
+    /// this machine (same contract as the `r` validation asserts:
+    /// construction is where configs fail loudly). The service
+    /// pre-validates and returns an error instead.
     pub fn new(cfg: SortConfig) -> Self {
+        if let Some(k) = cfg.backend {
+            if let Err(e) = crate::simd::backend::force(k) {
+                panic!("SortConfig.backend: {e}");
+            }
+        }
         let inreg = InRegisterSorter::new(cfg.r, cfg.column_network)
             .with_vector(cfg.vector_width)
             .with_merge_impl(match cfg.merge_impl {

@@ -63,6 +63,7 @@ fn all_configs_sort() {
                         merge_width: width,
                         merge_impl: imp,
                         vector_width: VectorWidth::V128,
+                        backend: None,
                     });
                     let mut rng = Rng::new((r * width.k()) as u64);
                     let data = rng.vec_u32(2000 + r);
@@ -86,6 +87,7 @@ fn all_v256_configs_sort() {
                     merge_width: width,
                     merge_impl: imp,
                     vector_width: VectorWidth::V256,
+                    backend: None,
                 });
                 let mut rng = Rng::new((r * width.k() + 1) as u64);
                 for len in [0usize, 1, r * 8 - 1, r * 8, r * 8 + 1, 3000 + r] {

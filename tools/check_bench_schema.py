@@ -11,6 +11,10 @@ and ``bench-compare`` consumes:
 * ``source_kind`` is ``"native"`` or ``"surrogate"`` and ``smoke`` is
   a boolean (a committed baseline should not be a smoke run, warned
   but not fatal);
+* ``backend``, when present, is one of the SIMD backend names
+  (``scalar``/``neon``/``sse4.2``/``avx2``) — ``bench-compare``
+  refuses to rates-compare across different stamps, and a committed
+  baseline without one is warned (pre-backend artifact);
 * ``params`` is an object of finite numbers, ``marks`` an object of
   non-empty strings;
 * ``metrics`` is a non-empty array of objects with unique non-empty
@@ -32,6 +36,7 @@ import sys
 
 BETTER = {"higher", "lower", "info"}
 SOURCE_KINDS = {"native", "surrogate"}
+BACKENDS = {"scalar", "neon", "sse4.2", "avx2"}
 REQUIRED_STRINGS = ("bench", "arch", "source")
 
 
@@ -61,6 +66,15 @@ def check_report(name, data, findings):
         findings.append(
             f"{name}: source_kind is {kind!r}, want one of "
             f"{sorted(SOURCE_KINDS)}")
+    backend = data.get("backend")
+    if backend is None:
+        print(f"  note: {name} carries no \"backend\" stamp — "
+              f"bench-compare treats it as unrecorded and will not "
+              f"rates-compare it against stamped runs")
+    elif backend not in BACKENDS:
+        findings.append(
+            f"{name}: backend is {backend!r}, want one of "
+            f"{sorted(BACKENDS)}")
     if not isinstance(data.get("smoke"), bool):
         findings.append(f"{name}: smoke must be a boolean")
     elif data["smoke"]:

@@ -1,0 +1,618 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the SIMD backend lowerings.
+
+``rust/src/simd/backend/{neon,x86}.rs`` lower the register-model ops
+through real intrinsics; ``scalar.rs`` is the reference model. The
+Rust equivalence suite (``backend/tests.rs``) proves scalar == native
+*on the machine running the tests* — but only for the backends that
+machine can execute. This script closes the gap for the other
+architecture: it models each intrinsic's architecturally documented
+semantics (from the Intel SDM / Arm ARM pseudocode) in pure Python,
+transcribes the exact instruction sequences the Rust backends use,
+and property-tests both transcriptions against the scalar formulas.
+
+A mismatch here means the Rust file picked the wrong intrinsic or the
+wrong immediate — the kind of bug ``cargo check`` cannot see and only
+the missing hardware would catch.
+
+Usage: ``python3 tools/verify_backend_lowering.py`` — exits 0 when
+every lowering matches the scalar model, 1 with a findings list.
+"""
+import itertools
+import random
+import struct
+import sys
+
+MASK32 = 0xFFFFFFFF
+MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+# ---------------------------------------------------------------------
+# Register values: 16-byte little-endian blobs, viewed as lane tuples.
+# ---------------------------------------------------------------------
+
+def from_u32(lanes):
+    return struct.pack("<4I", *[x & MASK32 for x in lanes])
+
+
+def to_u32(b):
+    return list(struct.unpack("<4I", b))
+
+
+def from_u64(lanes):
+    return struct.pack("<2Q", *[x & MASK64 for x in lanes])
+
+
+def to_u64(b):
+    return list(struct.unpack("<2Q", b))
+
+
+def to_i32(b):
+    return list(struct.unpack("<4i", b))
+
+
+def to_i64(b):
+    return list(struct.unpack("<2q", b))
+
+
+def to_f32(b):
+    return list(struct.unpack("<4f", b))
+
+
+def from_f32(lanes):
+    return struct.pack("<4f", *lanes)
+
+
+# ---------------------------------------------------------------------
+# Scalar reference model — transcribed from backend/scalar.rs.
+# ---------------------------------------------------------------------
+
+def s_zip1_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[0], x[1], y[1]])
+
+
+def s_zip2_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[2], y[2], x[3], y[3]])
+
+
+def s_uzp1_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], x[2], y[0], y[2]])
+
+
+def s_uzp2_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[1], x[3], y[1], y[3]])
+
+
+def s_trn1_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[0], x[2], y[2]])
+
+
+def s_trn2_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[1], y[1], x[3], y[3]])
+
+
+def s_rev64_32(a):
+    x = to_u32(a)
+    return from_u32([x[1], x[0], x[3], x[2]])
+
+
+def s_swap64(a):
+    x = to_u64(a)
+    return from_u64([x[1], x[0]])
+
+
+def s_rev_32(a):
+    x = to_u32(a)
+    return from_u32([x[3], x[2], x[1], x[0]])
+
+
+def s_blend64_lo_hi(lo, hi):
+    x, y = to_u64(lo), to_u64(hi)
+    return from_u64([x[0], y[1]])
+
+
+def s_blend_even_odd_32(ev, od):
+    x, y = to_u32(ev), to_u32(od)
+    return from_u32([x[0], y[1], x[2], y[3]])
+
+
+def s_blend_outer_32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[1], y[2], x[3]])
+
+
+def s_zip1_64(a, b):
+    x, y = to_u64(a), to_u64(b)
+    return from_u64([x[0], y[0]])
+
+
+def s_zip2_64(a, b):
+    x, y = to_u64(a), to_u64(b)
+    return from_u64([x[1], y[1]])
+
+
+def _lanewise(a, b, to, frm, f):
+    return frm([f(x, y) for x, y in zip(to(a), to(b))])
+
+
+def s_min128_i32(a, b):
+    return _lanewise(a, b, to_i32, lambda l: struct.pack("<4i", *l), min)
+
+
+def s_max128_i32(a, b):
+    return _lanewise(a, b, to_i32, lambda l: struct.pack("<4i", *l), max)
+
+
+def s_min128_u32(a, b):
+    return _lanewise(a, b, to_u32, from_u32, min)
+
+
+def s_max128_u32(a, b):
+    return _lanewise(a, b, to_u32, from_u32, max)
+
+
+def s_min128_u64(a, b):
+    return _lanewise(a, b, to_u64, from_u64, min)
+
+
+def s_max128_u64(a, b):
+    return _lanewise(a, b, to_u64, from_u64, max)
+
+
+def s_min128_f32(a, b):
+    # `if a < b { a } else { b }` on the *bit patterns*: ties (incl.
+    # -0.0 vs +0.0, which compare equal) take the second operand.
+    out = bytearray()
+    for i in range(4):
+        xa, xb = a[4 * i:4 * i + 4], b[4 * i:4 * i + 4]
+        fa, fb = struct.unpack("<f", xa)[0], struct.unpack("<f", xb)[0]
+        out += xa if fa < fb else xb
+    return bytes(out)
+
+
+def s_max128_f32(a, b):
+    out = bytearray()
+    for i in range(4):
+        xa, xb = a[4 * i:4 * i + 4], b[4 * i:4 * i + 4]
+        fa, fb = struct.unpack("<f", xa)[0], struct.unpack("<f", xb)[0]
+        out += xa if fa > fb else xb
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------
+# x86 intrinsic semantics (Intel SDM), then the x86.rs transcriptions.
+# ---------------------------------------------------------------------
+
+def mm_unpacklo_epi32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[0], x[1], y[1]])
+
+
+def mm_unpackhi_epi32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[2], y[2], x[3], y[3]])
+
+
+def mm_unpacklo_epi64(a, b):
+    x, y = to_u64(a), to_u64(b)
+    return from_u64([x[0], y[0]])
+
+
+def mm_unpackhi_epi64(a, b):
+    x, y = to_u64(a), to_u64(b)
+    return from_u64([x[1], y[1]])
+
+
+def mm_shuffle_ps(a, b, imm):
+    # r0/r1 from a, r2/r3 from b, 2-bit selectors low-to-high.
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([
+        x[imm & 3], x[(imm >> 2) & 3], y[(imm >> 4) & 3], y[(imm >> 6) & 3],
+    ])
+
+
+def mm_shuffle_epi32(a, imm):
+    x = to_u32(a)
+    return from_u32([x[(imm >> (2 * i)) & 3] for i in range(4)])
+
+
+def mm_blend_epi16(a, b, mask):
+    # Word i (16-bit) from b where mask bit i is set.
+    out = bytearray()
+    for i in range(8):
+        src = b if (mask >> i) & 1 else a
+        out += src[2 * i:2 * i + 2]
+    return bytes(out)
+
+
+def mm_slli_epi64(a, n):
+    return from_u64([(x << n) & MASK64 for x in to_u64(a)])
+
+
+def mm_srli_epi64(a, n):
+    return from_u64([x >> n for x in to_u64(a)])
+
+
+def mm_min_epi32(a, b):
+    return struct.pack("<4i", *[min(x, y) for x, y in zip(to_i32(a), to_i32(b))])
+
+
+def mm_max_epi32(a, b):
+    return struct.pack("<4i", *[max(x, y) for x, y in zip(to_i32(a), to_i32(b))])
+
+
+def mm_min_epu32(a, b):
+    return from_u32([min(x, y) for x, y in zip(to_u32(a), to_u32(b))])
+
+
+def mm_max_epu32(a, b):
+    return from_u32([max(x, y) for x, y in zip(to_u32(a), to_u32(b))])
+
+
+def mm_min_ps(a, b):
+    # SDM: MIN(SRC1, SRC2) = SRC1 < SRC2 ? SRC1 : SRC2 — ties and
+    # zero-sign ties return the second operand.
+    out = bytearray()
+    for i in range(4):
+        xa, xb = a[4 * i:4 * i + 4], b[4 * i:4 * i + 4]
+        fa, fb = struct.unpack("<f", xa)[0], struct.unpack("<f", xb)[0]
+        out += xa if fa < fb else xb
+    return bytes(out)
+
+
+def mm_max_ps(a, b):
+    out = bytearray()
+    for i in range(4):
+        xa, xb = a[4 * i:4 * i + 4], b[4 * i:4 * i + 4]
+        fa, fb = struct.unpack("<f", xa)[0], struct.unpack("<f", xb)[0]
+        out += xa if fa > fb else xb
+    return bytes(out)
+
+
+def mm_cmpgt_epi64(a, b):
+    return from_u64([
+        MASK64 if x > y else 0 for x, y in zip(to_i64(a), to_i64(b))
+    ])
+
+
+def mm_xor(a, b):
+    return bytes(x ^ y for x, y in zip(a, b))
+
+
+def mm_set1_epi64x(v):
+    return from_u64([v & MASK64, v & MASK64])
+
+
+def mm_blendv_epi8(a, b, mask):
+    # Byte from b where the mask byte's MSB is set.
+    return bytes(
+        yb if m & 0x80 else xb for xb, yb, m in zip(a, b, mask)
+    )
+
+
+def x_trn1_32(a, b):
+    return mm_blend_epi16(a, mm_slli_epi64(b, 32), 0xCC)
+
+
+def x_trn2_32(a, b):
+    return mm_blend_epi16(mm_srli_epi64(a, 32), b, 0xCC)
+
+
+def x_min128_u64(a, b):
+    flip = mm_set1_epi64x(1 << 63)
+    a_gt_b = mm_cmpgt_epi64(mm_xor(a, flip), mm_xor(b, flip))
+    return mm_blendv_epi8(a, b, a_gt_b)
+
+
+def x_max128_u64(a, b):
+    flip = mm_set1_epi64x(1 << 63)
+    a_gt_b = mm_cmpgt_epi64(mm_xor(a, flip), mm_xor(b, flip))
+    return mm_blendv_epi8(b, a, a_gt_b)
+
+
+X86_OPS2 = {
+    "zip1_32": lambda a, b: mm_unpacklo_epi32(a, b),
+    "zip2_32": lambda a, b: mm_unpackhi_epi32(a, b),
+    "uzp1_32": lambda a, b: mm_shuffle_ps(a, b, 0x88),
+    "uzp2_32": lambda a, b: mm_shuffle_ps(a, b, 0xDD),
+    "trn1_32": x_trn1_32,
+    "trn2_32": x_trn2_32,
+    "blend64_lo_hi": lambda a, b: mm_blend_epi16(a, b, 0xF0),
+    "blend_even_odd_32": lambda a, b: mm_blend_epi16(a, b, 0xCC),
+    "blend_outer_32": lambda a, b: mm_blend_epi16(a, b, 0x3C),
+    "zip1_64": mm_unpacklo_epi64,
+    "zip2_64": mm_unpackhi_epi64,
+    "min128_i32": mm_min_epi32,
+    "max128_i32": mm_max_epi32,
+    "min128_u32": mm_min_epu32,
+    "max128_u32": mm_max_epu32,
+    "min128_f32": mm_min_ps,
+    "max128_f32": mm_max_ps,
+    "min128_u64": x_min128_u64,
+    "max128_u64": x_max128_u64,
+}
+
+X86_OPS1 = {
+    "rev64_32": lambda a: mm_shuffle_epi32(a, 0xB1),
+    "swap64": lambda a: mm_shuffle_epi32(a, 0x4E),
+    "rev_32": lambda a: mm_shuffle_epi32(a, 0x1B),
+}
+
+
+# ---------------------------------------------------------------------
+# NEON intrinsic semantics (Arm ARM), then the neon.rs transcriptions.
+# ---------------------------------------------------------------------
+
+def vzip1q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[0], x[1], y[1]])
+
+
+def vzip2q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[2], y[2], x[3], y[3]])
+
+
+def vuzp1q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], x[2], y[0], y[2]])
+
+
+def vuzp2q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[1], x[3], y[1], y[3]])
+
+
+def vtrn1q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[0], y[0], x[2], y[2]])
+
+
+def vtrn2q_u32(a, b):
+    x, y = to_u32(a), to_u32(b)
+    return from_u32([x[1], y[1], x[3], y[3]])
+
+
+def vrev64q_u32(a):
+    x = to_u32(a)
+    return from_u32([x[1], x[0], x[3], x[2]])
+
+
+def vextq_u64_1(a, b):
+    # Extract starting at element 1 of the (a, b) concatenation.
+    x, y = to_u64(a), to_u64(b)
+    return from_u64([x[1], y[0]])
+
+
+def vcombine_u64(lo, hi):
+    return from_u64([lo, hi])
+
+
+def vbslq(mask, a, b):
+    # BSL: bit from a where the mask bit is 1, from b where 0.
+    return bytes((m & x) | (~m & y) & 0xFF for m, x, y in zip(mask, a, b))
+
+
+def vcltq_f32(a, b):
+    out = bytearray()
+    for fa, fb in zip(to_f32(a), to_f32(b)):
+        out += struct.pack("<I", MASK32 if fa < fb else 0)
+    return bytes(out)
+
+
+def vcgtq_f32(a, b):
+    out = bytearray()
+    for fa, fb in zip(to_f32(a), to_f32(b)):
+        out += struct.pack("<I", MASK32 if fa > fb else 0)
+    return bytes(out)
+
+
+def vcgtq_u64(a, b):
+    return from_u64([
+        MASK64 if x > y else 0 for x, y in zip(to_u64(a), to_u64(b))
+    ])
+
+
+def n_swap64(a):
+    return vextq_u64_1(a, a)
+
+
+def n_rev_32(a):
+    r = vrev64q_u32(a)
+    return vextq_u64_1(r, r)
+
+
+def n_blend64_lo_hi(lo, hi):
+    return vcombine_u64(to_u64(lo)[0], to_u64(hi)[1])
+
+
+def n_blend_even_odd_32(ev, od):
+    mask = from_u32([MASK32, 0, MASK32, 0])
+    return vbslq(mask, ev, od)
+
+
+def n_blend_outer_32(a, b):
+    mask = from_u32([MASK32, 0, 0, MASK32])
+    return vbslq(mask, a, b)
+
+
+def n_min128_f32(a, b):
+    return vbslq(vcltq_f32(a, b), a, b)
+
+
+def n_max128_f32(a, b):
+    return vbslq(vcgtq_f32(a, b), a, b)
+
+
+def n_min128_u64(a, b):
+    return vbslq(vcgtq_u64(a, b), b, a)
+
+
+def n_max128_u64(a, b):
+    return vbslq(vcgtq_u64(a, b), a, b)
+
+
+NEON_OPS2 = {
+    "zip1_32": vzip1q_u32,
+    "zip2_32": vzip2q_u32,
+    "uzp1_32": vuzp1q_u32,
+    "uzp2_32": vuzp2q_u32,
+    "trn1_32": vtrn1q_u32,
+    "trn2_32": vtrn2q_u32,
+    "blend64_lo_hi": n_blend64_lo_hi,
+    "blend_even_odd_32": n_blend_even_odd_32,
+    "blend_outer_32": n_blend_outer_32,
+    "zip1_64": lambda a, b: from_u64([to_u64(a)[0], to_u64(b)[0]]),
+    "zip2_64": lambda a, b: from_u64([to_u64(a)[1], to_u64(b)[1]]),
+    # vminq_s32 / vminq_u32 are exact lane-wise min — model directly.
+    "min128_i32": lambda a, b: struct.pack(
+        "<4i", *[min(x, y) for x, y in zip(to_i32(a), to_i32(b))]),
+    "max128_i32": lambda a, b: struct.pack(
+        "<4i", *[max(x, y) for x, y in zip(to_i32(a), to_i32(b))]),
+    "min128_u32": lambda a, b: from_u32(
+        [min(x, y) for x, y in zip(to_u32(a), to_u32(b))]),
+    "max128_u32": lambda a, b: from_u32(
+        [max(x, y) for x, y in zip(to_u32(a), to_u32(b))]),
+    "min128_f32": n_min128_f32,
+    "max128_f32": n_max128_f32,
+    "min128_u64": n_min128_u64,
+    "max128_u64": n_max128_u64,
+}
+
+NEON_OPS1 = {
+    "rev64_32": vrev64q_u32,
+    "swap64": n_swap64,
+    "rev_32": n_rev_32,
+}
+
+SCALAR_OPS2 = {
+    "zip1_32": s_zip1_32,
+    "zip2_32": s_zip2_32,
+    "uzp1_32": s_uzp1_32,
+    "uzp2_32": s_uzp2_32,
+    "trn1_32": s_trn1_32,
+    "trn2_32": s_trn2_32,
+    "blend64_lo_hi": s_blend64_lo_hi,
+    "blend_even_odd_32": s_blend_even_odd_32,
+    "blend_outer_32": s_blend_outer_32,
+    "zip1_64": s_zip1_64,
+    "zip2_64": s_zip2_64,
+    "min128_i32": s_min128_i32,
+    "max128_i32": s_max128_i32,
+    "min128_u32": s_min128_u32,
+    "max128_u32": s_max128_u32,
+    "min128_f32": s_min128_f32,
+    "max128_f32": s_max128_f32,
+    "min128_u64": s_min128_u64,
+    "max128_u64": s_max128_u64,
+}
+
+SCALAR_OPS1 = {
+    "rev64_32": s_rev64_32,
+    "swap64": s_swap64,
+    "rev_32": s_rev_32,
+}
+
+
+# ---------------------------------------------------------------------
+# Input pools: random, lane-boundary, and float-tie cases.
+# ---------------------------------------------------------------------
+
+def input_pool(rng):
+    pool = [rng.randbytes(16) for _ in range(256)]
+    # Sign/magnitude boundaries for every lane interpretation.
+    for v in (0, 1, 0x7FFFFFFF, 0x80000000, MASK32):
+        pool.append(from_u32([v] * 4))
+    for v in (0, 1, (1 << 63) - 1, 1 << 63, MASK64):
+        pool.append(from_u64([v, MASK64 - v]))
+    # f32 ties and signed zeros (bit patterns: +0.0, -0.0, 1.0, -1.0,
+    # +inf, -inf) — no NaN: out of the sort contract.
+    for f in (0.0, -0.0, 1.0, -1.0, float("inf"), float("-inf")):
+        pool.append(from_f32([f, -f if f == f else f, f, f]))
+    pool.append(from_f32([0.0, -0.0, -0.0, 0.0]))
+    return pool
+
+
+def main():
+    rng = random.Random(0x9E0935)
+    pool = input_pool(rng)
+    findings = []
+    checked = 0
+
+    for backend, ops2, ops1 in (
+        ("x86", X86_OPS2, X86_OPS1),
+        ("neon", NEON_OPS2, NEON_OPS1),
+    ):
+        assert set(ops2) == set(SCALAR_OPS2), f"{backend}: binary op set drift"
+        assert set(ops1) == set(SCALAR_OPS1), f"{backend}: unary op set drift"
+        pairs = list(itertools.islice(
+            itertools.product(pool, pool), 0, None, 7))  # ~10k diverse pairs
+        for name, f in sorted(ops2.items()):
+            ref = SCALAR_OPS2[name]
+            for a, b in pairs:
+                if "f32" in name:
+                    # Skip NaN-holding inputs for float comparators.
+                    if any(x != x for x in to_f32(a) + to_f32(b)):
+                        continue
+                got, want = f(a, b), ref(a, b)
+                checked += 1
+                if got != want:
+                    findings.append(
+                        f"{backend}.{name}: a={a.hex()} b={b.hex()} -> "
+                        f"{got.hex()}, scalar says {want.hex()}")
+                    break
+        for name, f in sorted(ops1.items()):
+            ref = SCALAR_OPS1[name]
+            for a in pool:
+                got, want = f(a), ref(a)
+                checked += 1
+                if got != want:
+                    findings.append(
+                        f"{backend}.{name}: a={a.hex()} -> {got.hex()}, "
+                        f"scalar says {want.hex()}")
+                    break
+
+    # The composite 256-bit fallback (non-AVX2 paths): join of two
+    # 128-bit halves must equal a 32-byte lane-wise op.
+    for name in ("min128_u32", "max128_u32", "min128_u64", "max128_u64",
+                 "min128_i32", "max128_i32", "min128_f32", "max128_f32"):
+        ref = SCALAR_OPS2[name]
+        for _ in range(512):
+            a, b = rng.randbytes(32), rng.randbytes(32)
+            if "f32" in name and any(
+                    x != x for x in to_f32(a[:16]) + to_f32(a[16:])
+                    + to_f32(b[:16]) + to_f32(b[16:])):
+                continue
+            whole = ref(a[:16], b[:16]) + ref(a[16:], b[16:])
+            lanes = 8 if "64" not in name else 4
+            step = 32 // lanes
+            ok = all(
+                whole[i * step:(i + 1) * step]
+                == ref(
+                    a[(i // (16 // step)) * 16:][:16],
+                    b[(i // (16 // step)) * 16:][:16],
+                )[(i % (16 // step)) * step:][:step]
+                for i in range(lanes))
+            checked += 1
+            if not ok:
+                findings.append(f"join128 composition broken for {name}")
+                break
+
+    if findings:
+        print(f"backend lowering check FAILED: {len(findings)} finding(s)")
+        for f in findings:
+            print(f"  {f}")
+        return 1
+    print(f"backend lowering check OK: {checked} op evaluations, "
+          f"x86 and neon transcriptions match the scalar model")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
