@@ -980,6 +980,7 @@ mod tests {
             "BENCH_elem_width.json",
             "BENCH_routing_adaptive.json",
             "BENCH_qos_fairness.json",
+            "BENCH_net_soak.json",
         ] {
             assert!(seen.iter().any(|n| n == required), "missing committed baseline {required}");
         }

@@ -1,0 +1,405 @@
+//! `neonms-loadgen` — the open-loop wire load generator: drives a
+//! running `neonms-serve` through the full protocol (HELLO / SUBMIT /
+//! POLL / CANCEL / METRICS) from multiple weighted tenants over
+//! multiple connections, then checks the coordinator's accounting
+//! identity *across the wire* and emits a schema-v1 `BenchReport`
+//! (`BENCH_net_soak.json`) for the `bench_compare` gate.
+//!
+//! ```text
+//! neonms-loadgen [--addr HOST:PORT] [--tenants T] [--conns C]
+//!                [--requests N] [--rate HZ] [--seed S]
+//!                [--shutdown-server]
+//! ```
+//!
+//! Arrival model is **open loop**: each connection schedules submit
+//! `i` at `t0 + i/rate` regardless of completions (polling pending
+//! work while it waits), so server backpressure shows up as
+//! `RETRY_AFTER` responses — which are retried with the server's own
+//! hint — rather than as a silently self-throttling client. Payloads
+//! mix all three element kinds and a spread of sizes per tenant,
+//! deterministically from `--seed`. Every 17th accepted request is
+//! cancelled over the wire to exercise drop-to-cancel remotely.
+//!
+//! `NEONMS_BENCH_SMOKE=1` shrinks the run for CI; `NEONMS_BENCH_OUT`
+//! redirects the report. With `--shutdown-server` the final act is a
+//! `SHUTDOWN` frame, letting one CI step own the whole
+//! server-then-gate lifecycle.
+
+use neonms::bench::report::{self, BenchReport, Better, SourceKind};
+use neonms::coordinator::ElemBuf;
+use neonms::net::{NetError, PollOutcome, SubmitOutcome, WireClient};
+use neonms::simd::KeyValue;
+use neonms::testutil::Rng;
+use std::process::ExitCode;
+use std::time::{Duration, Instant};
+
+const USAGE: &str = "usage: neonms-loadgen [--addr HOST:PORT] [--tenants T] [--conns C] \
+                     [--requests N] [--rate HZ] [--seed S] [--shutdown-server]";
+
+/// Give up on one submit after this many RETRY_AFTER rounds: the
+/// open-loop schedule must not stall forever behind one hot spot.
+const MAX_SUBMIT_ATTEMPTS: u32 = 8;
+/// Cap on honoring the server's retry hint, so a pathological hint
+/// cannot stall the arrival schedule.
+const MAX_RETRY_SLEEP: Duration = Duration::from_millis(2);
+/// Quiesce deadline: how long the control connection waits for the
+/// server's per-tenant gauges to drain before declaring a wedge.
+const QUIESCE_TIMEOUT: Duration = Duration::from_secs(15);
+
+struct Flags(Vec<(String, Option<String>)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if val.is_some() {
+                    i += 1;
+                }
+                out.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Flags(out)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get_str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.get_str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_str_opt(&self, key: &str) -> Option<String> {
+        self.0.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.clone())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.iter().any(|(k, _)| k == key)
+    }
+}
+
+/// What one connection observed, summed into the report.
+#[derive(Default)]
+struct ConnStats {
+    accepted: u64,
+    completed: u64,
+    cancelled: u64,
+    failed: u64,
+    retry_after: u64,
+    gave_up: u64,
+    unsorted: u64,
+    net_errors: u64,
+}
+
+impl ConnStats {
+    fn absorb(&mut self, other: &ConnStats) {
+        self.accepted += other.accepted;
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.failed += other.failed;
+        self.retry_after += other.retry_after;
+        self.gave_up += other.gave_up;
+        self.unsorted += other.unsorted;
+        self.net_errors += other.net_errors;
+    }
+}
+
+fn gen_payload(rng: &mut Rng, tenant: usize, i: usize) -> ElemBuf {
+    let len = [16usize, 64, 256, 1024][i % 4] + rng.below(32);
+    match (tenant + i) % 3 {
+        0 => ElemBuf::U32(rng.vec_u32(len)),
+        1 => ElemBuf::U64(rng.vec_u64(len)),
+        _ => ElemBuf::Pair((0..len).map(|j| KeyValue::new(rng.next_u32(), j as u32)).collect()),
+    }
+}
+
+fn is_sorted(buf: &ElemBuf) -> bool {
+    match buf {
+        ElemBuf::U32(v) => v.windows(2).all(|w| w[0] <= w[1]),
+        ElemBuf::U64(v) => v.windows(2).all(|w| w[0] <= w[1]),
+        ElemBuf::Pair(v) => v.windows(2).all(|w| w[0] <= w[1]),
+    }
+}
+
+/// Poll one outstanding request; drop it from the list if resolved.
+fn poll_one(
+    c: &mut WireClient,
+    outstanding: &mut Vec<u64>,
+    stats: &mut ConnStats,
+) -> Result<(), NetError> {
+    let Some(&id) = outstanding.first() else {
+        return Ok(());
+    };
+    match c.poll(id)? {
+        PollOutcome::Pending => {}
+        PollOutcome::Done(data) => {
+            if !is_sorted(&data) {
+                stats.unsorted += 1;
+            }
+            stats.completed += 1;
+            outstanding.remove(0);
+        }
+        PollOutcome::Failed(_) => {
+            stats.failed += 1;
+            outstanding.remove(0);
+        }
+    }
+    Ok(())
+}
+
+/// One connection's whole life: handshake, open-loop submits with
+/// hint-driven retries and interleaved polling, wire cancels, drain.
+fn run_conn(
+    addr: &str,
+    tenant: usize,
+    conn: usize,
+    requests: usize,
+    rate_hz: f64,
+    seed: u64,
+) -> Result<ConnStats, NetError> {
+    let mut stats = ConnStats::default();
+    let mut rng = Rng::new(seed ^ (tenant as u64).wrapping_mul(0x9E37_79B9) ^ conn as u64);
+    let mut c = WireClient::connect(addr)?;
+    // Weight scales with tenant index so the fair-share ledger has
+    // something to arbitrate; burst stays at 1 MiB.
+    c.hello(&format!("load-{tenant}"), 1 + tenant as u32, 1 << 20)?;
+    let t0 = Instant::now();
+    let mut outstanding: Vec<u64> = Vec::new();
+    for i in 0..requests {
+        // Open loop: submit i is due at t0 + i/rate, completions or
+        // not. The wait is spent polling pending work.
+        let due = t0 + Duration::from_secs_f64(i as f64 / rate_hz);
+        while Instant::now() < due {
+            poll_one(&mut c, &mut outstanding, &mut stats)?;
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let data = gen_payload(&mut rng, tenant, i);
+        let mut attempts = 0;
+        let accepted_id = loop {
+            attempts += 1;
+            match c.submit(data.clone())? {
+                SubmitOutcome::Accepted { id } => break Some(id),
+                SubmitOutcome::RetryAfter { reason, hint } => {
+                    stats.retry_after += 1;
+                    if !reason.retryable() || attempts >= MAX_SUBMIT_ATTEMPTS {
+                        stats.gave_up += 1;
+                        break None;
+                    }
+                    std::thread::sleep(hint.min(MAX_RETRY_SLEEP));
+                }
+            }
+        };
+        if let Some(id) = accepted_id {
+            stats.accepted += 1;
+            if i % 17 == 13 {
+                // Exercise drop-to-cancel over the wire. The server
+                // acks regardless; whether the ledger lands on
+                // `cancelled` or `completed` depends on the race with
+                // the workers — both keep the identity balanced.
+                c.cancel(id)?;
+                stats.cancelled += 1;
+            } else {
+                outstanding.push(id);
+            }
+        }
+    }
+    // Drain: every outstanding request resolves one way or another.
+    while let Some(&id) = outstanding.first() {
+        match c.wait(id)? {
+            Ok(data) => {
+                if !is_sorted(&data) {
+                    stats.unsorted += 1;
+                }
+                stats.completed += 1;
+            }
+            Err(_) => stats.failed += 1,
+        }
+        outstanding.remove(0);
+    }
+    Ok(stats)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = Flags::parse(&args);
+    let smoke = report::smoke_from_env();
+
+    let addr = flags.get_str("addr", "127.0.0.1:7071");
+    let tenants = flags.get_usize("tenants", 3).max(1);
+    let conns = flags.get_usize("conns", 2).max(1);
+    let requests = flags.get_usize("requests", if smoke { 40 } else { 400 });
+    let rate_hz = flags.get_f64("rate", 2000.0).max(1.0);
+    let seed = flags.get_u64("seed", 0x10AD);
+    if flags.has("help") {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    println!(
+        "loadgen: {tenants} tenants x {conns} conns x {requests} reqs \
+         at {rate_hz}/s per conn against {addr} (seed {seed:#x}, smoke {smoke})"
+    );
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..tenants {
+        for cx in 0..conns {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                run_conn(&addr, t, cx, requests, rate_hz, seed)
+            }));
+        }
+    }
+    let mut total = ConnStats::default();
+    let mut conns_failed = 0u64;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(stats)) => total.absorb(&stats),
+            Ok(Err(e)) => {
+                eprintln!("loadgen: connection failed: {e}");
+                total.net_errors += 1;
+                conns_failed += 1;
+            }
+            Err(_) => {
+                eprintln!("loadgen: connection thread panicked");
+                conns_failed += 1;
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    // Control connection: wait for the server's per-tenant gauges to
+    // drain, then pull the final snapshot the identity is checked on.
+    let mut control = match WireClient::connect(addr.as_str()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("loadgen: control connection failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let quiesce_start = Instant::now();
+    let metrics = loop {
+        let m = match control.metrics() {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("loadgen: METRICS failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let drained = m
+            .tenants
+            .iter()
+            .filter(|t| t.name.starts_with("load-"))
+            .all(|t| t.in_flight_bytes == 0 && t.queued_jobs == 0);
+        if drained {
+            break m;
+        }
+        if quiesce_start.elapsed() > QUIESCE_TIMEOUT {
+            eprintln!("loadgen: server did not quiesce within {QUIESCE_TIMEOUT:?}");
+            break m;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    // The PR 8 invariant, observed across the wire per tenant.
+    let mut accounting_exact = true;
+    let (mut acc, mut comp, mut canc, mut fail) = (0u64, 0u64, 0u64, 0u64);
+    for t in metrics.tenants.iter().filter(|t| t.name.starts_with("load-")) {
+        let balanced = t.accepted == t.completed + t.cancelled + t.failed
+            && t.in_flight_bytes == 0
+            && t.queued_jobs == 0;
+        if !balanced {
+            accounting_exact = false;
+            eprintln!(
+                "loadgen: tenant {} unbalanced: accepted {} vs {}+{}+{}, in-flight {} B, \
+                 queued {}",
+                t.name,
+                t.accepted,
+                t.completed,
+                t.cancelled,
+                t.failed,
+                t.in_flight_bytes,
+                t.queued_jobs
+            );
+        }
+        acc += t.accepted;
+        comp += t.completed;
+        canc += t.cancelled;
+        fail += t.failed;
+    }
+    let all_sorted = total.unsorted == 0;
+    let no_wedged = conns_failed == 0 && total.net_errors == 0;
+    let zero_proto_errors = metrics.net_protocol_errors == 0;
+    let completion_rate = if acc > 0 { comp as f64 / acc as f64 } else { 0.0 };
+    let jobs_per_s = comp as f64 / elapsed.as_secs_f64().max(1e-9);
+
+    let source = if smoke {
+        "neonms-loadgen over loopback TCP (smoke mode)"
+    } else {
+        "neonms-loadgen over loopback TCP"
+    };
+    let mut r = BenchReport::new("net_soak", source, SourceKind::Native, smoke);
+    r.param("tenants", tenants as f64)
+        .param("conns_per_tenant", conns as f64)
+        .param("requests_per_conn", requests as f64)
+        .param("rate_hz", rate_hz)
+        .param("seed", seed as f64)
+        .mark("accounting_exact", if accounting_exact { "true" } else { "false" })
+        .mark("all_results_sorted", if all_sorted { "true" } else { "false" })
+        .mark("no_wedged_connections", if no_wedged { "true" } else { "false" })
+        .mark("zero_protocol_errors", if zero_proto_errors { "true" } else { "false" })
+        .metric("completion_rate", report::round_dp(completion_rate, 4), "ratio", Better::Higher)
+        .metric("jobs_per_s", report::round_dp(jobs_per_s, 1), "jobs/s", Better::Info)
+        .note(
+            "Open-loop wire soak: per-tenant accounting identity checked across the wire \
+             (accepted == completed + cancelled + failed, zero residual in-flight bytes).",
+        );
+    for (what, value) in [
+        ("accepted_total", acc),
+        ("completed_total", comp),
+        ("cancelled_total", canc),
+        ("failed_total", fail),
+        ("retry_after_responses", metrics.net_retry_after),
+        ("frames_total", metrics.net_frames),
+        ("submit_give_ups", total.gave_up),
+    ] {
+        r.metric(what, value as f64, "count", Better::Info);
+    }
+    report::write_report(&r, "NEONMS_BENCH_OUT", "../BENCH_net_soak.json");
+
+    if flags.has("shutdown-server") {
+        if let Err(e) = control.shutdown_server() {
+            eprintln!("loadgen: SHUTDOWN failed: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("loadgen: server acknowledged shutdown");
+    }
+
+    println!(
+        "loadgen: {} accepted, {} completed, {} cancelled, {} failed over the wire; \
+         {} retry-after responses, completion rate {:.3}",
+        acc, comp, canc, fail, metrics.net_retry_after, completion_rate
+    );
+    if accounting_exact && all_sorted && no_wedged && zero_proto_errors {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "loadgen: FAILED marks: accounting_exact={accounting_exact} \
+             all_results_sorted={all_sorted} no_wedged_connections={no_wedged} \
+             zero_protocol_errors={zero_proto_errors}"
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,163 @@
+//! `neonms-serve` — the TCP front end: one [`SortService`] served
+//! over the wire protocol (`neonms::net`) until a `SHUTDOWN` frame
+//! arrives.
+//!
+//! ```text
+//! neonms-serve [--addr HOST:PORT] [--workers W] [--shards S]
+//!              [--queue-capacity C] [--batch-max B] [--qos fair|fifo]
+//!              [--backend auto|scalar|neon|sse4.2|avx2]
+//! ```
+//!
+//! Defaults: `--addr 127.0.0.1:7071`, coordinator knobs from
+//! [`CoordinatorConfig::default`]. Prints `listening on <addr>` once
+//! accepting (the line CI's smoke job and scripts wait for), serves
+//! until a client sends `SHUTDOWN`, then drains the service and
+//! prints the final counter summary. Overload never drops
+//! connections — saturated tenants receive `RETRY_AFTER` frames (see
+//! docs/OPERATIONS.md, "Reading a RETRY-AFTER").
+
+use neonms::coordinator::{CoordinatorConfig, QosPolicy, SortService};
+use neonms::net::NetServer;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+const USAGE: &str = "usage: neonms-serve [--addr HOST:PORT] [--workers W] [--shards S] \
+                     [--queue-capacity C] [--batch-max B] [--qos fair|fifo] \
+                     [--backend auto|scalar|neon|sse4.2|avx2]";
+
+/// Minimal flag parser (`--key value` pairs), same shape as the main
+/// CLI's — binaries are separate crates, so the few lines are local.
+struct Flags(Vec<(String, Option<String>)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if val.is_some() {
+                    i += 1;
+                }
+                out.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Flags(out)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.0
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_ref())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.0
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.clone())
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = Flags::parse(&args);
+
+    let defaults = CoordinatorConfig::default();
+    let qos = match flags.get_str("qos", "fair").as_str() {
+        "fair" => QosPolicy::FairShare,
+        "fifo" => QosPolicy::Fifo,
+        other => {
+            eprintln!("--qos {other}: expected fair|fifo\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    let backend_name = flags.get_str("backend", "auto");
+    let backend = if backend_name.trim().eq_ignore_ascii_case("auto") {
+        None
+    } else {
+        match neonms::simd::Backend::parse(&backend_name) {
+            Some(b) if b.available() => Some(b),
+            Some(b) => {
+                eprintln!(
+                    "--backend {backend_name}: `{}` is not available on this machine; \
+                     `scalar` always is\n{USAGE}",
+                    b.name()
+                );
+                return ExitCode::from(2);
+            }
+            None => {
+                eprintln!("--backend {backend_name}: unknown backend\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    };
+    let cfg = CoordinatorConfig {
+        workers: flags.get_usize("workers", defaults.workers),
+        shards: flags.get_usize("shards", defaults.shards),
+        queue_capacity: flags.get_usize("queue-capacity", defaults.queue_capacity),
+        batch_max: flags.get_usize("batch-max", defaults.batch_max),
+        qos,
+        sort: neonms::sort::SortConfig { backend, ..defaults.sort.clone() },
+        ..defaults
+    };
+
+    let svc = match SortService::start(cfg, None) {
+        Ok(svc) => Arc::new(svc),
+        Err(e) => {
+            eprintln!("neonms-serve: failed to start sort service: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let addr = flags.get_str("addr", "127.0.0.1:7071");
+    let server = match NetServer::bind(Arc::clone(&svc), &addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("neonms-serve: failed to bind {addr}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("listening on {}", server.local_addr());
+    println!("simd backend: {}", svc.metrics().simd_backend);
+
+    // Blocks until a SHUTDOWN frame stops the accept loop and every
+    // connection thread has joined (their pending handles resolved).
+    server.wait();
+
+    match Arc::try_unwrap(svc) {
+        Ok(svc) => {
+            let snap = svc.metrics();
+            svc.shutdown();
+            println!(
+                "shutdown: {} submitted, {} completed, {} cancelled, {} failed, \
+                 {} rejected, {} quarantined",
+                snap.submitted,
+                snap.completed,
+                snap.cancelled,
+                snap.failed,
+                snap.rejected,
+                snap.quarantined
+            );
+            println!(
+                "wire: {} connections, {} frames, {} retry-after, {} protocol errors",
+                snap.connections_opened,
+                snap.net_frames,
+                snap.net_retry_after,
+                snap.net_protocol_errors
+            );
+            ExitCode::SUCCESS
+        }
+        Err(_) => {
+            // Unreachable once wait() joined every holder; refuse to
+            // exit pretending the drain happened.
+            eprintln!("neonms-serve: service still referenced after server stop");
+            ExitCode::FAILURE
+        }
+    }
+}

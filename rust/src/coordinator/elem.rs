@@ -64,7 +64,7 @@ impl ElemKind {
 /// job carries through the shards and what a completion slot hands
 /// back — the typed [`super::SortHandle`] unwraps it to the `Vec<T>`
 /// the caller submitted.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ElemBuf {
     U32(Vec<u32>),
     U64(Vec<u64>),

@@ -479,6 +479,20 @@ pub struct Metrics {
     pub breaker_state: AtomicU64,
     /// Times the XLA circuit breaker tripped open.
     pub breaker_trips: AtomicU64,
+    /// Wire connections accepted by the network ingress since
+    /// startup (`rust/src/net`); 0 when no server is running.
+    pub connections_opened: AtomicU64,
+    /// Wire connections fully torn down (clean close, abrupt
+    /// disconnect, or protocol-error teardown alike).
+    pub connections_closed: AtomicU64,
+    /// Request frames decoded and served, any opcode.
+    pub net_frames: AtomicU64,
+    /// `RETRY_AFTER` responses sent — sheds surfaced as backpressure
+    /// over the wire instead of dropped connections.
+    pub net_retry_after: AtomicU64,
+    /// Connections closed because the byte stream desynchronized
+    /// (malformed frame, oversized length prefix, EOF mid-frame).
+    pub net_protocol_errors: AtomicU64,
     pub elements: AtomicU64,
     pub route_tiny: AtomicU64,
     pub route_single: AtomicU64,
@@ -545,6 +559,17 @@ pub struct MetricsSnapshot {
     pub simd_backend: &'static str,
     /// Times the XLA circuit breaker tripped open.
     pub breaker_trips: u64,
+    /// Wire connections currently open (opened − closed); 0 when no
+    /// network server fronts this service.
+    pub connections_open: u64,
+    /// Wire connections accepted since startup.
+    pub connections_opened: u64,
+    /// Request frames decoded and served over the wire.
+    pub net_frames: u64,
+    /// `RETRY_AFTER` responses sent (wire-surfaced backpressure).
+    pub net_retry_after: u64,
+    /// Connections torn down for stream-level protocol errors.
+    pub net_protocol_errors: u64,
     pub elements: u64,
     pub route_tiny: u64,
     pub route_single: u64,
@@ -601,6 +626,14 @@ impl Metrics {
             breaker_state: breaker_state_label(self.breaker_state.load(Ordering::Relaxed)),
             simd_backend: crate::simd::backend::active().name(),
             breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            connections_open: self
+                .connections_opened
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.connections_closed.load(Ordering::Relaxed)),
+            connections_opened: self.connections_opened.load(Ordering::Relaxed),
+            net_frames: self.net_frames.load(Ordering::Relaxed),
+            net_retry_after: self.net_retry_after.load(Ordering::Relaxed),
+            net_protocol_errors: self.net_protocol_errors.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             route_tiny: self.route_tiny.load(Ordering::Relaxed),
             route_single: self.route_single.load(Ordering::Relaxed),

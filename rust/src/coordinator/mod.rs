@@ -58,6 +58,18 @@
 //! ([`CoordinatorConfig::faults`]) injects all of it reproducibly in
 //! tests — see the "Failure domains" section in `service.rs`.
 //!
+//! Quarantined inputs additionally leave a **dead letter**: a
+//! bounded, byte-capped copy of the poisonous payload retained in a
+//! ring operators can pull through [`SortService::quarantined`] —
+//! the input survives its failed handle for offline reproduction.
+//!
+//! Out-of-process tenants reach all of this over TCP through
+//! [`crate::net`]: the `HELLO` handshake maps a connection onto
+//! [`SortService::client_with`] (tenant name + [`ClientConfig`]
+//! knobs on the wire), and admission sheds cross the wire as
+//! `RETRY_AFTER` frames carrying the same [`BusyReason`] hint the
+//! in-process API returns.
+//!
 //! The routing cutoffs can be **learned online**: with
 //! [`AdaptivePolicy::Adaptive`] the service observes each tier's
 //! throughput per request-size class ([`MetricsSnapshot::routes`])
@@ -84,8 +96,9 @@ pub use elem::{ElemBuf, ElemKind, SortElem};
 pub use metrics::{
     LatencyHistogram, MetricsSnapshot, RouteSnapshot, ShardMetrics, TenantSnapshot, Tier,
 };
+pub(crate) use metrics::Metrics;
 pub use qos::ClientConfig;
-pub use service::{SortClient, SortService};
+pub use service::{DeadLetter, SortClient, SortService};
 pub use tuner::{AdaptivePolicy, Decision, RoutingBounds, RoutingSnapshot};
 
 #[cfg(test)]

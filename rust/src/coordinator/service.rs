@@ -306,6 +306,37 @@ struct Shard {
     metrics: ShardMetrics,
 }
 
+/// Most recent quarantined payloads retained, newest last (ring of
+/// [`DEAD_LETTER_MAX`]).
+const DEAD_LETTER_MAX: usize = 32;
+/// Per-letter payload byte cap: larger payloads keep only their
+/// element prefix ([`DeadLetter::truncated`] set) so a flood of huge
+/// poison jobs cannot turn the store into a memory leak.
+const DEAD_LETTER_BYTE_CAP: usize = 64 * 1024;
+
+/// One quarantined input, retained for operators: the payload that
+/// killed [`CoordinatorConfig::quarantine_deaths`] workers, kept (up
+/// to a byte cap) so the poisonous bytes can be pulled for offline
+/// reproduction instead of vanishing with the failed handle. Read
+/// through [`SortService::quarantined`].
+#[derive(Clone, Debug)]
+pub struct DeadLetter {
+    /// Tenant the job was accounted to (`"(anonymous)"` for
+    /// service-level submits).
+    pub tenant: String,
+    /// Element kind of the payload.
+    pub kind: ElemKind,
+    /// The poisonous payload — the whole input when it fits
+    /// [`DEAD_LETTER_BYTE_CAP`] (64 KiB), else its element prefix.
+    pub payload: ElemBuf,
+    /// Original element count (exceeds `payload.len()` iff truncated).
+    pub total_elements: usize,
+    /// True when `payload` is a capped prefix of the original input.
+    pub truncated: bool,
+    /// Workers this job killed before the stop rule fired.
+    pub deaths: u32,
+}
+
 struct Shared {
     cfg: CoordinatorConfig,
     shards: Vec<Shard>,
@@ -353,6 +384,11 @@ struct Shared {
     /// [`super::FaultPlan::decide`] — the per-job roll index that
     /// makes injection schedules independent of thread interleaving.
     fault_seq: AtomicU64,
+    /// Dead-letter ring: the last [`DEAD_LETTER_MAX`] quarantined
+    /// payloads (byte-capped copies), newest last. Written by the
+    /// supervisor's recovery path, read by
+    /// [`SortService::quarantined`].
+    dead_letters: Mutex<VecDeque<DeadLetter>>,
 }
 
 impl Shared {
@@ -372,6 +408,33 @@ impl Shared {
             Some(tx) => tx.send(job).map_err(|e| e.0),
             None => Err(job),
         }
+    }
+
+    /// Park a bounded, byte-capped copy of a quarantined job's
+    /// payload in the dead-letter ring so operators can pull the
+    /// poisonous input ([`SortService::quarantined`]) after its
+    /// handle has resolved to [`SortError::Quarantined`].
+    fn retain_dead_letter(&self, job: &Job) {
+        let kind = job.data.kind();
+        let keep = (DEAD_LETTER_BYTE_CAP / kind.bytes()).min(job.data.len());
+        let payload = match &job.data {
+            ElemBuf::U32(v) => ElemBuf::U32(v[..keep].to_vec()),
+            ElemBuf::U64(v) => ElemBuf::U64(v[..keep].to_vec()),
+            ElemBuf::Pair(v) => ElemBuf::Pair(v[..keep].to_vec()),
+        };
+        let letter = DeadLetter {
+            tenant: job.tenant.name().to_string(),
+            kind,
+            payload,
+            total_elements: job.data.len(),
+            truncated: keep < job.data.len(),
+            deaths: u32::from(job.deaths),
+        };
+        let mut ring = self.dead_letters.lock().unwrap();
+        while ring.len() >= DEAD_LETTER_MAX {
+            ring.pop_front();
+        }
+        ring.push_back(letter);
     }
 
     /// Push to shard `s` if it has room and the service is still
@@ -1085,6 +1148,7 @@ impl SortService {
             xla_on: AtomicBool::new(xla_tx.is_some()),
             xla_tx: Mutex::new(xla_tx),
             fault_seq: AtomicU64::new(0),
+            dead_letters: Mutex::new(VecDeque::new()),
         });
 
         // Workers are owned by a supervisor thread, not the service
@@ -1214,6 +1278,23 @@ impl SortService {
             .snapshot_with_shards(self.shared.shards.iter().map(|s| &s.metrics));
         snap.tenants = self.shared.tenant_snapshots();
         snap
+    }
+
+    /// The raw service-wide counters, for in-process subsystems (the
+    /// network ingress) that record events as they happen rather than
+    /// through snapshots.
+    pub(crate) fn raw_metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// The dead-letter view of quarantined inputs: byte-capped copies
+    /// of the last [`DEAD_LETTER_MAX`] payloads whose processing
+    /// killed [`CoordinatorConfig::quarantine_deaths`] workers,
+    /// newest last. The handles already resolved to
+    /// [`SortError::Quarantined`]; this is how an operator pulls the
+    /// poisonous bytes for offline reproduction.
+    pub fn quarantined(&self) -> Vec<DeadLetter> {
+        self.shared.dead_letters.lock().unwrap().iter().cloned().collect()
     }
 
     /// Drain the queues and stop all threads. Consumes the service;
@@ -1507,6 +1588,9 @@ fn recover_jobs(shared: &Arc<Shared>, held: Vec<Job>) {
             job.deaths = job.deaths.saturating_add(1);
             if u32::from(job.deaths) >= shared.cfg.quarantine_deaths {
                 m.quarantined.fetch_add(1, Ordering::Relaxed);
+                // Retain the poisonous payload *before* failing the
+                // handle — fail() is the last owner of `job`.
+                shared.retain_dead_letter(&job);
                 fail(m, job, SortError::Quarantined);
                 continue;
             }

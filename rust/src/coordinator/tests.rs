@@ -1402,6 +1402,74 @@ fn quarantine_deaths_knob_tightens_the_stop_rule() {
 }
 
 #[test]
+fn quarantined_payloads_are_retained_as_dead_letters() {
+    // Same double-kill scenario as above, now checking that the
+    // poisonous input survives its failed handle: operators can pull
+    // the exact payload, byte-capped for oversized inputs.
+    let plan = FaultPlan { seed: 7, fatal_panic_per_mille: 1000, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        faults: Some(plan),
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    assert!(svc.quarantined().is_empty(), "no letters before any quarantine");
+    let client = svc.client("killer");
+    let h = client.submit(vec![9u32, 3, 7]);
+    assert_eq!(h.wait(), Err(SortError::Quarantined));
+    let letters = svc.quarantined();
+    assert_eq!(letters.len(), 1);
+    let l = &letters[0];
+    assert_eq!(l.tenant, "killer");
+    assert_eq!(l.kind, ElemKind::U32);
+    assert_eq!(l.payload, ElemBuf::U32(vec![9, 3, 7]), "small payloads retained whole");
+    assert!(!l.truncated);
+    assert_eq!(l.total_elements, 3);
+    assert_eq!(l.deaths, 2, "quarantined on the second kill");
+    // An oversized poison payload (160 KiB of u32 > the 64 KiB cap)
+    // keeps only its element prefix, flagged as truncated.
+    let big: Vec<u32> = (0..40_000u32).rev().collect();
+    let h = client.submit(big.clone());
+    assert_eq!(h.wait(), Err(SortError::Quarantined));
+    let letters = svc.quarantined();
+    assert_eq!(letters.len(), 2, "letters accumulate newest-last");
+    let l = &letters[1];
+    assert!(l.truncated);
+    assert_eq!(l.total_elements, 40_000);
+    assert_eq!(l.payload, ElemBuf::U32(big[..16_384].to_vec()), "64 KiB / 4 B prefix");
+    svc.shutdown();
+    assert_eq!(client.tenant_metrics().in_flight_bytes, 0, "letters hold no QoS charge");
+}
+
+#[test]
+fn dead_letter_store_is_bounded() {
+    // Flood with poison (quarantine_deaths = 1 keeps it to one respawn
+    // per job): the ring must retain only the newest 32 letters.
+    let plan = FaultPlan { seed: 11, fatal_panic_per_mille: 1000, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        faults: Some(plan),
+        quarantine_deaths: 1,
+        ..Default::default()
+    };
+    let svc = SortService::start(cfg, None).unwrap();
+    let client = svc.client("flood");
+    for i in 0..40u32 {
+        let h = client.submit(vec![i, 2, 1]);
+        assert_eq!(h.wait(), Err(SortError::Quarantined));
+    }
+    assert_eq!(svc.metrics().quarantined, 40);
+    let letters = svc.quarantined();
+    assert_eq!(letters.len(), 32, "ring keeps the most recent 32");
+    assert_eq!(letters[0].payload, ElemBuf::U32(vec![8, 2, 1]), "oldest 8 were dropped");
+    assert_eq!(letters[31].payload, ElemBuf::U32(vec![39, 2, 1]));
+    assert!(letters.iter().all(|l| l.deaths == 1 && !l.truncated));
+    svc.shutdown();
+}
+
+#[test]
 fn invalid_failure_knobs_fail_startup() {
     let zero_threshold =
         CoordinatorConfig { breaker_threshold: 0, ..Default::default() };

@@ -63,6 +63,12 @@
 //! weighted fair-share QoS ([`coordinator::ClientConfig`] weights;
 //! the most-over-share tenant is shed first), and routing cutoffs
 //! can be learned online ([`coordinator::AdaptivePolicy`]).
+//! Out-of-process tenants enter through [`net`]: a hand-rolled,
+//! length-prefixed TCP wire protocol ([`net::codec`]) served by
+//! [`net::NetServer`] (`neonms-serve`), with backpressure surfaced
+//! as `RETRY_AFTER` frames and a load-generator binary
+//! (`neonms-loadgen`) that turns the QoS/chaos benches into
+//! end-to-end soak tests.
 //!
 //! # Quickstart
 //!
@@ -82,6 +88,7 @@ pub mod mergepath;
 pub mod baselines;
 pub mod regmachine;
 pub mod coordinator;
+pub mod net;
 pub mod runtime;
 pub mod bench;
 pub mod testutil;

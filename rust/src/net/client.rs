@@ -1,0 +1,217 @@
+//! The client side of the wire protocol: a thin, synchronous,
+//! one-request-at-a-time connection used by the load generator, the
+//! integration tests, and any out-of-process caller.
+//!
+//! A [`WireClient`] is deliberately simpler than the in-process
+//! [`crate::coordinator::SortClient`]: it speaks strict
+//! request/response (no pipelining), assigns its own monotonically
+//! increasing request ids, and leaves retry/backoff policy to the
+//! caller — a `RETRY_AFTER` is returned as data
+//! ([`SubmitOutcome::RetryAfter`]), not an error, because backpressure
+//! is the protocol working as designed.
+
+use super::codec::{
+    self, ProtocolError, Request, Response, WireBusyReason, WireMetrics, WireSortError,
+};
+use super::stream::{write_frame, FrameReader, NextFrame, StreamError};
+use crate::coordinator::ElemBuf;
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A client-visible failure of the wire conversation itself (as
+/// opposed to a sort job failing, which arrives as data).
+#[derive(Debug)]
+pub enum NetError {
+    /// The transport failed.
+    Io(io::Error),
+    /// The server's bytes were not a valid frame sequence.
+    Protocol(ProtocolError),
+    /// The server answered `PROTO_ERROR` — this request broke the
+    /// protocol's rules (as the server sees them).
+    Remote(String),
+    /// The server answered with a frame type this request cannot
+    /// accept (a server bug or a desynchronized conversation).
+    Unexpected(&'static str),
+    /// The server closed the connection before answering.
+    Closed,
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "i/o error: {e}"),
+            NetError::Protocol(e) => write!(f, "protocol error: {e}"),
+            NetError::Remote(msg) => write!(f, "server rejected request: {msg}"),
+            NetError::Unexpected(what) => write!(f, "unexpected response frame: {what}"),
+            NetError::Closed => f.write_str("connection closed by server"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> NetError {
+        NetError::Io(e)
+    }
+}
+
+impl From<ProtocolError> for NetError {
+    fn from(e: ProtocolError) -> NetError {
+        NetError::Protocol(e)
+    }
+}
+
+impl From<StreamError> for NetError {
+    fn from(e: StreamError) -> NetError {
+        match e {
+            StreamError::Protocol(p) => NetError::Protocol(p),
+            StreamError::Io(io) => NetError::Io(io),
+        }
+    }
+}
+
+/// How a submit landed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Admitted; poll `id` for the result.
+    Accepted { id: u64 },
+    /// Shed with backpressure; the payload was not admitted. Retry
+    /// after `hint` unless the reason is terminal
+    /// ([`WireBusyReason::retryable`]).
+    RetryAfter { reason: WireBusyReason, hint: Duration },
+}
+
+/// How a poll landed.
+#[derive(Debug, PartialEq)]
+pub enum PollOutcome {
+    /// Still in flight.
+    Pending,
+    /// Resolved: the sorted payload.
+    Done(ElemBuf),
+    /// Resolved to a typed sort error.
+    Failed(WireSortError),
+}
+
+/// One synchronous protocol connection.
+pub struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+}
+
+impl WireClient {
+    /// Connect to a server; follow with [`WireClient::hello`] before
+    /// submitting.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<WireClient, NetError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(WireClient { stream, reader: FrameReader::new(), next_id: 0 })
+    }
+
+    /// Handshake: bind this connection to `tenant` with the given
+    /// fair-share knobs. Returns the `(weight, burst)` actually in
+    /// force after service-side clamping.
+    pub fn hello(
+        &mut self,
+        tenant: &str,
+        weight: u32,
+        burst: u64,
+    ) -> Result<(u32, u64), NetError> {
+        let req = Request::Hello { tenant: tenant.to_string(), weight, burst };
+        match self.rpc(&req)? {
+            Response::HelloOk { weight, burst } => Ok((weight, burst)),
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("HELLO expects HELLO_OK")),
+        }
+    }
+
+    /// Submit a payload under a fresh request id.
+    pub fn submit(&mut self, data: ElemBuf) -> Result<SubmitOutcome, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        match self.rpc(&Request::Submit { id, data })? {
+            Response::Accepted { id: rid } if rid == id => Ok(SubmitOutcome::Accepted { id }),
+            Response::RetryAfter { id: rid, reason, hint } if rid == id => {
+                Ok(SubmitOutcome::RetryAfter { reason, hint })
+            }
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("SUBMIT expects ACCEPTED or RETRY_AFTER")),
+        }
+    }
+
+    /// Ask once whether request `id` resolved.
+    pub fn poll(&mut self, id: u64) -> Result<PollOutcome, NetError> {
+        match self.rpc(&Request::Poll { id })? {
+            Response::Pending { id: rid } if rid == id => Ok(PollOutcome::Pending),
+            Response::Done { id: rid, data } if rid == id => Ok(PollOutcome::Done(data)),
+            Response::Failed { id: rid, error } if rid == id => Ok(PollOutcome::Failed(error)),
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("POLL expects PENDING, DONE, or FAILED")),
+        }
+    }
+
+    /// Poll `id` until it resolves, sleeping briefly between rounds.
+    pub fn wait(&mut self, id: u64) -> Result<Result<ElemBuf, WireSortError>, NetError> {
+        loop {
+            match self.poll(id)? {
+                PollOutcome::Pending => std::thread::sleep(Duration::from_micros(300)),
+                PollOutcome::Done(data) => return Ok(Ok(data)),
+                PollOutcome::Failed(e) => return Ok(Err(e)),
+            }
+        }
+    }
+
+    /// Cancel request `id` (idempotent; acks even if already resolved
+    /// or unknown).
+    pub fn cancel(&mut self, id: u64) -> Result<(), NetError> {
+        match self.rpc(&Request::Cancel { id })? {
+            Response::CancelOk { id: rid } if rid == id => Ok(()),
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("CANCEL expects CANCEL_OK")),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot.
+    pub fn metrics(&mut self) -> Result<WireMetrics, NetError> {
+        match self.rpc(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("METRICS expects METRICS_OK")),
+        }
+    }
+
+    /// Ask the server process to stop accepting and drain.
+    pub fn shutdown_server(&mut self) -> Result<(), NetError> {
+        match self.rpc(&Request::Shutdown)? {
+            Response::ShutdownOk => Ok(()),
+            Response::ProtoError { message } => Err(NetError::Remote(message)),
+            _ => Err(NetError::Unexpected("SHUTDOWN expects SHUTDOWN_OK")),
+        }
+    }
+
+    /// Send one raw (possibly malformed) frame — the hardening tests'
+    /// hook for speaking garbage at a live server.
+    pub fn send_raw(&mut self, frame: &[u8]) -> Result<(), NetError> {
+        write_frame(&mut self.stream, frame)?;
+        Ok(())
+    }
+
+    /// Read the next response frame, blocking until it arrives.
+    pub fn recv(&mut self) -> Result<Response, NetError> {
+        loop {
+            match self.reader.next_response(&mut self.stream)? {
+                NextFrame::Frame(resp) => return Ok(resp),
+                NextFrame::TimedOut => {}
+                NextFrame::Closed => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn rpc(&mut self, req: &Request) -> Result<Response, NetError> {
+        let frame = codec::encode_request(req)?;
+        write_frame(&mut self.stream, &frame)?;
+        self.recv()
+    }
+}

@@ -1,0 +1,724 @@
+//! The wire frame codec: the length-prefixed binary grammar both ends
+//! of the TCP protocol speak, hand-rolled byte-by-byte in the same
+//! offline-friendly spirit as the [`crate::bench::report`] JSON layer
+//! — no serde, no framing crate, every error a typed
+//! [`ProtocolError`].
+//!
+//! # Frame grammar
+//!
+//! ```text
+//! frame    := len:u32le body            (len = body byte count,
+//!                                        bound: MAX_FRAME_BYTES)
+//! body     := opcode:u8 fields...
+//! str16    := n:u16le utf8[n]
+//! payload  := kind:u8 count:u32le elem[count]
+//!               kind 0 = u32 (4-byte le), 1 = u64 (8-byte le),
+//!               2 = pair (packed key|payload u64, 8-byte le)
+//! ```
+//!
+//! Requests (client → server): `HELLO(tenant:str16, weight:u32,
+//! burst:u64)`, `SUBMIT(id:u64, payload)`, `POLL(id:u64)`,
+//! `CANCEL(id:u64)`, `METRICS`, `SHUTDOWN`. Responses (server →
+//! client): `HELLO_OK(weight, burst)`, `ACCEPTED(id)`,
+//! `RETRY_AFTER(id, reason:u8, hint_us:u64)`, `PENDING(id)`,
+//! `DONE(id, payload)`, `FAILED(id, code:u8)`, `CANCEL_OK(id)`,
+//! `METRICS_OK(counters, tenants)`, `SHUTDOWN_OK`,
+//! `PROTO_ERROR(msg:str16)`.
+//!
+//! # Hardening contract
+//!
+//! The decoder is written to face adversarial bytes (the vqsort
+//! lesson applied to the wire): a declared length beyond
+//! [`MAX_FRAME_BYTES`] is rejected from the 4-byte header alone —
+//! before any body is buffered or allocated — and a payload count is
+//! checked against the bytes actually present in the frame before the
+//! element vector is reserved, so a forged `count` cannot make the
+//! server allocate memory the frame never carried. Incomplete input
+//! is never an error (decode returns `None` until the frame is whole,
+//! which is what makes split-across-read delivery transparent);
+//! malformed input is always an error and never a panic.
+
+use crate::coordinator::{ElemBuf, ElemKind, SortError};
+use crate::simd::KeyValue;
+use std::time::Duration;
+
+/// Hard bound on one frame's body, enforced on both encode and decode
+/// (16 MiB — a 4 Mi-element `u32` sort; larger keysets belong to the
+/// planned out-of-core tier, not a single wire frame).
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+
+// Request opcodes.
+const OP_HELLO: u8 = 0x01;
+const OP_SUBMIT: u8 = 0x02;
+const OP_POLL: u8 = 0x03;
+const OP_CANCEL: u8 = 0x04;
+const OP_METRICS: u8 = 0x05;
+const OP_SHUTDOWN: u8 = 0x06;
+
+// Response opcodes (request opcode | 0x80 where one-to-one).
+const OP_HELLO_OK: u8 = 0x81;
+const OP_ACCEPTED: u8 = 0x82;
+const OP_RETRY_AFTER: u8 = 0x83;
+const OP_PENDING: u8 = 0x84;
+const OP_DONE: u8 = 0x85;
+const OP_FAILED: u8 = 0x86;
+const OP_CANCEL_OK: u8 = 0x87;
+const OP_METRICS_OK: u8 = 0x88;
+const OP_SHUTDOWN_OK: u8 = 0x89;
+const OP_PROTO_ERROR: u8 = 0x8A;
+
+/// Why a byte sequence is not a valid frame. Every variant is a
+/// *typed* decode (or encode-bound) failure — the codec never panics
+/// on wire input and never reports malformed bytes as anything but
+/// one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The header declared a body larger than [`MAX_FRAME_BYTES`].
+    /// Raised from the 4 header bytes alone, before any body is
+    /// buffered — the pre-allocation rejection rule.
+    Oversized { declared: usize, max: usize },
+    /// The body's first byte is not a known opcode.
+    UnknownOpcode(u8),
+    /// A payload carried an element-kind tag outside `0..=2`.
+    UnknownElemKind(u8),
+    /// A `RETRY_AFTER` carried a reason code outside `0..=2`.
+    UnknownReason(u8),
+    /// A `FAILED` carried an error code with no [`SortError`] mapping.
+    UnknownErrorCode(u8),
+    /// The body ended before the named field was complete.
+    Truncated { what: &'static str },
+    /// A payload declared more elements than the frame has bytes for
+    /// (checked before allocating the element vector).
+    PayloadTruncated { declared_elements: usize, available_bytes: usize },
+    /// The body continued past the last field of its opcode.
+    TrailingBytes { extra: usize },
+    /// A `str16` field was not valid UTF-8.
+    BadUtf8,
+    /// Encode-side bound: a string or list exceeds its length-prefix
+    /// range (or a payload exceeds [`MAX_FRAME_BYTES`]).
+    TooLong { what: &'static str, len: usize },
+    /// The peer closed the connection with a partial frame buffered
+    /// (stream-level truncation, surfaced by the frame reader).
+    ClosedMidFrame { buffered: usize },
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Oversized { declared, max } => {
+                write!(f, "frame declares {declared} body bytes, bound is {max}")
+            }
+            ProtocolError::UnknownOpcode(op) => write!(f, "unknown opcode 0x{op:02x}"),
+            ProtocolError::UnknownElemKind(k) => write!(f, "unknown element kind {k}"),
+            ProtocolError::UnknownReason(r) => write!(f, "unknown retry-after reason {r}"),
+            ProtocolError::UnknownErrorCode(c) => write!(f, "unknown sort-error code {c}"),
+            ProtocolError::Truncated { what } => {
+                write!(f, "frame body ends inside field \"{what}\"")
+            }
+            ProtocolError::PayloadTruncated { declared_elements, available_bytes } => write!(
+                f,
+                "payload declares {declared_elements} elements but only \
+                 {available_bytes} bytes follow"
+            ),
+            ProtocolError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after the last field")
+            }
+            ProtocolError::BadUtf8 => f.write_str("string field is not valid UTF-8"),
+            ProtocolError::TooLong { what, len } => {
+                write!(f, "{what} of length {len} exceeds its wire bound")
+            }
+            ProtocolError::ClosedMidFrame { buffered } => {
+                write!(f, "connection closed with {buffered} bytes of a partial frame")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// A client → server frame.
+#[derive(Debug, PartialEq)]
+pub enum Request {
+    /// Connection handshake: names the tenant this connection accounts
+    /// to and carries its fair-share [`crate::coordinator::ClientConfig`]
+    /// knobs (weight + burst bytes). Must precede `Submit`.
+    Hello { tenant: String, weight: u32, burst: u64 },
+    /// Submit a payload under a connection-chosen request id.
+    Submit { id: u64, data: ElemBuf },
+    /// Ask whether request `id` has resolved (non-blocking on both
+    /// ends; the server answers `Pending`, `Done`, or `Failed`).
+    Poll { id: u64 },
+    /// Drop request `id` — the wire form of dropping a
+    /// [`crate::coordinator::SortHandle`] (drop-to-cancel).
+    Cancel { id: u64 },
+    /// Request a [`WireMetrics`] snapshot.
+    Metrics,
+    /// Ask the server process to stop accepting and drain.
+    Shutdown,
+}
+
+/// Why a submit was shed — [`crate::coordinator::BusyReason`] with the
+/// hint lifted out (it rides the `RETRY_AFTER` frame separately).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireBusyReason {
+    /// Transient: every shard at capacity; retry after the hint.
+    QueueFull,
+    /// Transient, self-inflicted: this tenant is the most over its
+    /// fair share; back off by the hint.
+    OverShare,
+    /// Permanent: the service shut down; stop retrying.
+    Shutdown,
+}
+
+impl WireBusyReason {
+    fn code(self) -> u8 {
+        match self {
+            WireBusyReason::QueueFull => 0,
+            WireBusyReason::OverShare => 1,
+            WireBusyReason::Shutdown => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<WireBusyReason, ProtocolError> {
+        match code {
+            0 => Ok(WireBusyReason::QueueFull),
+            1 => Ok(WireBusyReason::OverShare),
+            2 => Ok(WireBusyReason::Shutdown),
+            other => Err(ProtocolError::UnknownReason(other)),
+        }
+    }
+
+    /// True for the reasons worth retrying (mirrors
+    /// [`crate::coordinator::BusyReason::retry_after`] being `Some`).
+    pub fn retryable(self) -> bool {
+        !matches!(self, WireBusyReason::Shutdown)
+    }
+}
+
+impl From<&crate::coordinator::BusyReason> for WireBusyReason {
+    fn from(r: &crate::coordinator::BusyReason) -> WireBusyReason {
+        use crate::coordinator::BusyReason;
+        match r {
+            BusyReason::QueueFull { .. } => WireBusyReason::QueueFull,
+            BusyReason::OverShare { .. } => WireBusyReason::OverShare,
+            BusyReason::Shutdown => WireBusyReason::Shutdown,
+        }
+    }
+}
+
+/// [`SortError`] as a stable one-byte wire code (a `FAILED` frame).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireSortError(SortError);
+
+impl WireSortError {
+    fn code(self) -> u8 {
+        match self.0 {
+            SortError::Shutdown => 0,
+            SortError::Evicted => 1,
+            SortError::JobPanicked => 2,
+            SortError::DeadlineExceeded => 3,
+            SortError::Quarantined => 4,
+            SortError::AlreadyTaken => 5,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<WireSortError, ProtocolError> {
+        Ok(WireSortError(match code {
+            0 => SortError::Shutdown,
+            1 => SortError::Evicted,
+            2 => SortError::JobPanicked,
+            3 => SortError::DeadlineExceeded,
+            4 => SortError::Quarantined,
+            5 => SortError::AlreadyTaken,
+            other => return Err(ProtocolError::UnknownErrorCode(other)),
+        }))
+    }
+
+    /// The decoded [`SortError`] this code names.
+    pub fn error(self) -> SortError {
+        self.0
+    }
+}
+
+impl From<SortError> for WireSortError {
+    fn from(e: SortError) -> WireSortError {
+        WireSortError(e)
+    }
+}
+
+/// One tenant's row in a [`WireMetrics`] snapshot — the counters the
+/// per-tenant accounting identity (`accepted == completed + cancelled
+/// + failed`, `in_flight_bytes == 0` at quiesce) is checked from
+/// across the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireTenant {
+    pub name: String,
+    pub accepted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    pub in_flight_bytes: u64,
+    pub queued_jobs: u64,
+}
+
+/// The `METRICS_OK` body: the service-wide counters remote operators
+/// and the load generator gate on, plus one [`WireTenant`] row per
+/// registered tenant. A subset of
+/// [`crate::coordinator::MetricsSnapshot`] — gauges that only make
+/// sense in-process (shard depths, route observations) stay local.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct WireMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    pub quarantined: u64,
+    /// Live wire connections (opened − closed).
+    pub connections_open: u64,
+    /// Wire connections accepted since startup.
+    pub connections_opened: u64,
+    /// Frames served (every decoded request, any opcode).
+    pub net_frames: u64,
+    /// `RETRY_AFTER` responses sent (backpressure surfaced, not
+    /// connections dropped).
+    pub net_retry_after: u64,
+    /// Connections torn down for stream-level protocol errors.
+    pub net_protocol_errors: u64,
+    pub tenants: Vec<WireTenant>,
+}
+
+/// A server → client frame.
+#[derive(Debug, PartialEq)]
+pub enum Response {
+    /// Handshake accepted; echoes the fair-share config now in force
+    /// (the service clamps, e.g. weight 0 → 1).
+    HelloOk { weight: u32, burst: u64 },
+    /// Submit admitted; poll `id` for the result.
+    Accepted { id: u64 },
+    /// Submit shed with backpressure instead of a dropped connection:
+    /// retry (or stop, on [`WireBusyReason::Shutdown`]) after `hint`.
+    RetryAfter { id: u64, reason: WireBusyReason, hint: Duration },
+    /// Request `id` is still in flight.
+    Pending { id: u64 },
+    /// Request `id` resolved: the sorted payload.
+    Done { id: u64, data: ElemBuf },
+    /// Request `id` resolved to a typed error.
+    Failed { id: u64, error: WireSortError },
+    /// Cancel acknowledged (idempotent — unknown ids ack too).
+    CancelOk { id: u64 },
+    /// The requested metrics snapshot.
+    Metrics(WireMetrics),
+    /// Server shutdown acknowledged; the connection closes next.
+    ShutdownOk,
+    /// The request could not be honored as protocol: either a
+    /// semantic error answering one well-formed frame (`SUBMIT`
+    /// before `HELLO`, reused id) or — when the byte stream itself
+    /// desynced — the connection's parting diagnostic before close.
+    ProtoError { message: String },
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str, what: &'static str) -> Result<(), ProtocolError> {
+    let n = u16::try_from(s.len())
+        .map_err(|_| ProtocolError::TooLong { what, len: s.len() })?;
+    put_u16(out, n);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn kind_code(kind: ElemKind) -> u8 {
+    match kind {
+        ElemKind::U32 => 0,
+        ElemKind::U64 => 1,
+        ElemKind::Pair => 2,
+    }
+}
+
+fn kind_from_code(code: u8) -> Result<ElemKind, ProtocolError> {
+    match code {
+        0 => Ok(ElemKind::U32),
+        1 => Ok(ElemKind::U64),
+        2 => Ok(ElemKind::Pair),
+        other => Err(ProtocolError::UnknownElemKind(other)),
+    }
+}
+
+fn put_payload(out: &mut Vec<u8>, data: &ElemBuf) -> Result<(), ProtocolError> {
+    let count = u32::try_from(data.len())
+        .map_err(|_| ProtocolError::TooLong { what: "element payload", len: data.len() })?;
+    out.push(kind_code(data.kind()));
+    put_u32(out, count);
+    match data {
+        ElemBuf::U32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        ElemBuf::U64(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        ElemBuf::Pair(v) => {
+            for x in v {
+                out.extend_from_slice(&x.packed().to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Prepend the length prefix, enforcing the frame bound symmetrically
+/// with decode — an encoder cannot produce a frame its own decoder
+/// would refuse.
+fn seal(body: Vec<u8>) -> Result<Vec<u8>, ProtocolError> {
+    if body.len() > MAX_FRAME_BYTES {
+        return Err(ProtocolError::Oversized { declared: body.len(), max: MAX_FRAME_BYTES });
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Encode one request as a complete frame (length prefix included).
+pub fn encode_request(req: &Request) -> Result<Vec<u8>, ProtocolError> {
+    let mut b = Vec::new();
+    match req {
+        Request::Hello { tenant, weight, burst } => {
+            b.push(OP_HELLO);
+            put_str16(&mut b, tenant, "tenant name")?;
+            put_u32(&mut b, *weight);
+            put_u64(&mut b, *burst);
+        }
+        Request::Submit { id, data } => {
+            b.push(OP_SUBMIT);
+            put_u64(&mut b, *id);
+            put_payload(&mut b, data)?;
+        }
+        Request::Poll { id } => {
+            b.push(OP_POLL);
+            put_u64(&mut b, *id);
+        }
+        Request::Cancel { id } => {
+            b.push(OP_CANCEL);
+            put_u64(&mut b, *id);
+        }
+        Request::Metrics => b.push(OP_METRICS),
+        Request::Shutdown => b.push(OP_SHUTDOWN),
+    }
+    seal(b)
+}
+
+/// Encode one response as a complete frame (length prefix included).
+pub fn encode_response(resp: &Response) -> Result<Vec<u8>, ProtocolError> {
+    let mut b = Vec::new();
+    match resp {
+        Response::HelloOk { weight, burst } => {
+            b.push(OP_HELLO_OK);
+            put_u32(&mut b, *weight);
+            put_u64(&mut b, *burst);
+        }
+        Response::Accepted { id } => {
+            b.push(OP_ACCEPTED);
+            put_u64(&mut b, *id);
+        }
+        Response::RetryAfter { id, reason, hint } => {
+            b.push(OP_RETRY_AFTER);
+            put_u64(&mut b, *id);
+            b.push(reason.code());
+            put_u64(&mut b, hint.as_micros().min(u128::from(u64::MAX)) as u64);
+        }
+        Response::Pending { id } => {
+            b.push(OP_PENDING);
+            put_u64(&mut b, *id);
+        }
+        Response::Done { id, data } => {
+            b.push(OP_DONE);
+            put_u64(&mut b, *id);
+            put_payload(&mut b, data)?;
+        }
+        Response::Failed { id, error } => {
+            b.push(OP_FAILED);
+            put_u64(&mut b, *id);
+            b.push(error.code());
+        }
+        Response::CancelOk { id } => {
+            b.push(OP_CANCEL_OK);
+            put_u64(&mut b, *id);
+        }
+        Response::Metrics(m) => {
+            b.push(OP_METRICS_OK);
+            for v in [
+                m.submitted,
+                m.completed,
+                m.rejected,
+                m.cancelled,
+                m.failed,
+                m.quarantined,
+                m.connections_open,
+                m.connections_opened,
+                m.net_frames,
+                m.net_retry_after,
+                m.net_protocol_errors,
+            ] {
+                put_u64(&mut b, v);
+            }
+            let n = u16::try_from(m.tenants.len()).map_err(|_| ProtocolError::TooLong {
+                what: "tenant list",
+                len: m.tenants.len(),
+            })?;
+            put_u16(&mut b, n);
+            for t in &m.tenants {
+                put_str16(&mut b, &t.name, "tenant name")?;
+                for v in [
+                    t.accepted,
+                    t.completed,
+                    t.cancelled,
+                    t.failed,
+                    t.in_flight_bytes,
+                    t.queued_jobs,
+                ] {
+                    put_u64(&mut b, v);
+                }
+            }
+        }
+        Response::ShutdownOk => b.push(OP_SHUTDOWN_OK),
+        Response::ProtoError { message } => {
+            b.push(OP_PROTO_ERROR);
+            // Diagnostics are best-effort: clip (on a char boundary)
+            // rather than fail the error path itself.
+            let mut clipped = message.as_str();
+            if clipped.len() > 512 {
+                let mut end = 512;
+                while !clipped.is_char_boundary(end) {
+                    end -= 1;
+                }
+                clipped = &clipped[..end];
+            }
+            put_str16(&mut b, clipped, "error message")?;
+        }
+    }
+    seal(b)
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Byte-indexed body reader; every short read names the field it died
+/// in, mirroring the positioned errors of the bench-report parser.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], ProtocolError> {
+        if self.remaining() < n {
+            return Err(ProtocolError::Truncated { what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, ProtocolError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, ProtocolError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().expect("2-byte slice")))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8-byte slice")))
+    }
+
+    fn str16(&mut self, what: &'static str) -> Result<String, ProtocolError> {
+        let n = usize::from(self.u16(what)?);
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ProtocolError::BadUtf8)
+    }
+
+    fn payload(&mut self) -> Result<ElemBuf, ProtocolError> {
+        let kind = kind_from_code(self.u8("element kind")?)?;
+        let count = self.u32("element count")? as usize;
+        // Bound-before-allocate: the element vector is only reserved
+        // once the frame demonstrably carries `count` elements.
+        let need = count.checked_mul(kind.bytes()).unwrap_or(usize::MAX);
+        if need > self.remaining() {
+            return Err(ProtocolError::PayloadTruncated {
+                declared_elements: count,
+                available_bytes: self.remaining(),
+            });
+        }
+        let bytes = self.take(need, "element payload")?;
+        Ok(match kind {
+            ElemKind::U32 => ElemBuf::U32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
+            ),
+            ElemKind::U64 => ElemBuf::U64(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                    .collect(),
+            ),
+            ElemKind::Pair => ElemBuf::Pair(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| {
+                        KeyValue::from_packed(u64::from_le_bytes(
+                            c.try_into().expect("8-byte chunk"),
+                        ))
+                    })
+                    .collect(),
+            ),
+        })
+    }
+
+    fn finish(self) -> Result<(), ProtocolError> {
+        if self.remaining() > 0 {
+            return Err(ProtocolError::TrailingBytes { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+/// Split the next frame's body off `buf`. `Ok(None)` means the bytes
+/// so far are a valid *prefix* — read more. The oversize check fires
+/// from the header alone, before the body exists anywhere.
+fn frame_body(buf: &[u8]) -> Result<Option<(&[u8], usize)>, ProtocolError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().expect("4-byte slice")) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(ProtocolError::Oversized { declared: len, max: MAX_FRAME_BYTES });
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((&buf[4..4 + len], 4 + len)))
+}
+
+/// Decode one request from the front of `buf`. Returns the frame and
+/// the bytes consumed, `Ok(None)` while the frame is still incomplete
+/// (split-across-read tolerant), or a typed [`ProtocolError`].
+pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, ProtocolError> {
+    let Some((body, used)) = frame_body(buf)? else {
+        return Ok(None);
+    };
+    let mut c = Cursor::new(body);
+    let req = match c.u8("opcode")? {
+        OP_HELLO => Request::Hello {
+            tenant: c.str16("tenant name")?,
+            weight: c.u32("weight")?,
+            burst: c.u64("burst")?,
+        },
+        OP_SUBMIT => Request::Submit { id: c.u64("request id")?, data: c.payload()? },
+        OP_POLL => Request::Poll { id: c.u64("request id")? },
+        OP_CANCEL => Request::Cancel { id: c.u64("request id")? },
+        OP_METRICS => Request::Metrics,
+        OP_SHUTDOWN => Request::Shutdown,
+        other => return Err(ProtocolError::UnknownOpcode(other)),
+    };
+    c.finish()?;
+    Ok(Some((req, used)))
+}
+
+/// Decode one response from the front of `buf` (same contract as
+/// [`decode_request`]).
+pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>, ProtocolError> {
+    let Some((body, used)) = frame_body(buf)? else {
+        return Ok(None);
+    };
+    let mut c = Cursor::new(body);
+    let resp = match c.u8("opcode")? {
+        OP_HELLO_OK => Response::HelloOk { weight: c.u32("weight")?, burst: c.u64("burst")? },
+        OP_ACCEPTED => Response::Accepted { id: c.u64("request id")? },
+        OP_RETRY_AFTER => Response::RetryAfter {
+            id: c.u64("request id")?,
+            reason: WireBusyReason::from_code(c.u8("reason")?)?,
+            hint: Duration::from_micros(c.u64("retry-after hint")?),
+        },
+        OP_PENDING => Response::Pending { id: c.u64("request id")? },
+        OP_DONE => Response::Done { id: c.u64("request id")?, data: c.payload()? },
+        OP_FAILED => Response::Failed {
+            id: c.u64("request id")?,
+            error: WireSortError::from_code(c.u8("error code")?)?,
+        },
+        OP_CANCEL_OK => Response::CancelOk { id: c.u64("request id")? },
+        OP_METRICS_OK => {
+            let mut m = WireMetrics {
+                submitted: c.u64("submitted")?,
+                completed: c.u64("completed")?,
+                rejected: c.u64("rejected")?,
+                cancelled: c.u64("cancelled")?,
+                failed: c.u64("failed")?,
+                quarantined: c.u64("quarantined")?,
+                connections_open: c.u64("connections_open")?,
+                connections_opened: c.u64("connections_opened")?,
+                net_frames: c.u64("net_frames")?,
+                net_retry_after: c.u64("net_retry_after")?,
+                net_protocol_errors: c.u64("net_protocol_errors")?,
+                tenants: Vec::new(),
+            };
+            let n = usize::from(c.u16("tenant count")?);
+            // Bound-before-allocate, list edition: 6 u64s + a str16
+            // header per row is the floor, so a forged count beyond
+            // the body's own bytes is refused without reserving.
+            if n.saturating_mul(50) > c.remaining() {
+                return Err(ProtocolError::PayloadTruncated {
+                    declared_elements: n,
+                    available_bytes: c.remaining(),
+                });
+            }
+            m.tenants.reserve(n);
+            for _ in 0..n {
+                m.tenants.push(WireTenant {
+                    name: c.str16("tenant name")?,
+                    accepted: c.u64("accepted")?,
+                    completed: c.u64("completed")?,
+                    cancelled: c.u64("cancelled")?,
+                    failed: c.u64("failed")?,
+                    in_flight_bytes: c.u64("in_flight_bytes")?,
+                    queued_jobs: c.u64("queued_jobs")?,
+                });
+            }
+            Response::Metrics(m)
+        }
+        OP_SHUTDOWN_OK => Response::ShutdownOk,
+        OP_PROTO_ERROR => Response::ProtoError { message: c.str16("error message")? },
+        other => return Err(ProtocolError::UnknownOpcode(other)),
+    };
+    c.finish()?;
+    Ok(Some((resp, used)))
+}

@@ -1,0 +1,48 @@
+//! Network ingress: the TCP wire protocol in front of
+//! [`crate::coordinator::SortService`].
+//!
+//! Until PR 10 every request entered through an in-process
+//! `SortService::client(name)` call; this module is the process
+//! boundary the ROADMAP's "millions of users" goal needs. It has
+//! three layers, each usable on its own:
+//!
+//! * [`codec`] — the pure, I/O-free frame grammar: length-prefixed
+//!   binary frames (`HELLO`/`SUBMIT`/`POLL`/`CANCEL`/`METRICS`/
+//!   `SHUTDOWN` and their responses), element-kind-tagged payloads
+//!   for all three [`crate::coordinator::ElemKind`]s, hand-rolled
+//!   with no new dependencies and hardened against adversarial
+//!   bytes (bound-before-allocate, typed [`ProtocolError`]s, no
+//!   panics).
+//! * [`stream`] — frame ↔ byte-stream adaptation: [`FrameReader`]
+//!   reassembles frames split across arbitrary read boundaries.
+//! * [`server`] / [`client`] — the thread-per-connection
+//!   [`NetServer`] mapping connections onto
+//!   [`crate::coordinator::SortClient`]s (HELLO carries the tenant
+//!   name + [`crate::coordinator::ClientConfig`] knobs), and the
+//!   synchronous [`WireClient`] used by `neonms-loadgen` and the
+//!   e2e tests.
+//!
+//! The design rule throughout: **backpressure is surfaced, never
+//! dropped** — a shed submit crosses the wire as `RETRY_AFTER` with
+//! the same reason and hint the in-process
+//! [`crate::coordinator::BusyReason`] carries — and **every error
+//! path resolves the handle or answers the frame**, so a protocol
+//! error can never wedge a worker or leak a QoS charge (teardown
+//! rides the coordinator's drop-to-cancel semantics).
+
+pub mod codec;
+pub mod stream;
+
+mod client;
+mod server;
+
+pub use client::{NetError, PollOutcome, SubmitOutcome, WireClient};
+pub use codec::{
+    ProtocolError, Request, Response, WireBusyReason, WireMetrics, WireSortError, WireTenant,
+    MAX_FRAME_BYTES,
+};
+pub use server::NetServer;
+pub use stream::{FrameReader, NextFrame, StreamError};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,383 @@
+//! The TCP ingress server: a thread-per-connection front end that
+//! maps wire connections onto [`SortClient`]s.
+//!
+//! # Connection lifecycle
+//!
+//! An accept loop (one thread, owned by [`NetServer`]) hands each
+//! connection to its own worker thread. The first useful frame must
+//! be `HELLO`, which names the tenant and carries its
+//! [`ClientConfig`] knobs — the server answers with the config
+//! actually in force (the service clamps). From then on the
+//! connection is a request/response loop over `SUBMIT` / `POLL` /
+//! `CANCEL` / `METRICS` / `SHUTDOWN`.
+//!
+//! # Backpressure, not drops
+//!
+//! A shed submit ([`crate::coordinator::Busy`]) becomes a
+//! `RETRY_AFTER` frame carrying the same reason and
+//! `retry_after_hint` the in-process API exposes — the connection
+//! stays open and the client decides when to come back. Overload
+//! never closes sockets.
+//!
+//! # Error containment
+//!
+//! The two error classes get different treatment, and neither can
+//! wedge a worker or leak a QoS charge:
+//!
+//! * **Semantic errors in well-formed frames** (`SUBMIT` before
+//!   `HELLO`, a reused in-flight id, `POLL` for an unknown id) are
+//!   answered with `PROTO_ERROR` and the connection continues — the
+//!   frame was parseable, so the stream is still synchronized.
+//! * **Stream desync** (malformed bytes, oversized declared length,
+//!   EOF mid-frame) is answered with a final `PROTO_ERROR` and the
+//!   connection closes: frame boundaries are unrecoverable.
+//!
+//! Either way — and equally on abrupt disconnect — closing drops the
+//! connection's pending [`SortHandle`]s, and dropping an unresolved
+//! handle *is* the coordinator's cancel path (PR 2's drop-to-cancel):
+//! workers skip the job, the QoS charge is released, and the tenant
+//! ledger counts it `cancelled`. The accounting identity holds across
+//! the wire.
+
+use super::codec::{self, Request, Response, WireBusyReason, WireMetrics, WireTenant};
+use super::stream::{write_frame, FrameReader, NextFrame, StreamError};
+use crate::coordinator::{
+    Busy, ClientConfig, ElemBuf, Metrics, SortClient, SortElem, SortError, SortHandle, SortService,
+};
+use crate::simd::KeyValue;
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// How long a connection thread blocks in `read` before re-checking
+/// the server stop flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(25);
+
+/// A running TCP front end over one [`SortService`]. Dropping (or
+/// calling [`NetServer::stop`]) stops accepting, wakes the accept
+/// loop, and joins every connection thread; the underlying service is
+/// left running for the owner to shut down.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start serving `svc` over it.
+    pub fn bind(svc: Arc<SortService>, addr: &str) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            thread::Builder::new()
+                .name("neonms-net-accept".into())
+                .spawn(move || accept_loop(&svc, &listener, &stop, local))?
+        };
+        Ok(NetServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once the server has stopped accepting — set by
+    /// [`NetServer::stop`] or a `SHUTDOWN` frame.
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until the server stops (a `SHUTDOWN` frame arrives or
+    /// another thread calls for a stop), then join every connection.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join all connection threads.
+    pub fn stop(mut self) {
+        self.shut();
+    }
+
+    fn shut(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // The accept loop blocks in `accept`; a throwaway local
+            // connection is the portable wakeup.
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shut();
+    }
+}
+
+fn accept_loop(
+    svc: &Arc<SortService>,
+    listener: &TcpListener,
+    stop: &Arc<AtomicBool>,
+    local: SocketAddr,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stop.load(Ordering::SeqCst) {
+                    // The wakeup connection from `stop`; not a client.
+                    break;
+                }
+                let svc = Arc::clone(svc);
+                let stop = Arc::clone(stop);
+                let spawned = thread::Builder::new()
+                    .name("neonms-net-conn".into())
+                    .spawn(move || serve_connection(&svc, stream, &stop, local));
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    // Spawn failure: the stream drops here and the
+                    // client sees a clean close with nothing pending.
+                    Err(_) => {}
+                }
+            }
+            Err(_) if stop.load(Ordering::SeqCst) => break,
+            Err(_) => {}
+        }
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// A submitted-but-unresolved job of any element kind. Dropping it
+/// drops the typed handle inside, which cancels the job — the single
+/// mechanism behind `CANCEL` frames, protocol-error teardown, and
+/// abrupt disconnects.
+enum AnyHandle {
+    U32(SortHandle<u32>),
+    U64(SortHandle<u64>),
+    Pair(SortHandle<KeyValue>),
+}
+
+impl AnyHandle {
+    fn try_take(&mut self) -> Option<Result<ElemBuf, SortError>> {
+        match self {
+            AnyHandle::U32(h) => h.try_take().map(|r| r.map(<u32 as SortElem>::wrap)),
+            AnyHandle::U64(h) => h.try_take().map(|r| r.map(<u64 as SortElem>::wrap)),
+            AnyHandle::Pair(h) => h.try_take().map(|r| r.map(<KeyValue as SortElem>::wrap)),
+        }
+    }
+}
+
+/// Per-connection protocol state. Dropped on any exit path, which
+/// resolves (cancels) everything still pending.
+struct Conn {
+    client: Option<SortClient>,
+    pending: HashMap<u64, AnyHandle>,
+}
+
+fn serve_connection(
+    svc: &Arc<SortService>,
+    mut stream: TcpStream,
+    stop: &AtomicBool,
+    local: SocketAddr,
+) {
+    let m = svc.raw_metrics();
+    m.connections_opened.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = FrameReader::new();
+    let mut conn = Conn { client: None, pending: HashMap::new() };
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let req = match reader.next_request(&mut stream) {
+            Ok(NextFrame::Frame(req)) => req,
+            Ok(NextFrame::TimedOut) => continue,
+            Ok(NextFrame::Closed) => break,
+            Err(e) => {
+                // Desynchronized stream: send the diagnostic, then
+                // close. `conn` drops below, cancelling every pending
+                // handle, so no QoS charge outlives the connection.
+                m.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let message = match &e {
+                    StreamError::Protocol(p) => p.to_string(),
+                    StreamError::Io(io) => io.to_string(),
+                };
+                let _ = respond(&mut stream, m, &Response::ProtoError { message });
+                break;
+            }
+        };
+        m.net_frames.fetch_add(1, Ordering::Relaxed);
+        match handle_request(svc, m, &mut conn, req) {
+            Outcome::Reply(resp) => {
+                if !respond(&mut stream, m, &resp) {
+                    break;
+                }
+            }
+            Outcome::Shutdown(resp) => {
+                let _ = respond(&mut stream, m, &resp);
+                stop.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it can drain and join.
+                let _ = TcpStream::connect(local);
+                break;
+            }
+        }
+    }
+    m.connections_closed.fetch_add(1, Ordering::Relaxed);
+    // `conn` drops here: drop-to-cancel for everything unresolved.
+}
+
+enum Outcome {
+    Reply(Response),
+    Shutdown(Response),
+}
+
+fn handle_request(svc: &SortService, m: &Metrics, conn: &mut Conn, req: Request) -> Outcome {
+    match req {
+        Request::Hello { tenant, weight, burst } => {
+            let cfg = ClientConfig {
+                weight,
+                burst: usize::try_from(burst).unwrap_or(usize::MAX),
+                ..ClientConfig::default()
+            };
+            let client = svc.client_with(&tenant, cfg);
+            let eff = client.config();
+            conn.client = Some(client);
+            Outcome::Reply(Response::HelloOk { weight: eff.weight, burst: eff.burst as u64 })
+        }
+        Request::Submit { id, data } => {
+            let Some(client) = &conn.client else {
+                return Outcome::Reply(Response::ProtoError {
+                    message: "SUBMIT before HELLO".into(),
+                });
+            };
+            if conn.pending.contains_key(&id) {
+                return Outcome::Reply(Response::ProtoError {
+                    message: format!("SUBMIT reuses in-flight id {id}"),
+                });
+            }
+            match try_submit(client, data) {
+                Ok(handle) => {
+                    conn.pending.insert(id, handle);
+                    Outcome::Reply(Response::Accepted { id })
+                }
+                Err((reason, hint)) => {
+                    m.net_retry_after.fetch_add(1, Ordering::Relaxed);
+                    Outcome::Reply(Response::RetryAfter { id, reason, hint })
+                }
+            }
+        }
+        Request::Poll { id } => match conn.pending.get_mut(&id) {
+            None => Outcome::Reply(Response::ProtoError {
+                message: format!("POLL for unknown id {id}"),
+            }),
+            Some(h) => match h.try_take() {
+                None => Outcome::Reply(Response::Pending { id }),
+                Some(Ok(data)) => {
+                    conn.pending.remove(&id);
+                    Outcome::Reply(Response::Done { id, data })
+                }
+                Some(Err(e)) => {
+                    conn.pending.remove(&id);
+                    Outcome::Reply(Response::Failed { id, error: e.into() })
+                }
+            },
+        },
+        Request::Cancel { id } => {
+            // Removing drops the handle → the coordinator's cancel
+            // path. Unknown ids ack too: cancel is idempotent and the
+            // job may simply have resolved already.
+            conn.pending.remove(&id);
+            Outcome::Reply(Response::CancelOk { id })
+        }
+        Request::Metrics => Outcome::Reply(Response::Metrics(wire_metrics(svc))),
+        Request::Shutdown => Outcome::Shutdown(Response::ShutdownOk),
+    }
+}
+
+/// Non-blocking submit of a decoded payload; a shed becomes the
+/// `(reason, hint)` pair for a `RETRY_AFTER` frame.
+fn try_submit(
+    client: &SortClient,
+    data: ElemBuf,
+) -> Result<AnyHandle, (WireBusyReason, Duration)> {
+    match data {
+        ElemBuf::U32(v) => client.try_submit(v).map(AnyHandle::U32).map_err(shed_info),
+        ElemBuf::U64(v) => client.try_submit_u64(v).map(AnyHandle::U64).map_err(shed_info),
+        ElemBuf::Pair(v) => client.try_submit_pairs(v).map(AnyHandle::Pair).map_err(shed_info),
+    }
+}
+
+fn shed_info<T: SortElem>(busy: Busy<T>) -> (WireBusyReason, Duration) {
+    let hint = busy.reason.retry_after().unwrap_or(Duration::ZERO);
+    (WireBusyReason::from(&busy.reason), hint)
+}
+
+/// Project the in-process [`crate::coordinator::MetricsSnapshot`]
+/// onto the wire subset.
+fn wire_metrics(svc: &SortService) -> WireMetrics {
+    let snap = svc.metrics();
+    WireMetrics {
+        submitted: snap.submitted,
+        completed: snap.completed,
+        rejected: snap.rejected,
+        cancelled: snap.cancelled,
+        failed: snap.failed,
+        quarantined: snap.quarantined,
+        connections_open: snap.connections_open,
+        connections_opened: snap.connections_opened,
+        net_frames: snap.net_frames,
+        net_retry_after: snap.net_retry_after,
+        net_protocol_errors: snap.net_protocol_errors,
+        tenants: snap
+            .tenants
+            .iter()
+            .map(|t| WireTenant {
+                name: t.name.clone(),
+                accepted: t.accepted,
+                completed: t.completed,
+                cancelled: t.cancelled,
+                failed: t.failed,
+                in_flight_bytes: t.in_flight_bytes,
+                queued_jobs: t.queued_jobs,
+            })
+            .collect(),
+    }
+}
+
+/// Encode and send one response. Returns false when the connection is
+/// unusable (the caller closes; pending handles cancel on drop).
+fn respond(stream: &mut TcpStream, m: &Metrics, resp: &Response) -> bool {
+    let bytes = match codec::encode_response(resp) {
+        Ok(b) => b,
+        Err(e) => {
+            // A response the codec bounds refuse (pathological tenant
+            // list / message). Degrade to a diagnostic the peer can
+            // always decode rather than silently dropping the answer.
+            m.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let fallback =
+                Response::ProtoError { message: format!("response exceeded wire bounds: {e}") };
+            match codec::encode_response(&fallback) {
+                Ok(b) => b,
+                Err(_) => return false,
+            }
+        }
+    };
+    write_frame(stream, &bytes).is_ok()
+}

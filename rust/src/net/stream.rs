@@ -1,0 +1,149 @@
+//! Frame transport over a byte stream: an accumulation buffer that
+//! turns arbitrary `Read` chunking back into whole frames, and the
+//! matching write helper.
+//!
+//! TCP does not respect frame boundaries — one frame may arrive split
+//! across many reads, and one read may deliver several frames. The
+//! [`FrameReader`] owns that impedance match: it buffers bytes until
+//! the codec reports a complete frame, hands back exactly one frame
+//! per call, and keeps any surplus for the next call. Errors stay
+//! typed all the way up: a malformed byte sequence is a
+//! [`ProtocolError`] (via [`StreamError::Protocol`]) and an I/O fault
+//! is [`StreamError::Io`] — the caller never has to parse strings to
+//! tell them apart.
+
+use super::codec::{self, ProtocolError, Request, Response};
+use std::io::{self, Read, Write};
+
+/// Read chunk size; small enough to keep per-connection memory modest,
+/// large enough that a 16 MiB max frame arrives in ~2k reads.
+const READ_CHUNK: usize = 8 * 1024;
+
+/// What one blocking read-next-frame call produced.
+#[derive(Debug)]
+pub enum NextFrame<T> {
+    /// A complete, well-formed frame.
+    Frame(T),
+    /// The peer closed the stream on a frame boundary (clean EOF).
+    Closed,
+    /// The read timed out (the socket has a read timeout configured)
+    /// with no complete frame yet; the caller can check its stop flag
+    /// and come back.
+    TimedOut,
+}
+
+/// A stream-level failure: either the bytes were wrong or the
+/// transport was.
+#[derive(Debug)]
+pub enum StreamError {
+    /// The byte stream is not a valid frame sequence. The connection
+    /// is desynchronized and must be closed — frame boundaries cannot
+    /// be recovered from arbitrary garbage.
+    Protocol(ProtocolError),
+    /// The transport failed underneath the protocol.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Protocol(e) => write!(f, "protocol error: {e}"),
+            StreamError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StreamError::Protocol(e) => Some(e),
+            StreamError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<ProtocolError> for StreamError {
+    fn from(e: ProtocolError) -> StreamError {
+        StreamError::Protocol(e)
+    }
+}
+
+/// Reassembles whole frames from a split-at-arbitrary-boundaries byte
+/// stream. One reader per connection, reused across frames; surplus
+/// bytes from an over-delivering read are retained for the next call.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Bytes buffered but not yet consumed as a frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Read until one whole request is decodable (server side).
+    pub fn next_request(
+        &mut self,
+        src: &mut impl Read,
+    ) -> Result<NextFrame<Request>, StreamError> {
+        self.next_frame(src, codec::decode_request)
+    }
+
+    /// Read until one whole response is decodable (client side).
+    pub fn next_response(
+        &mut self,
+        src: &mut impl Read,
+    ) -> Result<NextFrame<Response>, StreamError> {
+        self.next_frame(src, codec::decode_response)
+    }
+
+    fn next_frame<T>(
+        &mut self,
+        src: &mut impl Read,
+        decode: fn(&[u8]) -> Result<Option<(T, usize)>, ProtocolError>,
+    ) -> Result<NextFrame<T>, StreamError> {
+        loop {
+            // Drain before reading: a previous read may have delivered
+            // more than one frame.
+            if let Some((frame, used)) = decode(&self.buf)? {
+                self.buf.drain(..used);
+                return Ok(NextFrame::Frame(frame));
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            match src.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF inside a frame is a protocol violation, not
+                    // a clean close — surface it as such so the caller
+                    // counts it.
+                    return if self.buf.is_empty() {
+                        Ok(NextFrame::Closed)
+                    } else {
+                        Err(StreamError::Protocol(ProtocolError::ClosedMidFrame {
+                            buffered: self.buf.len(),
+                        }))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+                {
+                    return Ok(NextFrame::TimedOut);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(StreamError::Io(e)),
+            }
+        }
+    }
+}
+
+/// Write one already-encoded frame and flush it (frames are
+/// request/response units; latency beats batching here).
+pub fn write_frame(dst: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    dst.write_all(frame)?;
+    dst.flush()
+}

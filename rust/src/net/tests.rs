@@ -1,0 +1,438 @@
+//! Protocol-hardening suite for the wire codec and frame reader: the
+//! vqsort adversarial-input lesson applied to the ingress boundary.
+//! Round-trips every frame type (all three element kinds), then
+//! attacks the decoder with truncation, oversized length prefixes,
+//! garbage, split-across-read delivery, and seeded random bytes — all
+//! of which must produce typed [`ProtocolError`]s, never a panic,
+//! never an allocation beyond the frame bound.
+
+use super::codec::{
+    decode_request, decode_response, encode_request, encode_response, ProtocolError, Request,
+    Response, WireBusyReason, WireMetrics, WireSortError, WireTenant, MAX_FRAME_BYTES,
+};
+use super::stream::{FrameReader, NextFrame, StreamError};
+use crate::coordinator::{ElemBuf, SortError};
+use crate::simd::KeyValue;
+use crate::testutil::Rng;
+use std::io::Read;
+use std::time::Duration;
+
+// ------------------------------------------------------------ fixtures
+
+fn sample_bufs() -> Vec<ElemBuf> {
+    vec![
+        ElemBuf::U32(vec![]),
+        ElemBuf::U32(vec![7, 3, u32::MAX, 0]),
+        ElemBuf::U64(vec![u64::MAX, 1, 0x0123_4567_89AB_CDEF]),
+        ElemBuf::Pair(vec![KeyValue::new(9, 100), KeyValue::new(0, u32::MAX)]),
+    ]
+}
+
+fn sample_requests() -> Vec<Request> {
+    let mut reqs = vec![
+        Request::Hello { tenant: "tenant-α".into(), weight: 4, burst: 1 << 20 },
+        Request::Hello { tenant: String::new(), weight: 0, burst: 0 },
+        Request::Poll { id: 0 },
+        Request::Poll { id: u64::MAX },
+        Request::Cancel { id: 17 },
+        Request::Metrics,
+        Request::Shutdown,
+    ];
+    for (i, data) in sample_bufs().into_iter().enumerate() {
+        reqs.push(Request::Submit { id: i as u64, data });
+    }
+    reqs
+}
+
+fn all_sort_errors() -> [SortError; 6] {
+    [
+        SortError::Shutdown,
+        SortError::Evicted,
+        SortError::JobPanicked,
+        SortError::DeadlineExceeded,
+        SortError::Quarantined,
+        SortError::AlreadyTaken,
+    ]
+}
+
+fn sample_responses() -> Vec<Response> {
+    let mut resps = vec![
+        Response::HelloOk { weight: 1, burst: 128 * 1024 },
+        Response::Accepted { id: 3 },
+        Response::RetryAfter {
+            id: 4,
+            reason: WireBusyReason::QueueFull,
+            hint: Duration::from_micros(1000),
+        },
+        Response::RetryAfter {
+            id: 5,
+            reason: WireBusyReason::OverShare,
+            hint: Duration::from_micros(50),
+        },
+        Response::RetryAfter { id: 6, reason: WireBusyReason::Shutdown, hint: Duration::ZERO },
+        Response::Pending { id: 7 },
+        Response::CancelOk { id: 8 },
+        Response::Metrics(WireMetrics::default()),
+        Response::Metrics(WireMetrics {
+            submitted: 10,
+            completed: 7,
+            rejected: 1,
+            cancelled: 1,
+            failed: 1,
+            quarantined: 1,
+            connections_open: 2,
+            connections_opened: 5,
+            net_frames: 99,
+            net_retry_after: 3,
+            net_protocol_errors: 1,
+            tenants: vec![
+                WireTenant {
+                    name: "gold".into(),
+                    accepted: 6,
+                    completed: 5,
+                    cancelled: 1,
+                    failed: 0,
+                    in_flight_bytes: 0,
+                    queued_jobs: 0,
+                },
+                WireTenant {
+                    name: "bronze".into(),
+                    accepted: 4,
+                    completed: 2,
+                    cancelled: 0,
+                    failed: 1,
+                    in_flight_bytes: 4096,
+                    queued_jobs: 1,
+                },
+            ],
+        }),
+        Response::ShutdownOk,
+        Response::ProtoError { message: "SUBMIT before HELLO".into() },
+    ];
+    for (i, data) in sample_bufs().into_iter().enumerate() {
+        resps.push(Response::Done { id: 100 + i as u64, data });
+    }
+    for (i, e) in all_sort_errors().into_iter().enumerate() {
+        resps.push(Response::Failed { id: 200 + i as u64, error: WireSortError::from(e) });
+    }
+    resps
+}
+
+/// A reader that hands out its bytes `chunk` at a time — the
+/// split-across-read-boundary transport.
+struct ChunkedReader {
+    data: Vec<u8>,
+    pos: usize,
+    chunk: usize,
+}
+
+impl Read for ChunkedReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+// ----------------------------------------------------------- round trip
+
+#[test]
+fn every_request_round_trips() {
+    for req in sample_requests() {
+        let frame = encode_request(&req).unwrap();
+        let (back, used) = decode_request(&frame).unwrap().expect("complete frame");
+        assert_eq!(used, frame.len(), "whole frame consumed: {req:?}");
+        assert_eq!(back, req);
+    }
+}
+
+#[test]
+fn every_response_round_trips() {
+    for resp in sample_responses() {
+        let frame = encode_response(&resp).unwrap();
+        let (back, used) = decode_response(&frame).unwrap().expect("complete frame");
+        assert_eq!(used, frame.len(), "whole frame consumed: {resp:?}");
+        assert_eq!(back, resp);
+    }
+}
+
+#[test]
+fn back_to_back_frames_decode_in_sequence() {
+    let reqs = sample_requests();
+    let mut wire = Vec::new();
+    for req in &reqs {
+        wire.extend_from_slice(&encode_request(req).unwrap());
+    }
+    let mut seen = Vec::new();
+    while !wire.is_empty() {
+        let (req, used) = decode_request(&wire).unwrap().expect("complete frame");
+        seen.push(req);
+        wire.drain(..used);
+    }
+    assert_eq!(seen, reqs);
+}
+
+// ----------------------------------------------- incomplete ≠ malformed
+
+#[test]
+fn every_strict_prefix_asks_for_more_bytes() {
+    // A truncated-in-transit frame is *incomplete*, not an error:
+    // decode must return None for every strict prefix of every valid
+    // frame (this is what makes arbitrary TCP chunking transparent).
+    for req in sample_requests() {
+        let frame = encode_request(&req).unwrap();
+        for cut in 0..frame.len() {
+            assert_eq!(
+                decode_request(&frame[..cut]).unwrap(),
+                None,
+                "prefix of {} bytes of {req:?}",
+                cut
+            );
+        }
+    }
+    for resp in sample_responses() {
+        let frame = encode_response(&resp).unwrap();
+        for cut in 0..frame.len() {
+            assert!(decode_response(&frame[..cut]).unwrap().is_none());
+        }
+    }
+}
+
+#[test]
+fn frame_reader_reassembles_across_read_boundaries() {
+    let reqs = sample_requests();
+    let mut wire = Vec::new();
+    for req in &reqs {
+        wire.extend_from_slice(&encode_request(req).unwrap());
+    }
+    // One byte per read is the worst-case chunking; a couple of odd
+    // sizes cover the straddle-the-length-prefix cases.
+    for chunk in [1usize, 3, 7, 4096] {
+        let mut src = ChunkedReader { data: wire.clone(), pos: 0, chunk };
+        let mut reader = FrameReader::new();
+        let mut seen = Vec::new();
+        loop {
+            match reader.next_request(&mut src).unwrap() {
+                NextFrame::Frame(req) => seen.push(req),
+                NextFrame::Closed => break,
+                NextFrame::TimedOut => unreachable!("ChunkedReader never times out"),
+            }
+        }
+        assert_eq!(seen, reqs, "chunk size {chunk}");
+        assert_eq!(reader.buffered(), 0);
+    }
+}
+
+#[test]
+fn eof_mid_frame_is_a_typed_error() {
+    let frame = encode_request(&Request::Poll { id: 9 }).unwrap();
+    let mut src = ChunkedReader { data: frame[..frame.len() - 1].to_vec(), pos: 0, chunk: 64 };
+    let mut reader = FrameReader::new();
+    match reader.next_request(&mut src) {
+        Err(StreamError::Protocol(ProtocolError::ClosedMidFrame { buffered })) => {
+            assert_eq!(buffered, frame.len() - 1);
+        }
+        other => panic!("expected ClosedMidFrame, got {other:?}"),
+    }
+}
+
+// ------------------------------------------------- adversarial frames
+
+/// Wrap a raw body in a length prefix (bypassing the encoder's own
+/// checks) — the attacker's frame-builder.
+fn raw_frame(body: &[u8]) -> Vec<u8> {
+    let mut f = (body.len() as u32).to_le_bytes().to_vec();
+    f.extend_from_slice(body);
+    f
+}
+
+#[test]
+fn oversized_length_prefix_rejected_from_header_alone() {
+    // Only the 4 header bytes exist; the decoder must reject before
+    // waiting for (or allocating) the declared 4 GiB body.
+    for declared in [MAX_FRAME_BYTES as u32 + 1, u32::MAX] {
+        let header = declared.to_le_bytes();
+        let err = decode_request(&header).unwrap_err();
+        assert_eq!(
+            err,
+            ProtocolError::Oversized { declared: declared as usize, max: MAX_FRAME_BYTES }
+        );
+        assert!(decode_response(&header).is_err());
+    }
+    // The bound itself is fine (an all-padding body fails later, on
+    // opcode grounds, proving the length check passed).
+    let padding = vec![0u8; MAX_FRAME_BYTES];
+    let at_bound = raw_frame(&padding);
+    assert_eq!(decode_request(&at_bound).unwrap_err(), ProtocolError::UnknownOpcode(0));
+}
+
+#[test]
+fn forged_element_count_rejected_before_allocating() {
+    // SUBMIT declaring u32::MAX elements with a 4-byte payload: the
+    // count × width bound check must fire against the bytes actually
+    // present, not reserve 16 GiB.
+    let mut body = vec![0x02]; // SUBMIT
+    body.extend_from_slice(&7u64.to_le_bytes()); // id
+    body.push(0); // kind u32
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // forged count
+    body.extend_from_slice(&[1, 2, 3, 4]); // 4 bytes of "payload"
+    let err = decode_request(&raw_frame(&body)).unwrap_err();
+    assert_eq!(
+        err,
+        ProtocolError::PayloadTruncated {
+            declared_elements: u32::MAX as usize,
+            available_bytes: 4
+        }
+    );
+}
+
+#[test]
+fn forged_tenant_count_rejected_before_allocating() {
+    let mut body = vec![0x88]; // METRICS_OK
+    for _ in 0..11 {
+        body.extend_from_slice(&0u64.to_le_bytes());
+    }
+    body.extend_from_slice(&u16::MAX.to_le_bytes()); // forged tenant count
+    let err = decode_response(&raw_frame(&body)).unwrap_err();
+    assert!(
+        matches!(err, ProtocolError::PayloadTruncated { declared_elements: 65535, .. }),
+        "got {err:?}"
+    );
+}
+
+#[test]
+fn garbage_bytes_yield_typed_errors_never_panics() {
+    // Unknown opcode.
+    assert_eq!(
+        decode_request(&raw_frame(&[0x77])).unwrap_err(),
+        ProtocolError::UnknownOpcode(0x77)
+    );
+    assert_eq!(
+        decode_response(&raw_frame(&[0x01])).unwrap_err(),
+        ProtocolError::UnknownOpcode(0x01),
+        "request opcodes are not response opcodes"
+    );
+    // Unknown element kind in a SUBMIT.
+    let mut body = vec![0x02];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.push(9); // no such kind
+    body.extend_from_slice(&0u32.to_le_bytes());
+    assert_eq!(
+        decode_request(&raw_frame(&body)).unwrap_err(),
+        ProtocolError::UnknownElemKind(9)
+    );
+    // Unknown retry-after reason.
+    let mut body = vec![0x83];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.push(7);
+    body.extend_from_slice(&0u64.to_le_bytes());
+    assert_eq!(decode_response(&raw_frame(&body)).unwrap_err(), ProtocolError::UnknownReason(7));
+    // Unknown sort-error code.
+    let mut body = vec![0x86];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.push(42);
+    assert_eq!(
+        decode_response(&raw_frame(&body)).unwrap_err(),
+        ProtocolError::UnknownErrorCode(42)
+    );
+    // Non-UTF-8 tenant name in a HELLO.
+    let mut body = vec![0x01];
+    body.extend_from_slice(&2u16.to_le_bytes());
+    body.extend_from_slice(&[0xFF, 0xFE]);
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes());
+    assert_eq!(decode_request(&raw_frame(&body)).unwrap_err(), ProtocolError::BadUtf8);
+    // Body truncated inside a field (POLL with a 4-byte id).
+    let mut body = vec![0x03];
+    body.extend_from_slice(&[1, 2, 3, 4]);
+    assert_eq!(
+        decode_request(&raw_frame(&body)).unwrap_err(),
+        ProtocolError::Truncated { what: "request id" }
+    );
+    // Trailing bytes after a complete body.
+    let mut body = vec![0x03];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.extend_from_slice(&[0xAB, 0xCD]);
+    assert_eq!(
+        decode_request(&raw_frame(&body)).unwrap_err(),
+        ProtocolError::TrailingBytes { extra: 2 }
+    );
+}
+
+#[test]
+fn encoder_refuses_frames_its_decoder_would() {
+    // A payload beyond the frame bound must not encode (symmetric
+    // bound: the encoder cannot produce an undecodable frame).
+    let too_big = ElemBuf::U32(vec![0u32; MAX_FRAME_BYTES / 4 + 1]);
+    let err = encode_request(&Request::Submit { id: 0, data: too_big }).unwrap_err();
+    assert!(matches!(err, ProtocolError::Oversized { .. }), "got {err:?}");
+}
+
+#[test]
+fn random_bytes_never_panic_the_decoder() {
+    // Seeded fuzz: raw random buffers, and random bodies wrapped in
+    // honest length prefixes so parsing gets past the header. Every
+    // outcome must be Ok or a typed error — a panic fails the test by
+    // crashing it.
+    let mut rng = Rng::new(0xC0DEC);
+    let reqs = sample_requests();
+    for round in 0..2000 {
+        let len = 1 + rng.below(95);
+        let mut bytes = Vec::with_capacity(len + 4);
+        for _ in 0..len {
+            bytes.push(rng.below(256) as u8);
+        }
+        let _ = decode_request(&bytes);
+        let _ = decode_response(&bytes);
+        let framed = raw_frame(&bytes);
+        let _ = decode_request(&framed);
+        let _ = decode_response(&framed);
+        // Bit-flip a valid frame: still no panic allowed.
+        if round % 4 == 0 {
+            let mut frame = encode_request(&reqs[round % reqs.len()]).unwrap();
+            let idx = rng.below(frame.len());
+            frame[idx] ^= 1u8 << rng.below(8);
+            let _ = decode_request(&frame);
+        }
+    }
+}
+
+#[test]
+fn hint_and_reason_survive_the_wire() {
+    // The acceptance-criteria contract in miniature: the hint a
+    // RETRY_AFTER carries decodes to the exact Duration the server
+    // encoded (microsecond-resolution round trip).
+    for (reason, us) in [
+        (WireBusyReason::QueueFull, 1000u64),
+        (WireBusyReason::OverShare, 50),
+        (WireBusyReason::Shutdown, 0),
+    ] {
+        let frame = encode_response(&Response::RetryAfter {
+            id: 1,
+            reason,
+            hint: Duration::from_micros(us),
+        })
+        .unwrap();
+        match decode_response(&frame).unwrap().unwrap().0 {
+            Response::RetryAfter { reason: r, hint, .. } => {
+                assert_eq!(r, reason);
+                assert_eq!(hint, Duration::from_micros(us));
+                assert_eq!(r.retryable(), reason != WireBusyReason::Shutdown);
+            }
+            other => panic!("expected RetryAfter, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn proto_error_messages_are_clipped_not_refused() {
+    let long = "x".repeat(100_000);
+    let frame = encode_response(&Response::ProtoError { message: long }).unwrap();
+    match decode_response(&frame).unwrap().unwrap().0 {
+        Response::ProtoError { message } => {
+            assert_eq!(message.len(), 512, "diagnostics clip to a bounded length");
+        }
+        other => panic!("expected ProtoError, got {other:?}"),
+    }
+}

@@ -1,0 +1,374 @@
+//! End-to-end wire protocol tests: a real [`NetServer`] on a loopback
+//! socket in front of a live [`SortService`], driven by [`WireClient`]s
+//! over actual TCP. Covers the full request/response surface, the
+//! Busy → `RETRY_AFTER` mapping (hint and all), abrupt-disconnect
+//! drop-to-cancel, and a multi-connection soak under seeded fault
+//! injection with the per-tenant accounting identity checked across
+//! the wire.
+
+use neonms::coordinator::{BusyReason, CoordinatorConfig, ElemBuf, FaultPlan, SortService};
+use neonms::net::{
+    codec, NetError, NetServer, PollOutcome, Request, SubmitOutcome, WireBusyReason, WireClient,
+};
+use neonms::simd::KeyValue;
+use neonms::testutil::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Boot a service + server pair on an OS-assigned loopback port.
+fn serve(cfg: CoordinatorConfig) -> (Arc<SortService>, NetServer) {
+    let svc = Arc::new(SortService::start(cfg, None).unwrap());
+    let server = NetServer::bind(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+fn is_sorted(buf: &ElemBuf) -> bool {
+    match buf {
+        ElemBuf::U32(v) => v.windows(2).all(|w| w[0] <= w[1]),
+        ElemBuf::U64(v) => v.windows(2).all(|w| w[0] <= w[1]),
+        ElemBuf::Pair(v) => v.windows(2).all(|w| w[0] <= w[1]),
+    }
+}
+
+#[test]
+fn loopback_full_protocol_flow() {
+    let (svc, server) = serve(CoordinatorConfig::default());
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+
+    // SUBMIT before HELLO: a semantic error answered in-band — the
+    // connection survives it.
+    match c.submit(ElemBuf::U32(vec![3, 1, 2])) {
+        Err(NetError::Remote(msg)) => assert!(msg.contains("HELLO"), "got: {msg}"),
+        other => panic!("expected a remote protocol error, got {other:?}"),
+    }
+
+    // Handshake: weight 0 is clamped to 1 service-side and the
+    // effective config is echoed back.
+    let (weight, burst) = c.hello("wire-1", 0, 4 << 20).unwrap();
+    assert_eq!(weight, 1, "service clamps weight 0 to 1");
+    assert_eq!(burst, 4 << 20);
+
+    // One submit per element kind, each checked against the sort
+    // oracle after travelling the wire both ways.
+    let mut rng = Rng::new(0xE2E);
+    let u32s = rng.vec_u32(4000);
+    let u64s = rng.vec_u64(3000);
+    let pairs: Vec<KeyValue> =
+        (0..2000).map(|i| KeyValue::new(rng.next_u32(), i as u32)).collect();
+    for (input, label) in [
+        (ElemBuf::U32(u32s.clone()), "u32"),
+        (ElemBuf::U64(u64s.clone()), "u64"),
+        (ElemBuf::Pair(pairs.clone()), "pair"),
+    ] {
+        let want = match input.clone() {
+            ElemBuf::U32(mut v) => {
+                v.sort_unstable();
+                ElemBuf::U32(v)
+            }
+            ElemBuf::U64(mut v) => {
+                v.sort_unstable();
+                ElemBuf::U64(v)
+            }
+            ElemBuf::Pair(mut v) => {
+                v.sort_unstable();
+                ElemBuf::Pair(v)
+            }
+        };
+        let SubmitOutcome::Accepted { id } = c.submit(input).unwrap() else {
+            panic!("{label}: default service must not shed a lone submit");
+        };
+        let got = c.wait(id).unwrap().unwrap_or_else(|e| panic!("{label} failed: {e}"));
+        assert_eq!(got.kind(), want.kind(), "{label}: element kind survives the wire");
+        assert_eq!(got, want, "{label}: result must match the oracle");
+    }
+
+    // Reusing an id that is still in flight is a semantic error; the
+    // original request is unharmed and still polls to completion.
+    let SubmitOutcome::Accepted { id: big_id } =
+        c.submit(ElemBuf::U32(rng.vec_u32(500_000))).unwrap()
+    else {
+        panic!("big submit shed");
+    };
+    let dup = codec::encode_request(&Request::Submit {
+        id: big_id,
+        data: ElemBuf::U32(vec![1]),
+    })
+    .unwrap();
+    c.send_raw(&dup).unwrap();
+    match c.recv().unwrap() {
+        neonms::net::Response::ProtoError { message } => {
+            assert!(message.contains("in-flight id"), "got: {message}");
+        }
+        other => panic!("duplicate id must be refused, got {other:?}"),
+    }
+    assert!(is_sorted(&c.wait(big_id).unwrap().unwrap()), "original request unharmed");
+
+    // POLL for an id this connection never submitted.
+    match c.poll(9999) {
+        Err(NetError::Remote(msg)) => assert!(msg.contains("unknown"), "got: {msg}"),
+        other => panic!("expected a remote protocol error, got {other:?}"),
+    }
+
+    // CANCEL a fresh submit, then CANCEL it again: idempotent acks.
+    let SubmitOutcome::Accepted { id } = c.submit(ElemBuf::U32(rng.vec_u32(100_000))).unwrap()
+    else {
+        panic!("cancel-target submit shed");
+    };
+    c.cancel(id).unwrap();
+    c.cancel(id).unwrap();
+
+    // METRICS over the wire reflects this connection's work.
+    let m = c.metrics().unwrap();
+    assert!(m.connections_open >= 1, "we are connected: {}", m.connections_open);
+    assert!(m.net_frames > 8, "every request above was counted: {}", m.net_frames);
+    assert_eq!(m.net_protocol_errors, 0, "semantic errors are not stream errors");
+    let t = m
+        .tenants
+        .iter()
+        .find(|t| t.name == "wire-1")
+        .expect("the handshake registered the tenant");
+    assert_eq!(t.accepted, 5, "3 kinds + big + cancelled");
+
+    // SHUTDOWN stops the accept loop; wait() then joins every
+    // connection thread.
+    c.shutdown_server().unwrap();
+    server.wait();
+    drop(c);
+
+    // The ledger balances once the service drains.
+    let ledger = svc.client("wire-1");
+    Arc::into_inner(svc).expect("server released its handle").shutdown();
+    let t = ledger.tenant_metrics();
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed, "identity");
+    assert_eq!(t.in_flight_bytes, 0, "no residual in-flight cost");
+    assert_eq!(t.queued_jobs, 0);
+}
+
+#[test]
+fn saturated_queue_maps_busy_to_retry_after() {
+    // 0 workers → nothing drains → the 4-slot queue fills exactly,
+    // and the wire must surface the coordinator's own Busy shed —
+    // reason and hint — instead of dropping the connection.
+    let cfg = CoordinatorConfig {
+        workers: 0,
+        shards: 1,
+        queue_capacity: 4,
+        ..Default::default()
+    };
+    let (svc, server) = serve(cfg);
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.hello("sat", 1, 1 << 20).unwrap();
+
+    let mut accepted = 0;
+    let mut shed = None;
+    for _ in 0..10 {
+        match c.submit(ElemBuf::U32(vec![3, 1, 2])).unwrap() {
+            SubmitOutcome::Accepted { .. } => accepted += 1,
+            SubmitOutcome::RetryAfter { reason, hint } => {
+                shed = Some((reason, hint));
+                break;
+            }
+        }
+    }
+    assert_eq!(accepted, 4, "queue capacity is a hard bound over the wire too");
+    let (reason, wire_hint) = shed.expect("the 5th submit must be shed");
+    assert_eq!(reason, WireBusyReason::QueueFull, "under-burst tenant sheds as QueueFull");
+    assert!(reason.retryable());
+
+    // The same saturation observed in-process: the wire hint must be
+    // byte-identical to the coordinator's own retry_after_hint (both
+    // are the deterministic cold-start default — no completions, so
+    // the p50 estimate is empty).
+    let busy = svc.client("sat-local").try_submit(vec![9, 9]).expect_err("queue is full");
+    assert!(matches!(busy.reason, BusyReason::QueueFull { .. }), "{:?}", busy.reason);
+    let local_hint = busy.reason.retry_after().expect("QueueFull carries a hint");
+    assert_eq!(wire_hint, local_hint, "RETRY_AFTER carries the in-process hint verbatim");
+
+    // The connection survived the shed: metrics still answer.
+    let m = c.metrics().unwrap();
+    assert_eq!(m.net_retry_after, 1);
+    assert_eq!(m.net_protocol_errors, 0);
+
+    drop(c);
+    server.stop();
+    Arc::into_inner(svc).expect("server released its handle").shutdown();
+}
+
+#[test]
+fn abrupt_disconnect_cancels_in_flight_work() {
+    // Drop the TCP connection with submits still pending — no CANCEL
+    // frames, no goodbye. The server must notice, drop the handles,
+    // and let drop-to-cancel release every QoS charge.
+    let cfg = CoordinatorConfig {
+        workers: 0,
+        shards: 1,
+        queue_capacity: 64,
+        ..Default::default()
+    };
+    let (svc, server) = serve(cfg);
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.hello("vanish", 1, 1 << 20).unwrap();
+    for _ in 0..3 {
+        match c.submit(ElemBuf::U32(vec![5, 4, 3, 2, 1])).unwrap() {
+            SubmitOutcome::Accepted { .. } => {}
+            other => panic!("expected acceptance, got {other:?}"),
+        }
+    }
+    drop(c); // abrupt: the socket just closes
+
+    // The connection thread notices within its read timeout and tears
+    // down, cancelling the three pending handles.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if svc.metrics().connections_open == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "server never noticed the disconnect");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    server.stop();
+    let ledger = svc.client("vanish");
+    Arc::into_inner(svc).expect("server released its handle").shutdown();
+    let t = ledger.tenant_metrics();
+    assert_eq!(t.accepted, 3);
+    assert_eq!(t.cancelled, 3, "disconnect resolved every pending job as cancelled");
+    assert_eq!(t.completed, 0, "no workers existed to complete anything");
+    assert_eq!(t.accepted, t.completed + t.cancelled + t.failed, "identity");
+    assert_eq!(t.in_flight_bytes, 0, "no leaked QoS charge");
+    assert_eq!(t.queued_jobs, 0);
+}
+
+/// One soak connection: submit a payload mix with bounded
+/// hint-honoring retries, cancel a stride of accepted ids over the
+/// wire, drain the rest. Panics (failing the test) on any wire error.
+fn soak_conn(addr: std::net::SocketAddr, tenant: usize, conn: usize, jobs: usize) {
+    let mut rng = Rng::new(0x50AC ^ ((tenant as u64) << 8) ^ conn as u64);
+    let mut c = WireClient::connect(addr).unwrap();
+    c.hello(&format!("soak-{tenant}"), 1 + tenant as u32, 64 << 10).unwrap();
+    let mut outstanding = Vec::new();
+    for i in 0..jobs {
+        let len = 16 + rng.below(600);
+        let data = match (tenant + i) % 3 {
+            0 => ElemBuf::U32(rng.vec_u32(len)),
+            1 => ElemBuf::U64(rng.vec_u64(len)),
+            _ => ElemBuf::Pair((0..len).map(|j| KeyValue::new(rng.next_u32(), j as u32)).collect()),
+        };
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            match c.submit(data.clone()).unwrap() {
+                SubmitOutcome::Accepted { id } => {
+                    if i % 13 == 7 {
+                        c.cancel(id).unwrap();
+                    } else {
+                        outstanding.push(id);
+                    }
+                    break;
+                }
+                SubmitOutcome::RetryAfter { reason, hint } => {
+                    if !reason.retryable() || attempts >= 6 {
+                        break; // shed for good: never admitted, nothing to account
+                    }
+                    std::thread::sleep(hint.min(Duration::from_millis(2)));
+                }
+            }
+        }
+        // Poll opportunistically so the pending set stays small.
+        if let Some(&id) = outstanding.first() {
+            match c.poll(id).unwrap() {
+                PollOutcome::Pending => {}
+                PollOutcome::Done(out) => {
+                    assert!(is_sorted(&out), "soak-{tenant}/{conn} got an unsorted result");
+                    outstanding.remove(0);
+                }
+                PollOutcome::Failed(_) => {
+                    outstanding.remove(0); // injected fault; accounted as failed
+                }
+            }
+        }
+    }
+    for id in outstanding {
+        if let Ok(out) = c.wait(id).unwrap() {
+            assert!(is_sorted(&out), "soak-{tenant}/{conn} got an unsorted result");
+        }
+    }
+    // Graceful close with nothing pending on this connection.
+}
+
+#[test]
+fn soak_under_faults_across_the_wire() {
+    // Multi-connection soak against a fault-injecting service:
+    // contained sort panics, worker-killing panics, stalls, and
+    // forced sheds — all while the wire layer must keep every
+    // connection coherent and the per-tenant ledger exact.
+    let plan = FaultPlan {
+        seed: 0x5EED,
+        sort_panic_per_mille: 80,
+        fatal_panic_per_mille: 5,
+        stall_per_mille: 30,
+        stall: Duration::from_micros(200),
+        shed_per_mille: 30,
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        shards: 2,
+        batch_max: 8,
+        queue_capacity: 16,
+        faults: Some(plan),
+        ..Default::default()
+    };
+    let (svc, server) = serve(cfg);
+    let addr = server.local_addr();
+
+    let joins: Vec<_> = (0..3)
+        .flat_map(|t| (0..2).map(move |cx| (t, cx)))
+        .map(|(t, cx)| std::thread::spawn(move || soak_conn(addr, t, cx, 60)))
+        .collect();
+    for j in joins {
+        j.join().expect("a soak connection panicked");
+    }
+
+    // Quiesce: cancelled jobs may still occupy queue slots until a
+    // worker skips them; wait for the gauges to drain, over the wire.
+    let mut control = WireClient::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let metrics = loop {
+        let m = control.metrics().unwrap();
+        let drained = m
+            .tenants
+            .iter()
+            .filter(|t| t.name.starts_with("soak-"))
+            .all(|t| t.in_flight_bytes == 0 && t.queued_jobs == 0);
+        if drained {
+            break m;
+        }
+        assert!(Instant::now() < deadline, "soak tenants never quiesced");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    // The PR 8 identity, read across the wire, per tenant.
+    let mut seen = 0;
+    for t in metrics.tenants.iter().filter(|t| t.name.starts_with("soak-")) {
+        seen += 1;
+        assert_eq!(
+            t.accepted,
+            t.completed + t.cancelled + t.failed,
+            "{}: accepted {} vs completed {} + cancelled {} + failed {}",
+            t.name,
+            t.accepted,
+            t.completed,
+            t.cancelled,
+            t.failed
+        );
+        assert!(t.accepted > 0, "{}: the soak reached this tenant", t.name);
+    }
+    assert_eq!(seen, 3, "all three tenants registered over the wire");
+    assert_eq!(metrics.net_protocol_errors, 0, "a clean client never desyncs the stream");
+    assert!(metrics.quarantined <= metrics.failed, "quarantines surface as failures");
+
+    drop(control);
+    server.stop();
+    Arc::into_inner(svc).expect("server released its handle").shutdown();
+}

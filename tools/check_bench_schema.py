@@ -38,6 +38,16 @@ BETTER = {"higher", "lower", "info"}
 SOURCE_KINDS = {"native", "surrogate"}
 BACKENDS = {"scalar", "neon", "sse4.2", "avx2"}
 REQUIRED_STRINGS = ("bench", "arch", "source")
+# Baselines CI gates against; must exist at the repo root. Keep in
+# sync with committed_baselines_parse_validate_and_round_trip in
+# rust/src/bench/report.rs.
+REQUIRED_BASELINES = (
+    "BENCH_width_sweep.json",
+    "BENCH_elem_width.json",
+    "BENCH_routing_adaptive.json",
+    "BENCH_qos_fairness.json",
+    "BENCH_net_soak.json",
+)
 
 
 def is_finite_number(v):
@@ -144,6 +154,11 @@ def main():
         check_report(name, data, findings)
     if not names:
         findings.append("no BENCH_*.json baselines found at the repo root")
+    for required in REQUIRED_BASELINES:
+        if required not in names:
+            findings.append(
+                f"{required}: required baseline missing from the repo root "
+                f"(a CI job gates against it)")
     if findings:
         print(f"bench schema check FAILED: {len(findings)} finding(s) "
               f"across {len(names)} baseline(s)")
